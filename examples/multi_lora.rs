@@ -1,0 +1,72 @@
+//! Multi-LoRA serving (paper §5.5): one base model, several online-loaded
+//! adapters selected per request, with the associative-order optimization.
+//!
+//! Run: `make artifacts && cargo run --release --example multi_lora`
+
+use std::collections::HashMap;
+
+use mnn_llm::lora::LoraAdapter;
+use mnn_llm::model::native::{EngineOptions, NativeModel};
+use mnn_llm::model::tokenizer::ByteTokenizer;
+use mnn_llm::util::rng::Rng;
+
+fn adapter_set(rng: &mut Rng, layers: usize, hidden: usize, r: usize) -> HashMap<String, LoraAdapter> {
+    let mut m = HashMap::new();
+    for l in 0..layers {
+        m.insert(format!("L{l}.wq"), LoraAdapter::random(rng, hidden, hidden, r));
+        m.insert(format!("L{l}.wo"), LoraAdapter::random(rng, hidden, hidden, r));
+    }
+    m
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let mut m = NativeModel::load(&dir, EngineOptions::default())?;
+    let (layers, hidden) = (m.config.layers, m.config.hidden);
+
+    // Online-load three task adapters sharing the base weights.
+    let mut rng = Rng::new(2024);
+    for task in ["translate", "summarize", "chat"] {
+        m.lora.load_task(task, adapter_set(&mut rng, layers, hidden, 8));
+    }
+    println!(
+        "loaded {} LoRA tasks, total adapter memory {:.1} KB (base model stays shared)",
+        m.lora.tasks().len(),
+        m.lora.resident_bytes() as f64 / 1024.0
+    );
+
+    let tok = ByteTokenizer::new(m.config.vocab);
+    let prompt = tok.encode("route this request", false);
+    let mut outputs: HashMap<String, Vec<usize>> = HashMap::new();
+    for task in [None, Some("translate"), Some("summarize"), Some("chat")] {
+        m.reset_session();
+        m.lora_task = task.map(String::from);
+        let out = m.generate(&prompt, 8);
+        let name = task.unwrap_or("base");
+        println!("  task {name:<10} → {out:?}");
+        outputs.insert(name.to_string(), out);
+    }
+    // Different adapters must route to different generations.
+    assert_ne!(outputs["base"], outputs["translate"]);
+    assert_ne!(outputs["translate"], outputs["summarize"]);
+    // And re-running a task reproduces its output (determinism).
+    m.reset_session();
+    m.lora_task = Some("chat".into());
+    assert_eq!(m.generate(&prompt, 8), outputs["chat"]);
+    println!("per-task outputs differ; per-task reruns are deterministic ✓");
+
+    // Table 3: the associative-order analytics at paper scale.
+    let row = LoraAdapter::table3_costs(3584, 8);
+    println!("\nTable 3 (h=3584, r=8, vector activation):");
+    println!("  (A·B)·x  : compute {:>14} MACs | memory {:>14} accesses", row.naive_compute, row.naive_memory);
+    println!("  A·(B·x)  : compute {:>14} MACs | memory {:>14} accesses", row.opt_compute, row.opt_memory);
+    println!(
+        "  optimized memory = {:.2}% of naive (paper: ≈0.5%)",
+        100.0 * row.opt_memory as f64 / row.naive_memory as f64
+    );
+    Ok(())
+}

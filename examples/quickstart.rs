@@ -1,0 +1,61 @@
+//! Quickstart: load the AOT artifacts on the PJRT runtime and generate a
+//! few tokens — the smallest end-to-end exercise of all three layers
+//! (Pallas kernels → JAX graphs → Rust engine).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use mnn_llm::model::tokenizer::ByteTokenizer;
+use mnn_llm::runtime::PjrtRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    println!("loading + compiling AOT artifacts (HLO text → PJRT)...");
+    let t0 = std::time::Instant::now();
+    let rt = PjrtRuntime::load(&dir)?;
+    println!(
+        "  {} ready in {:.2}s ({} weight tensors resident)",
+        rt.manifest.model.name,
+        t0.elapsed().as_secs_f64(),
+        rt.manifest.weights.len()
+    );
+
+    let tok = ByteTokenizer::new(rt.manifest.model.vocab);
+    let prompt = "Deploying large language models on mobile devices";
+    let ids = tok.encode(prompt, false);
+
+    let t1 = std::time::Instant::now();
+    let (logits, mut kv) = rt.prefill(&ids)?;
+    let prefill_s = t1.elapsed().as_secs_f64();
+    println!(
+        "prefill: {} tokens in {:.1} ms ({:.1} tok/s)",
+        ids.len(),
+        prefill_s * 1e3,
+        ids.len() as f64 / prefill_s
+    );
+
+    let mut token = mnn_llm::model::sampler::argmax(&logits);
+    let mut out = vec![token];
+    let t2 = std::time::Instant::now();
+    let n = 24;
+    for _ in 1..n {
+        let logits = rt.decode(token, &mut kv)?;
+        token = mnn_llm::model::sampler::argmax(&logits);
+        out.push(token);
+    }
+    let decode_s = t2.elapsed().as_secs_f64();
+    println!(
+        "decode : {} tokens in {:.1} ms ({:.1} tok/s)",
+        out.len(),
+        decode_s * 1e3,
+        out.len() as f64 / decode_s
+    );
+    println!("tokens : {out:?}");
+    println!("text   : {:?} (random weights — gibberish is expected)", tok.decode(&out));
+    println!("KV     : {} tokens cached, {:.1} KB", kv.pos, kv.nbytes() as f64 / 1024.0);
+    Ok(())
+}

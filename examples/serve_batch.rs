@@ -1,0 +1,86 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run): queue a
+//! batch of requests against the coordinator on both backends and report
+//! latency/throughput — prefill tok/s, decode tok/s, TTFT, p95 e2e.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_batch`
+
+use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
+use mnn_llm::coordinator::SchedulePolicy;
+use mnn_llm::model::native::{EngineOptions, NativeModel};
+use mnn_llm::model::tokenizer::ByteTokenizer;
+use mnn_llm::parallel::pool::WorkerConfig;
+use mnn_llm::runtime::PjrtRuntime;
+
+const PROMPTS: [&str; 6] = [
+    "What is the capital of France?",
+    "Summarize the plot of Hamlet in one sentence.",
+    "Translate 'good morning' into German and French, please.",
+    "Write a haiku about autumn leaves falling over a quiet mountain lake.",
+    "List three uses for a paperclip.",
+    "Why is the sky blue? Answer briefly but accurately, citing Rayleigh scattering and the wavelength dependence.",
+];
+
+fn drive(name: &str, mut c: Coordinator, gen: usize) -> anyhow::Result<()> {
+    let tok = ByteTokenizer::new(2048);
+    for p in PROMPTS {
+        c.submit(tok.encode(p, false), gen);
+    }
+    let t0 = std::time::Instant::now();
+    let responses = c.run_all()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n--- {name} ---");
+    for r in &responses {
+        println!(
+            "  req {}: prompt {:>3} tok | out {:>2} tok | ttft {:>7.1} ms | prefill {:>7.1} tok/s | decode {:>6.1} tok/s",
+            r.id,
+            r.metrics.prompt_tokens,
+            r.tokens.len(),
+            r.metrics.ttft_s * 1e3,
+            r.metrics.prefill_tok_s(),
+            r.metrics.decode_tok_s(),
+        );
+    }
+    println!("  => {}", c.metrics.summary(wall));
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let gen = 16; // paper §6 caps decode at 16 tokens
+
+    // 1. Native backend (the paper's optimized CPU pipeline), FIFO.
+    let native = NativeModel::load(
+        &dir,
+        EngineOptions {
+            workers: WorkerConfig::uniform(1), // 1 physical core on this box
+            ..EngineOptions::default()
+        },
+    )?;
+    drive(
+        "native CPU backend (W4A8/W8A8, flash embedding, solved tiles) — FIFO",
+        Coordinator::new(Backend::Native(Box::new(native)), SchedulePolicy::Fifo),
+        gen,
+    )?;
+
+    // 2. PJRT backend (AOT Pallas/JAX graphs), FIFO.
+    let rt = PjrtRuntime::load(&dir)?;
+    drive(
+        "PJRT backend (AOT L1/L2 graphs) — FIFO",
+        Coordinator::new(Backend::Pjrt(Box::new(rt)), SchedulePolicy::Fifo),
+        gen,
+    )?;
+
+    // 3. PJRT backend, interleaved decode across sessions.
+    let rt = PjrtRuntime::load(&dir)?;
+    drive(
+        "PJRT backend — interleaved round-robin decode",
+        Coordinator::new(Backend::Pjrt(Box::new(rt)), SchedulePolicy::Interleaved),
+        gen,
+    )?;
+
+    Ok(())
+}

@@ -1,0 +1,179 @@
+"""AOT exporter: lower the L2 graphs once, write self-contained artifacts.
+
+Outputs (under ``artifacts/``):
+
+  manifest.json       model config, weight table, graph arg/result orders
+  weights.bin         quantized graph weights (custom container, see below)
+  embedding.bin       bf16 embedding rows — streamed from the Flash tier by
+                      the Rust engine, never a graph argument (§4.1)
+  prefill_{S}.hlo.txt one per sequence bucket
+  decode.hlo.txt      single-token step
+
+Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the Rust
+``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+weights.bin layout (little-endian):
+  magic "MNNW" | u32 version=1 | u32 tensor_count
+  per tensor: u16 name_len | name (utf8) | u8 dtype | u8 ndim |
+              u32 dims[ndim] | u64 nbytes | raw bytes
+  dtype codes: 0=f32, 1=i8, 2=u8, 3=bf16, 4=i32
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import CONFIGS, ModelConfig, build_params, decode_fn, graph_weight_names, prefill_fn
+
+PREFILL_BUCKETS = (16, 64, 256)
+
+_DTYPE_CODES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int8): 1,
+    np.dtype(np.uint8): 2,
+    np.dtype(ml_dtypes.bfloat16): 3,
+    np.dtype(np.int32): 4,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path: str, tensors: Dict[str, np.ndarray]) -> List[dict]:
+    """Write the container; return the manifest weight table."""
+    table = []
+    with open(path, "wb") as f:
+        f.write(b"MNNW")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _DTYPE_CODES[arr.dtype]
+            nb = arr.nbytes
+            f.write(struct.pack("<H", len(name)))
+            f.write(name.encode())
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<Q", nb))
+            f.write(arr.tobytes())
+            table.append({"name": name, "dtype": code, "shape": list(arr.shape), "nbytes": nb})
+    return table
+
+
+def export(cfg: ModelConfig, out_dir: str, seed: int = 0) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    params = build_params(cfg, seed=seed)
+
+    # Embedding → bf16 flash file. build_params already bf16-rounds the f32
+    # copy used by the reference path so Rust (bf16→f32) matches exactly.
+    emb_bf16 = params["embedding"].astype(ml_dtypes.bfloat16)
+    params["embedding"] = emb_bf16.astype(np.float32)
+    with open(os.path.join(out_dir, "embedding.bin"), "wb") as f:
+        f.write(emb_bf16.tobytes())
+
+    names = graph_weight_names(cfg)
+    graph_weights = {n: params[n] for n in names}
+    weight_table = write_weights_bin(os.path.join(out_dir, "weights.bin"), graph_weights)
+
+    w_structs = [jax.ShapeDtypeStruct(params[n].shape, params[n].dtype) for n in names]
+    T, L, Hkv, d = cfg.max_len, cfg.layers, cfg.kv_heads, cfg.head_dim
+
+    graphs = {}
+    for S in PREFILL_BUCKETS:
+        if S > cfg.max_len:
+            continue
+        fn = functools.partial(prefill_fn, cfg)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((S, cfg.hidden), jnp.float32), *w_structs
+        )
+        fname = f"prefill_{S}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        graphs[f"prefill_{S}"] = {
+            "file": fname,
+            "args": ["hidden"] + names,
+            "results": ["logits", "k_q", "k_s", "k_b", "v_u8"],
+            "bucket": S,
+        }
+
+    fn = functools.partial(decode_fn, cfg)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((1, cfg.hidden), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((L, Hkv, T, d), jnp.int8),
+        jax.ShapeDtypeStruct((L, Hkv, T, 1), jnp.float32),
+        jax.ShapeDtypeStruct((L, Hkv, T, 1), jnp.float32),
+        jax.ShapeDtypeStruct((L, Hkv, T, d), jnp.uint8),
+        *w_structs,
+    )
+    with open(os.path.join(out_dir, "decode.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    graphs["decode"] = {
+        "file": "decode.hlo.txt",
+        "args": ["hidden", "pos", "k_q", "k_s", "k_b", "v_u8"] + names,
+        "results": ["logits", "k_q", "k_s", "k_b", "v_u8"],
+    }
+
+    manifest = {
+        "model": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "inter": cfg.inter,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads,
+            "head_dim": cfg.head_dim,
+            "max_len": cfg.max_len,
+            "rope_theta": cfg.rope_theta,
+            "rms_eps": cfg.rms_eps,
+            "param_count": cfg.param_count(),
+        },
+        "seed": seed,
+        "prefill_buckets": [s for s in PREFILL_BUCKETS if s <= cfg.max_len],
+        "weights": weight_table,
+        "embedding": {
+            "file": "embedding.bin",
+            "dtype": "bf16",
+            "shape": [cfg.vocab, cfg.hidden],
+        },
+        "graphs": graphs,
+        "tokenizer": {"kind": "byte", "vocab": cfg.vocab},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"exported {cfg.name} → {out_dir} "
+          f"({len(weight_table)} weight tensors, {len(graphs)} graphs)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="tiny-qwen2", choices=sorted(CONFIGS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    export(CONFIGS[args.model], args.out_dir, seed=args.seed)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

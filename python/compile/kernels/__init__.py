@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered with interpret=True)."""
+
+from .qmatmul import w4a8_matmul, w8a8_matmul
+from .rmsnorm import rmsnorm
+from .attention import decode_attention, prefill_attention
+
+__all__ = [
+    "w8a8_matmul",
+    "w4a8_matmul",
+    "rmsnorm",
+    "decode_attention",
+    "prefill_attention",
+]

@@ -1,0 +1,109 @@
+"""Pallas attention kernels with combined KV-cache quantization (§4.2, §5.3).
+
+Two kernels:
+
+* ``decode_attention`` — one query token against the full quantized cache:
+  int8 asymmetric keys (per-token scale/bias; the reduced dim head_dim is
+  fixed so per-token params are stable) and fp8-e4m3 values (stat-free, so
+  appends never re-quantize history). Softmax runs in fp32 and the query is
+  pre-scaled by 1/sqrt(d) *before* QK^T so fp16-ish magnitudes cannot
+  overflow the accumulation (paper §5.3).
+
+* ``prefill_attention`` — causal self-attention over fresh fp32 K/V, fp32
+  softmax, grid over query heads (GQA mapping done via BlockSpec index_map,
+  the TPU analogue of the paper's per-head work-item split).
+
+Both use interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _decode_kernel(q_ref, kq_ref, ks_ref, kb_ref, v_ref, pos_ref, o_ref):
+    # Blocks: q [1, 1, d]; k_q [1, T, d] i8; ks/kb [1, T, 1]; v [1, T, d] f8.
+    q = q_ref[0].astype(jnp.float32)  # [1, d] (pre-scaled by 1/sqrt(d))
+    k = kq_ref[0].astype(jnp.float32) * ks_ref[0] + kb_ref[0]  # [T, d]
+    v = v_ref[0].astype(jnp.float32)  # [T, d]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [1, T] fp32
+    t = scores.shape[-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
+    scores = jnp.where(idx <= pos_ref[0], scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    o_ref[0] = jax.lax.dot_general(
+        probs, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def decode_attention(q, k_q, k_scale, k_bias, v_f8, pos):
+    """q:[H,1,d] f32 (pre-scaled), k_q:[Hkv,T,d] i8, k_scale/k_bias:[Hkv,T,1],
+    v_f8:[Hkv,T,d] f8e4m3, pos: [1] i32 → [H,1,d] f32."""
+    H, _, d = q.shape
+    Hkv, T, _ = k_q.shape
+    group = H // Hkv
+    kv_map = lambda h: (h // group, 0, 0)  # noqa: E731 — GQA head→kv-head map
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, T, d), kv_map),
+            pl.BlockSpec((1, T, 1), kv_map),
+            pl.BlockSpec((1, T, 1), kv_map),
+            pl.BlockSpec((1, T, d), kv_map),
+            pl.BlockSpec((1,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, 1, d), jnp.float32),
+        interpret=True,
+    )(q, k_q, k_scale, k_bias, v_f8, pos)
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0].astype(jnp.float32)  # [S, d]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = q.shape[0]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [S, S]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(ki <= qi, scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    o_ref[0] = jax.lax.dot_general(
+        probs, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def prefill_attention(q, k, v):
+    """Causal GQA attention. q:[H,S,d] f32 (pre-scaled), k/v:[Hkv,S,d] → [H,S,d]."""
+    H, S, d = q.shape
+    Hkv = k.shape[0]
+    group = H // Hkv
+    kv_map = lambda h: (h // group, 0, 0)  # noqa: E731
+    return pl.pallas_call(
+        _prefill_kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1, S, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, S, d), kv_map),
+            pl.BlockSpec((1, S, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, S, d), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, S, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,130 @@
+"""Pallas W8A8 / W4A8 quantized matmul kernels (paper §4.2 + §5.1).
+
+Hardware adaptation (DESIGN.md §5): the paper tiles int8 GEMM for ARM
+register files (e_p × h_p accumulator blocks, l_p = instruction width).
+On TPU the analogous resources are VMEM blocks feeding the MXU, so the
+kernel expresses the same schedule as a Pallas grid over (m, n) output
+blocks with the full reduction dimension resident per block:
+
+  grid = (m/bm, n/bn);  x block [bm, k];  w block [bn, k];  out block [bm, bn]
+
+Activation quantization is *dynamic per row* (the paper quantizes
+activations to int8 at runtime), fused into the kernel so the fp32
+activation never round-trips to HBM in quantized form.
+
+Kernels run under interpret=True — CPU PJRT cannot execute Mosaic
+custom-calls; real-TPU perf is estimated in DESIGN/EXPERIMENTS from the
+VMEM footprint and MXU utilization of these block shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def _quant_rows(x):
+    """Per-row dynamic asymmetric int8 quantization of a [bm, k] block."""
+    x_min = jnp.min(x, axis=-1, keepdims=True)
+    x_max = jnp.max(x, axis=-1, keepdims=True)
+    rng = jnp.maximum(x_max - x_min, 1e-8)
+    scale = rng / float(INT8_MAX - INT8_MIN)
+    bias = x_min - INT8_MIN * scale
+    q = jnp.clip(jnp.round((x - bias) / scale), INT8_MIN, INT8_MAX).astype(jnp.int8)
+    return q, scale, bias
+
+
+def _affine_block(x, w_q_i32, w_scale, w_bias):
+    """Integer GEMM + affine corrections for one (bm, bn) output block.
+
+    x: [bm, k] f32; w_q_i32: [bn, k] i32; w_scale/w_bias: [bn, 1] f32.
+    """
+    k = x.shape[-1]
+    x_q, sx, bx = _quant_rows(x)
+    acc = jax.lax.dot_general(
+        x_q.astype(jnp.int32),
+        w_q_i32,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    xq_row = jnp.sum(x_q.astype(jnp.int32), axis=-1, keepdims=True).astype(jnp.float32)
+    wq_row = jnp.sum(w_q_i32, axis=-1, keepdims=True).astype(jnp.float32)
+    return (
+        sx * w_scale.T * acc
+        + sx * w_bias.T * xq_row
+        + bx * w_scale.T * wq_row.T
+        + k * bx * w_bias.T
+    )
+
+
+def _w8a8_kernel(x_ref, wq_ref, ws_ref, wb_ref, o_ref):
+    o_ref[...] = _affine_block(
+        x_ref[...], wq_ref[...].astype(jnp.int32), ws_ref[...], wb_ref[...]
+    )
+
+
+def _w4a8_kernel(x_ref, wp_ref, ws_ref, wb_ref, o_ref):
+    packed = wp_ref[...]  # [bn, k//2] u8
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    # Interleave nibbles back to [bn, k]: even k-index = low nibble.
+    bn, half = packed.shape
+    w_q = jnp.stack([lo, hi], axis=-1).reshape(bn, half * 2)
+    o_ref[...] = _affine_block(x_ref[...], w_q, ws_ref[...], wb_ref[...])
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is <= pref (block shapes must tile)."""
+    b = min(pref, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def w8a8_matmul(x, w_q, w_scale, w_bias, *, block_m: int = 16, block_n: int = 128):
+    """x:[m,k] f32 × asymmetric-int8 w_q:[n,k] → [m,n] f32 (W8A8 path)."""
+    m, k = x.shape
+    n = w_q.shape[0]
+    bm, bn = _pick_block(m, block_m), _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _w8a8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_q, w_scale, w_bias)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def w4a8_matmul(x, w_packed, w_scale, w_bias, *, block_m: int = 16, block_n: int = 128):
+    """x:[m,k] f32 × packed-4-bit w:[n,k/2] u8 → [m,n] f32 (W4A8 path)."""
+    m, k = x.shape
+    n = w_packed.shape[0]
+    bm, bn = _pick_block(m, block_m), _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _w4a8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k // 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_packed, w_scale, w_bias)

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` function implements the same math as the corresponding
+kernel in this package, with no Pallas involved, so pytest can compare the
+two under hypothesis-driven shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quantize import (
+    INT8_MAX,
+    INT8_MIN,
+    asym_quant_params,
+    asym_quantize,
+    dequantize_value_fp8,
+    unpack_w4,
+)
+
+
+def quantize_activation_rows(x):
+    """Dynamic per-row asymmetric int8 activation quantization.
+    x: [m, k] f32 → (x_q i8, scale [m,1], bias [m,1])."""
+    scale, bias = asym_quant_params(x, INT8_MIN, INT8_MAX, axis=-1)
+    x_q = asym_quantize(x, scale, bias, INT8_MIN, INT8_MAX, jnp.int8)
+    return x_q, scale, bias
+
+
+def _affine_gemm(x, w_q_i32, w_scale, w_bias):
+    """Shared integer-GEMM-with-corrections math.
+
+    With x = x_q*sx + bx (per row) and w = w_q*sw + bw (per out-channel):
+      x·wᵀ = sx·sw (x_q·w_qᵀ) + sx·bw Σ_k x_q + bx·sw Σ_k w_q + k·bx·bw
+    """
+    m, k = x.shape
+    x_q, sx, bx = quantize_activation_rows(x)
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q_i32.T, preferred_element_type=jnp.int32
+    ).astype(jnp.float32)
+    xq_row = jnp.sum(x_q.astype(jnp.int32), axis=-1, keepdims=True).astype(jnp.float32)
+    wq_row = jnp.sum(w_q_i32, axis=-1, keepdims=True).astype(jnp.float32)
+    return (
+        sx * w_scale.T * acc
+        + sx * w_bias.T * xq_row
+        + bx * w_scale.T * wq_row.T
+        + k * bx * w_bias.T
+    )
+
+
+def ref_w8a8_matmul(x, w_q, w_scale, w_bias):
+    """x:[m,k] f32, w_q:[n,k] i8, w_scale/w_bias:[n,1] f32 → [m,n] f32."""
+    return _affine_gemm(x, w_q.astype(jnp.int32), w_scale, w_bias)
+
+
+def ref_w4a8_matmul(x, w_packed, w_scale, w_bias):
+    """Same math with 4-bit packed weights (nibbles 0..15)."""
+    return _affine_gemm(x, unpack_w4(w_packed), w_scale, w_bias)
+
+
+def ref_rmsnorm(x, w, eps: float = 1e-6):
+    """RMSNorm computed in fp32 (paper fuses this at conversion time)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return x32 * (1.0 / jnp.sqrt(var + eps)) * w.astype(jnp.float32)
+
+
+def ref_decode_attention(q, k_q, k_scale, k_bias, v_f8, pos):
+    """Single-token GQA attention over a quantized KV cache.
+
+    q:       [H, 1, d] f32 — already pre-scaled by 1/sqrt(d) (§5.3)
+    k_q:     [Hkv, T, d] i8, k_scale/k_bias: [Hkv, T, 1]
+    v_f8:    [Hkv, T, d] fp8e4m3
+    pos:     scalar i32; positions [0, pos] are valid cache entries
+    returns  [H, 1, d] f32
+    """
+    H = q.shape[0]
+    Hkv, T, d = k_q.shape
+    group = H // Hkv
+    k = k_q.astype(jnp.float32) * k_scale + k_bias  # [Hkv, T, d]
+    v = dequantize_value_fp8(v_f8)
+    kh = jnp.repeat(k, group, axis=0)  # [H, T, d]
+    vh = jnp.repeat(v, group, axis=0)
+    scores = jnp.einsum("hqd,htd->hqt", q.astype(jnp.float32), kh)  # fp32 softmax path
+    idx = jnp.arange(T)[None, None, :]
+    scores = jnp.where(idx <= pos, scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hqt,htd->hqd", probs, vh)
+
+
+def ref_prefill_attention(q, k, v):
+    """Causal GQA attention, fp32 softmax. q:[H,S,d] (pre-scaled), k/v:[Hkv,S,d]."""
+    H, S, d = q.shape
+    Hkv = k.shape[0]
+    group = H // Hkv
+    kh = jnp.repeat(k, group, axis=0)
+    vh = jnp.repeat(v, group, axis=0)
+    scores = jnp.einsum("hqd,htd->hqt", q.astype(jnp.float32), kh.astype(jnp.float32))
+    qi = jnp.arange(S)[None, :, None]
+    ki = jnp.arange(S)[None, None, :]
+    scores = jnp.where(ki <= qi, scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hqt,htd->hqd", probs, vh.astype(jnp.float32))

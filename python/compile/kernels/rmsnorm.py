@@ -1,0 +1,45 @@
+"""Pallas RMSNorm kernel (fp32 accumulation — paper §5.3 mixed precision).
+
+The paper fuses RMSNorm at model-conversion time and keeps the reduction in
+fp32 even when the surrounding compute is fp16. Here the whole kernel is
+fp32-accumulating regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [bs, hidden]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(var + eps)) * w_ref[...].astype(jnp.float32)
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    b = min(pref, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_s"))
+def rmsnorm(x, w, *, eps: float = 1e-6, block_s: int = 64):
+    """x: [s, hidden], w: [hidden] → [s, hidden] f32."""
+    s, hidden = x.shape
+    bs = _pick_block(s, block_s)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(s // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, hidden), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,298 @@
+"""Layer-2: Qwen2-style decoder-only transformer in JAX (build time only).
+
+The graph mirrors what MNN-LLM executes after its conversion pipeline
+(paper §3): RMSNorm is fused (one kernel), attention is fused (one kernel),
+Linear layers run on the combined-quantization scheme of §4.2:
+
+  * attention projections + lm_head : W8A8  (lm_head prioritised to int8)
+  * MLP projections                 : W4A8  (int4 weights, int8 activations)
+  * embedding                       : bf16, **not in the graph** — the Rust
+    engine streams embedding rows from the Flash tier (§4.1) and feeds the
+    embedded hidden states in as the graph input.
+  * KV cache                        : int8 asymmetric keys, fp8-e4m3 values.
+
+Two entry points are lowered per model: ``prefill_fn`` (one per sequence
+bucket) and ``decode_fn`` (single token against the cache). All weights are
+graph *arguments* so the Rust runtime keeps them resident as PJRT buffers
+(loaded once from artifacts/weights.bin).
+
+fp8 values cross the PJRT boundary bit-cast as u8 — the xla crate has no f8
+host type; the graph bitcasts back before use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as qz
+from .kernels import decode_attention, prefill_attention, rmsnorm, w4a8_matmul, w8a8_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer dimensions (Qwen2 family shapes)."""
+
+    name: str
+    vocab: int
+    hidden: int
+    inter: int
+    layers: int
+    heads: int
+    kv_heads: int
+    max_len: int  # static KV-cache capacity T
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Total parameters (embedding + layers + lm_head), float-equivalent."""
+        emb = self.vocab * self.hidden
+        per_layer = (
+            self.hidden * self.hidden  # wq
+            + 2 * self.hidden * self.kv_dim  # wk, wv
+            + self.hidden * self.hidden  # wo
+            + self.hidden + 2 * self.kv_dim  # qkv biases
+            + 3 * self.hidden * self.inter  # gate, up, down
+            + 2 * self.hidden  # norms
+        )
+        return emb + self.layers * per_layer + self.hidden + self.vocab * self.hidden
+
+
+TINY = ModelConfig("tiny-qwen2", vocab=2048, hidden=256, inter=704, layers=4,
+                   heads=4, kv_heads=2, max_len=512)
+SMALL = ModelConfig("small-qwen2", vocab=8192, hidden=384, inter=1056, layers=6,
+                    heads=6, kv_heads=2, max_len=512)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL)}
+
+
+# --------------------------------------------------------------------------
+# Parameter construction (random init — see DESIGN.md §Substitutions: no
+# pretrained weights offline; the paper measures speed, not accuracy).
+# --------------------------------------------------------------------------
+
+def _w8(rng, n, k, std):
+    w = rng.normal(0.0, std, size=(n, k)).astype(np.float32)
+    wq, ws, wb = qz.quantize_w8(jnp.asarray(w))
+    return {"q": np.asarray(wq), "s": np.asarray(ws), "b": np.asarray(wb)}
+
+
+def _w4(rng, n, k, std):
+    w = rng.normal(0.0, std, size=(n, k)).astype(np.float32)
+    wp, ws, wb = qz.quantize_w4(jnp.asarray(w))
+    return {"q": np.asarray(wp), "s": np.asarray(ws), "b": np.asarray(wb)}
+
+
+def build_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Deterministic quantized parameter set, keyed by flat names.
+
+    Naming: ``L{i}.{wq|wk|wv|wo|gate|up|down}.{q|s|b}``, ``L{i}.{bq|bk|bv}``,
+    ``L{i}.{ln1|ln2}``, ``fnorm``, ``lm_head.{q|s|b}``, plus ``embedding``
+    (bf16, stored separately — never a graph argument).
+    """
+    rng = np.random.default_rng(seed)
+    std = 0.4 / math.sqrt(cfg.hidden)
+    p: Dict[str, np.ndarray] = {}
+    p["embedding"] = rng.normal(0.0, 1.0, size=(cfg.vocab, cfg.hidden)).astype(np.float32)
+    for i in range(cfg.layers):
+        pre = f"L{i}."
+        for nm, w in (
+            ("wq", _w8(rng, cfg.hidden, cfg.hidden, std)),
+            ("wk", _w8(rng, cfg.kv_dim, cfg.hidden, std)),
+            ("wv", _w8(rng, cfg.kv_dim, cfg.hidden, std)),
+            ("wo", _w8(rng, cfg.hidden, cfg.hidden, std)),
+            ("gate", _w4(rng, cfg.inter, cfg.hidden, std)),
+            ("up", _w4(rng, cfg.inter, cfg.hidden, std)),
+            ("down", _w4(rng, cfg.hidden, cfg.inter, std)),
+        ):
+            for part, arr in w.items():
+                p[pre + nm + "." + part] = arr
+        p[pre + "bq"] = rng.normal(0.0, 0.02, size=(cfg.hidden,)).astype(np.float32)
+        p[pre + "bk"] = rng.normal(0.0, 0.02, size=(cfg.kv_dim,)).astype(np.float32)
+        p[pre + "bv"] = rng.normal(0.0, 0.02, size=(cfg.kv_dim,)).astype(np.float32)
+        p[pre + "ln1"] = np.ones((cfg.hidden,), dtype=np.float32)
+        p[pre + "ln2"] = np.ones((cfg.hidden,), dtype=np.float32)
+    p["fnorm"] = np.ones((cfg.hidden,), dtype=np.float32)
+    for part, arr in _w8(rng, cfg.vocab, cfg.hidden, std).items():
+        p["lm_head." + part] = arr
+    return p
+
+
+def graph_weight_names(cfg: ModelConfig) -> List[str]:
+    """Ordered weight-argument names for both lowered graphs (embedding is
+    excluded — it lives in the Flash tier on the Rust side)."""
+    names: List[str] = []
+    for i in range(cfg.layers):
+        pre = f"L{i}."
+        for nm in ("wq", "wk", "wv", "wo", "gate", "up", "down"):
+            names += [pre + nm + ".q", pre + nm + ".s", pre + nm + ".b"]
+        names += [pre + "bq", pre + "bk", pre + "bv", pre + "ln1", pre + "ln2"]
+    names += ["fnorm", "lm_head.q", "lm_head.s", "lm_head.b"]
+    return names
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def _rope_angles(cfg: ModelConfig, positions):
+    """positions: [S] i32 → (cos, sin) each [S, head_dim/2] f32."""
+    half = cfg.head_dim // 2
+    inv_freq = 1.0 / (cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x, cos, sin):
+    """x: [heads, S, d]; rotate-half convention (HF Qwen2)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    return jnp.concatenate(
+        [x1 * cos[None] - x2 * sin[None], x2 * cos[None] + x1 * sin[None]], axis=-1
+    )
+
+
+# --------------------------------------------------------------------------
+# Forward graphs
+# --------------------------------------------------------------------------
+
+def _linear8(x, w, pre):
+    return w8a8_matmul(x, w[pre + ".q"], w[pre + ".s"], w[pre + ".b"])
+
+
+def _linear4(x, w, pre):
+    return w4a8_matmul(x, w[pre + ".q"], w[pre + ".s"], w[pre + ".b"])
+
+
+def _mlp(x, w, pre):
+    """SwiGLU MLP on the W4A8 path."""
+    g = _linear4(x, w, pre + "gate")
+    u = _linear4(x, w, pre + "up")
+    return _linear4(jax.nn.silu(g) * u, w, pre + "down")
+
+
+def prefill_fn(cfg: ModelConfig, hidden_in, *weights):
+    """hidden_in: [S, hidden] f32 (embedded by the Rust engine).
+
+    Returns (logits [S, vocab] f32,
+             k_q [L,Hkv,T,d] i8, k_s [L,Hkv,T,1] f32, k_b [L,Hkv,T,1] f32,
+             v_u8 [L,Hkv,T,d] u8  — fp8 bitcast).
+    """
+    names = graph_weight_names(cfg)
+    w = dict(zip(names, weights))
+    S = hidden_in.shape[0]
+    T, L, Hkv, H, d = cfg.max_len, cfg.layers, cfg.kv_heads, cfg.heads, cfg.head_dim
+    cos, sin = _rope_angles(cfg, jnp.arange(S, dtype=jnp.int32))
+    x = hidden_in
+    kq_all, ks_all, kb_all, v_all = [], [], [], []
+    scale = 1.0 / math.sqrt(d)
+    for i in range(L):
+        pre = f"L{i}."
+        h = rmsnorm(x, w[pre + "ln1"], eps=cfg.rms_eps)
+        q = (_linear8(h, w, pre + "wq") + w[pre + "bq"]).reshape(S, H, d).transpose(1, 0, 2)
+        k = (_linear8(h, w, pre + "wk") + w[pre + "bk"]).reshape(S, Hkv, d).transpose(1, 0, 2)
+        v = (_linear8(h, w, pre + "wv") + w[pre + "bv"]).reshape(S, Hkv, d).transpose(1, 0, 2)
+        q = _apply_rope(q, cos, sin) * scale  # pre-scaled query (§5.3)
+        k = _apply_rope(k, cos, sin)
+        attn = prefill_attention(q, k, v)  # [H, S, d]
+        x = x + _linear8(attn.transpose(1, 0, 2).reshape(S, H * d), w, pre + "wo")
+        x = x + _mlp(rmsnorm(x, w[pre + "ln2"], eps=cfg.rms_eps), w, pre)
+        # Quantize fresh K/V into the static-capacity cache (§4.2).
+        k_q, k_s, k_b = qz.quantize_key(k)  # [Hkv,S,d], [Hkv,S,1]
+        v_f8 = qz.quantize_value_fp8(v)
+        pad = [(0, 0), (0, T - S), (0, 0)]
+        kq_all.append(jnp.pad(k_q, pad))
+        ks_all.append(jnp.pad(k_s, pad))
+        kb_all.append(jnp.pad(k_b, pad))
+        v_all.append(jnp.pad(v_f8, pad))
+    x = rmsnorm(x, w["fnorm"], eps=cfg.rms_eps)
+    logits = _linear8(x, w, "lm_head")
+    v_u8 = jax.lax.bitcast_convert_type(jnp.stack(v_all), jnp.uint8)
+    return (
+        logits,
+        jnp.stack(kq_all),
+        jnp.stack(ks_all),
+        jnp.stack(kb_all),
+        v_u8,
+    )
+
+
+def decode_fn(cfg: ModelConfig, hidden_in, pos, k_q, k_s, k_b, v_u8, *weights):
+    """One decode step.
+
+    hidden_in: [1, hidden] f32; pos: [1] i32 (index of this token);
+    caches as produced by prefill_fn. Returns (logits [1, vocab], updated
+    caches) — cache updates happen in-graph via dynamic_update_slice, so the
+    Rust side just threads PJRT buffers between steps.
+    """
+    names = graph_weight_names(cfg)
+    w = dict(zip(names, weights))
+    L, Hkv, H, d, T = cfg.layers, cfg.kv_heads, cfg.heads, cfg.head_dim, cfg.max_len
+    v_f8 = jax.lax.bitcast_convert_type(v_u8, jnp.float8_e4m3fn)
+    cos, sin = _rope_angles(cfg, pos)  # [1, d/2]
+    x = hidden_in
+    scale = 1.0 / math.sqrt(d)
+    for i in range(L):
+        pre = f"L{i}."
+        h = rmsnorm(x, w[pre + "ln1"], eps=cfg.rms_eps)
+        q = (_linear8(h, w, pre + "wq") + w[pre + "bq"]).reshape(1, H, d).transpose(1, 0, 2)
+        k = (_linear8(h, w, pre + "wk") + w[pre + "bk"]).reshape(1, Hkv, d).transpose(1, 0, 2)
+        v = (_linear8(h, w, pre + "wv") + w[pre + "bv"]).reshape(1, Hkv, d).transpose(1, 0, 2)
+        q = _apply_rope(q, cos, sin) * scale
+        k = _apply_rope(k, cos, sin)
+        new_kq, new_ks, new_kb = qz.quantize_key(k)  # [Hkv,1,d],[Hkv,1,1]
+        new_v = qz.quantize_value_fp8(v)
+        p = pos[0]
+        k_q = jax.lax.dynamic_update_slice(k_q, new_kq[None], (i, 0, p, 0))
+        k_s = jax.lax.dynamic_update_slice(k_s, new_ks[None], (i, 0, p, 0))
+        k_b = jax.lax.dynamic_update_slice(k_b, new_kb[None], (i, 0, p, 0))
+        v_f8 = jax.lax.dynamic_update_slice(v_f8, new_v[None], (i, 0, p, 0))
+        attn = decode_attention(q, k_q[i], k_s[i], k_b[i], v_f8[i], pos)  # [H,1,d]
+        x = x + _linear8(attn.transpose(1, 0, 2).reshape(1, H * d), w, pre + "wo")
+        x = x + _mlp(rmsnorm(x, w[pre + "ln2"], eps=cfg.rms_eps), w, pre)
+    x = rmsnorm(x, w["fnorm"], eps=cfg.rms_eps)
+    logits = _linear8(x, w, "lm_head")
+    return logits, k_q, k_s, k_b, jax.lax.bitcast_convert_type(v_f8, jnp.uint8)
+
+
+# --------------------------------------------------------------------------
+# Pure-python reference generation (used by tests and to cross-check Rust)
+# --------------------------------------------------------------------------
+
+def reference_generate(cfg: ModelConfig, params: Dict[str, np.ndarray],
+                       prompt_ids: List[int], gen: int, bucket: int) -> Tuple[List[int], np.ndarray]:
+    """End-to-end greedy generation in pure JAX, using the same graphs that
+    get lowered. Returns (token ids, prefill last-row logits)."""
+    names = graph_weight_names(cfg)
+    weights = [jnp.asarray(params[n]) for n in names]
+    emb = params["embedding"]
+    S = bucket
+    ids = list(prompt_ids)
+    hidden = np.zeros((S, cfg.hidden), dtype=np.float32)
+    hidden[: len(ids)] = emb[np.asarray(ids)]
+    logits, k_q, k_s, k_b, v_u8 = prefill_fn(cfg, jnp.asarray(hidden), *weights)
+    last = np.asarray(logits)[len(ids) - 1]
+    nxt = int(np.argmax(last))
+    out = [nxt]
+    for step in range(gen - 1):
+        pos = len(ids) + step
+        h = jnp.asarray(emb[nxt][None].astype(np.float32))
+        logits, k_q, k_s, k_b, v_u8 = decode_fn(
+            cfg, h, jnp.asarray([pos], dtype=jnp.int32), k_q, k_s, k_b, v_u8, *weights
+        )
+        nxt = int(np.argmax(np.asarray(logits)[0]))
+        out.append(nxt)
+    return out, last

@@ -1,0 +1,105 @@
+"""Asymmetric quantization helpers (paper §4.2, Eq. 1).
+
+The paper quantizes weights with an asymmetric affine scheme:
+
+    w_q = round((w - w_min) / step) + clip_min,   step = (w_max - w_min) / (clip_max - clip_min)
+
+which dequantizes as ``w ≈ w_q * scale + bias`` with
+
+    scale = step,  bias = w_min - clip_min * step.
+
+We carry the (scale, bias) form everywhere — it makes the integer-GEMM
+correction terms linear (see kernels/qmatmul.py).
+
+All functions are pure jnp so they can run both at model-build time
+(weight quantization) and inside the lowered graphs (KV-cache / activation
+quantization).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def asym_quant_params(x, clip_min: int, clip_max: int, axis=-1, eps: float = 1e-8):
+    """Per-`axis`-slice asymmetric (scale, bias) for quantizing x into
+    [clip_min, clip_max]. Returns (scale, bias) with the reduced axis kept."""
+    x_min = jnp.min(x, axis=axis, keepdims=True)
+    x_max = jnp.max(x, axis=axis, keepdims=True)
+    rng = jnp.maximum(x_max - x_min, eps)
+    scale = rng / float(clip_max - clip_min)
+    bias = x_min - clip_min * scale
+    return scale, bias
+
+
+def asym_quantize(x, scale, bias, clip_min: int, clip_max: int, dtype):
+    """Quantize with precomputed (scale, bias); clamps to the clip range."""
+    q = jnp.round((x - bias) / scale)
+    q = jnp.clip(q, clip_min, clip_max)
+    return q.astype(dtype)
+
+
+def asym_dequantize(q, scale, bias):
+    return q.astype(jnp.float32) * scale + bias
+
+
+# --- int8 weights / activations (W8A8 CPU path) -----------------------------
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def quantize_w8(w):
+    """Per-output-channel asymmetric int8. w: [n, k] → (w_q i8, scale [n,1], bias [n,1])."""
+    scale, bias = asym_quant_params(w, INT8_MIN, INT8_MAX, axis=-1)
+    w_q = asym_quantize(w, scale, bias, INT8_MIN, INT8_MAX, jnp.int8)
+    return w_q, scale, bias
+
+
+# --- int4 weights (W4A8), packed two nibbles per byte ------------------------
+
+INT4_MIN, INT4_MAX = 0, 15  # unsigned nibble with affine bias
+
+
+def quantize_w4(w):
+    """Per-output-channel asymmetric 4-bit. w: [n, k] (k even)
+    → (packed u8 [n, k//2], scale [n,1], bias [n,1]).
+    Nibble layout: even k-index in the low nibble, odd in the high nibble."""
+    scale, bias = asym_quant_params(w, INT4_MIN, INT4_MAX, axis=-1)
+    q = asym_quantize(w, scale, bias, INT4_MIN, INT4_MAX, jnp.uint8)
+    lo = q[:, 0::2]
+    hi = q[:, 1::2]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scale, bias
+
+
+def unpack_w4(packed):
+    """Inverse of the packing in quantize_w4 (values in 0..15, interleaved)."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    n, half = packed.shape
+    out = jnp.zeros((n, half * 2), dtype=jnp.int32)
+    out = out.at[:, 0::2].set(lo)
+    out = out.at[:, 1::2].set(hi)
+    return out
+
+
+# --- KV cache quantization (§4.2) -------------------------------------------
+# Keys: reduced dim in QK^T is head_dim (fixed) → per-token asymmetric int8.
+# Values: reduced dim is seqlen (grows) → fp8 e4m3, no per-tensor stats, so
+# appending new tokens never re-quantizes old ones.
+
+
+def quantize_key(k):
+    """k: [..., d] → (k_q i8, scale [...,1], bias [...,1]) per-token."""
+    scale, bias = asym_quant_params(k, INT8_MIN, INT8_MAX, axis=-1)
+    k_q = asym_quantize(k, scale, bias, INT8_MIN, INT8_MAX, jnp.int8)
+    return k_q, scale, bias
+
+
+def quantize_value_fp8(v):
+    """v: [...] f32 → fp8 e4m3 (stat-free, append-friendly)."""
+    return v.astype(jnp.float8_e4m3fn)
+
+
+def dequantize_value_fp8(v_f8):
+    return v_f8.astype(jnp.float32)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run as `pytest python/tests` from the repo root or `pytest tests`
+# from python/ — make `compile` importable either way.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,91 @@
+"""AOT artifact container tests: weights.bin parses, manifest is coherent."""
+
+import dataclasses
+import json
+import os
+import struct
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile.aot import export, write_weights_bin
+from compile.model import TINY, graph_weight_names
+
+CFG = dataclasses.replace(TINY, layers=1, max_len=32)
+
+
+def _read_weights_bin(path):
+    tensors = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"MNNW"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            tensors[name] = (code, dims, f.read(nbytes))
+    return tensors
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    export(CFG, out, seed=0)
+    return out
+
+
+def test_container_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.bin")
+        a = np.arange(12, dtype=np.float32).reshape(3, 4)
+        b = (np.arange(8) - 4).astype(np.int8)
+        table = write_weights_bin(path, {"a": a, "b": b})
+        tensors = _read_weights_bin(path)
+        assert tensors["a"][0] == 0 and tensors["a"][1] == (3, 4)
+        assert np.frombuffer(tensors["a"][2], dtype=np.float32).reshape(3, 4).tolist() == a.tolist()
+        assert tensors["b"][0] == 1
+        assert [t["name"] for t in table] == ["a", "b"]
+
+
+def test_manifest_and_files_exist(exported):
+    m = json.load(open(os.path.join(exported, "manifest.json")))
+    assert m["model"]["name"] == CFG.name
+    for g in m["graphs"].values():
+        assert os.path.exists(os.path.join(exported, g["file"]))
+    assert os.path.exists(os.path.join(exported, "weights.bin"))
+    assert os.path.exists(os.path.join(exported, "embedding.bin"))
+    # Embedding file is bf16 [vocab, hidden] = 2 bytes/elt.
+    sz = os.path.getsize(os.path.join(exported, "embedding.bin"))
+    assert sz == CFG.vocab * CFG.hidden * 2
+
+
+def test_manifest_weight_order_matches_graph_args(exported):
+    m = json.load(open(os.path.join(exported, "manifest.json")))
+    names = graph_weight_names(CFG)
+    assert [w["name"] for w in m["weights"]] == names
+    for key, g in m["graphs"].items():
+        assert g["args"][-len(names):] == names, key
+
+
+def test_weights_bin_parses_fully(exported):
+    m = json.load(open(os.path.join(exported, "manifest.json")))
+    tensors = _read_weights_bin(os.path.join(exported, "weights.bin"))
+    for w in m["weights"]:
+        code, dims, raw = tensors[w["name"]]
+        assert code == w["dtype"]
+        assert list(dims) == w["shape"]
+        assert len(raw) == w["nbytes"]
+
+
+def test_hlo_text_is_parseable_shape(exported):
+    """HLO text must start with an HloModule header (what the Rust parser
+    expects) and mention an ENTRY computation."""
+    m = json.load(open(os.path.join(exported, "manifest.json")))
+    for g in m["graphs"].values():
+        text = open(os.path.join(exported, g["file"])).read()
+        assert text.startswith("HloModule"), g["file"]
+        assert "ENTRY" in text

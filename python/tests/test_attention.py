@@ -1,0 +1,125 @@
+"""Pallas attention kernels vs oracles + KV-quantization properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_attention, prefill_attention
+from compile.kernels.ref import ref_decode_attention, ref_prefill_attention
+from compile.quantize import dequantize_value_fp8, quantize_key, quantize_value_fp8
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    heads=st.sampled_from([(2, 1), (4, 2), (4, 4), (8, 2)]),
+    t=st.sampled_from([8, 32, 64, 128]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attention_matches_ref(heads, t, d, seed):
+    H, Hkv = heads
+    rng = np.random.default_rng(seed)
+    pos = int(rng.integers(0, t))
+    q = _rand(rng, H, 1, d, scale=1.0 / np.sqrt(d))
+    k = _rand(rng, Hkv, t, d)
+    v = _rand(rng, Hkv, t, d)
+    kq, ks, kb = quantize_key(k)
+    vf8 = quantize_value_fp8(v)
+    out = decode_attention(q, kq, ks, kb, vf8, jnp.asarray([pos], dtype=jnp.int32))
+    ref = ref_decode_attention(q, kq, ks, kb, vf8, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    heads=st.sampled_from([(2, 1), (4, 2), (8, 4)]),
+    s=st.sampled_from([4, 16, 64]),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_attention_matches_ref(heads, s, d, seed):
+    H, Hkv = heads
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, H, s, d, scale=1.0 / np.sqrt(d))
+    k = _rand(rng, Hkv, s, d)
+    v = _rand(rng, Hkv, s, d)
+    out = prefill_attention(q, k, v)
+    ref = ref_prefill_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_ignores_positions_beyond_pos():
+    """Cache garbage past `pos` must not leak into the output (§4.1 spill
+    correctness depends on this masking)."""
+    rng = np.random.default_rng(0)
+    H, Hkv, T, d = 4, 2, 32, 16
+    q = _rand(rng, H, 1, d, scale=0.25)
+    k = _rand(rng, Hkv, T, d)
+    v = _rand(rng, Hkv, T, d)
+    kq, ks, kb = quantize_key(k)
+    vf8 = quantize_value_fp8(v)
+    pos = 10
+    out1 = np.asarray(decode_attention(q, kq, ks, kb, vf8, jnp.asarray([pos], dtype=jnp.int32)))
+    # Trash everything beyond pos.
+    k2 = np.asarray(kq).copy(); k2[:, pos + 1:] = 127
+    v2 = np.asarray(vf8).copy(); v2[:, pos + 1:] = 100.0
+    out2 = np.asarray(
+        decode_attention(q, jnp.asarray(k2), ks, kb, jnp.asarray(v2), jnp.asarray([pos], dtype=jnp.int32))
+    )
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_is_causal():
+    """Changing future tokens must not change earlier rows."""
+    rng = np.random.default_rng(1)
+    H, Hkv, S, d = 4, 2, 16, 16
+    q = _rand(rng, H, S, d, scale=0.25)
+    k = _rand(rng, Hkv, S, d)
+    v = _rand(rng, Hkv, S, d)
+    base = np.asarray(prefill_attention(q, k, v))
+    k2 = np.asarray(k).copy(); k2[:, S - 1] += 5.0
+    v2 = np.asarray(v).copy(); v2[:, S - 1] -= 3.0
+    pert = np.asarray(prefill_attention(q, jnp.asarray(k2), jnp.asarray(v2)))
+    np.testing.assert_allclose(base[:, : S - 1], pert[:, : S - 1], rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), t=st.sampled_from([4, 16, 64]))
+def test_key_quant_roundtrip(seed, t):
+    rng = np.random.default_rng(seed)
+    k = _rand(rng, 2, t, 32)
+    kq, ks, kb = quantize_key(k)
+    deq = np.asarray(kq).astype(np.float32) * np.asarray(ks) + np.asarray(kb)
+    assert np.all(np.abs(deq - np.asarray(k)) <= np.asarray(ks) * 0.51 + 1e-7)
+
+
+def test_fp8_value_append_stability():
+    """fp8 values are stat-free: quantizing a longer cache must leave the
+    prefix encoding bit-identical (the paper's reason for fp8 values)."""
+    rng = np.random.default_rng(2)
+    v_old = _rand(rng, 2, 8, 16)
+    v_new = _rand(rng, 2, 4, 16)
+    enc_old = np.asarray(quantize_value_fp8(v_old))
+    both = jnp.concatenate([v_old, v_new], axis=1)
+    enc_both = np.asarray(quantize_value_fp8(both))
+    assert np.array_equal(
+        enc_old.view(np.uint8), enc_both[:, :8].view(np.uint8)
+    )
+
+
+def test_fp8_roundtrip_error_bounded():
+    rng = np.random.default_rng(3)
+    v = _rand(rng, 2, 16, 16)
+    deq = np.asarray(dequantize_value_fp8(quantize_value_fp8(v)))
+    # e4m3: 3 mantissa bits → relative error ≤ 2^-4 in the normal range
+    # (denormals below ~2^-6 have coarser absolute spacing — exclude them).
+    vv = np.asarray(v)
+    mask = np.abs(vv) >= 0.1
+    rel = np.abs(deq[mask] - vv[mask]) / np.abs(vv[mask])
+    assert rel.max() <= 2 ** -4 + 1e-3
+    # And absolute error is bounded everywhere by the largest step at |v|<=max.
+    assert np.abs(deq - vv).max() <= np.abs(vv).max() * 2 ** -4 + 1e-3

@@ -1,0 +1,105 @@
+"""Pallas quantized matmul vs the pure-jnp oracle (hypothesis shape sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import w4a8_matmul, w8a8_matmul
+from compile.kernels.ref import ref_w4a8_matmul, ref_w8a8_matmul, quantize_activation_rows
+from compile.quantize import quantize_w4, quantize_w8, unpack_w4
+
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.sampled_from([8, 16, 64, 96, 256]),
+    n=st.sampled_from([8, 24, 64, 128, 192]),
+    seed=st.integers(0, 2**16),
+)
+def test_w8a8_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, n, k)
+    wq, ws, wb = quantize_w8(w)
+    out = w8a8_matmul(x, wq, ws, wb)
+    ref = ref_w8a8_matmul(x, wq, ws, wb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.sampled_from([8, 16, 64, 96, 256]),
+    n=st.sampled_from([8, 24, 64, 128, 192]),
+    seed=st.integers(0, 2**16),
+)
+def test_w4a8_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, n, k)
+    wp, ws, wb = quantize_w4(w)
+    out = w4a8_matmul(x, wp, ws, wb)
+    ref = ref_w4a8_matmul(x, wp, ws, wb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("block_m,block_n", [(1, 8), (4, 16), (16, 128), (64, 256)])
+def test_w8a8_block_shape_invariance(block_m, block_n):
+    """Tiling must never change the numbers — only the schedule."""
+    rng = np.random.default_rng(7)
+    x, w = _rand(rng, 24, 64), _rand(rng, 96, 64)
+    wq, ws, wb = quantize_w8(w)
+    base = np.asarray(w8a8_matmul(x, wq, ws, wb, block_m=24, block_n=96))
+    tiled = np.asarray(w8a8_matmul(x, wq, ws, wb, block_m=block_m, block_n=block_n))
+    np.testing.assert_allclose(tiled, base, rtol=1e-5, atol=1e-5)
+
+
+def test_w8a8_close_to_float_matmul():
+    """Quantized GEMM tracks the fp32 product closely in direction and
+    magnitude (cosine > 0.999, relative Frobenius error < 2%)."""
+    rng = np.random.default_rng(3)
+    x, w = _rand(rng, 16, 256), _rand(rng, 128, 256)
+    wq, ws, wb = quantize_w8(w)
+    out = np.asarray(w8a8_matmul(x, wq, ws, wb)).ravel()
+    ref = np.asarray(x @ w.T).ravel()
+    cos = out @ ref / (np.linalg.norm(out) * np.linalg.norm(ref))
+    assert cos > 0.999
+    assert np.linalg.norm(out - ref) / np.linalg.norm(ref) < 0.02
+
+
+def test_w4_pack_roundtrip():
+    rng = np.random.default_rng(11)
+    w = _rand(rng, 32, 64)
+    wp, ws, wb = quantize_w4(w)
+    unpacked = np.asarray(unpack_w4(wp))
+    assert unpacked.shape == (32, 64)
+    assert unpacked.min() >= 0 and unpacked.max() <= 15
+    # Dequantized weights approximate the originals within one step.
+    deq = unpacked * np.asarray(ws) + np.asarray(wb)
+    step = np.asarray(ws)
+    assert np.all(np.abs(deq - np.asarray(w)) <= step * 0.5 + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 32), k=st.sampled_from([4, 32, 128]), seed=st.integers(0, 2**16))
+def test_activation_quant_roundtrip(m, k, seed):
+    """Dynamic activation quantization reconstructs within one step."""
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    xq, sx, bx = quantize_activation_rows(x)
+    deq = np.asarray(xq).astype(np.float32) * np.asarray(sx) + np.asarray(bx)
+    assert np.all(np.abs(deq - np.asarray(x)) <= np.asarray(sx) * 0.51 + 1e-7)
+
+
+def test_constant_rows_do_not_nan():
+    """Zero-range activation rows (the eps guard) must stay finite."""
+    x = jnp.ones((4, 16), dtype=jnp.float32) * 3.0
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(8, 16)).astype(np.float32))
+    wq, ws, wb = quantize_w8(w)
+    out = np.asarray(w8a8_matmul(x, wq, ws, wb))
+    assert np.all(np.isfinite(out))

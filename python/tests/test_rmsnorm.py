@@ -1,0 +1,53 @@
+"""Pallas RMSNorm vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rmsnorm
+from compile.kernels.ref import ref_rmsnorm
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.integers(1, 64),
+    hidden=st.sampled_from([16, 64, 256, 384]),
+    seed=st.integers(0, 2**16),
+)
+def test_rmsnorm_matches_ref(s, hidden, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(s, hidden)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(hidden,)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, w)), np.asarray(ref_rmsnorm(x, w)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rmsnorm_scale_invariance():
+    """RMSNorm(c*x) == RMSNorm(x) up to eps effects — the defining property."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    w = jnp.ones((64,), dtype=jnp.float32)
+    a = np.asarray(rmsnorm(x, w))
+    b = np.asarray(rmsnorm(x * 1000.0, w))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_unit_rows():
+    """Rows of the output have RMS 1 when w == 1."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 256)).astype(np.float32))
+    w = jnp.ones((256,), dtype=jnp.float32)
+    out = np.asarray(rmsnorm(x, w))
+    rms = np.sqrt(np.mean(out * out, axis=-1))
+    np.testing.assert_allclose(rms, np.ones(4), rtol=1e-3)
+
+
+def test_rmsnorm_fp32_large_values():
+    """Mixed-precision guard: values near the fp16 limit must not overflow
+    because the kernel accumulates in fp32 (§5.3)."""
+    x = jnp.full((2, 64), 60000.0, dtype=jnp.float32)
+    w = jnp.ones((64,), dtype=jnp.float32)
+    out = np.asarray(rmsnorm(x, w))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out, np.ones_like(out), rtol=1e-3)

@@ -1,0 +1,106 @@
+//! Figure 2 reproduction: KV loading time under four storage regimes —
+//! (a) all-DRAM, (b) DRAM-Flash without prefetch, (c) DRAM-Flash with
+//! prefetch under the hidden-capacity threshold, (d) beyond the threshold.
+//!
+//! Two parts: the device-model series at Qwen2-7B scale (the paper's
+//! setting — reproduces the 3072K crossover and ~1 ms/1K overshoot), and a
+//! real-I/O measurement of the spill/stage path on the tiny model.
+//!
+//! Run: `cargo bench --bench fig2_kv_loading`
+
+use std::sync::Arc;
+
+use mnn_llm::bench as bh;
+use mnn_llm::device::SocProfile;
+use mnn_llm::memory::flash::FlashSim;
+use mnn_llm::memory::hybrid::HybridKvLayer;
+use mnn_llm::memory::prefetch::PrefetchPlanner;
+use mnn_llm::util::rng::Rng;
+
+/// Qwen2-7B single-layer qkv+MLP weight bytes (≈178.83 MB, paper §4.1).
+const LAYER_BYTES: usize = 178_830_000;
+/// Qwen2-7B KV bytes per token (≈1 KB, paper §4.1).
+const KV_TOKEN_BYTES: usize = 1024;
+
+fn main() {
+    let soc = SocProfile::snapdragon_8gen3();
+    let planner = PrefetchPlanner::from_soc(&soc, LAYER_BYTES);
+    let layers = 28;
+    let compute = planner.window_s;
+
+    bh::section("Fig. 2 — decode-step makespan vs flash-resident KV (Qwen2-7B model)");
+    println!(
+        "window {:.2} ms/layer | hidden capacity {:.2} MB ≈ {:.0}K tokens (paper: ~3 MB / 3072K)",
+        planner.window_s * 1e3,
+        planner.hidden_capacity_bytes() / 1e6,
+        planner.hidden_capacity_bytes() / KV_TOKEN_BYTES as f64 / 1024.0 * 1024.0 / 1000.0
+    );
+    let mut rows = Vec::new();
+    for k_tokens in [0usize, 512, 1024, 2048, 3072, 4096, 6144, 8192] {
+        let bytes = k_tokens * 1024 * KV_TOKEN_BYTES / 1024; // k_tokens in "K"
+        let dram_only = layers as f64 * compute;
+        let serial = planner.step_makespan(layers, bytes, compute, false);
+        let prefetch = planner.step_makespan(layers, bytes, compute, true);
+        rows.push(vec![
+            format!("{k_tokens}K"),
+            format!("{:.1}", dram_only * 1e3),
+            format!("{:.1}", serial * 1e3),
+            format!("{:.1}", prefetch * 1e3),
+            format!("{:.2}", serial / dram_only),
+            format!("{:.2}", prefetch / dram_only),
+        ]);
+    }
+    bh::table(
+        &["flash KV", "(a) DRAM ms", "(b) no prefetch ms", "(c/d) prefetch ms", "b/a", "c/a"],
+        &rows,
+    );
+    println!("\nShape checks:");
+    let cap = planner.hidden_capacity_bytes() as usize;
+    let under = planner.step_makespan(layers, cap / 2, compute, true);
+    let base = layers as f64 * compute;
+    println!(
+        "  under threshold: prefetch overhead = {:.1}% (paper: hidden entirely)",
+        100.0 * (under - base) / base
+    );
+    let over = planner.exposed_time(cap + 1_048_576) - planner.exposed_time(cap);
+    println!("  beyond threshold: +{:.2} ms per extra 1K tokens (paper: ≈1 ms)", over * 1e3);
+
+    bh::section("Real I/O on this host: spill + stage the tiny model's KV");
+    let mut rng = Rng::new(3);
+    let mut rows = Vec::new();
+    for (name, budget, toks) in [
+        ("all DRAM (no spill)", usize::MAX / 2, 128usize),
+        ("spill beyond 64 tok", 64, 128),
+        ("spill beyond 16 tok", 16, 128),
+        ("spill beyond 16 tok, longer ctx", 16, 256),
+    ] {
+        let flash = Arc::new(FlashSim::temp(soc.flash).unwrap());
+        let mut layer = HybridKvLayer::new(2, 64, flash, budget);
+        let t_append = std::time::Instant::now();
+        for _ in 0..toks {
+            let k = rng.normal_vec(2 * 64);
+            let v = rng.normal_vec(2 * 64);
+            layer.append(&k, &v).unwrap();
+        }
+        let append_s = t_append.elapsed().as_secs_f64();
+        let spilled = layer.spilled_tokens();
+        let modeled = layer.stage_cost();
+        let t_stage = std::time::Instant::now();
+        layer.stage().unwrap();
+        let stage_wall = t_stage.elapsed().as_secs_f64();
+        rows.push(vec![
+            name.to_string(),
+            toks.to_string(),
+            spilled.to_string(),
+            format!("{:.2}", append_s * 1e3),
+            format!("{:.3}", stage_wall * 1e3),
+            format!("{:.3}", modeled * 1e3),
+        ]);
+    }
+    bh::table(
+        &["config", "tokens", "spilled", "append wall ms", "stage wall ms", "stage modeled (UFS) ms"],
+        &rows,
+    );
+    println!("\n(Real spill I/O goes through an actual file; timing *figures* use the");
+    println!(" UFS bandwidth model — this box's NVMe is far faster than mobile flash.)");
+}

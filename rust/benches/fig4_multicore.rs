@@ -1,0 +1,84 @@
+//! Figure 4 reproduction: multithread speedup with balanced vs uniform
+//! workload split on a 1-prime + 3-performance-core SoC (§5.2).
+//!
+//! The speedup series comes from the virtual-time core model (this box has
+//! one core — DESIGN.md §Substitutions); a real-thread section verifies the
+//! split machinery end-to-end on the actual GEMM.
+//!
+//! Run: `cargo bench --bench fig4_multicore`
+
+use mnn_llm::bench as bh;
+use mnn_llm::cpu::gemm_q::QLinear;
+use mnn_llm::device::SocProfile;
+use mnn_llm::parallel::balancer::{balanced_split, makespan, speedup_curve, uniform_split};
+use mnn_llm::parallel::pool::WorkerConfig;
+use mnn_llm::quant::asym::{QuantizedMatrix, WeightBits};
+use mnn_llm::reorder::{isa, solver};
+use mnn_llm::util::rng::Rng;
+
+fn main() {
+    let soc = SocProfile::snapdragon_8gen3();
+    let rates: Vec<f64> = soc.high_perf_cores(4).iter().map(|c| c.rel_perf).collect();
+
+    bh::section("Fig. 4 — speedup vs threads (1 prime + 3 performance cores)");
+    println!("core rates: {rates:?} (prime = 1.0)");
+    let items = 4096; // GEMM h-tiles in one big Linear
+    let (bal, uni) = speedup_curve(items, &rates, 4);
+    let rows: Vec<Vec<String>> = (0..4)
+        .map(|t| {
+            vec![
+                (t + 1).to_string(),
+                format!("{:.2}×", bal[t]),
+                format!("{:.2}×", uni[t]),
+                format!("{:.1}%", 100.0 * (bal[t] / uni[t] - 1.0)),
+            ]
+        })
+        .collect();
+    bh::table(&["threads", "balanced", "uniform", "balanced gain"], &rows);
+
+    println!("\nShape checks (paper Fig. 4):");
+    println!("  1 thread: both = 1.0×                    → {:.2}/{:.2}", bal[0], uni[0]);
+    println!("  4 threads balanced ≈ 1+3·0.72 = 3.16×    → {:.2}×", bal[3]);
+    println!("  4 threads uniform capped by slowest core → {:.2}× (< balanced)", uni[3]);
+
+    bh::section("Split integrity on the real GEMM (1 OS core, correctness)");
+    let mut rng = Rng::new(5);
+    let (e, l, h) = (32, 512, 2048);
+    let wf = rng.normal_vec(h * l);
+    let x = rng.normal_vec(e * l);
+    let qm = QuantizedMatrix::from_f32(&wf, h, l, WeightBits::Int8);
+    let tile = solver::solve_tiles(&isa::detect_host());
+    let lin = QLinear::new(&qm, tile, None);
+    let mut out1 = vec![0f32; e * h];
+    lin.forward(&x, e, &mut out1);
+    // Same GEMM under a 4-way balanced split must give identical results.
+    let cfg = WorkerConfig { rates: rates.clone() };
+    let pa = mnn_llm::reorder::pack::pack_activations(&x, e, l, tile);
+    let tiles = lin.h_tiles();
+    let split = balanced_split(tiles, &cfg.rates);
+    let mut out2 = vec![0f32; e * h];
+    let mut lo = 0;
+    for n in &split {
+        lin.forward_packed(&pa, &mut out2, lo, lo + n);
+        lo += n;
+    }
+    assert_eq!(out1, out2, "balanced split changed numbers");
+    println!("  balanced 4-way split output == single-thread output ✓ (split {split:?})");
+
+    bh::section("Virtual-time makespan per split policy (tiles of this GEMM)");
+    let rows: Vec<Vec<String>> = [1usize, 2, 3, 4]
+        .iter()
+        .map(|&t| {
+            let r = &rates[..t];
+            let mb = makespan(&balanced_split(tiles, r), r);
+            let mu = makespan(&uniform_split(tiles, r), r);
+            vec![
+                t.to_string(),
+                format!("{:?}", balanced_split(tiles, r)),
+                format!("{mb:.1}"),
+                format!("{mu:.1}"),
+            ]
+        })
+        .collect();
+    bh::table(&["threads", "balanced split", "balanced makespan", "uniform makespan"], &rows);
+}

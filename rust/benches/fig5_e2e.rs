@@ -1,0 +1,215 @@
+//! Figure 5 reproduction: prefill and decode speeds of MNN-LLM vs
+//! llama.cpp, MLC-LLM and fastllm on CPU (4 threads) and GPU, prompts
+//! {64, 256, 1024}, decode capped at 16 tokens, models Qwen2-1.5B /
+//! Qwen2-7B / Llama3-8B.
+//!
+//! Part 1 — the figure itself, from the calibrated engine models on the
+//! Snapdragon-8Gen3 device profile (DESIGN.md §Substitutions: the
+//! competitor binaries cannot run here).
+//!
+//! Part 2 — measured mechanism ablations on the *real* native engine with
+//! the tiny model: each paper optimization toggled off, so the factor
+//! decomposition in part 1 is grounded in running code.
+//!
+//! Run: `cargo bench --bench fig5_e2e`
+
+use mnn_llm::baselines::{self, Device};
+use mnn_llm::bench as bh;
+use mnn_llm::device::SocProfile;
+use mnn_llm::model::config::ModelConfig;
+use mnn_llm::model::native::{EngineOptions, NativeModel};
+use mnn_llm::reorder::solver::TileConfig;
+use mnn_llm::util::rng::Rng;
+
+const PROMPTS: [usize; 3] = [64, 256, 1024];
+const DECODE_CTX: usize = 256;
+
+fn figure(soc: &SocProfile, device: Device, label: &str) {
+    for model in [ModelConfig::qwen2_1_5b(), ModelConfig::qwen2_7b(), ModelConfig::llama3_8b()] {
+        bh::section(&format!("Fig. 5 [{label}] — {}", model.name));
+        let mut rows = Vec::new();
+        for eng in baselines::engines() {
+            let f = match device {
+                Device::Cpu4Threads => eng.cpu,
+                Device::Gpu => eng.gpu,
+            };
+            let Some(f) = f else {
+                rows.push(vec![
+                    eng.name.into(),
+                    "—".into(), "—".into(), "—".into(), "—".into(),
+                ]);
+                continue;
+            };
+            let mut cells = vec![eng.name.to_string()];
+            for p in PROMPTS {
+                cells.push(format!("{:.0}", baselines::prefill_tok_s(soc, &model, &f, device, p)));
+            }
+            cells.push(format!("{:.1}", baselines::decode_tok_s(soc, &model, &f, device, DECODE_CTX)));
+            rows.push(cells);
+        }
+        bh::table(
+            &["engine", "prefill@64", "prefill@256", "prefill@1024", "decode tok/s"],
+            &rows,
+        );
+    }
+}
+
+fn ratio_summary(soc: &SocProfile) {
+    bh::section("Headline ratios (paper: 8.6×/20.5× prefill, 2.3×/8.9× decode on CPU; 25.3×/7.1× & 2.8×/1.7× on GPU)");
+    let engines = baselines::engines();
+    let get = |n: &str| engines.iter().find(|e| e.name == n).unwrap();
+    let m15 = ModelConfig::qwen2_1_5b();
+    let m7 = ModelConfig::qwen2_7b();
+    let mnn_c = get("MNN-LLM").cpu.unwrap();
+    let mnn_g = get("MNN-LLM").gpu.unwrap();
+    let mut rows = Vec::new();
+    let mut push = |name: &str, ours: f64, paper: &str| {
+        rows.push(vec![name.into(), format!("{ours:.1}×"), paper.into()]);
+    };
+    push("CPU prefill vs llama.cpp (1.5B@256)",
+         baselines::prefill_tok_s(soc, &m15, &mnn_c, Device::Cpu4Threads, 256)
+             / baselines::prefill_tok_s(soc, &m15, &get("llama.cpp").cpu.unwrap(), Device::Cpu4Threads, 256),
+         "8.6× (max)");
+    push("CPU prefill vs fastllm (1.5B@256)",
+         baselines::prefill_tok_s(soc, &m15, &mnn_c, Device::Cpu4Threads, 256)
+             / baselines::prefill_tok_s(soc, &m15, &get("fastllm").cpu.unwrap(), Device::Cpu4Threads, 256),
+         "20.5× (max)");
+    push("CPU decode vs llama.cpp (1.5B)",
+         baselines::decode_tok_s(soc, &m15, &mnn_c, Device::Cpu4Threads, DECODE_CTX)
+             / baselines::decode_tok_s(soc, &m15, &get("llama.cpp").cpu.unwrap(), Device::Cpu4Threads, DECODE_CTX),
+         "2.3×");
+    push("CPU decode vs fastllm (1.5B)",
+         baselines::decode_tok_s(soc, &m15, &mnn_c, Device::Cpu4Threads, DECODE_CTX)
+             / baselines::decode_tok_s(soc, &m15, &get("fastllm").cpu.unwrap(), Device::Cpu4Threads, DECODE_CTX),
+         "8.9×");
+    push("GPU prefill vs llama.cpp (1.5B@1024)",
+         baselines::prefill_tok_s(soc, &m15, &mnn_g, Device::Gpu, 1024)
+             / baselines::prefill_tok_s(soc, &m15, &get("llama.cpp").gpu.unwrap(), Device::Gpu, 1024),
+         "25.3× (max)");
+    push("GPU decode vs llama.cpp (1.5B)",
+         baselines::decode_tok_s(soc, &m15, &mnn_g, Device::Gpu, DECODE_CTX)
+             / baselines::decode_tok_s(soc, &m15, &get("llama.cpp").gpu.unwrap(), Device::Gpu, DECODE_CTX),
+         "7.1×");
+    push("GPU prefill vs MLC-LLM (1.5B@1024)",
+         baselines::prefill_tok_s(soc, &m15, &mnn_g, Device::Gpu, 1024)
+             / baselines::prefill_tok_s(soc, &m15, &get("MLC-LLM").gpu.unwrap(), Device::Gpu, 1024),
+         "2.8×");
+    push("GPU decode vs MLC-LLM (1.5B)",
+         baselines::decode_tok_s(soc, &m15, &mnn_g, Device::Gpu, DECODE_CTX)
+             / baselines::decode_tok_s(soc, &m15, &get("MLC-LLM").gpu.unwrap(), Device::Gpu, DECODE_CTX),
+         "1.7×");
+    push("GPU prefill vs MLC-LLM (7B@64) — MLC wins",
+         baselines::prefill_tok_s(soc, &m7, &mnn_g, Device::Gpu, 64)
+             / baselines::prefill_tok_s(soc, &m7, &get("MLC-LLM").gpu.unwrap(), Device::Gpu, 64),
+         "<1× (paper caveat)");
+    bh::table(&["ratio", "ours", "paper"], &rows);
+}
+
+/// Part 2: real ablations on the native engine (tiny model, this host).
+fn ablations() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("\n[ablations skipped: run `make artifacts` first]");
+        return;
+    }
+    bh::section("Measured ablations — native engine, tiny-qwen2, this host");
+    let mut rng = Rng::new(11);
+    let prompt: Vec<usize> = (0..64).map(|_| rng.below(2048)).collect();
+    let mut rows = Vec::new();
+    let mut baseline_prefill = 0.0;
+    let mut baseline_decode = 0.0;
+    for (name, opts) in [
+        (
+            "MNN-LLM full (solved tile, W4A8/W8A8)",
+            EngineOptions::default(),
+        ),
+        (
+            "− hardware tile (2,4,4 under-tiled)",
+            EngineOptions {
+                tile: TileConfig { e_p: 2, h_p: 4, l_p: 4 },
+                ..EngineOptions::default()
+            },
+        ),
+        (
+            "− flash embedding (DRAM table)",
+            EngineOptions { embedding_in_flash: false, ..EngineOptions::default() },
+        ),
+        (
+            "+ KV spill (budget 48 tok)",
+            EngineOptions { kv_budget_tokens: 48, ..EngineOptions::default() },
+        ),
+    ] {
+        let mut m = NativeModel::load(&dir, opts).unwrap();
+        // Prefill timing.
+        let t0 = std::time::Instant::now();
+        let logits = m.prefill(&prompt);
+        let prefill_s = t0.elapsed().as_secs_f64();
+        // Decode timing (16 steps, paper cap).
+        let mut tok = mnn_llm::model::sampler::argmax(&logits);
+        let t1 = std::time::Instant::now();
+        for _ in 0..16 {
+            let l = m.decode(tok);
+            tok = mnn_llm::model::sampler::argmax(&l);
+        }
+        let decode_s = t1.elapsed().as_secs_f64() / 16.0;
+        if rows.is_empty() {
+            baseline_prefill = prefill_s;
+            baseline_decode = decode_s;
+        }
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1}", prompt.len() as f64 / prefill_s),
+            format!("{:.1}", 1.0 / decode_s),
+            format!("{:.2}×", prefill_s / baseline_prefill),
+            format!("{:.2}×", decode_s / baseline_decode),
+        ]);
+    }
+    bh::table(
+        &["config", "prefill tok/s", "decode tok/s", "prefill cost", "decode cost"],
+        &rows,
+    );
+}
+
+/// §5.4's "≈3%" claim: long-tail rearrangement ops with and without region
+/// fusion, on a realistic trace (per-layer transpose/concat/gather chain).
+fn geometry_ablation() {
+    use mnn_llm::geometry::{apply_regions, fuse_region_list, ops};
+    bh::section("Geometry compute — region fusion on the long-tail op trace (§5.4)");
+    // One decoder layer's rearrangements at qwen2-1.5b scale: head
+    // transpose [S,H,d]→[H,S,d], KV gather of 3 consecutive row groups,
+    // output concat of 12 head chunks.
+    let (s, h, d) = (256usize, 12usize, 128usize);
+    let mut regions = Vec::new();
+    regions.extend(ops::permute3([s, h, d], [1, 0, 2]));
+    // Token gather: one region per token (the shape Gather lowers to).
+    let idx: Vec<usize> = (64..64 + s).collect();
+    regions.extend(ops::gather_rows(&idx, d));
+    regions.extend(ops::concat_rows(&vec![s; h], d));
+    let fused = fuse_region_list(&regions);
+    let n = s * h * d;
+    let src: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let mut dst = vec![0f32; n.max(3 * s * d)];
+    let raw = bh::bench(&format!("unfused trace ({} regions)", regions.len()), || {
+        apply_regions(&regions, &src, &mut dst);
+        std::hint::black_box(&dst);
+    });
+    let opt = bh::bench(&format!("fused trace   ({} regions)", fused.len()), || {
+        apply_regions(&fused, &src, &mut dst);
+        std::hint::black_box(&dst);
+    });
+    println!(
+        "  region count {} → {}; long-tail op time −{:.1}% (paper: ≈3% of *total* inference)",
+        regions.len(),
+        fused.len(),
+        100.0 * (1.0 - opt.mean_s / raw.mean_s)
+    );
+}
+
+fn main() {
+    let soc = SocProfile::snapdragon_8gen3();
+    figure(&soc, Device::Cpu4Threads, "CPU, 4 threads");
+    figure(&soc, Device::Gpu, "GPU (OpenCL model)");
+    ratio_summary(&soc);
+    ablations();
+    geometry_ablation();
+}

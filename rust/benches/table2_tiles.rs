@@ -1,0 +1,57 @@
+//! Table 2 reproduction: tile sizes (e_p, h_p, l_p) solved from Eq. 2–4
+//! per CPU instruction set, plus the memory-traffic reduction each tile
+//! achieves and a *measured* packed-GEMM locality check on this host.
+//!
+//! Run: `cargo bench --bench table2_tiles`
+
+use mnn_llm::bench as bh;
+use mnn_llm::cpu::gemm_q::QLinear;
+use mnn_llm::quant::asym::{QuantizedMatrix, WeightBits};
+use mnn_llm::reorder::solver::{self, TileConfig};
+use mnn_llm::reorder::isa;
+use mnn_llm::util::rng::Rng;
+
+fn main() {
+    bh::section("Table 2 — tile sizes per CPU architecture (Eq. 2–4 solver)");
+    let paper = [(12, 8, 4), (10, 8, 8), (4, 8, 4), (4, 64, 4)];
+    let rows: Vec<Vec<String>> = isa::table2_isas()
+        .iter()
+        .zip(paper)
+        .map(|(i, p)| {
+            let t = solver::solve_tiles(i);
+            let traffic = solver::memory_accesses(1024.0, 1024.0, 1024.0, t.e_p as f64, t.h_p as f64);
+            let naive = solver::naive_accesses(1024.0, 1024.0, 1024.0);
+            vec![
+                i.name.to_string(),
+                format!("({}, {}, {})", p.0, p.1, p.2),
+                format!("({}, {}, {})", t.e_p, t.h_p, t.l_p),
+                if (t.e_p, t.h_p, t.l_p) == p { "✓".into() } else { "✗".into() },
+                format!("{:.1}×", naive / traffic),
+            ]
+        })
+        .collect();
+    bh::table(&["ISA", "paper (e,h,l)", "solved (e,h,l)", "match", "traffic ↓"], &rows);
+
+    bh::section("Measured on this host: packed layout vs naive-order GEMM (W8A8)");
+    let mut rng = Rng::new(1);
+    let (e, l, h) = (64, 1024, 1024);
+    let wf = rng.normal_vec(h * l);
+    let x = rng.normal_vec(e * l);
+    let qm = QuantizedMatrix::from_f32(&wf, h, l, WeightBits::Int8);
+    let host = solver::solve_tiles(&isa::detect_host());
+    let mut out = vec![0f32; e * h];
+    for (name, tile) in [
+        (format!("solved tile {host:?}"), host),
+        ("tiny tile (2,4,4) — under-tiled".into(), TileConfig { e_p: 2, h_p: 4, l_p: 4 }),
+        ("paper sdot tile (12,8,4)".into(), TileConfig { e_p: 12, h_p: 8, l_p: 4 }),
+        ("paper i8mm tile (10,8,8)".into(), TileConfig { e_p: 10, h_p: 8, l_p: 8 }),
+    ] {
+        let lin = QLinear::new(&qm, tile, None);
+        bh::bench(&name, || {
+            lin.forward(&x, e, &mut out);
+            std::hint::black_box(&out);
+        });
+    }
+    println!("\n(Absolute times are x86 scalar/autovec; the paper's win comes from the");
+    println!(" same locality effect on ARM registers — see DESIGN.md §Substitutions.)");
+}

@@ -1,0 +1,300 @@
+//! Competitor-engine performance models for Figure 5 (DESIGN.md
+//! §Substitutions).
+//!
+//! llama.cpp / MLC-LLM / fastllm binaries cannot run here (no Android, no
+//! Adreno GPU), so each engine is modeled as a roofline with
+//! mechanism-level efficiency factors on the same SoC profile:
+//!
+//!   prefill  tok/s = S / (S·F/(peak·eff) + overhead)   (compute-bound)
+//!   decode   tok/s = 1 / (bytes/(bw·util) + step_overhead)  (memory-bound)
+//!
+//! The factor *decomposition* maps to the paper's mechanisms — instruction
+//! choice (i8mm vs sdot, §5.1), layout/repack quality (§5.1), multicore
+//! balance (§5.2), quantization density (§4.2) — and the factor *values*
+//! are calibrated so the MNN-vs-competitor ratios land where Figure 5
+//! reports them (8.6×/20.5× prefill and 2.3×/8.9× decode on CPU;
+//! 25.3×/7.1× vs llama.cpp GPU; ~2.8×/1.7× vs MLC with the short-prompt
+//! 7B crossover). The *mechanisms* themselves are separately measured on
+//! real code by the ablation section of the fig5 bench.
+
+use crate::device::SocProfile;
+use crate::model::config::ModelConfig;
+
+/// Device target for a Fig. 5 series.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Device {
+    Cpu4Threads,
+    Gpu,
+}
+
+/// Mechanism-level efficiency description of one engine on one device.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineFactors {
+    /// Instruction-choice factor (i8mm = 1.0, sdot-only ≈ 0.5, §5.1).
+    pub instr: f64,
+    /// Data layout / repack quality (§5.1).
+    pub layout: f64,
+    /// Multicore balance (balanced ≈ 0.97, uniform ≈ 0.91 on 1+3 cores,
+    /// §5.2; 1.0 on GPU).
+    pub balance: f64,
+    /// Decode weight-stream density, bytes per parameter (§4.2).
+    pub bytes_per_param: f64,
+    /// Decode bandwidth utilization.
+    pub mem_util: f64,
+    /// Fixed per-prefill overhead (graph setup / dispatch), seconds.
+    pub prefill_overhead_s: f64,
+    /// Fixed per-decode-step overhead, seconds.
+    pub step_overhead_s: f64,
+    /// Residual efficiency at 7.6B params relative to small models (1.0 =
+    /// size-independent). Models kernel behaviour that degrades with GEMM
+    /// size — for MNN's GPU path the asymmetric-dequant register pressure,
+    /// which is the paper's explanation for MLC-LLM winning Qwen2-7B
+    /// short-prompt prefill.
+    pub eff_large_scale: f64,
+}
+
+pub const SIZE_REF_PARAMS: f64 = 7.6e9;
+
+impl EngineFactors {
+    /// Compute efficiency for a model of `params` parameters.
+    pub fn compute_eff(&self, params: f64) -> f64 {
+        let t = (params / SIZE_REF_PARAMS).min(1.0);
+        self.instr * self.layout * self.balance * (1.0 - t * (1.0 - self.eff_large_scale))
+    }
+}
+
+/// Shorthand for the common (size-independent) case.
+const NO_SCALE: f64 = 1.0;
+
+/// One engine entry in the Fig. 5 comparison.
+#[derive(Clone, Debug)]
+pub struct EngineModel {
+    pub name: &'static str,
+    pub cpu: Option<EngineFactors>,
+    pub gpu: Option<EngineFactors>,
+}
+
+/// The four engines of Figure 5.
+pub fn engines() -> Vec<EngineModel> {
+    vec![
+        EngineModel {
+            name: "MNN-LLM",
+            cpu: Some(EngineFactors {
+                instr: 1.0,      // i8mm repack when available
+                layout: 0.62,    // solved tiles + packed operands
+                balance: 0.97,   // balanced big.LITTLE split
+                bytes_per_param: 0.56, // W4A8 + per-channel params
+                mem_util: 0.85,
+                prefill_overhead_s: 4e-3,
+                step_overhead_s: 0.3e-3,
+                eff_large_scale: NO_SCALE,
+            }),
+            gpu: Some(EngineFactors {
+                instr: 1.0,
+                layout: 0.42, // image layout, 128-bit loads
+                balance: 1.0,
+                bytes_per_param: 0.56, // W4A16 asymmetric
+                mem_util: 0.80,
+                prefill_overhead_s: 28e-3, // per-dispatch cost, hurts short prompts
+                step_overhead_s: 0.8e-3,
+                eff_large_scale: 0.233, // asymmetric-dequant register pressure
+            }),
+        },
+        EngineModel {
+            name: "llama.cpp",
+            cpu: Some(EngineFactors {
+                instr: 0.5,   // sdot-era kernels (no i8mm repack)
+                layout: 0.155, // paper: MNN's arrangement beats llama.cpp's
+                balance: 0.91, // uniform split
+                bytes_per_param: 0.56, // Q4_K-ish
+                mem_util: 0.37,
+                prefill_overhead_s: 6e-3,
+                step_overhead_s: 0.4e-3,
+                eff_large_scale: NO_SCALE,
+            }),
+            gpu: Some(EngineFactors {
+                instr: 1.0,
+                layout: 0.0145, // unoptimized mobile-GPU kernels
+                balance: 1.0,
+                bytes_per_param: 0.56,
+                mem_util: 0.112,
+                prefill_overhead_s: 40e-3,
+                step_overhead_s: 1.5e-3,
+                eff_large_scale: NO_SCALE,
+            }),
+        },
+        EngineModel {
+            name: "MLC-LLM",
+            cpu: None, // no CPU inference (paper §6)
+            gpu: Some(EngineFactors {
+                instr: 1.0,
+                layout: 0.1266, // symmetric-quant kernels: cheaper dequant,
+                balance: 1.0,  // but weaker layout than MNN's image path
+                bytes_per_param: 0.50, // symmetric int4, no zero-points
+                mem_util: 0.42,
+                prefill_overhead_s: 10e-3, // leaner dispatch
+                step_overhead_s: 1.0e-3,
+                eff_large_scale: NO_SCALE,
+            }),
+        },
+        EngineModel {
+            name: "fastllm",
+            cpu: Some(EngineFactors {
+                instr: 0.5,
+                layout: 0.066, // naive layout (paper: 20.5× prefill gap)
+                balance: 0.88,
+                bytes_per_param: 2.0, // fp16 decode path
+                mem_util: 0.34,
+                prefill_overhead_s: 8e-3,
+                step_overhead_s: 0.5e-3,
+                eff_large_scale: NO_SCALE,
+            }),
+            gpu: None, // no GPU support (paper §6)
+        },
+    ]
+}
+
+/// FLOPs per token for one forward pass (2·MACs; attention excluded — it is
+/// <5% at these prompt lengths and identical across engines).
+pub fn flops_per_token(m: &ModelConfig) -> f64 {
+    let weights = m.layers as f64 * m.layer_params() as f64 + m.embedding_params() as f64;
+    2.0 * weights
+}
+
+/// Decode-phase streamed bytes per token for an engine's density.
+pub fn decode_bytes(m: &ModelConfig, bytes_per_param: f64, context: usize) -> f64 {
+    let weights = m.layers as f64 * m.layer_params() as f64 + m.embedding_params() as f64;
+    let kv = (m.layers * m.kv_heads * m.head_dim() * 2 * context) as f64; // int8 K + fp8 V
+    weights * bytes_per_param + kv
+}
+
+/// Predicted prefill speed, tokens/second.
+pub fn prefill_tok_s(
+    soc: &SocProfile,
+    m: &ModelConfig,
+    f: &EngineFactors,
+    device: Device,
+    prompt: usize,
+) -> f64 {
+    let peak = match device {
+        Device::Cpu4Threads => soc.int8_ops_per_s(4),
+        Device::Gpu => soc.gpu_flops_per_s,
+    };
+    let eff = f.compute_eff(m.total_params() as f64);
+    let t = prompt as f64 * flops_per_token(m) / (peak * eff) + f.prefill_overhead_s;
+    prompt as f64 / t
+}
+
+/// Predicted decode speed, tokens/second (at `context` cached tokens).
+pub fn decode_tok_s(
+    soc: &SocProfile,
+    m: &ModelConfig,
+    f: &EngineFactors,
+    device: Device,
+    context: usize,
+) -> f64 {
+    let bw = match device {
+        Device::Cpu4Threads => soc.dram.read_bw,
+        Device::Gpu => soc.gpu_read_bw,
+    };
+    let t = decode_bytes(m, f.bytes_per_param, context) / (bw * f.mem_util) + f.step_overhead_s;
+    1.0 / t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn soc() -> SocProfile {
+        SocProfile::snapdragon_8gen3()
+    }
+
+    fn by_name(name: &str) -> EngineModel {
+        engines().into_iter().find(|e| e.name == name).unwrap()
+    }
+
+    #[test]
+    fn engine_support_matrix_matches_paper() {
+        // §6: MLC-LLM has no CPU path; fastllm has no GPU path.
+        assert!(by_name("MLC-LLM").cpu.is_none());
+        assert!(by_name("fastllm").gpu.is_none());
+        assert!(by_name("MNN-LLM").cpu.is_some() && by_name("MNN-LLM").gpu.is_some());
+    }
+
+    #[test]
+    fn cpu_prefill_ratios_land_near_paper() {
+        // Fig. 5 headline: prefill up to 8.6× vs llama.cpp, 20.5× vs
+        // fastllm on CPU.
+        let s = soc();
+        let m = ModelConfig::qwen2_1_5b();
+        let mnn = prefill_tok_s(&s, &m, &by_name("MNN-LLM").cpu.unwrap(), Device::Cpu4Threads, 256);
+        let lcp = prefill_tok_s(&s, &m, &by_name("llama.cpp").cpu.unwrap(), Device::Cpu4Threads, 256);
+        let fst = prefill_tok_s(&s, &m, &by_name("fastllm").cpu.unwrap(), Device::Cpu4Threads, 256);
+        let r1 = mnn / lcp;
+        let r2 = mnn / fst;
+        assert!((7.0..10.5).contains(&r1), "vs llama.cpp {r1}");
+        assert!((17.0..24.0).contains(&r2), "vs fastllm {r2}");
+    }
+
+    #[test]
+    fn cpu_decode_ratios_land_near_paper() {
+        // Fig. 5: decode 2.3× vs llama.cpp, 8.9× vs fastllm.
+        let s = soc();
+        let m = ModelConfig::qwen2_1_5b();
+        let mnn = decode_tok_s(&s, &m, &by_name("MNN-LLM").cpu.unwrap(), Device::Cpu4Threads, 256);
+        let lcp = decode_tok_s(&s, &m, &by_name("llama.cpp").cpu.unwrap(), Device::Cpu4Threads, 256);
+        let fst = decode_tok_s(&s, &m, &by_name("fastllm").cpu.unwrap(), Device::Cpu4Threads, 256);
+        let r1 = mnn / lcp;
+        let r2 = mnn / fst;
+        assert!((1.9..2.8).contains(&r1), "vs llama.cpp {r1}");
+        assert!((7.0..11.0).contains(&r2), "vs fastllm {r2}");
+    }
+
+    #[test]
+    fn gpu_ratios_and_mlc_crossover() {
+        let s = soc();
+        let m15 = ModelConfig::qwen2_1_5b();
+        let m7 = ModelConfig::qwen2_7b();
+        let mnn = by_name("MNN-LLM").gpu.unwrap();
+        let lcp = by_name("llama.cpp").gpu.unwrap();
+        let mlc = by_name("MLC-LLM").gpu.unwrap();
+        // Up to 25.3× prefill / 7.1× decode vs llama.cpp.
+        let rp = prefill_tok_s(&s, &m15, &mnn, Device::Gpu, 1024)
+            / prefill_tok_s(&s, &m15, &lcp, Device::Gpu, 1024);
+        assert!((20.0..28.0).contains(&rp), "prefill vs llama.cpp {rp}");
+        let rd = decode_tok_s(&s, &m15, &mnn, Device::Gpu, 256)
+            / decode_tok_s(&s, &m15, &lcp, Device::Gpu, 256);
+        assert!((5.5..8.5).contains(&rd), "decode vs llama.cpp {rd}");
+        // ~2.8×/1.7× vs MLC on 1.5B…
+        let rp2 = prefill_tok_s(&s, &m15, &mnn, Device::Gpu, 1024)
+            / prefill_tok_s(&s, &m15, &mlc, Device::Gpu, 1024);
+        assert!((2.2..3.4).contains(&rp2), "prefill vs MLC {rp2}");
+        let rd2 = decode_tok_s(&s, &m15, &mnn, Device::Gpu, 256)
+            / decode_tok_s(&s, &m15, &mlc, Device::Gpu, 256);
+        assert!((1.3..2.1).contains(&rd2), "decode vs MLC {rd2}");
+        // …but MLC wins short-prompt prefill on Qwen2-7B (the paper's
+        // symmetric-quantization caveat).
+        let short = prefill_tok_s(&s, &m7, &mnn, Device::Gpu, 64)
+            / prefill_tok_s(&s, &m7, &mlc, Device::Gpu, 64);
+        assert!(short < 1.0, "MLC should win short 7B prompts: {short}");
+    }
+
+    #[test]
+    fn decode_slows_with_context() {
+        let s = soc();
+        let m = ModelConfig::qwen2_7b();
+        let f = by_name("MNN-LLM").cpu.unwrap();
+        let fast = decode_tok_s(&s, &m, &f, Device::Cpu4Threads, 64);
+        let slow = decode_tok_s(&s, &m, &f, Device::Cpu4Threads, 4096);
+        assert!(slow < fast);
+    }
+
+    #[test]
+    fn bigger_models_are_slower() {
+        let s = soc();
+        let f = by_name("MNN-LLM").cpu.unwrap();
+        let small = decode_tok_s(&s, &ModelConfig::qwen2_1_5b(), &f, Device::Cpu4Threads, 256);
+        let big = decode_tok_s(&s, &ModelConfig::qwen2_7b(), &f, Device::Cpu4Threads, 256);
+        assert!(big < small / 3.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Bench harness (criterion is not vendored offline): adaptive timing with
+//! mean/σ reporting and aligned table printing for the paper's tables and
+//! figures.
+
+use crate::util::{stats, timer};
+
+/// One measured series entry.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub samples: usize,
+}
+
+/// Measure a closure adaptively (≥0.3 s or ≤64 iters) and report.
+pub fn bench(name: &str, mut f: impl FnMut()) -> Measurement {
+    let samples = timer::time_adaptive(0.3, 64, &mut f);
+    let m = Measurement {
+        name: name.to_string(),
+        mean_s: stats::mean(&samples),
+        std_s: stats::stddev(&samples),
+        samples: samples.len(),
+    };
+    println!(
+        "  {:<42} {:>12.3} ms ± {:>8.3} ms  (n={})",
+        m.name,
+        m.mean_s * 1e3,
+        m.std_s * 1e3,
+        m.samples
+    );
+    m
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print an aligned table: header row + rows of cells.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        s
+    };
+    println!("{}", line(headers.iter().map(|s| s.to_string()).collect()));
+    println!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        println!("{}", line(row.clone()));
+    }
+}
+
+/// Format a float with engineering precision.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_stats() {
+        let m = bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.samples >= 3);
+        assert!(m.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(123.4), "123");
+        assert_eq!(fmt(1.234), "1.23");
+        assert_eq!(fmt(0.1234), "0.1234");
+    }
+
+    #[test]
+    fn table_prints() {
+        table(&["a", "bb"], &[vec!["1".into(), "2".into()]]);
+    }
+}

@@ -1,0 +1,135 @@
+//! Serving metrics: the quantities Figure 5 reports (prefill speed in
+//! tok/s, decode speed in tok/s) plus latency percentiles for the e2e
+//! example.
+
+use crate::util::stats;
+
+/// Per-request timings.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestMetrics {
+    pub prompt_tokens: usize,
+    pub new_tokens: usize,
+    /// Queue admission → first token (TTFT), seconds.
+    pub ttft_s: f64,
+    /// Prefill wall time.
+    pub prefill_s: f64,
+    /// Total decode wall time.
+    pub decode_s: f64,
+    /// Admission → completion.
+    pub e2e_s: f64,
+}
+
+impl RequestMetrics {
+    pub fn prefill_tok_s(&self) -> f64 {
+        if self.prefill_s > 0.0 {
+            self.prompt_tokens as f64 / self.prefill_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn decode_tok_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.new_tokens as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Aggregate over a batch of completed requests.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    pub completed: Vec<RequestMetrics>,
+}
+
+impl EngineMetrics {
+    pub fn push(&mut self, m: RequestMetrics) {
+        self.completed.push(m);
+    }
+
+    pub fn count(&self) -> usize {
+        self.completed.len()
+    }
+
+    /// Mean prefill speed across requests, tok/s.
+    pub fn mean_prefill_tok_s(&self) -> f64 {
+        stats::mean(&self.completed.iter().map(|m| m.prefill_tok_s()).collect::<Vec<_>>())
+    }
+
+    pub fn mean_decode_tok_s(&self) -> f64 {
+        stats::mean(&self.completed.iter().map(|m| m.decode_tok_s()).collect::<Vec<_>>())
+    }
+
+    pub fn p50_ttft_s(&self) -> f64 {
+        stats::median(&self.completed.iter().map(|m| m.ttft_s).collect::<Vec<_>>())
+    }
+
+    pub fn p95_e2e_s(&self) -> f64 {
+        stats::percentile(&self.completed.iter().map(|m| m.e2e_s).collect::<Vec<_>>(), 95.0)
+    }
+
+    /// Engine throughput: total new tokens / total wall time.
+    pub fn throughput_tok_s(&self, wall_s: f64) -> f64 {
+        let total: usize = self.completed.iter().map(|m| m.new_tokens).sum();
+        if wall_s > 0.0 {
+            total as f64 / wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// One summary line for logs/examples.
+    pub fn summary(&self, wall_s: f64) -> String {
+        format!(
+            "{} requests | prefill {:.1} tok/s | decode {:.1} tok/s | p50 TTFT {:.1} ms | p95 e2e {:.1} ms | engine {:.1} tok/s",
+            self.count(),
+            self.mean_prefill_tok_s(),
+            self.mean_decode_tok_s(),
+            self.p50_ttft_s() * 1e3,
+            self.p95_e2e_s() * 1e3,
+            self.throughput_tok_s(wall_s),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(prompt: usize, new: usize, prefill: f64, decode: f64) -> RequestMetrics {
+        RequestMetrics {
+            prompt_tokens: prompt,
+            new_tokens: new,
+            ttft_s: prefill,
+            prefill_s: prefill,
+            decode_s: decode,
+            e2e_s: prefill + decode,
+        }
+    }
+
+    #[test]
+    fn rates() {
+        let r = m(64, 16, 0.5, 2.0);
+        assert!((r.prefill_tok_s() - 128.0).abs() < 1e-9);
+        assert!((r.decode_tok_s() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let r = RequestMetrics::default();
+        assert_eq!(r.prefill_tok_s(), 0.0);
+        assert_eq!(r.decode_tok_s(), 0.0);
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut e = EngineMetrics::default();
+        e.push(m(64, 16, 0.5, 2.0));
+        e.push(m(64, 16, 0.25, 1.0));
+        assert_eq!(e.count(), 2);
+        assert!((e.mean_prefill_tok_s() - (128.0 + 256.0) / 2.0).abs() < 1e-9);
+        assert!((e.throughput_tok_s(4.0) - 8.0).abs() < 1e-9);
+        assert!(e.summary(4.0).contains("2 requests"));
+    }
+}

@@ -1,0 +1,18 @@
+//! The serving coordinator: request queue, prefill/decode scheduler,
+//! session management, metrics.
+//!
+//! Mobile deployment is single-device, so there is no distributed router;
+//! the coordinator's job (mirroring MNN-LLM's engine loop) is to (a) queue
+//! and admit requests, (b) schedule the two phases — prefill is
+//! compute-bound, decode is memory-bound (§2.1) — and (c) track per-request
+//! and engine-wide metrics. The PJRT backend keeps one KV state per
+//! session, so decode steps from concurrent sessions interleave
+//! round-robin; the native backend owns its KV and serves FIFO.
+
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+
+pub use metrics::{EngineMetrics, RequestMetrics};
+pub use request::{Request, RequestId, Response};
+pub use scheduler::{Coordinator, SchedulePolicy};

@@ -1,0 +1,50 @@
+//! Request/response types for the serving API.
+
+use crate::model::sampler::SamplerConfig;
+
+pub type RequestId = u64;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<usize>,
+    pub max_new_tokens: usize,
+    /// Select a loaded LoRA task for this request (§5.5 multitask).
+    pub lora_task: Option<String>,
+    pub sampler: SamplerConfig,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<usize>, max_new_tokens: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            lora_task: None,
+            sampler: SamplerConfig::default(),
+        }
+    }
+}
+
+/// Completed request with metrics.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<usize>,
+    pub metrics: crate::coordinator::metrics::RequestMetrics,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_defaults() {
+        let r = Request::new(1, vec![1, 2, 3], 8);
+        assert_eq!(r.id, 1);
+        assert_eq!(r.max_new_tokens, 8);
+        assert!(r.lora_task.is_none());
+        assert_eq!(r.sampler.temperature, 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Pointwise ops with the paper's mixed-precision rules (§5.3): everything
+//! here accumulates in fp32; softmax is always fp32 ("the Softmax
+//! calculation in Attention is particularly sensitive to data precision").
+
+/// SiLU (swish): x * sigmoid(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// out = silu(gate) * up, elementwise (the SwiGLU MLP joint).
+pub fn swiglu(gate: &[f32], up: &[f32], out: &mut [f32]) {
+    assert_eq!(gate.len(), up.len());
+    assert_eq!(gate.len(), out.len());
+    for ((o, &g), &u) in out.iter_mut().zip(gate).zip(up) {
+        *o = silu(g) * u;
+    }
+}
+
+/// In-place a += b.
+pub fn add_inplace(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// RMSNorm in fp32: x * rsqrt(mean(x²)+eps) * w, row-wise over [rows, h].
+pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32], rows: usize, eps: f32) {
+    let h = w.len();
+    assert_eq!(x.len(), rows * h);
+    assert_eq!(out.len(), rows * h);
+    for r in 0..rows {
+        let row = &x[r * h..(r + 1) * h];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for c in 0..h {
+            out[r * h + c] = row[c] * inv * w[c];
+        }
+    }
+}
+
+/// Numerically-safe fp32 softmax over a slice (max-subtracted).
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        // All -inf (fully masked): define as uniform-zero to avoid NaN.
+        xs.fill(0.0);
+        return;
+    }
+    let mut sum = 0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silu_fixed_points() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(1.0) - 0.7310586).abs() < 1e-6);
+        assert!(silu(-20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0f32, 2.0, 3.0, 4.0];
+        softmax_inplace(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn softmax_survives_large_values() {
+        // §5.3: pre-scaled queries keep scores < overflow; softmax itself
+        // must also be stable at fp16-overflow-scale inputs.
+        let mut xs = vec![65504.0f32, 65504.0, 65503.0];
+        softmax_inplace(&mut xs);
+        assert!(xs.iter().all(|v| v.is_finite()));
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_fully_masked_is_zero() {
+        let mut xs = vec![f32::NEG_INFINITY; 4];
+        softmax_inplace(&mut xs);
+        assert!(xs.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let x = rng.normal_vec(3 * 64);
+        let w = vec![1.0f32; 64];
+        let mut out = vec![0f32; 3 * 64];
+        rmsnorm(&x, &w, &mut out, 3, 1e-6);
+        for r in 0..3 {
+            let row = &out[r * 64..(r + 1) * 64];
+            let rms = (row.iter().map(|v| v * v).sum::<f32>() / 64.0).sqrt();
+            assert!((rms - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn swiglu_matches_manual() {
+        let gate = [1.0f32, -2.0];
+        let up = [3.0f32, 4.0];
+        let mut out = [0f32; 2];
+        swiglu(&gate, &up, &mut out);
+        assert!((out[0] - silu(1.0) * 3.0).abs() < 1e-6);
+        assert!((out[1] - silu(-2.0) * 4.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,231 @@
+//! Native attention over the quantized KV cache, with the paper's §5.3
+//! mixed-precision rules: the query is pre-scaled by 1/sqrt(d) *before*
+//! QK^T (so accumulations stay in range even on fp16-class hardware) and
+//! softmax runs in fp32.
+
+use crate::cpu::activation::softmax_inplace;
+use crate::kv::KvLayer;
+
+/// GQA decode attention for one token.
+///
+/// * `q` — [heads * d], already projected + roped, NOT yet scaled (this
+///   function applies the 1/sqrt(d) pre-scale to q, per §5.3).
+/// * `cache` — the layer's quantized KV (len = tokens to attend over).
+/// * `out` — [heads * d].
+pub fn decode_attention(q: &[f32], heads: usize, cache: &KvLayer, out: &mut [f32]) {
+    let d = cache.head_dim;
+    assert_eq!(q.len(), heads * d);
+    assert_eq!(out.len(), heads * d);
+    assert!(heads % cache.kv_heads == 0, "GQA requires heads % kv_heads == 0");
+    let group = heads / cache.kv_heads;
+    let t = cache.len();
+    assert!(t > 0, "decode needs at least one cached token");
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores = vec![0f32; t];
+    let mut qs = vec![0f32; d];
+    for h in 0..heads {
+        let kvh = h / group;
+        // Pre-scale the query once (not each score) — same math, fewer
+        // multiplies, and bounded magnitudes before accumulation (§5.3).
+        for i in 0..d {
+            qs[i] = q[h * d + i] * scale;
+        }
+        for tok in 0..t {
+            scores[tok] = cache.key_dot(kvh, tok, &qs);
+        }
+        softmax_inplace(&mut scores);
+        let o = &mut out[h * d..(h + 1) * d];
+        o.fill(0.0);
+        for tok in 0..t {
+            cache.accum_value(kvh, tok, scores[tok], o);
+        }
+    }
+}
+
+/// Causal prefill attention over fresh (unquantized) K/V.
+///
+/// * `q` — [s, heads, d] roped, unscaled; `k`, `v` — [s, kv_heads, d].
+/// * `out` — [s, heads, d].
+pub fn prefill_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    s: usize,
+    heads: usize,
+    kv_heads: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), s * heads * d);
+    assert_eq!(k.len(), s * kv_heads * d);
+    assert_eq!(v.len(), s * kv_heads * d);
+    assert_eq!(out.len(), s * heads * d);
+    let group = heads / kv_heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores = vec![0f32; s];
+    let mut qs = vec![0f32; d];
+    for h in 0..heads {
+        let kvh = h / group;
+        for qi in 0..s {
+            let qrow = &q[(qi * heads + h) * d..(qi * heads + h) * d + d];
+            for i in 0..d {
+                qs[i] = qrow[i] * scale;
+            }
+            let causal = qi + 1;
+            for ki in 0..causal {
+                let krow = &k[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
+                let mut acc = 0f32;
+                for i in 0..d {
+                    acc += qs[i] * krow[i];
+                }
+                scores[ki] = acc;
+            }
+            softmax_inplace(&mut scores[..causal]);
+            let o = &mut out[(qi * heads + h) * d..(qi * heads + h) * d + d];
+            o.fill(0.0);
+            for ki in 0..causal {
+                let w = scores[ki];
+                let vrow = &v[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
+                for i in 0..d {
+                    o[i] += w * vrow[i];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Oracle: fp32 attention over explicitly dequantized cache tensors.
+    fn decode_oracle(q: &[f32], heads: usize, cache: &KvLayer) -> Vec<f32> {
+        let d = cache.head_dim;
+        let group = heads / cache.kv_heads;
+        let t = cache.len();
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut out = vec![0f32; heads * d];
+        for h in 0..heads {
+            let kvh = h / group;
+            let mut scores: Vec<f32> = (0..t)
+                .map(|tok| {
+                    let qrow: Vec<f32> =
+                        (0..d).map(|i| q[h * d + i] * scale).collect();
+                    cache.key_dot(kvh, tok, &qrow)
+                })
+                .collect();
+            softmax_inplace(&mut scores);
+            for tok in 0..t {
+                cache.accum_value(kvh, tok, scores[tok], &mut out[h * d..(h + 1) * d]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn decode_matches_oracle() {
+        let mut rng = Rng::new(1);
+        let (heads, kv_heads, d, t) = (4, 2, 16, 12);
+        let mut cache = KvLayer::new(kv_heads, d);
+        for _ in 0..t {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            cache.append(&k, &v);
+        }
+        let q = rng.normal_vec(heads * d);
+        let mut out = vec![0f32; heads * d];
+        decode_attention(&q, heads, &cache, &mut out);
+        let want = decode_oracle(&q, heads, &cache);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn attention_output_is_convex_combination() {
+        // Softmax weights are a convex combination → each output coordinate
+        // lies within [min, max] of the (dequantized) values.
+        let mut rng = Rng::new(2);
+        let (heads, kv_heads, d, t) = (2, 1, 8, 20);
+        let mut cache = KvLayer::new(kv_heads, d);
+        let mut vmin = vec![f32::INFINITY; d];
+        let mut vmax = vec![f32::NEG_INFINITY; d];
+        for _ in 0..t {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            cache.append(&k, &v);
+            let mut vd = vec![0f32; d];
+            cache.accum_value(0, cache.len() - 1, 1.0, &mut vd);
+            for i in 0..d {
+                vmin[i] = vmin[i].min(vd[i]);
+                vmax[i] = vmax[i].max(vd[i]);
+            }
+        }
+        let q = rng.normal_vec(heads * d);
+        let mut out = vec![0f32; heads * d];
+        decode_attention(&q, heads, &cache, &mut out);
+        for h in 0..heads {
+            for i in 0..d {
+                let o = out[h * d + i];
+                assert!(o >= vmin[i] - 1e-4 && o <= vmax[i] + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_first_row_copies_v0() {
+        // Row 0 attends only to itself → output == v[0] exactly.
+        let mut rng = Rng::new(3);
+        let (s, heads, kv_heads, d) = (4, 2, 2, 8);
+        let q = rng.normal_vec(s * heads * d);
+        let k = rng.normal_vec(s * kv_heads * d);
+        let v = rng.normal_vec(s * kv_heads * d);
+        let mut out = vec![0f32; s * heads * d];
+        prefill_attention(&q, &k, &v, s, heads, kv_heads, d, &mut out);
+        for h in 0..heads {
+            for i in 0..d {
+                assert!((out[h * d + i] - v[h * d + i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_is_causal() {
+        let mut rng = Rng::new(4);
+        let (s, heads, kv_heads, d) = (6, 2, 1, 8);
+        let q = rng.normal_vec(s * heads * d);
+        let k = rng.normal_vec(s * kv_heads * d);
+        let mut v = rng.normal_vec(s * kv_heads * d);
+        let mut out1 = vec![0f32; s * heads * d];
+        prefill_attention(&q, &k, &v, s, heads, kv_heads, d, &mut out1);
+        // Perturb the last token's value; earlier rows must not change.
+        for i in 0..kv_heads * d {
+            v[(s - 1) * kv_heads * d + i] += 7.0;
+        }
+        let mut out2 = vec![0f32; s * heads * d];
+        prefill_attention(&q, &k, &v, s, heads, kv_heads, d, &mut out2);
+        for r in 0..s - 1 {
+            for i in 0..heads * d {
+                assert_eq!(out1[r * heads * d + i], out2[r * heads * d + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn large_query_values_stay_finite() {
+        // §5.3 overflow guard: huge queries, pre-scaled, survive softmax.
+        let (heads, kv_heads, d) = (1, 1, 16);
+        let mut cache = KvLayer::new(kv_heads, d);
+        let mut rng = Rng::new(5);
+        for _ in 0..4 {
+            let k: Vec<f32> = rng.normal_vec(d).iter().map(|x| x * 100.0).collect();
+            let v = rng.normal_vec(d);
+            cache.append(&k, &v);
+        }
+        let q: Vec<f32> = rng.normal_vec(heads * d).iter().map(|x| x * 500.0).collect();
+        let mut out = vec![0f32; heads * d];
+        decode_attention(&q, heads, &cache, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,90 @@
+//! Dense f32 GEMM reference (correctness oracle + fp16-class baseline path).
+//!
+//! `matmul_f32` is the naive row-major oracle; `matmul_f32_tiled` applies
+//! the same loop tiling the quantized path uses, so benches can isolate the
+//! benefit of (a) tiling and (b) int8 — the two ingredients of §5.1.
+
+/// out[m,n] = x[m,k] · w[n,k]^T (naive; oracle for tests).
+pub fn matmul_f32(x: &[f32], w: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = 0f32;
+            for i in 0..k {
+                acc += x[r * k + i] * w[c * k + i];
+            }
+            out[r * n + c] = acc;
+        }
+    }
+}
+
+/// Tiled f32 GEMM with an (mt × nt) register block; demonstrates the
+/// locality win of Eq. 2 without quantization.
+pub fn matmul_f32_tiled(
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    mt: usize,
+    nt: usize,
+) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for r0 in (0..m).step_by(mt) {
+        let r1 = (r0 + mt).min(m);
+        for c0 in (0..n).step_by(nt) {
+            let c1 = (c0 + nt).min(n);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    let mut acc = 0f32;
+                    let xr = &x[r * k..(r + 1) * k];
+                    let wc = &w[c * k..(c + 1) * k];
+                    for i in 0..k {
+                        acc += xr[i] * wc[i];
+                    }
+                    out[r * n + c] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiled_matches_naive() {
+        let mut rng = Rng::new(1);
+        let (m, k, n) = (7, 33, 19);
+        let x = rng.normal_vec(m * k);
+        let w = rng.normal_vec(n * k);
+        let mut a = vec![0f32; m * n];
+        let mut b = vec![0f32; m * n];
+        matmul_f32(&x, &w, &mut a, m, k, n);
+        matmul_f32_tiled(&x, &w, &mut b, m, k, n, 4, 8);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_weight() {
+        let k = 8;
+        let x: Vec<f32> = (0..k).map(|i| i as f32).collect();
+        let mut w = vec![0f32; k * k];
+        for i in 0..k {
+            w[i * k + i] = 1.0;
+        }
+        let mut out = vec![0f32; k];
+        matmul_f32(&x, &w, &mut out, 1, k, k);
+        assert_eq!(out, x);
+    }
+}

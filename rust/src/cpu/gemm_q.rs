@@ -1,0 +1,332 @@
+//! The paper's hot path: tiled integer GEMM over reordered operands
+//! (W8A8 / W4A8), with the asymmetric-quantization affine corrections.
+//!
+//! Operands arrive pre-packed (reorder::pack): activations as
+//! [e/e_p, l/l_p, e_p, l_p] int8, weights as [h/h_p, l/l_p, h_p, l_p]
+//! int8-or-nibbles. The microkernel walks both panels strictly linearly —
+//! that sequential walk *is* the optimization; the layout was chosen by the
+//! Eq. 2–4 solver so the panel fits the register file.
+//!
+//! out = sx·sw·(Σ xq·wq) + sx·bw·Σxq + bx·sw·Σwq + l·bx·bw
+//! (padding contributes zero codes to Σ xq·wq and the corrections use true
+//! row sums and true l, so padding is value-neutral).
+
+use crate::quant::asym::WeightBits;
+use crate::reorder::pack::{pack_activations, pack_weights, PackedActivations, PackedWeights};
+use crate::reorder::solver::TileConfig;
+use crate::quant::QuantizedMatrix;
+
+/// A ready-to-run quantized Linear layer: packed weights + dims.
+#[derive(Clone, Debug)]
+pub struct QLinear {
+    pub packed: PackedWeights,
+    /// Optional fp32 bias added to the output (qkv projections have one).
+    pub bias: Option<Vec<f32>>,
+}
+
+impl QLinear {
+    pub fn new(w: &QuantizedMatrix, tile: TileConfig, bias: Option<Vec<f32>>) -> Self {
+        if let Some(b) = &bias {
+            assert_eq!(b.len(), w.n);
+        }
+        QLinear { packed: pack_weights(w, tile), bias }
+    }
+
+    pub fn out_features(&self) -> usize {
+        self.packed.h
+    }
+
+    pub fn in_features(&self) -> usize {
+        self.packed.l
+    }
+
+    /// The tile used to pack activations for `e` rows: weights are packed
+    /// independently of e_p, so the activation panel depth adapts to the
+    /// batch — decode (e = 1) runs a GEMV-class microkernel instead of
+    /// padding to the prefill tile's e_p (which would waste e_p× compute).
+    pub fn activation_tile(&self, e: usize) -> TileConfig {
+        TileConfig { e_p: self.packed.tile.e_p.min(e.max(1)), ..self.packed.tile }
+    }
+
+    /// y[e, h] = x[e, l] · Wᵀ (+ bias). Quantizes + packs the activations,
+    /// runs all h-tiles.
+    pub fn forward(&self, x: &[f32], e: usize, out: &mut [f32]) {
+        let pa = pack_activations(x, e, self.packed.l, self.activation_tile(e));
+        self.forward_packed(&pa, out, 0, self.packed.h_pad / self.packed.tile.h_p);
+    }
+
+    /// Run a contiguous range of h tiles [tile_lo, tile_hi) — the unit the
+    /// multicore balancer distributes (paper §5.2 parallelizes over h/h_p).
+    pub fn forward_packed(
+        &self,
+        pa: &PackedActivations,
+        out: &mut [f32],
+        tile_lo: usize,
+        tile_hi: usize,
+    ) {
+        let w = &self.packed;
+        let t = pa.tile;
+        assert_eq!(pa.l, w.l, "reduce dims must match");
+        assert_eq!(t.h_p, w.tile.h_p, "operands packed for different h tiles");
+        assert_eq!(t.l_p, w.tile.l_p, "operands packed for different l tiles");
+        assert_eq!(out.len(), pa.e * w.h);
+        let (e_p, h_p, l_p) = (t.e_p, t.h_p, t.l_p);
+        let tiles_l = pa.l_pad / l_p;
+        let tiles_e = pa.e_pad / e_p;
+        let l_true = w.l as f32;
+        let mut acc = vec![0i32; e_p * h_p];
+        for bj in tile_lo..tile_hi {
+            for bi in 0..tiles_e {
+                acc.fill(0);
+                match w.bits {
+                    WeightBits::Int8 => {
+                        for bl in 0..tiles_l {
+                            let a_base = ((bi * tiles_l + bl) * e_p) * l_p;
+                            let w_base = ((bj * tiles_l + bl) * h_p) * l_p;
+                            let a_panel = &pa.data[a_base..a_base + e_p * l_p];
+                            let w_panel = &w.data[w_base..w_base + h_p * l_p];
+                            for ii in 0..e_p {
+                                let arow = &a_panel[ii * l_p..(ii + 1) * l_p];
+                                let accrow = &mut acc[ii * h_p..(ii + 1) * h_p];
+                                for jj in 0..h_p {
+                                    let wrow = &w_panel[jj * l_p..(jj + 1) * l_p];
+                                    let mut s = 0i32;
+                                    for ll in 0..l_p {
+                                        s += arow[ll] as i32 * (wrow[ll] as i8) as i32;
+                                    }
+                                    accrow[jj] += s;
+                                }
+                            }
+                        }
+                    }
+                    WeightBits::Int4 => {
+                        let lp2 = l_p / 2;
+                        for bl in 0..tiles_l {
+                            let a_base = ((bi * tiles_l + bl) * e_p) * l_p;
+                            let w_base = ((bj * tiles_l + bl) * h_p) * lp2;
+                            let a_panel = &pa.data[a_base..a_base + e_p * l_p];
+                            let w_panel = &w.data[w_base..w_base + h_p * lp2];
+                            for ii in 0..e_p {
+                                let arow = &a_panel[ii * l_p..(ii + 1) * l_p];
+                                let accrow = &mut acc[ii * h_p..(ii + 1) * h_p];
+                                for jj in 0..h_p {
+                                    let wrow = &w_panel[jj * lp2..(jj + 1) * lp2];
+                                    let mut s = 0i32;
+                                    for b in 0..lp2 {
+                                        let byte = wrow[b];
+                                        s += arow[2 * b] as i32 * (byte & 0xF) as i32;
+                                        s += arow[2 * b + 1] as i32 * (byte >> 4) as i32;
+                                    }
+                                    accrow[jj] += s;
+                                }
+                            }
+                        }
+                    }
+                }
+                // Affine corrections + write-back (true rows/cols only).
+                for ii in 0..e_p {
+                    let r = bi * e_p + ii;
+                    if r >= pa.e {
+                        break;
+                    }
+                    let sx = pa.params[r].scale;
+                    let bx = pa.params[r].bias;
+                    let xsum = pa.row_sums[r] as f32;
+                    for jj in 0..h_p {
+                        let c = bj * h_p + jj;
+                        if c >= w.h {
+                            break;
+                        }
+                        let sw = w.params[c].scale;
+                        let bw = w.params[c].bias;
+                        let wsum = w.row_sums[c] as f32;
+                        let a = acc[ii * h_p + jj] as f32;
+                        let mut v =
+                            sx * sw * a + sx * bw * xsum + bx * sw * wsum + l_true * bx * bw;
+                        if let Some(bias) = &self.bias {
+                            v += bias[c];
+                        }
+                        out[r * w.h + c] = v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Total h-tiles (the balancer's work-item count).
+    pub fn h_tiles(&self) -> usize {
+        self.packed.h_pad / self.packed.tile.h_p
+    }
+
+    /// Weight bytes streamed per full forward (decode-phase memory cost).
+    pub fn weight_bytes(&self) -> usize {
+        self.packed.nbytes()
+    }
+}
+
+/// Reference implementation over the dequantized matrix (tests only; slow).
+pub fn qlinear_reference(w: &QuantizedMatrix, x: &[f32], e: usize, bias: Option<&[f32]>) -> Vec<f32> {
+    use crate::quant::asym::quantize_activations;
+    let (q, params, sums) = quantize_activations(x, e, w.k);
+    let mut out = vec![0f32; e * w.n];
+    for r in 0..e {
+        for c in 0..w.n {
+            let mut acc = 0i64;
+            let mut i = 0;
+            w.for_row(c, |wq| {
+                acc += q[r * w.k + i] as i64 * wq as i64;
+                i += 1;
+            });
+            let sx = params[r].scale;
+            let bx = params[r].bias;
+            let sw = w.params[c].scale;
+            let bw = w.params[c].bias;
+            let mut v = sx * sw * acc as f32
+                + sx * bw * sums[r] as f32
+                + bx * sw * w.row_sums[c] as f32
+                + w.k as f32 * bx * bw;
+            if let Some(b) = bias {
+                v += b[c];
+            }
+            out[r * w.n + c] = v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::asym::WeightBits;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    const TILE: TileConfig = TileConfig { e_p: 4, h_p: 8, l_p: 4 };
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+                return Err(format!("idx {i}: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn tiled_matches_reference_int8() {
+        prop_check(80, |rng: &mut Rng| {
+            let e = rng.range(1, 20);
+            let l = rng.range(1, 24) * 2;
+            let h = rng.range(1, 40);
+            let wf = rng.normal_vec(h * l);
+            let x = rng.normal_vec(e * l);
+            let qm = QuantizedMatrix::from_f32(&wf, h, l, WeightBits::Int8);
+            let lin = QLinear::new(&qm, TILE, None);
+            let mut out = vec![0f32; e * h];
+            lin.forward(&x, e, &mut out);
+            let want = qlinear_reference(&qm, &x, e, None);
+            close(&out, &want, 1e-5)
+        });
+    }
+
+    #[test]
+    fn tiled_matches_reference_int4() {
+        prop_check(80, |rng: &mut Rng| {
+            let e = rng.range(1, 16);
+            let l = rng.range(1, 20) * 2;
+            let h = rng.range(1, 32);
+            let wf = rng.normal_vec(h * l);
+            let x = rng.normal_vec(e * l);
+            let qm = QuantizedMatrix::from_f32(&wf, h, l, WeightBits::Int4);
+            let lin = QLinear::new(&qm, TILE, None);
+            let mut out = vec![0f32; e * h];
+            lin.forward(&x, e, &mut out);
+            let want = qlinear_reference(&qm, &x, e, None);
+            close(&out, &want, 1e-5)
+        });
+    }
+
+    #[test]
+    fn close_to_float_gemm() {
+        let mut rng = Rng::new(5);
+        let (e, l, h) = (8, 128, 64);
+        let wf = rng.normal_vec(h * l);
+        let x = rng.normal_vec(e * l);
+        let qm = QuantizedMatrix::from_f32(&wf, h, l, WeightBits::Int8);
+        let lin = QLinear::new(&qm, TILE, None);
+        let mut out = vec![0f32; e * h];
+        lin.forward(&x, e, &mut out);
+        let mut exact = vec![0f32; e * h];
+        crate::cpu::gemm::matmul_f32(&x, &wf, &mut exact, e, l, h);
+        let num: f32 = out.iter().zip(&exact).map(|(a, b)| (a - b) * (a - b)).sum();
+        let den: f32 = exact.iter().map(|v| v * v).sum();
+        assert!((num / den).sqrt() < 0.02, "rel {}", (num / den).sqrt());
+    }
+
+    #[test]
+    fn bias_applied() {
+        let mut rng = Rng::new(6);
+        let (e, l, h) = (2, 8, 4);
+        let wf = rng.normal_vec(h * l);
+        let x = rng.normal_vec(e * l);
+        let bias: Vec<f32> = (0..h).map(|i| i as f32).collect();
+        let qm = QuantizedMatrix::from_f32(&wf, h, l, WeightBits::Int8);
+        let with = QLinear::new(&qm, TILE, Some(bias.clone()));
+        let without = QLinear::new(&qm, TILE, None);
+        let mut a = vec![0f32; e * h];
+        let mut b = vec![0f32; e * h];
+        with.forward(&x, e, &mut a);
+        without.forward(&x, e, &mut b);
+        for r in 0..e {
+            for c in 0..h {
+                assert!((a[r * h + c] - b[r * h + c] - bias[c]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_tile_ranges_compose() {
+        // Computing tile ranges separately must equal the full forward —
+        // the invariant the §5.2 balancer relies on.
+        let mut rng = Rng::new(7);
+        let (e, l, h) = (6, 32, 40);
+        let wf = rng.normal_vec(h * l);
+        let x = rng.normal_vec(e * l);
+        let qm = QuantizedMatrix::from_f32(&wf, h, l, WeightBits::Int8);
+        let lin = QLinear::new(&qm, TILE, None);
+        let mut full = vec![0f32; e * h];
+        lin.forward(&x, e, &mut full);
+        let pa = pack_activations(&x, e, l, TILE);
+        let mut split = vec![0f32; e * h];
+        let tiles = lin.h_tiles();
+        let mid = tiles / 2;
+        lin.forward_packed(&pa, &mut split, 0, mid);
+        lin.forward_packed(&pa, &mut split, mid, tiles);
+        assert_eq!(full, split);
+    }
+
+    #[test]
+    fn different_tiles_same_numbers() {
+        // Solver output must not affect numerics, only layout.
+        let mut rng = Rng::new(8);
+        let (e, l, h) = (5, 24, 20);
+        let wf = rng.normal_vec(h * l);
+        let x = rng.normal_vec(e * l);
+        let qm = QuantizedMatrix::from_f32(&wf, h, l, WeightBits::Int8);
+        let t1 = TileConfig { e_p: 4, h_p: 8, l_p: 4 };
+        let t2 = TileConfig { e_p: 10, h_p: 8, l_p: 8 };
+        let t3 = TileConfig { e_p: 12, h_p: 8, l_p: 4 };
+        let mut outs = Vec::new();
+        for t in [t1, t2, t3] {
+            let lin = QLinear::new(&qm, t, None);
+            let mut out = vec![0f32; e * h];
+            lin.forward(&x, e, &mut out);
+            outs.push(out);
+        }
+        for o in &outs[1..] {
+            for (a, b) in outs[0].iter().zip(o) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Native mobile-CPU backend (paper §5): tiled quantized GEMM with the
+//! hardware-driven data reorder, fused attention over the quantized KV
+//! cache, and the fp32-sensitive pointwise ops. This is the engine the
+//! optimization benches measure; numerics are cross-checked against the
+//! AOT/PJRT path in rust/tests/.
+
+pub mod activation;
+pub mod attention;
+pub mod gemm;
+pub mod gemm_q;
+
+pub use gemm_q::QLinear;

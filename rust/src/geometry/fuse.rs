@@ -1,0 +1,400 @@
+//! Region fusion (paper §5.4): rule-based rewriting that reduces the number
+//! of read/write passes for chains and lists of rearrangement Regions.
+//!
+//! Rules implemented (the paper's named rule families):
+//! * loop unrolling / tiling — `normalize` drops unit dims and merges
+//!   adjacent dims whose strides compose contiguously (fewer, deeper loops);
+//! * loop interchange — `normalize` orders dims so the unit-stride dim is
+//!   innermost (enables the memcpy fast path in the executor);
+//! * loop fusion — `fuse_pair` merges two Regions that are contiguous
+//!   extensions of each other (e.g. adjacent Concat chunks, consecutive
+//!   Gather rows) into one Region;
+//! * operator fusion — `compose` collapses A;B (write tmp, read tmp) into a
+//!   single Region when A's destination view is contiguous and B's source
+//!   addressing decomposes carry-free over A's iteration box, eliminating
+//!   the intermediate buffer entirely (e.g. Transpose∘Transpose,
+//!   Slice∘Transpose).
+
+use super::region::{Region, View, DIMS};
+
+/// Normalize: drop unit dims, merge mergeable adjacent dims, and order so
+/// the smallest dst stride is innermost. Never changes the mapping.
+pub fn normalize(r: &Region) -> Region {
+    // Collect non-unit dims as (size, src_stride, dst_stride).
+    let mut dims: Vec<(usize, usize, usize)> = (0..DIMS)
+        .filter(|&i| r.size[i] > 1)
+        .map(|i| (r.size[i], r.src.stride[i], r.dst.stride[i]))
+        .collect();
+    if dims.is_empty() {
+        // Scalar copy (or empty box).
+        let n = if r.elements() == 0 { 0 } else { 1 };
+        return Region {
+            size: [1, 1, n],
+            src: View::new(r.src.offset, [0, 0, 1]),
+            dst: View::new(r.dst.offset, [0, 0, 1]),
+        };
+    }
+    // Interchange: sort by dst stride descending (unit stride innermost).
+    dims.sort_by(|a, b| b.2.cmp(&a.2));
+    // Merge: adjacent (outer, inner) merge when outer strides equal
+    // inner_stride * inner_size on BOTH views.
+    let mut merged: Vec<(usize, usize, usize)> = Vec::with_capacity(dims.len());
+    for d in dims {
+        if let Some(last) = merged.last_mut() {
+            let (osz, osrc, odst) = *last;
+            let (isz, isrc, idst) = d;
+            if osrc == isrc * isz && odst == idst * isz {
+                *last = (osz * isz, isrc, idst);
+                continue;
+            }
+        }
+        merged.push(d);
+    }
+    while merged.len() < DIMS {
+        merged.insert(0, (1, 0, 0));
+    }
+    if merged.len() > DIMS {
+        // Couldn't express in 3 dims (can't happen when input had ≤3).
+        return *r;
+    }
+    Region {
+        size: [merged[0].0, merged[1].0, merged[2].0],
+        src: View::new(r.src.offset, [merged[0].1, merged[1].1, merged[2].1]),
+        dst: View::new(r.dst.offset, [merged[0].2, merged[1].2, merged[2].2]),
+    }
+}
+
+/// True when `r` is a flat 1-D unit-stride copy on both views.
+fn is_flat_copy(r: &Region) -> bool {
+    r.size[0] == 1
+        && r.size[1] == 1
+        && r.src.stride[2] == 1
+        && r.dst.stride[2] == 1
+}
+
+/// Loop fusion: try to merge `a` and `b` into one Region when `b` continues
+/// `a` along some axis on both views (adjacent concat chunks / gathered
+/// consecutive rows). Inputs should be normalized.
+pub fn fuse_pair(a: &Region, b: &Region) -> Option<Region> {
+    // Concatenation of flat copies (concat chunks, gathered consecutive
+    // rows): lengths may differ.
+    if is_flat_copy(a)
+        && is_flat_copy(b)
+        && b.src.offset == a.src.offset + a.size[2]
+        && b.dst.offset == a.dst.offset + a.size[2]
+    {
+        let mut size = a.size;
+        size[2] += b.size[2];
+        return Some(Region { size, src: a.src, dst: a.dst });
+    }
+    if a.size != b.size {
+        return None;
+    }
+    if a.src.stride != b.src.stride || a.dst.stride != b.dst.stride {
+        return None;
+    }
+    // b must start exactly one "outer step" after a on both views. Try
+    // extending along each existing dim, or prepending a new outer dim.
+    for i in 0..DIMS {
+        let step_src = a.src.stride[i] * a.size[i];
+        let step_dst = a.dst.stride[i] * a.size[i];
+        let can_extend = (0..DIMS).all(|j| j == i || a.size[j] == 1 || true);
+        if !can_extend {
+            continue;
+        }
+        // Extending dim i is valid only if i is the outermost non-unit dim
+        // (otherwise the iteration order would interleave wrongly) OR all
+        // outer dims are unit.
+        let outer_ok = (0..i).all(|j| a.size[j] == 1);
+        if !outer_ok {
+            continue;
+        }
+        if b.src.offset == a.src.offset + step_src && b.dst.offset == a.dst.offset + step_dst {
+            let mut size = a.size;
+            size[i] *= 2;
+            return Some(Region { size, src: a.src, dst: a.dst });
+        }
+    }
+    // Prepend a new outer dim if dim0 is unit.
+    if a.size[0] == 1 {
+        let dsrc = b.src.offset.checked_sub(a.src.offset)?;
+        let ddst = b.dst.offset.checked_sub(a.dst.offset)?;
+        if dsrc > 0 || ddst > 0 {
+            let mut src = a.src;
+            let mut dst = a.dst;
+            src.stride[0] = dsrc;
+            dst.stride[0] = ddst;
+            let mut size = a.size;
+            size[0] = 2;
+            return Some(Region { size, src, dst });
+        }
+    }
+    None
+}
+
+/// Greedy left-to-right fusion over a region list (normalizing first).
+/// Returns the (usually shorter) fused list.
+pub fn fuse_region_list(regions: &[Region]) -> Vec<Region> {
+    let mut out: Vec<Region> = Vec::with_capacity(regions.len());
+    for r in regions {
+        let r = normalize(r);
+        if r.elements() == 0 {
+            continue;
+        }
+        if let Some(last) = out.last() {
+            if let Some(merged) = fuse_pair(last, &r) {
+                *out.last_mut().unwrap() = normalize(&merged);
+                continue;
+            }
+        }
+        out.push(r);
+    }
+    out
+}
+
+/// Mixed-radix digits of `v` over box `radix` (outer→inner). None if v
+/// exceeds the box capacity.
+fn digits(v: usize, radix: [usize; DIMS]) -> Option<[usize; DIMS]> {
+    let cap = radix[0] * radix[1] * radix[2];
+    if v >= cap {
+        return None;
+    }
+    let d2 = v % radix[2];
+    let rest = v / radix[2];
+    let d1 = rest % radix[1];
+    let d0 = rest / radix[1];
+    if d0 >= radix[0] {
+        return None;
+    }
+    Some([d0, d1, d2])
+}
+
+/// Operator fusion: compose A;B (A writes tmp, B reads tmp) into one Region
+/// A→C, when
+/// * A's dst view is contiguous row-major over A.size with offset 0, and
+/// * B's src addressing decomposes carry-free into A's iteration box.
+///
+/// Returns None when the precondition fails (caller keeps the two Regions).
+pub fn compose(a: &Region, b: &Region) -> Option<Region> {
+    let a = normalize(a);
+    let b = normalize(b);
+    // a.dst must be contiguous row-major at offset 0 (size-1 dims have
+    // arbitrary stride — ignore them).
+    if a.dst.offset != 0 {
+        return None;
+    }
+    let mut expect = 1;
+    for i in (0..DIMS).rev() {
+        if a.size[i] > 1 && a.dst.stride[i] != expect {
+            return None;
+        }
+        expect *= a.size[i];
+    }
+    // Delinearize B's src offset and per-dim strides over A's box.
+    let off_d = digits(b.src.offset, a.size)?;
+    let mut stride_d = [[0usize; DIMS]; DIMS];
+    for j in 0..DIMS {
+        stride_d[j] = digits(b.src.stride[j], a.size)?;
+    }
+    // Carry-free check: along each A-digit i, the maximum total index
+    // reached must stay below the radix.
+    for i in 0..DIMS {
+        let mut max_i = off_d[i];
+        for j in 0..DIMS {
+            max_i += (b.size[j] - 1) * stride_d[j][i];
+        }
+        if max_i >= a.size[i] {
+            return None;
+        }
+    }
+    // Compose: new src offset/strides in A's *source* address space.
+    let src_off = a.src.addr(off_d);
+    let mut src_stride = [0usize; DIMS];
+    for j in 0..DIMS {
+        src_stride[j] = (0..DIMS).map(|i| stride_d[j][i] * a.src.stride[i]).sum();
+    }
+    Some(normalize(&Region {
+        size: b.size,
+        src: View::new(src_off, src_stride),
+        dst: b.dst,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::region::{apply_region, apply_regions};
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    fn transpose2d(rows: usize, cols: usize) -> Region {
+        Region::new(
+            [1, cols, rows],
+            View::new(0, [0, 1, cols]),
+            View::new(0, [0, rows, 1]),
+        )
+    }
+
+    #[test]
+    fn normalize_preserves_mapping() {
+        prop_check(200, |rng: &mut Rng| {
+            let size = [rng.range(1, 4), rng.range(1, 5), rng.range(1, 6)];
+            // Random-but-valid strides: permutation-of-contiguous times gaps.
+            let src = View::new(rng.range(0, 3), [
+                rng.range(1, 40),
+                rng.range(1, 12),
+                rng.range(1, 4),
+            ]);
+            let dst = View::contiguous(size);
+            let r = Region::new(size, src, dst);
+            let n = normalize(&r);
+            let src_len = r.src_extent().max(n.src_extent());
+            let buf: Vec<u32> = (0..src_len as u32).collect();
+            let mut d1 = vec![u32::MAX; r.dst_extent()];
+            let mut d2 = vec![u32::MAX; r.dst_extent()];
+            apply_region(&r, &buf, &mut d1);
+            apply_region(&n, &buf, &mut d2);
+            if d1 != d2 {
+                return Err(format!("normalize changed mapping: {r:?} -> {n:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn normalize_merges_contiguous_dims() {
+        // A [2, 3, 4] row-major copy is a single 24-element memcpy.
+        let size = [2, 3, 4];
+        let r = Region::new(size, View::contiguous(size), View::contiguous(size));
+        let n = normalize(&r);
+        assert_eq!(n.size, [1, 1, 24]);
+        assert!(n.inner_contiguous());
+    }
+
+    #[test]
+    fn normalize_makes_unit_stride_innermost() {
+        // Pathological order: unit-stride dim outermost.
+        let r = Region::new(
+            [4, 1, 3],
+            View::new(0, [1, 0, 4]),
+            View::new(0, [1, 0, 4]),
+        );
+        let n = normalize(&r);
+        assert_eq!(n.src.stride[2], 1);
+        assert_eq!(n.dst.stride[2], 1);
+    }
+
+    #[test]
+    fn fuse_adjacent_concat_chunks() {
+        // Two concat chunks writing [0..12) and [12..24) from two sources
+        // placed consecutively — fuse into one region.
+        let a = Region::memcpy(12, 0, 0);
+        let b = Region::memcpy(12, 12, 12);
+        let fused = fuse_region_list(&[a, b]);
+        assert_eq!(fused.len(), 1);
+        assert_eq!(fused[0].elements(), 24);
+        let src: Vec<u32> = (0..24).collect();
+        let mut dst = vec![0u32; 24];
+        apply_regions(&fused, &src, &mut dst);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn fuse_gather_of_consecutive_rows() {
+        // Gather rows [5, 6, 7] of an [8, 16] matrix = 3 regions → 1.
+        let regions: Vec<Region> = [5usize, 6, 7]
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| Region::memcpy(16, r * 16, i * 16))
+            .collect();
+        let fused = fuse_region_list(&regions);
+        assert_eq!(fused.len(), 1);
+        assert_eq!(fused[0].elements(), 48);
+    }
+
+    #[test]
+    fn nonadjacent_rows_do_not_fuse_incorrectly() {
+        let regions: Vec<Region> = [1usize, 5, 2]
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| Region::memcpy(16, r * 16, i * 16))
+            .collect();
+        let fused = fuse_region_list(&regions);
+        // Whatever the count, the mapping must be preserved.
+        let src: Vec<u32> = (0..8 * 16).collect();
+        let mut want = vec![0u32; 48];
+        let mut got = vec![0u32; 48];
+        apply_regions(&regions, &src, &mut want);
+        apply_regions(&fused, &src, &mut got);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn compose_transpose_transpose_is_copy() {
+        let (r, c) = (6, 10);
+        let t1 = transpose2d(r, c);
+        let t2 = transpose2d(c, r);
+        let composed = compose(&t1, &t2).expect("should compose");
+        // Net effect = identity copy of 60 elements.
+        let n = normalize(&composed);
+        assert_eq!(n.size[2], r * c);
+        assert_eq!(n.src.stride[2], 1);
+        assert_eq!(n.dst.stride[2], 1);
+        // And it really is the identity.
+        let src: Vec<u32> = (0..(r * c) as u32).collect();
+        let mut dst = vec![0u32; r * c];
+        apply_region(&composed, &src, &mut dst);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn compose_matches_two_pass_execution() {
+        prop_check(200, |rng: &mut Rng| {
+            // A: random contiguous-dst region; B: reads A's output.
+            let size_a = [rng.range(1, 4), rng.range(1, 4), rng.range(1, 6)];
+            let a = Region::new(
+                size_a,
+                View::new(rng.range(0, 4), [
+                    rng.range(1, 30),
+                    rng.range(1, 10),
+                    rng.range(1, 3),
+                ]),
+                View::contiguous(size_a),
+            );
+            // B transposes the flattened output as [p, q] with p*q = n.
+            let n = a.elements();
+            let p = (1..=n).rev().find(|p| n % p == 0 && *p <= 8).unwrap_or(1);
+            let q = n / p;
+            let b = Region::new(
+                [1, q, p],
+                View::new(0, [0, 1, q]),
+                View::new(0, [0, p, 1]),
+            );
+            let Some(c) = compose(&a, &b) else { return Ok(()) };
+            let src: Vec<u32> = (0..a.src_extent() as u32).collect();
+            // Two-pass.
+            let mut tmp = vec![0u32; n];
+            apply_region(&a, &src, &mut tmp);
+            let mut want = vec![0u32; b.dst_extent()];
+            apply_region(&b, &tmp, &mut want);
+            // Fused.
+            let mut got = vec![u32::MAX; b.dst_extent()];
+            apply_region(&c, &src, &mut got);
+            if want != got {
+                return Err(format!("compose mismatch\nA={a:?}\nB={b:?}\nC={c:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compose_refuses_noncontiguous_intermediate() {
+        let a = Region::new(
+            [1, 1, 4],
+            View::new(0, [0, 0, 1]),
+            View::new(0, [0, 0, 2]), // strided dst
+        );
+        let b = Region::memcpy(4, 0, 0);
+        assert!(compose(&a, &b).is_none());
+    }
+}

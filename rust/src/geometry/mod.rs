@@ -1,0 +1,13 @@
+//! Geometry compute (paper §5.4): long-tail data-rearrangement operators
+//! (Transpose / Gather / Concat / Slice) abstracted as linear address
+//! mappings f(x) = offset + stride·x over a 3-D iteration box, executed by
+//! one generic copy loop, and *fused* by rule-based rewriting (the paper's
+//! loop unrolling / interchange / tiling / fusion rules) so chains of
+//! rearrangements touch memory once instead of once per operator.
+
+pub mod fuse;
+pub mod ops;
+pub mod region;
+
+pub use fuse::{compose, fuse_region_list, normalize};
+pub use region::{apply_region, apply_regions, Region, View};

@@ -1,0 +1,122 @@
+//! Long-tail operators expressed as Regions (paper §5.4): Transpose,
+//! Gather, Concat, Slice. Each returns the Region list describing the op;
+//! the engine fuses lists across consecutive ops before executing.
+
+use super::region::{Region, View};
+
+/// Transpose a [rows, cols] matrix.
+pub fn transpose(rows: usize, cols: usize) -> Vec<Region> {
+    vec![Region::new(
+        [1, cols, rows],
+        View::new(0, [0, 1, cols]),
+        View::new(0, [0, rows, 1]),
+    )]
+}
+
+/// Permute a 3-D tensor [d0, d1, d2] by `perm` (e.g. [1, 0, 2]).
+pub fn permute3(dims: [usize; 3], perm: [usize; 3]) -> Vec<Region> {
+    let src_stride_dense = [dims[1] * dims[2], dims[2], 1];
+    // Iterate in output order; src stride = dense stride of permuted dim.
+    let out_dims = [dims[perm[0]], dims[perm[1]], dims[perm[2]]];
+    let src_stride = [
+        src_stride_dense[perm[0]],
+        src_stride_dense[perm[1]],
+        src_stride_dense[perm[2]],
+    ];
+    vec![Region::new(
+        out_dims,
+        View::new(0, src_stride),
+        View::contiguous(out_dims),
+    )]
+}
+
+/// Gather rows `idx` from an [n, row_len] matrix (one Region per row;
+/// consecutive indices fuse away in fuse_region_list).
+pub fn gather_rows(idx: &[usize], row_len: usize) -> Vec<Region> {
+    idx.iter()
+        .enumerate()
+        .map(|(i, &r)| Region::memcpy(row_len, r * row_len, i * row_len))
+        .collect()
+}
+
+/// Concat along axis 0: inputs are [rows_i, row_len] matrices stored
+/// back-to-back in one source buffer; one Region per input.
+pub fn concat_rows(rows: &[usize], row_len: usize) -> Vec<Region> {
+    let mut out = Vec::with_capacity(rows.len());
+    let mut src_off = 0;
+    let mut dst_off = 0;
+    for &r in rows {
+        out.push(Region::memcpy(r * row_len, src_off, dst_off));
+        src_off += r * row_len;
+        dst_off += r * row_len;
+    }
+    out
+}
+
+/// Slice rows [lo, hi) of an [n, row_len] matrix.
+pub fn slice_rows(lo: usize, hi: usize, row_len: usize) -> Vec<Region> {
+    vec![Region::memcpy((hi - lo) * row_len, lo * row_len, 0)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::fuse::fuse_region_list;
+    use crate::geometry::region::apply_regions;
+
+    #[test]
+    fn transpose_op() {
+        let src = vec![1, 2, 3, 4, 5, 6];
+        let mut dst = vec![0; 6];
+        apply_regions(&transpose(2, 3), &src, &mut dst);
+        assert_eq!(dst, vec![1, 4, 2, 5, 3, 6]);
+    }
+
+    #[test]
+    fn permute3_matches_manual() {
+        // [2,3,4] -> perm [2,0,1]: out[k][i][j] = in[i][j][k].
+        let dims = [2, 3, 4];
+        let src: Vec<u32> = (0..24).collect();
+        let mut dst = vec![0u32; 24];
+        apply_regions(&permute3(dims, [2, 0, 1]), &src, &mut dst);
+        for i in 0..2 {
+            for j in 0..3 {
+                for k in 0..4 {
+                    let got = dst[(k * 2 + i) * 3 + j];
+                    let want = src[(i * 3 + j) * 4 + k];
+                    assert_eq!(got, want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_fuses_when_consecutive() {
+        let g = gather_rows(&[3, 4, 5, 6], 8);
+        assert_eq!(g.len(), 4);
+        let fused = fuse_region_list(&g);
+        assert_eq!(fused.len(), 1, "consecutive gather collapses to one copy");
+        let src: Vec<u32> = (0..64).collect();
+        let mut dst = vec![0u32; 32];
+        apply_regions(&fused, &src, &mut dst);
+        assert_eq!(dst[..8], src[24..32]);
+    }
+
+    #[test]
+    fn concat_fuses_to_single_copy() {
+        let c = concat_rows(&[2, 3, 1], 4);
+        let fused = fuse_region_list(&c);
+        assert_eq!(fused.len(), 1);
+        assert_eq!(fused[0].elements(), 24);
+    }
+
+    #[test]
+    fn slice_is_one_region() {
+        let s = slice_rows(2, 5, 10);
+        assert_eq!(s.len(), 1);
+        let src: Vec<u32> = (0..100).collect();
+        let mut dst = vec![0u32; 30];
+        apply_regions(&s, &src, &mut dst);
+        assert_eq!(dst[..], src[20..50]);
+    }
+}

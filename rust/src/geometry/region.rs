@@ -1,0 +1,161 @@
+//! The Region primitive (paper Eq. 5): a 3-D iteration box `size` and two
+//! affine views, source and destination:
+//!
+//!   addr(x) = offset + Σ_i stride_i · x_i ,  x_i ∈ [0, size_i)
+//!
+//! Any rearrangement op is one or more Regions; the executor below is the
+//! *only* data-movement loop in the engine's long-tail path.
+
+pub const DIMS: usize = 3;
+
+/// One affine address view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct View {
+    pub offset: usize,
+    pub stride: [usize; DIMS],
+}
+
+impl View {
+    pub fn new(offset: usize, stride: [usize; DIMS]) -> Self {
+        View { offset, stride }
+    }
+
+    /// Contiguous row-major view over a `size` box.
+    pub fn contiguous(size: [usize; DIMS]) -> Self {
+        View { offset: 0, stride: [size[1] * size[2], size[2], 1] }
+    }
+
+    #[inline]
+    pub fn addr(&self, x: [usize; DIMS]) -> usize {
+        self.offset + self.stride[0] * x[0] + self.stride[1] * x[1] + self.stride[2] * x[2]
+    }
+}
+
+/// A fundamental mapping: copy src view → dst view over the `size` box.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub size: [usize; DIMS],
+    pub src: View,
+    pub dst: View,
+}
+
+impl Region {
+    pub fn new(size: [usize; DIMS], src: View, dst: View) -> Self {
+        Region { size, src, dst }
+    }
+
+    /// A 1-D memcpy of `n` elements.
+    pub fn memcpy(n: usize, src_off: usize, dst_off: usize) -> Self {
+        Region {
+            size: [1, 1, n],
+            src: View::new(src_off, [0, 0, 1]),
+            dst: View::new(dst_off, [0, 0, 1]),
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.size[0] * self.size[1] * self.size[2]
+    }
+
+    /// Highest source address touched + 1 (bounds checking).
+    pub fn src_extent(&self) -> usize {
+        self.src.addr([
+            self.size[0].saturating_sub(1),
+            self.size[1].saturating_sub(1),
+            self.size[2].saturating_sub(1),
+        ]) + 1
+    }
+
+    pub fn dst_extent(&self) -> usize {
+        self.dst.addr([
+            self.size[0].saturating_sub(1),
+            self.size[1].saturating_sub(1),
+            self.size[2].saturating_sub(1),
+        ]) + 1
+    }
+
+    /// True if the innermost dimension is a unit-stride copy on both sides
+    /// (the executor then uses slice copies instead of scalar stores).
+    pub fn inner_contiguous(&self) -> bool {
+        self.src.stride[2] == 1 && self.dst.stride[2] == 1
+    }
+}
+
+/// Execute one region: dst[f_dst(x)] = src[f_src(x)] for all x.
+pub fn apply_region<T: Copy>(r: &Region, src: &[T], dst: &mut [T]) {
+    debug_assert!(r.elements() == 0 || r.src_extent() <= src.len());
+    debug_assert!(r.elements() == 0 || r.dst_extent() <= dst.len());
+    let [s0, s1, s2] = r.size;
+    if r.inner_contiguous() {
+        for i in 0..s0 {
+            for j in 0..s1 {
+                let sb = r.src.addr([i, j, 0]);
+                let db = r.dst.addr([i, j, 0]);
+                dst[db..db + s2].copy_from_slice(&src[sb..sb + s2]);
+            }
+        }
+    } else {
+        for i in 0..s0 {
+            for j in 0..s1 {
+                let sb = r.src.addr([i, j, 0]);
+                let db = r.dst.addr([i, j, 0]);
+                for k in 0..s2 {
+                    dst[db + r.dst.stride[2] * k] = src[sb + r.src.stride[2] * k];
+                }
+            }
+        }
+    }
+}
+
+/// Execute a region list in order.
+pub fn apply_regions<T: Copy>(rs: &[Region], src: &[T], dst: &mut [T]) {
+    for r in rs {
+        apply_region(r, src, dst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memcpy_region() {
+        let src: Vec<i32> = (0..10).collect();
+        let mut dst = vec![0i32; 10];
+        apply_region(&Region::memcpy(6, 2, 1), &src, &mut dst);
+        assert_eq!(dst, vec![0, 2, 3, 4, 5, 6, 7, 0, 0, 0]);
+    }
+
+    #[test]
+    fn transpose_via_region() {
+        // 2x3 -> 3x2 transpose as a single region.
+        let src = vec![1, 2, 3, 4, 5, 6]; // [[1,2,3],[4,5,6]]
+        let mut dst = vec![0; 6];
+        let r = Region::new(
+            [1, 3, 2], // iterate (col, row) of the output
+            View::new(0, [0, 1, 3]),
+            View::new(0, [0, 2, 1]),
+        );
+        apply_region(&r, &src, &mut dst);
+        assert_eq!(dst, vec![1, 4, 2, 5, 3, 6]);
+    }
+
+    #[test]
+    fn extents() {
+        let r = Region::new([2, 2, 4], View::new(1, [8, 4, 1]), View::contiguous([2, 2, 4]));
+        assert_eq!(r.src_extent(), 1 + 8 + 4 + 3 + 1);
+        assert_eq!(r.dst_extent(), 16);
+        assert_eq!(r.elements(), 16);
+        assert!(r.inner_contiguous());
+    }
+
+    #[test]
+    fn strided_inner_loop() {
+        // Interleave: dst[2k] = src[k].
+        let src = vec![1, 2, 3];
+        let mut dst = vec![0; 6];
+        let r = Region::new([1, 1, 3], View::new(0, [0, 0, 1]), View::new(0, [0, 0, 2]));
+        apply_region(&r, &src, &mut dst);
+        assert_eq!(dst, vec![1, 0, 2, 0, 3, 0]);
+    }
+}

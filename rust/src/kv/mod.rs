@@ -1,0 +1,312 @@
+//! Quantized KV-cache storage (paper §4.2 layout, §5.1 "stored directly in
+//! the rearranged data layout, ensuring that there is no need to rearrange
+//! the historical KV during each computation").
+//!
+//! Token-major records: one append per decode step writes a single
+//! contiguous record (all kv heads), which is also the unit the
+//! DRAM-Flash spill path ships to flash (paper: "each computation produces
+//! only one set of new KV values … ≈1 KB for Qwen2-7B").
+
+use crate::quant::asym::{self, AsymParams};
+use crate::quant::fp8;
+
+/// KV storage for one decoder layer, all kv heads, token-major.
+#[derive(Clone, Debug)]
+pub struct KvLayer {
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    len: usize,
+    /// int8 keys: [tok, head, d].
+    k_q: Vec<i8>,
+    /// Per (tok, head) asymmetric params.
+    k_params: Vec<AsymParams>,
+    /// fp8 values: [tok, head, d].
+    v_f8: Vec<u8>,
+}
+
+impl KvLayer {
+    pub fn new(kv_heads: usize, head_dim: usize) -> Self {
+        KvLayer {
+            kv_heads,
+            head_dim,
+            len: 0,
+            k_q: Vec::new(),
+            k_params: Vec::new(),
+            v_f8: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes of one token record as stored (int8 K + params + fp8 V).
+    pub fn bytes_per_token(&self) -> usize {
+        self.kv_heads * (self.head_dim + 8 + self.head_dim)
+    }
+
+    /// Quantize + append one token: k, v are [kv_heads * head_dim] f32
+    /// (keys already roped). fp8 values and per-token key params mean this
+    /// never touches earlier records (§4.2).
+    pub fn append(&mut self, k: &[f32], v: &[f32]) {
+        let d = self.head_dim;
+        assert_eq!(k.len(), self.kv_heads * d);
+        assert_eq!(v.len(), self.kv_heads * d);
+        for h in 0..self.kv_heads {
+            let ks = &k[h * d..(h + 1) * d];
+            let p = asym::params_for(ks, asym::I8_MIN, asym::I8_MAX);
+            for &x in ks {
+                self.k_q
+                    .push(asym::quantize_one(x, p, asym::I8_MIN, asym::I8_MAX) as i8);
+            }
+            self.k_params.push(p);
+            let vs = &v[h * d..(h + 1) * d];
+            let start = self.v_f8.len();
+            self.v_f8.resize(start + d, 0);
+            fp8::encode_slice(vs, &mut self.v_f8[start..]);
+        }
+        self.len += 1;
+    }
+
+    /// q·k_tok for one head without dequantizing the key:
+    /// q·(kq·s + b) = s·(q·kq) + b·Σq.
+    #[inline]
+    pub fn key_dot(&self, head: usize, tok: usize, q: &[f32]) -> f32 {
+        let d = self.head_dim;
+        debug_assert_eq!(q.len(), d);
+        let base = (tok * self.kv_heads + head) * d;
+        let p = self.k_params[tok * self.kv_heads + head];
+        let mut acc = 0f32;
+        let mut qsum = 0f32;
+        for i in 0..d {
+            acc += q[i] * self.k_q[base + i] as f32;
+            qsum += q[i];
+        }
+        p.scale * acc + p.bias * qsum
+    }
+
+    /// out += w * v_tok for one head (fp8 decoded on the fly).
+    #[inline]
+    pub fn accum_value(&self, head: usize, tok: usize, w: f32, out: &mut [f32]) {
+        let d = self.head_dim;
+        debug_assert_eq!(out.len(), d);
+        let base = (tok * self.kv_heads + head) * d;
+        for i in 0..d {
+            out[i] += w * fp8::f8e4m3_to_f32(self.v_f8[base + i]);
+        }
+    }
+
+    /// Serialize token `tok` into a flat record (the flash-spill format):
+    /// per head: k int8[d] | scale f32 | bias f32 | v u8[d].
+    pub fn serialize_token(&self, tok: usize) -> Vec<u8> {
+        let d = self.head_dim;
+        let mut out = Vec::with_capacity(self.bytes_per_token());
+        for h in 0..self.kv_heads {
+            let base = (tok * self.kv_heads + h) * d;
+            for i in 0..d {
+                out.push(self.k_q[base + i] as u8);
+            }
+            let p = self.k_params[tok * self.kv_heads + h];
+            out.extend_from_slice(&p.scale.to_le_bytes());
+            out.extend_from_slice(&p.bias.to_le_bytes());
+            out.extend_from_slice(&self.v_f8[base..base + d]);
+        }
+        out
+    }
+
+    /// Append a token from a serialized record (staging after flash load).
+    pub fn push_serialized(&mut self, rec: &[u8]) {
+        let d = self.head_dim;
+        assert_eq!(rec.len(), self.bytes_per_token());
+        let mut off = 0;
+        for _ in 0..self.kv_heads {
+            for i in 0..d {
+                self.k_q.push(rec[off + i] as i8);
+            }
+            off += d;
+            let scale = f32::from_le_bytes(rec[off..off + 4].try_into().unwrap());
+            let bias = f32::from_le_bytes(rec[off + 4..off + 8].try_into().unwrap());
+            off += 8;
+            self.k_params.push(AsymParams { scale, bias });
+            self.v_f8.extend_from_slice(&rec[off..off + d]);
+            off += d;
+        }
+        self.len += 1;
+    }
+
+    /// Remove the first `n` tokens (after they were spilled to flash).
+    pub fn drop_prefix(&mut self, n: usize) {
+        assert!(n <= self.len);
+        let kd = self.kv_heads * self.head_dim;
+        self.k_q.drain(..n * kd);
+        self.k_params.drain(..n * self.kv_heads);
+        self.v_f8.drain(..n * kd);
+        self.len -= n;
+    }
+
+    /// Drop all tokens (staging reuse).
+    pub fn clear(&mut self) {
+        self.k_q.clear();
+        self.k_params.clear();
+        self.v_f8.clear();
+        self.len = 0;
+    }
+
+    /// Resident bytes (DRAM occupancy).
+    pub fn resident_bytes(&self) -> usize {
+        self.k_q.len() + self.k_params.len() * 8 + self.v_f8.len()
+    }
+}
+
+/// Whole-model cache: one KvLayer per decoder layer.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub layers: Vec<KvLayer>,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, kv_heads: usize, head_dim: usize) -> Self {
+        KvCache {
+            layers: (0..layers).map(|_| KvLayer::new(kv_heads, head_dim)).collect(),
+        }
+    }
+
+    /// Sequence length (tokens cached); uniform across layers by construction.
+    pub fn len(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.resident_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    fn filled_layer(rng: &mut Rng, heads: usize, d: usize, toks: usize) -> KvLayer {
+        let mut kv = KvLayer::new(heads, d);
+        for _ in 0..toks {
+            let k = rng.normal_vec(heads * d);
+            let v = rng.normal_vec(heads * d);
+            kv.append(&k, &v);
+        }
+        kv
+    }
+
+    #[test]
+    fn key_dot_matches_dequantized() {
+        prop_check(100, |rng| {
+            let d = rng.range(4, 64);
+            let heads = rng.range(1, 4);
+            let mut kv = KvLayer::new(heads, d);
+            let k = rng.normal_vec(heads * d);
+            let v = rng.normal_vec(heads * d);
+            kv.append(&k, &v);
+            let q = rng.normal_vec(d);
+            for h in 0..heads {
+                let p = kv.k_params[h];
+                let mut direct = 0f32;
+                for i in 0..d {
+                    let kk = kv.k_q[h * d + i] as f32 * p.scale + p.bias;
+                    direct += q[i] * kk;
+                }
+                let fused = kv.key_dot(h, 0, &q);
+                if (direct - fused).abs() > 1e-3 * (1.0 + direct.abs()) {
+                    return Err(format!("head {h}: {direct} vs {fused}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        prop_check(50, |rng| {
+            let heads = rng.range(1, 3);
+            let d = rng.range(4, 32);
+            let kv = filled_layer(rng, heads, d, 5);
+            let mut other = KvLayer::new(heads, d);
+            for t in 0..5 {
+                other.push_serialized(&kv.serialize_token(t));
+            }
+            let q = rng.normal_vec(d);
+            for t in 0..5 {
+                for h in 0..heads {
+                    let a = kv.key_dot(h, t, &q);
+                    let b = other.key_dot(h, t, &q);
+                    if a != b {
+                        return Err(format!("key_dot ({t},{h}): {a} vs {b}"));
+                    }
+                    let mut va = vec![0f32; d];
+                    let mut vb = vec![0f32; d];
+                    kv.accum_value(h, t, 1.0, &mut va);
+                    other.accum_value(h, t, 1.0, &mut vb);
+                    if va != vb {
+                        return Err(format!("value ({t},{h}) mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn drop_prefix_shifts_tokens() {
+        let mut rng = Rng::new(1);
+        let mut kv = filled_layer(&mut rng, 2, 8, 6);
+        let q = rng.normal_vec(8);
+        let want = kv.key_dot(0, 3, &q);
+        kv.drop_prefix(2);
+        assert_eq!(kv.len(), 4);
+        assert_eq!(kv.key_dot(0, 1, &q), want);
+    }
+
+    #[test]
+    fn append_never_mutates_history() {
+        // The §4.2 design goal: new tokens leave old encodings untouched.
+        let mut rng = Rng::new(2);
+        let mut kv = filled_layer(&mut rng, 2, 16, 3);
+        let before: Vec<Vec<u8>> = (0..3).map(|t| kv.serialize_token(t)).collect();
+        let k = rng.normal_vec(2 * 16);
+        let v = rng.normal_vec(2 * 16);
+        kv.append(&k, &v);
+        for (t, rec) in before.iter().enumerate() {
+            assert_eq!(&kv.serialize_token(t), rec);
+        }
+    }
+
+    #[test]
+    fn record_size_matches_qwen2_7b_claim() {
+        // Paper §4.1: one decode step's KV for Qwen2-7B ≈ 1 KB. Qwen2-7B has
+        // 4 kv heads × 128 head_dim; int8 K + fp8 V = 1 KB + params.
+        let kv = KvLayer::new(4, 128);
+        let b = kv.bytes_per_token();
+        assert!((1024..=1100).contains(&b), "{b}");
+    }
+
+    #[test]
+    fn cache_tracks_bytes() {
+        let mut rng = Rng::new(3);
+        let mut c = KvCache::new(2, 2, 8);
+        assert_eq!(c.resident_bytes(), 0);
+        for l in 0..2 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            c.layers[l].append(&k, &v);
+        }
+        assert_eq!(c.len(), 1);
+        assert!(c.resident_bytes() > 0);
+    }
+}

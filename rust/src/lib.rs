@@ -1,0 +1,25 @@
+//! MNN-LLM reproduction: a generic inference engine for fast LLM deployment
+//! on (simulated) mobile devices.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * Layer 1/2 (build time, Python): Pallas kernels + JAX model, AOT-lowered
+//!   to `artifacts/*.hlo.txt`.
+//! * Layer 3 (this crate): the serving engine — PJRT runtime, DRAM-Flash
+//!   hybrid storage, combined quantization, hardware-driven data reorder,
+//!   multicore balancing, geometry compute, LoRA, scheduler/batcher.
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod cpu;
+pub mod device;
+pub mod geometry;
+pub mod kv;
+pub mod lora;
+pub mod memory;
+pub mod model;
+pub mod parallel;
+pub mod quant;
+pub mod reorder;
+pub mod runtime;
+pub mod util;

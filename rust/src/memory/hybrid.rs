@@ -1,0 +1,419 @@
+//! KV-cache DRAM-Flash spill (paper §4.1, Fig. 2).
+//!
+//! Tokens beyond a DRAM budget migrate (oldest first) to the flash device
+//! as the same serialized records the cache uses in DRAM. Before a decode
+//! step's attention, spilled records must be staged back; the prefetcher
+//! (memory::prefetch) overlaps that load with the previous layer's compute
+//! window so it is free until the spilled span exceeds the
+//! bandwidth-delay product.
+
+use std::sync::Arc;
+
+use crate::cpu::activation::softmax_inplace;
+use crate::kv::KvLayer;
+use crate::memory::flash::FlashSim;
+
+/// One layer's KV with a flash tier below it.
+pub struct HybridKvLayer {
+    /// DRAM-resident suffix of the sequence.
+    pub resident: KvLayer,
+    /// Staged copy of the spilled prefix (refreshed by prefetch).
+    staging: KvLayer,
+    /// True when `staging` holds all spilled tokens.
+    staged_valid: bool,
+    flash: Arc<FlashSim>,
+    /// Flash offsets of spilled token records, in token order.
+    spilled: Vec<u64>,
+    /// Spill threshold: max resident tokens before migration.
+    pub dram_budget_tokens: usize,
+}
+
+impl HybridKvLayer {
+    pub fn new(
+        kv_heads: usize,
+        head_dim: usize,
+        flash: Arc<FlashSim>,
+        dram_budget_tokens: usize,
+    ) -> Self {
+        HybridKvLayer {
+            resident: KvLayer::new(kv_heads, head_dim),
+            staging: KvLayer::new(kv_heads, head_dim),
+            staged_valid: true, // nothing spilled yet
+            flash,
+            spilled: Vec::new(),
+            dram_budget_tokens: dram_budget_tokens.max(1),
+        }
+    }
+
+    /// Total sequence length (spilled + resident).
+    pub fn len(&self) -> usize {
+        self.spilled.len() + self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn spilled_tokens(&self) -> usize {
+        self.spilled.len()
+    }
+
+    pub fn bytes_per_token(&self) -> usize {
+        self.resident.bytes_per_token()
+    }
+
+    /// Append one token; spill the oldest resident tokens if over budget.
+    /// The spill is one sequential flash append per token (the paper: each
+    /// step produces ~1 KB of new KV).
+    pub fn append(&mut self, k: &[f32], v: &[f32]) -> std::io::Result<()> {
+        self.resident.append(k, v);
+        while self.resident.len() > self.dram_budget_tokens {
+            let rec = self.resident.serialize_token(0);
+            let off = self.flash.append(&rec)?;
+            self.spilled.push(off);
+            self.resident.drop_prefix(1);
+            self.staged_valid = false;
+        }
+        Ok(())
+    }
+
+    /// Load all spilled records into staging. Returns modeled flash seconds
+    /// spent (0.0 when already staged). The prefetcher calls this during
+    /// the previous layer's compute window.
+    pub fn stage(&mut self) -> std::io::Result<f64> {
+        if self.staged_valid {
+            return Ok(0.0);
+        }
+        self.staging.clear();
+        let mut total = 0.0;
+        let rec_len = self.resident.bytes_per_token();
+        let mut buf = vec![0u8; rec_len];
+        // Spills are sequential appends per layer, so batches of
+        // consecutive offsets coalesce into large reads (the paper's "larger
+        // continuous memory blocks" 1 GB/s assumption). We model per-record
+        // reads but merge adjacent offsets to skip repeated fixed latency.
+        let mut prev_end: Option<u64> = None;
+        for &off in &self.spilled {
+            let t = self.flash.read_at(off, &mut buf)?;
+            total += match prev_end {
+                Some(end) if end == off => t - self.flash.tier().latency_s,
+                _ => t,
+            };
+            prev_end = Some(off + rec_len as u64);
+            self.staging.push_serialized(&buf);
+        }
+        self.staged_valid = true;
+        Ok(total)
+    }
+
+    /// Modeled time `stage()` would take right now (prefetch planning).
+    pub fn stage_cost(&self) -> f64 {
+        if self.staged_valid {
+            return 0.0;
+        }
+        let bytes = self.spilled.len() * self.resident.bytes_per_token();
+        // One latency charge: spilled records are contiguous on flash.
+        self.flash.read_time(bytes)
+    }
+
+    /// GQA decode attention over the full (staged + resident) sequence.
+    /// Panics if spilled tokens are not staged — call `stage()` (or let the
+    /// prefetcher do it) first.
+    pub fn decode_attention(&self, q: &[f32], heads: usize, out: &mut [f32]) {
+        assert!(self.staged_valid, "spilled KV not staged; prefetch missing");
+        let d = self.resident.head_dim;
+        let kvh_n = self.resident.kv_heads;
+        assert!(heads % kvh_n == 0);
+        let group = heads / kvh_n;
+        let n_sp = self.staging.len();
+        let n_res = self.resident.len();
+        let t = n_sp + n_res;
+        assert!(t > 0);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut scores = vec![0f32; t];
+        let mut qs = vec![0f32; d];
+        for h in 0..heads {
+            let kvh = h / group;
+            for i in 0..d {
+                qs[i] = q[h * d + i] * scale;
+            }
+            for tok in 0..n_sp {
+                scores[tok] = self.staging.key_dot(kvh, tok, &qs);
+            }
+            for tok in 0..n_res {
+                scores[n_sp + tok] = self.resident.key_dot(kvh, tok, &qs);
+            }
+            softmax_inplace(&mut scores);
+            let o = &mut out[h * d..(h + 1) * d];
+            o.fill(0.0);
+            for tok in 0..n_sp {
+                self.staging.accum_value(kvh, tok, scores[tok], o);
+            }
+            for tok in 0..n_res {
+                self.resident.accum_value(kvh, tok, scores[n_sp + tok], o);
+            }
+        }
+    }
+
+    /// DRAM occupancy (resident + staging).
+    pub fn dram_bytes(&self) -> usize {
+        self.resident.resident_bytes() + self.staging.resident_bytes()
+    }
+
+    /// Release the staging copy (tokens remain on flash).
+    pub fn drop_staging(&mut self) {
+        self.staging.clear();
+        self.staged_valid = self.spilled.is_empty();
+    }
+
+    /// GQA decode attention that *streams* spilled records from flash in
+    /// chunks of `chunk_tokens`, using online (rescaled) softmax so no
+    /// full-length staging buffer is ever materialized — DRAM stays
+    /// O(resident + chunk) regardless of context length, which is the
+    /// point of §4.1's hybrid storage. Returns modeled flash seconds.
+    pub fn decode_attention_streaming(
+        &self,
+        q: &[f32],
+        heads: usize,
+        out: &mut [f32],
+        chunk_tokens: usize,
+    ) -> std::io::Result<f64> {
+        let d = self.resident.head_dim;
+        let kvh_n = self.resident.kv_heads;
+        assert!(heads % kvh_n == 0);
+        let group = heads / kvh_n;
+        let t = self.len();
+        assert!(t > 0);
+        let chunk_tokens = chunk_tokens.max(1);
+        let scale = 1.0 / (d as f32).sqrt();
+        // Online-softmax state per head: running max, running sum, output.
+        let mut run_m = vec![f32::NEG_INFINITY; heads];
+        let mut run_s = vec![0f32; heads];
+        out.fill(0.0);
+        let mut qs = vec![0f32; heads * d];
+        for h in 0..heads {
+            for i in 0..d {
+                qs[h * d + i] = q[h * d + i] * scale;
+            }
+        }
+        let absorb = |cache: &KvLayer,
+                          tok: usize,
+                          run_m: &mut [f32],
+                          run_s: &mut [f32],
+                          out: &mut [f32]| {
+            for h in 0..heads {
+                let kvh = h / group;
+                let score = cache.key_dot(kvh, tok, &qs[h * d..(h + 1) * d]);
+                let o = &mut out[h * d..(h + 1) * d];
+                if score > run_m[h] {
+                    let r = (run_m[h] - score).exp(); // rescale history
+                    if run_s[h] > 0.0 {
+                        for v in o.iter_mut() {
+                            *v *= r;
+                        }
+                    }
+                    run_s[h] *= r;
+                    run_m[h] = score;
+                }
+                let w = (score - run_m[h]).exp();
+                run_s[h] += w;
+                cache.accum_value(kvh, tok, w, o);
+            }
+        };
+        // Stream the spilled prefix chunk by chunk.
+        let rec_len = self.resident.bytes_per_token();
+        let mut flash_s = 0.0;
+        let mut chunk = KvLayer::new(kvh_n, d);
+        let mut buf = vec![0u8; rec_len];
+        for ids in self.spilled.chunks(chunk_tokens) {
+            chunk.clear();
+            let mut prev_end: Option<u64> = None;
+            for &off in ids {
+                let t = self.flash.read_at(off, &mut buf)?;
+                flash_s += match prev_end {
+                    Some(end) if end == off => t - self.flash.tier().latency_s,
+                    _ => t,
+                };
+                prev_end = Some(off + rec_len as u64);
+                chunk.push_serialized(&buf);
+            }
+            for tok in 0..chunk.len() {
+                absorb(&chunk, tok, &mut run_m, &mut run_s, out);
+            }
+        }
+        // Then the DRAM-resident suffix.
+        for tok in 0..self.resident.len() {
+            absorb(&self.resident, tok, &mut run_m, &mut run_s, out);
+        }
+        // Normalize.
+        for h in 0..heads {
+            let inv = 1.0 / run_s[h];
+            for v in out[h * d..(h + 1) * d].iter_mut() {
+                *v *= inv;
+            }
+        }
+        Ok(flash_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::attention::decode_attention as plain_attention;
+    use crate::device::SocProfile;
+    use crate::util::rng::Rng;
+
+    fn flash() -> Arc<FlashSim> {
+        Arc::new(FlashSim::temp(SocProfile::snapdragon_8gen3().flash).unwrap())
+    }
+
+    #[test]
+    fn no_spill_below_budget() {
+        let mut h = HybridKvLayer::new(2, 8, flash(), 10);
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            h.append(&k, &v).unwrap();
+        }
+        assert_eq!(h.spilled_tokens(), 0);
+        assert_eq!(h.len(), 10);
+    }
+
+    #[test]
+    fn spills_oldest_beyond_budget() {
+        let mut h = HybridKvLayer::new(2, 8, flash(), 4);
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            h.append(&k, &v).unwrap();
+        }
+        assert_eq!(h.spilled_tokens(), 6);
+        assert_eq!(h.resident.len(), 4);
+        assert_eq!(h.len(), 10);
+    }
+
+    #[test]
+    fn hybrid_attention_matches_unspilled() {
+        // The core §4.1 correctness claim: spilling must not change output.
+        let mut rng = Rng::new(3);
+        let (heads, kv_heads, d, t) = (4, 2, 16, 24);
+        let mut plain = KvLayer::new(kv_heads, d);
+        let mut hybrid = HybridKvLayer::new(kv_heads, d, flash(), 5);
+        for _ in 0..t {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            plain.append(&k, &v);
+            hybrid.append(&k, &v).unwrap();
+        }
+        assert!(hybrid.spilled_tokens() > 0);
+        hybrid.stage().unwrap();
+        let q = rng.normal_vec(heads * d);
+        let mut want = vec![0f32; heads * d];
+        plain_attention(&q, heads, &plain, &mut want);
+        let mut got = vec![0f32; heads * d];
+        hybrid.decode_attention(&q, heads, &mut got);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn stage_is_idempotent_and_costed() {
+        let mut rng = Rng::new(4);
+        let mut h = HybridKvLayer::new(2, 8, flash(), 2);
+        for _ in 0..8 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            h.append(&k, &v).unwrap();
+        }
+        let est = h.stage_cost();
+        assert!(est > 0.0);
+        let t1 = h.stage().unwrap();
+        assert!(t1 > 0.0);
+        let t2 = h.stage().unwrap();
+        assert_eq!(t2, 0.0, "second stage is free");
+        assert_eq!(h.stage_cost(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not staged")]
+    fn attention_without_staging_panics() {
+        let mut rng = Rng::new(5);
+        let mut h = HybridKvLayer::new(1, 4, flash(), 1);
+        for _ in 0..3 {
+            let k = rng.normal_vec(4);
+            let v = rng.normal_vec(4);
+            h.append(&k, &v).unwrap();
+        }
+        let q = rng.normal_vec(4);
+        let mut out = vec![0f32; 4];
+        h.decode_attention(&q, 1, &mut out);
+    }
+
+    #[test]
+    fn streaming_matches_staged_attention() {
+        // Online softmax over flash chunks == full staged attention.
+        let mut rng = Rng::new(7);
+        let (heads, kv_heads, d, t) = (4, 2, 16, 40);
+        let mut hybrid = HybridKvLayer::new(kv_heads, d, flash(), 6);
+        for _ in 0..t {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            hybrid.append(&k, &v).unwrap();
+        }
+        let q = rng.normal_vec(heads * d);
+        hybrid.stage().unwrap();
+        let mut want = vec![0f32; heads * d];
+        hybrid.decode_attention(&q, heads, &mut want);
+        hybrid.drop_staging();
+        for chunk in [1usize, 3, 8, 64] {
+            let mut got = vec![0f32; heads * d];
+            let flash_s = hybrid
+                .decode_attention_streaming(&q, heads, &mut got, chunk)
+                .unwrap();
+            assert!(flash_s > 0.0);
+            for (a, b) in want.iter().zip(&got) {
+                assert!((a - b).abs() < 1e-4, "chunk {chunk}: {a} vs {b}");
+            }
+            // No staging buffer left behind.
+            assert_eq!(hybrid.staging.len(), 0);
+        }
+    }
+
+    #[test]
+    fn streaming_without_spill_matches_plain() {
+        let mut rng = Rng::new(8);
+        let (heads, kv_heads, d, t) = (2, 1, 8, 10);
+        let mut plain = KvLayer::new(kv_heads, d);
+        let mut hybrid = HybridKvLayer::new(kv_heads, d, flash(), 100);
+        for _ in 0..t {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            plain.append(&k, &v);
+            hybrid.append(&k, &v).unwrap();
+        }
+        let q = rng.normal_vec(heads * d);
+        let mut want = vec![0f32; heads * d];
+        plain_attention(&q, heads, &plain, &mut want);
+        let mut got = vec![0f32; heads * d];
+        hybrid.decode_attention_streaming(&q, heads, &mut got, 4).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dram_usage_bounded_by_budget() {
+        let mut rng = Rng::new(6);
+        let budget = 4;
+        let mut h = HybridKvLayer::new(2, 8, flash(), budget);
+        for _ in 0..50 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            h.append(&k, &v).unwrap();
+        }
+        assert!(h.resident.len() <= budget);
+    }
+}

@@ -1,0 +1,25 @@
+//! DRAM-Flash hybrid storage (paper §4.1).
+//!
+//! * [`flash`] — the flash-device simulator: a file-backed store whose
+//!   reads are throttled to UFS-class bandwidth + latency (this testbed has
+//!   no UFS; DESIGN.md §Substitutions).
+//! * [`embedding`] — bf16 embedding table served from flash: the decode
+//!   phase reads one `hidden×2`-byte row per token, so flash residency
+//!   costs ≈1.4‰ latency while saving the full table's DRAM (≈15% of
+//!   parameters for Qwen2-7B-class vocab).
+//! * [`hybrid`] — KV-cache spill: tokens beyond a DRAM threshold migrate to
+//!   flash; reads come back through a staging buffer.
+//! * [`prefetch`] — overlap engine: issue flash reads for the *next*
+//!   layer's spilled KV while the current layer computes (MLP + qkv
+//!   window), hiding flash latency until the spilled span exceeds the
+//!   bandwidth-delay product (Fig. 2's 3072K crossover).
+
+pub mod embedding;
+pub mod flash;
+pub mod hybrid;
+pub mod prefetch;
+
+pub use embedding::FlashEmbedding;
+pub use flash::FlashSim;
+pub use hybrid::HybridKvLayer;
+pub use prefetch::{PrefetchPlanner, PrefetchStats};

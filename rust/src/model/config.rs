@@ -1,0 +1,160 @@
+//! Decoder-only transformer dimensions (mirrors python/compile/model.py),
+//! plus the analytic configs of the models the paper benchmarks.
+
+/// Model dimensions; `max_len` is the static KV capacity of the AOT graphs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub inter: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub max_len: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim()
+    }
+
+    /// Embedding (or lm_head) parameter count.
+    pub fn embedding_params(&self) -> u64 {
+        (self.vocab * self.hidden) as u64
+    }
+
+    /// Per-decoder-layer parameter count (weights + biases + norms).
+    pub fn layer_params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let kv = self.kv_dim() as u64;
+        let i = self.inter as u64;
+        h * h + 2 * h * kv + h * h      // wq, wk, wv, wo
+            + h + 2 * kv                // qkv biases
+            + 3 * h * i                 // gate, up, down
+            + 2 * h                     // norms
+    }
+
+    /// Total parameters with untied lm_head (Table 1's structure).
+    pub fn total_params(&self) -> u64 {
+        2 * self.embedding_params() + self.layers as u64 * self.layer_params() + self.hidden as u64
+    }
+
+    /// Decode-phase weight bytes streamed per token under the combined
+    /// quantization policy (§4.2): int8 attention + lm_head, int4 MLP,
+    /// embedding in flash (excluded).
+    pub fn decode_weight_bytes(&self) -> u64 {
+        let h = self.hidden as u64;
+        let kv = self.kv_dim() as u64;
+        let i = self.inter as u64;
+        let attn = h * h + 2 * h * kv + h * h; // int8 → 1 B each
+        let mlp = 3 * h * i / 2; // int4 → 0.5 B each
+        self.layers as u64 * (attn + mlp) + self.embedding_params() // lm_head int8
+    }
+
+    /// Qwen2-7B (paper Table 1 dims).
+    pub fn qwen2_7b() -> Self {
+        ModelConfig {
+            name: "qwen2-7b".into(),
+            vocab: 151646,
+            hidden: 3584,
+            inter: 18944,
+            layers: 28,
+            heads: 28,
+            kv_heads: 4,
+            max_len: 32768,
+            rope_theta: 1e6,
+            rms_eps: 1e-6,
+        }
+    }
+
+    /// Qwen2-1.5B.
+    pub fn qwen2_1_5b() -> Self {
+        ModelConfig {
+            name: "qwen2-1.5b".into(),
+            vocab: 151646,
+            hidden: 1536,
+            inter: 8960,
+            layers: 28,
+            heads: 12,
+            kv_heads: 2,
+            max_len: 32768,
+            rope_theta: 1e6,
+            rms_eps: 1e-6,
+        }
+    }
+
+    /// Llama3-8B.
+    pub fn llama3_8b() -> Self {
+        ModelConfig {
+            name: "llama3-8b".into(),
+            vocab: 128256,
+            hidden: 4096,
+            inter: 14336,
+            layers: 32,
+            heads: 32,
+            kv_heads: 8,
+            max_len: 8192,
+            rope_theta: 5e5,
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// The tiny executed config (must match python/compile/model.py TINY).
+    pub fn tiny_qwen2() -> Self {
+        ModelConfig {
+            name: "tiny-qwen2".into(),
+            vocab: 2048,
+            hidden: 256,
+            inter: 704,
+            layers: 4,
+            heads: 4,
+            kv_heads: 2,
+            max_len: 512,
+            rope_theta: 1e4,
+            rms_eps: 1e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen2_7b_table1_structure() {
+        let c = ModelConfig::qwen2_7b();
+        // vocab × hidden = 0.5435 B; the paper's "1.09 B Embedding" counts
+        // embedding + lm_head storage (EXPERIMENTS.md §Table 1).
+        assert!((c.embedding_params() as f64 / 1e9 - 0.5435).abs() < 0.01);
+        assert!((2.0 * c.embedding_params() as f64 / 1e9 - 1.09).abs() < 0.01);
+        let total = c.total_params() as f64 / 1e9;
+        assert!((7.0..7.7).contains(&total), "total {total}");
+        // emb + head ≈ 14–15% of the total (the paper's "about 15%").
+        let frac = 2.0 * c.embedding_params() as f64 / c.total_params() as f64;
+        assert!((0.13..0.17).contains(&frac), "frac {frac}");
+    }
+
+    #[test]
+    fn head_dims() {
+        let c = ModelConfig::qwen2_7b();
+        assert_eq!(c.head_dim(), 128);
+        assert_eq!(c.kv_dim(), 512);
+        let t = ModelConfig::tiny_qwen2();
+        assert_eq!(t.head_dim(), 64);
+        assert_eq!(t.kv_dim(), 128);
+    }
+
+    #[test]
+    fn decode_bytes_smaller_than_fp16() {
+        let c = ModelConfig::qwen2_7b();
+        let fp16 = (c.layers as u64 * c.layer_params() + c.embedding_params()) * 2;
+        assert!(c.decode_weight_bytes() < fp16 / 2);
+    }
+}

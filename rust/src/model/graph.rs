@@ -1,0 +1,494 @@
+//! Model-conversion computation-graph IR (paper §3).
+//!
+//! MNN-LLM's conversion pipeline takes an exported graph and applies
+//! *RMSNorm fusion* and *Attention fusion*, replaces Linear layers with
+//! custom parameter-external ops (so export doesn't materialize weights),
+//! and leaves hooks for runtime LoRA bypasses. This module rebuilds that
+//! pipeline: a small SSA-ish graph IR, pattern-matching fusion passes, and
+//! a reference interpreter so every rewrite is checked for value
+//! preservation (the tests run fused vs unfused graphs on real tensors).
+
+use std::collections::HashMap;
+
+/// Tensor value: shape + row-major data (interpreter currency).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[..self.shape.len() - 1].iter().product()
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap()
+    }
+}
+
+pub type NodeId = usize;
+
+/// Graph operations. `Pow2`/`MeanLast`/`AddEps`/`Rsqrt`/`Mul` are the
+/// primitive chain RMSNorm exports as; `RmsNorm` / `FusedAttention` /
+/// `QuantLinear` are the fused custom ops the converter produces.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input(String),
+    /// Named external parameter (weights live outside the graph — §3's
+    /// "ONNX export to focus on the computation graph without parameters").
+    Param(String),
+    /// Dense y = x · Wᵀ (W from a Param node).
+    MatMul,
+    Add,
+    Mul,
+    /// x², elementwise.
+    Pow2,
+    /// Mean over the last axis, keepdim.
+    MeanLast,
+    /// + ε scalar.
+    AddEps(f32),
+    Rsqrt,
+    /// Softmax over the last axis.
+    SoftmaxLast,
+    /// Scale by a constant (1/√d in exported attention).
+    Scale(f32),
+    /// y = xᵀ over the last two axes (exported attention's K transpose).
+    TransposeLast2,
+    // ---- fused custom ops (converter output) ----
+    RmsNorm { eps: f32 },
+    FusedAttention { scale: f32 },
+    /// Linear with externally-stored quantized weights.
+    QuantLinear { param: String },
+}
+
+/// One node: op + input edges.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+}
+
+/// The computation graph (append-only ids; `output` marks the root).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub output: NodeId,
+}
+
+impl Graph {
+    pub fn add(&mut self, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, op, inputs });
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Number of nodes reachable from the output (dead nodes don't count).
+    pub fn live_nodes(&self) -> usize {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![self.output];
+        let mut n = 0;
+        while let Some(id) = stack.pop() {
+            if seen[id] {
+                continue;
+            }
+            seen[id] = true;
+            n += 1;
+            stack.extend(&self.nodes[id].inputs);
+        }
+        n
+    }
+
+    /// Build the canonical *exported* (unfused) RMSNorm chain:
+    /// x * rsqrt(mean(x²)+eps) * w.
+    pub fn build_rmsnorm_chain(&mut self, x: NodeId, w: NodeId, eps: f32) -> NodeId {
+        let p = self.add(Op::Pow2, vec![x]);
+        let m = self.add(Op::MeanLast, vec![p]);
+        let e = self.add(Op::AddEps(eps), vec![m]);
+        let r = self.add(Op::Rsqrt, vec![e]);
+        let xn = self.add(Op::Mul, vec![x, r]);
+        self.add(Op::Mul, vec![xn, w])
+    }
+
+    /// Build the exported attention chain:
+    /// softmax(scale(q) · kᵀ) · v  (single head, 2-D q/k/v).
+    pub fn build_attention_chain(&mut self, q: NodeId, k: NodeId, v: NodeId, scale: f32) -> NodeId {
+        let qs = self.add(Op::Scale(scale), vec![q]);
+        let kt = self.add(Op::TransposeLast2, vec![k]);
+        let logits = self.add(Op::MatMul, vec![qs, kt]);
+        let probs = self.add(Op::SoftmaxLast, vec![logits]);
+        self.add(Op::MatMul, vec![probs, v])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conversion passes (§3)
+// ---------------------------------------------------------------------------
+
+/// Pass 1 — RMSNorm fusion: rewrite the 6-node exported chain into one
+/// `RmsNorm` node. Returns how many fusions fired.
+pub fn fuse_rmsnorm(g: &mut Graph) -> usize {
+    let mut fused = 0;
+    for id in 0..g.nodes.len() {
+        // Match  Mul(Mul(x, Rsqrt(AddEps(MeanLast(Pow2(x))))), w).
+        let Op::Mul = g.nodes[id].op else { continue };
+        let [xn, w] = g.nodes[id].inputs[..] else { continue };
+        let Op::Mul = g.nodes[xn].op else { continue };
+        let [x, r] = g.nodes[xn].inputs[..] else { continue };
+        let Op::Rsqrt = g.nodes[r].op else { continue };
+        let e = g.nodes[r].inputs[0];
+        let Op::AddEps(eps) = g.nodes[e].op else { continue };
+        let m = g.nodes[e].inputs[0];
+        let Op::MeanLast = g.nodes[m].op else { continue };
+        let p = g.nodes[m].inputs[0];
+        let Op::Pow2 = g.nodes[p].op else { continue };
+        if g.nodes[p].inputs[0] != x {
+            continue; // the squared input must be the normalized input
+        }
+        g.nodes[id].op = Op::RmsNorm { eps };
+        g.nodes[id].inputs = vec![x, w];
+        fused += 1;
+    }
+    fused
+}
+
+/// Pass 2 — Attention fusion: rewrite
+/// MatMul(SoftmaxLast(MatMul(Scale(q), TransposeLast2(k))), v)
+/// into one `FusedAttention` node.
+pub fn fuse_attention(g: &mut Graph) -> usize {
+    let mut fused = 0;
+    for id in 0..g.nodes.len() {
+        let Op::MatMul = g.nodes[id].op else { continue };
+        let [probs, v] = g.nodes[id].inputs[..] else { continue };
+        let Op::SoftmaxLast = g.nodes[probs].op else { continue };
+        let logits = g.nodes[probs].inputs[0];
+        let Op::MatMul = g.nodes[logits].op else { continue };
+        let [qs, kt] = g.nodes[logits].inputs[..] else { continue };
+        let Op::Scale(scale) = g.nodes[qs].op else { continue };
+        let q = g.nodes[qs].inputs[0];
+        let Op::TransposeLast2 = g.nodes[kt].op else { continue };
+        let k = g.nodes[kt].inputs[0];
+        g.nodes[id].op = Op::FusedAttention { scale };
+        g.nodes[id].inputs = vec![q, k, v];
+        fused += 1;
+    }
+    fused
+}
+
+/// Pass 3 — Linear externalization: MatMul(x, Param(name)) becomes
+/// QuantLinear{param: name} so the exporter never serializes weights (§3).
+pub fn externalize_linears(g: &mut Graph) -> usize {
+    let mut n = 0;
+    for id in 0..g.nodes.len() {
+        let Op::MatMul = g.nodes[id].op else { continue };
+        let [x, w] = g.nodes[id].inputs[..] else { continue };
+        let Op::Param(name) = &g.nodes[w].op else { continue };
+        g.nodes[id].op = Op::QuantLinear { param: name.clone() };
+        g.nodes[id].inputs = vec![x];
+        n += 1;
+    }
+    n
+}
+
+/// The full conversion pipeline in the paper's order.
+pub fn convert(g: &mut Graph) -> (usize, usize, usize) {
+    let a = fuse_attention(g);
+    let r = fuse_rmsnorm(g);
+    let l = externalize_linears(g);
+    (r, a, l)
+}
+
+// ---------------------------------------------------------------------------
+// Reference interpreter (value-preservation oracle for the passes)
+// ---------------------------------------------------------------------------
+
+/// Execution environment: graph inputs + external parameters by name.
+#[derive(Default)]
+pub struct Env {
+    pub inputs: HashMap<String, Tensor>,
+    pub params: HashMap<String, Tensor>,
+}
+
+fn matmul_t(x: &Tensor, wt: &Tensor) -> Tensor {
+    // x: [m, k] · wt: [k, n] (already transposed weight or plain matrix).
+    let (m, k) = (x.rows(), x.cols());
+    let n = wt.cols();
+    assert_eq!(wt.rows(), k, "matmul shape");
+    let mut out = vec![0f32; m * n];
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = 0f32;
+            for i in 0..k {
+                acc += x.data[r * k + i] * wt.data[i * n + c];
+            }
+            out[r * n + c] = acc;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Evaluate the graph on `env` (panics on malformed graphs — this is the
+/// conversion-time oracle, not the serving path).
+pub fn eval(g: &Graph, env: &Env) -> Tensor {
+    let mut vals: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    fn get(vals: &mut Vec<Option<Tensor>>, g: &Graph, env: &Env, id: NodeId) -> Tensor {
+        if let Some(v) = &vals[id] {
+            return v.clone();
+        }
+        let node = &g.nodes[id];
+        let ins: Vec<Tensor> = node.inputs.iter().map(|&i| get(vals, g, env, i)).collect();
+        let out = match &node.op {
+            Op::Input(name) => env.inputs[name].clone(),
+            Op::Param(name) => env.params[name].clone(),
+            Op::MatMul => matmul_t(&ins[0], &ins[1]),
+            Op::Add => {
+                let mut d = ins[0].data.clone();
+                for (a, b) in d.iter_mut().zip(&ins[1].data) {
+                    *a += b;
+                }
+                Tensor::new(ins[0].shape.clone(), d)
+            }
+            Op::Mul => {
+                // Elementwise with last-dim or per-row broadcast.
+                let (a, b) = (&ins[0], &ins[1]);
+                let mut d = a.data.clone();
+                if b.data.len() == a.data.len() {
+                    for (x, y) in d.iter_mut().zip(&b.data) {
+                        *x *= y;
+                    }
+                } else if b.data.len() == a.cols() {
+                    for r in 0..a.rows() {
+                        for c in 0..a.cols() {
+                            d[r * a.cols() + c] *= b.data[c];
+                        }
+                    }
+                } else if b.data.len() == a.rows() {
+                    for r in 0..a.rows() {
+                        for c in 0..a.cols() {
+                            d[r * a.cols() + c] *= b.data[r];
+                        }
+                    }
+                } else {
+                    panic!("mul broadcast {:?} vs {:?}", a.shape, b.shape);
+                }
+                Tensor::new(a.shape.clone(), d)
+            }
+            Op::Pow2 => Tensor::new(
+                ins[0].shape.clone(),
+                ins[0].data.iter().map(|v| v * v).collect(),
+            ),
+            Op::MeanLast => {
+                let (rows, cols) = (ins[0].rows(), ins[0].cols());
+                let d: Vec<f32> = (0..rows)
+                    .map(|r| ins[0].data[r * cols..(r + 1) * cols].iter().sum::<f32>() / cols as f32)
+                    .collect();
+                Tensor::new(vec![rows], d)
+            }
+            Op::AddEps(e) => Tensor::new(
+                ins[0].shape.clone(),
+                ins[0].data.iter().map(|v| v + e).collect(),
+            ),
+            Op::Rsqrt => Tensor::new(
+                ins[0].shape.clone(),
+                ins[0].data.iter().map(|v| 1.0 / v.sqrt()).collect(),
+            ),
+            Op::SoftmaxLast => {
+                let (rows, cols) = (ins[0].rows(), ins[0].cols());
+                let mut d = ins[0].data.clone();
+                for r in 0..rows {
+                    crate::cpu::activation::softmax_inplace(&mut d[r * cols..(r + 1) * cols]);
+                }
+                Tensor::new(ins[0].shape.clone(), d)
+            }
+            Op::Scale(s) => Tensor::new(
+                ins[0].shape.clone(),
+                ins[0].data.iter().map(|v| v * s).collect(),
+            ),
+            Op::TransposeLast2 => {
+                let (r, c) = (ins[0].rows(), ins[0].cols());
+                let mut d = vec![0f32; r * c];
+                for i in 0..r {
+                    for j in 0..c {
+                        d[j * r + i] = ins[0].data[i * c + j];
+                    }
+                }
+                Tensor::new(vec![c, r], d)
+            }
+            Op::RmsNorm { eps } => {
+                let (rows, cols) = (ins[0].rows(), ins[0].cols());
+                let mut d = vec![0f32; rows * cols];
+                crate::cpu::activation::rmsnorm(&ins[0].data, &ins[1].data, &mut d, rows, *eps);
+                Tensor::new(ins[0].shape.clone(), d)
+            }
+            Op::FusedAttention { scale } => {
+                // q:[s,d], k:[t,d], v:[t,d] → softmax(scale·q·kᵀ)·v.
+                let (q, k, v) = (&ins[0], &ins[1], &ins[2]);
+                let (s, d) = (q.rows(), q.cols());
+                let t = k.rows();
+                let mut out = vec![0f32; s * v.cols()];
+                let mut scores = vec![0f32; t];
+                for i in 0..s {
+                    for j in 0..t {
+                        let mut acc = 0f32;
+                        for x in 0..d {
+                            acc += q.data[i * d + x] * scale * k.data[j * d + x];
+                        }
+                        scores[j] = acc;
+                    }
+                    crate::cpu::activation::softmax_inplace(&mut scores);
+                    for j in 0..t {
+                        for c in 0..v.cols() {
+                            out[i * v.cols() + c] += scores[j] * v.data[j * v.cols() + c];
+                        }
+                    }
+                }
+                Tensor::new(vec![s, v.cols()], out)
+            }
+            Op::QuantLinear { param } => {
+                // Interpreter uses the f32 parameter; the engine swaps in
+                // the packed quantized kernel at load time.
+                let w = &env.params[param];
+                matmul_t(&ins[0], w)
+            }
+        };
+        vals[id] = Some(out.clone());
+        out
+    }
+    get(&mut vals, g, env, g.output)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn env_with(rng: &mut Rng, s: usize, d: usize) -> Env {
+        let mut env = Env::default();
+        env.inputs.insert("x".into(), Tensor::new(vec![s, d], rng.normal_vec(s * d)));
+        env.inputs.insert("q".into(), Tensor::new(vec![s, d], rng.normal_vec(s * d)));
+        env.inputs.insert("k".into(), Tensor::new(vec![s, d], rng.normal_vec(s * d)));
+        env.inputs.insert("v".into(), Tensor::new(vec![s, d], rng.normal_vec(s * d)));
+        env.params.insert("gamma".into(), Tensor::new(vec![d], rng.normal_vec(d)));
+        env.params.insert("w0".into(), Tensor::new(vec![d, d], rng.normal_vec(d * d)));
+        env
+    }
+
+    fn close(a: &Tensor, b: &Tensor) {
+        assert_eq!(a.shape, b.shape);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-4 * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_fusion_preserves_values() {
+        let mut rng = Rng::new(1);
+        let env = env_with(&mut rng, 5, 16);
+        let mut g = Graph::default();
+        let x = g.add(Op::Input("x".into()), vec![]);
+        let w = g.add(Op::Param("gamma".into()), vec![]);
+        g.output = g.build_rmsnorm_chain(x, w, 1e-6);
+        let before = eval(&g, &env);
+        let live_before = g.live_nodes();
+        assert_eq!(fuse_rmsnorm(&mut g), 1);
+        let after = eval(&g, &env);
+        close(&before, &after);
+        assert!(g.live_nodes() < live_before, "fusion shrinks the live graph");
+        assert!(matches!(g.nodes[g.output].op, Op::RmsNorm { .. }));
+    }
+
+    #[test]
+    fn attention_fusion_preserves_values() {
+        let mut rng = Rng::new(2);
+        let env = env_with(&mut rng, 6, 8);
+        let mut g = Graph::default();
+        let q = g.add(Op::Input("q".into()), vec![]);
+        let k = g.add(Op::Input("k".into()), vec![]);
+        let v = g.add(Op::Input("v".into()), vec![]);
+        g.output = g.build_attention_chain(q, k, v, 1.0 / (8f32).sqrt());
+        let before = eval(&g, &env);
+        assert_eq!(fuse_attention(&mut g), 1);
+        let after = eval(&g, &env);
+        close(&before, &after);
+        assert!(matches!(g.nodes[g.output].op, Op::FusedAttention { .. }));
+    }
+
+    #[test]
+    fn linear_externalization() {
+        let mut rng = Rng::new(3);
+        let env = env_with(&mut rng, 4, 16);
+        let mut g = Graph::default();
+        let x = g.add(Op::Input("x".into()), vec![]);
+        let w = g.add(Op::Param("w0".into()), vec![]);
+        g.output = g.add(Op::MatMul, vec![x, w]);
+        let before = eval(&g, &env);
+        assert_eq!(externalize_linears(&mut g), 1);
+        let after = eval(&g, &env);
+        close(&before, &after);
+        assert!(matches!(&g.nodes[g.output].op, Op::QuantLinear { param } if param == "w0"));
+    }
+
+    #[test]
+    fn full_pipeline_on_mini_block() {
+        // One decoder-ish block: rmsnorm → attention(q=k=v=normed) →
+        // residual add → linear. All three passes fire; values preserved.
+        let mut rng = Rng::new(4);
+        let env = env_with(&mut rng, 4, 16);
+        let mut g = Graph::default();
+        let x = g.add(Op::Input("x".into()), vec![]);
+        let gamma = g.add(Op::Param("gamma".into()), vec![]);
+        let normed = g.build_rmsnorm_chain(x, gamma, 1e-6);
+        let attn = g.build_attention_chain(normed, normed, normed, 0.25);
+        let res = g.add(Op::Add, vec![x, attn]);
+        let w0 = g.add(Op::Param("w0".into()), vec![]);
+        g.output = g.add(Op::MatMul, vec![res, w0]);
+        let before = eval(&g, &env);
+        let (r, a, l) = convert(&mut g);
+        assert_eq!((r, a, l), (1, 1, 1));
+        let after = eval(&g, &env);
+        close(&before, &after);
+    }
+
+    #[test]
+    fn partial_patterns_do_not_fuse() {
+        // RMSNorm chain with the wrong input wiring must NOT fuse.
+        let mut rng = Rng::new(5);
+        let env = env_with(&mut rng, 3, 8);
+        let mut g = Graph::default();
+        let x = g.add(Op::Input("x".into()), vec![]);
+        let q = g.add(Op::Input("q".into()), vec![]);
+        let w = g.add(Op::Param("gamma".into()), vec![]);
+        // mean(q²) applied to x — not an RMSNorm of x.
+        let p = g.add(Op::Pow2, vec![q]);
+        let m = g.add(Op::MeanLast, vec![p]);
+        let e = g.add(Op::AddEps(1e-6), vec![m]);
+        let r = g.add(Op::Rsqrt, vec![e]);
+        let xn = g.add(Op::Mul, vec![x, r]);
+        g.output = g.add(Op::Mul, vec![xn, w]);
+        let before = eval(&g, &env);
+        assert_eq!(fuse_rmsnorm(&mut g), 0, "mismatched pattern must not fuse");
+        close(&before, &eval(&g, &env));
+    }
+
+    #[test]
+    fn fusion_is_idempotent() {
+        let mut g = Graph::default();
+        let x = g.add(Op::Input("x".into()), vec![]);
+        let w = g.add(Op::Param("gamma".into()), vec![]);
+        g.output = g.build_rmsnorm_chain(x, w, 1e-5);
+        assert_eq!(fuse_rmsnorm(&mut g), 1);
+        assert_eq!(fuse_rmsnorm(&mut g), 0);
+        assert_eq!(fuse_attention(&mut g), 0);
+    }
+}

@@ -1,0 +1,183 @@
+//! artifacts/manifest.json parser (emitted by python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use crate::model::config::ModelConfig;
+use crate::util::json::Json;
+
+/// One tensor entry in weights.bin.
+#[derive(Clone, Debug)]
+pub struct WeightEntry {
+    pub name: String,
+    /// dtype code: 0=f32, 1=i8, 2=u8, 3=bf16, 4=i32.
+    pub dtype: u8,
+    pub shape: Vec<usize>,
+    pub nbytes: usize,
+}
+
+/// One lowered graph.
+#[derive(Clone, Debug)]
+pub struct GraphEntry {
+    pub key: String,
+    pub file: String,
+    pub args: Vec<String>,
+    pub results: Vec<String>,
+    /// Prefill bucket length (None for decode).
+    pub bucket: Option<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub prefill_buckets: Vec<usize>,
+    pub weights: Vec<WeightEntry>,
+    pub graphs: Vec<GraphEntry>,
+    pub embedding_file: String,
+    pub seed: u64,
+}
+
+fn err(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, format!("manifest: {msg}"))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> std::io::Result<Manifest> {
+        let src = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&src).map_err(|e| err(&e.to_string()))?;
+        let m = j.get("model").ok_or_else(|| err("missing model"))?;
+        let get_usize = |k: &str| -> std::io::Result<usize> {
+            m.get(k).and_then(Json::as_usize).ok_or_else(|| err(k))
+        };
+        let model = ModelConfig {
+            name: m.get("name").and_then(Json::as_str).ok_or_else(|| err("name"))?.to_string(),
+            vocab: get_usize("vocab")?,
+            hidden: get_usize("hidden")?,
+            inter: get_usize("inter")?,
+            layers: get_usize("layers")?,
+            heads: get_usize("heads")?,
+            kv_heads: get_usize("kv_heads")?,
+            max_len: get_usize("max_len")?,
+            rope_theta: m.get("rope_theta").and_then(Json::as_f64).unwrap_or(1e4),
+            rms_eps: m.get("rms_eps").and_then(Json::as_f64).unwrap_or(1e-6) as f32,
+        };
+        let prefill_buckets = j
+            .get("prefill_buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("prefill_buckets"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let weights = j
+            .get("weights")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("weights"))?
+            .iter()
+            .map(|w| -> std::io::Result<WeightEntry> {
+                Ok(WeightEntry {
+                    name: w.get("name").and_then(Json::as_str).ok_or_else(|| err("w.name"))?.into(),
+                    dtype: w.get("dtype").and_then(Json::as_usize).ok_or_else(|| err("w.dtype"))? as u8,
+                    shape: w
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| err("w.shape"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    nbytes: w.get("nbytes").and_then(Json::as_usize).ok_or_else(|| err("w.nbytes"))?,
+                })
+            })
+            .collect::<std::io::Result<Vec<_>>>()?;
+        let graphs = j
+            .get("graphs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| err("graphs"))?
+            .iter()
+            .map(|(key, g)| -> std::io::Result<GraphEntry> {
+                let strs = |k: &str| -> std::io::Result<Vec<String>> {
+                    Ok(g.get(k)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| err(k))?
+                        .iter()
+                        .filter_map(Json::as_str)
+                        .map(String::from)
+                        .collect())
+                };
+                Ok(GraphEntry {
+                    key: key.clone(),
+                    file: g.get("file").and_then(Json::as_str).ok_or_else(|| err("g.file"))?.into(),
+                    args: strs("args")?,
+                    results: strs("results")?,
+                    bucket: g.get("bucket").and_then(Json::as_usize),
+                })
+            })
+            .collect::<std::io::Result<Vec<_>>>()?;
+        let embedding_file = j
+            .path(&["embedding", "file"])
+            .and_then(Json::as_str)
+            .ok_or_else(|| err("embedding.file"))?
+            .to_string();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            prefill_buckets,
+            weights,
+            graphs,
+            embedding_file,
+            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        })
+    }
+
+    pub fn graph(&self, key: &str) -> Option<&GraphEntry> {
+        self.graphs.iter().find(|g| g.key == key)
+    }
+
+    /// Smallest prefill bucket ≥ `len` (or the largest if none fit).
+    pub fn bucket_for(&self, len: usize) -> usize {
+        self.prefill_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= len)
+            .min()
+            .unwrap_or_else(|| self.prefill_buckets.iter().copied().max().unwrap_or(len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.name, "tiny-qwen2");
+        assert_eq!(m.model.vocab, 2048);
+        assert!(!m.prefill_buckets.is_empty());
+        assert!(m.graph("decode").is_some());
+        for b in &m.prefill_buckets {
+            assert!(m.graph(&format!("prefill_{b}")).is_some());
+        }
+        // Weight table order must match graph arg suffix.
+        let names: Vec<&str> = m.weights.iter().map(|w| w.name.as_str()).collect();
+        let decode = m.graph("decode").unwrap();
+        assert_eq!(&decode.args[decode.args.len() - names.len()..], &names[..]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(1), 16);
+        assert_eq!(m.bucket_for(16), 16);
+        assert_eq!(m.bucket_for(17), 64);
+        assert_eq!(m.bucket_for(900), 256, "falls back to largest");
+    }
+}

@@ -1,0 +1,17 @@
+//! Model substrate: configs, artifact manifest, weight container, byte
+//! tokenizer, sampler, and the native (pure-Rust) execution engine that
+//! exercises the paper's CPU optimizations end-to-end.
+
+pub mod config;
+pub mod graph;
+pub mod manifest;
+pub mod native;
+pub mod sampler;
+pub mod tokenizer;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use manifest::Manifest;
+pub use native::NativeModel;
+pub use tokenizer::ByteTokenizer;
+pub use weights::WeightFile;

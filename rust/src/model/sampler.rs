@@ -1,0 +1,117 @@
+//! Token sampling: greedy argmax, temperature, and top-k.
+
+use crate::util::rng::Rng;
+
+/// Sampling configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerConfig {
+    /// 0.0 → greedy argmax.
+    pub temperature: f32,
+    /// 0 → no top-k truncation.
+    pub top_k: usize,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig { temperature: 0.0, top_k: 0 }
+    }
+}
+
+/// Greedy argmax (ties → lowest index, deterministic).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample a token under `cfg` using `rng`.
+pub fn sample(logits: &[f32], cfg: SamplerConfig, rng: &mut Rng) -> usize {
+    if cfg.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Candidate set: top-k (or all).
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if cfg.top_k > 0 && cfg.top_k < logits.len() {
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(cfg.top_k);
+    }
+    // Softmax with temperature over candidates (fp32, max-subtracted).
+    let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((logits[i] - m) / cfg.temperature).exp())
+        .collect();
+    let total: f32 = weights.iter().sum();
+    let mut u = rng.f32() * total;
+    for (k, &w) in weights.iter().enumerate() {
+        if u < w {
+            return idx[k];
+        }
+        u -= w;
+    }
+    idx[idx.len() - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[1.0, 1.0]), 0, "tie → lowest index");
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0f32, 5.0, 1.0];
+        for _ in 0..10 {
+            assert_eq!(sample(&logits, SamplerConfig::default(), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::new(2);
+        let logits = [10.0f32, 9.0, -50.0, -50.0];
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 2 };
+        for _ in 0..100 {
+            let t = sample(&logits, cfg, &mut rng);
+            assert!(t < 2, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn temperature_spreads_mass() {
+        let mut rng = Rng::new(3);
+        let logits = [1.0f32, 1.0, 1.0, 1.0];
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 0 };
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, cfg, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "uniform logits should hit all tokens");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let cfg = SamplerConfig { temperature: 0.8, top_k: 8 };
+        let a: Vec<usize> = {
+            let mut rng = Rng::new(42);
+            (0..16).map(|_| sample(&logits, cfg, &mut rng)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut rng = Rng::new(42);
+            (0..16).map(|_| sample(&logits, cfg, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,82 @@
+//! Byte-level tokenizer (DESIGN.md §Substitutions: no pretrained BPE
+//! vocabulary offline, and the model weights are random anyway — the paper
+//! measures speed, not text quality). Token ids 0..255 are raw bytes;
+//! 256.. are reserved special ids; the rest of the vocab is unused.
+
+pub const BOS: usize = 256;
+pub const EOS: usize = 257;
+pub const FIRST_UNUSED: usize = 258;
+
+/// Stateless byte tokenizer bounded by the model vocab.
+#[derive(Clone, Debug)]
+pub struct ByteTokenizer {
+    pub vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab >= FIRST_UNUSED, "vocab must cover bytes + specials");
+        ByteTokenizer { vocab }
+    }
+
+    /// Encode text (optionally wrapped in BOS).
+    pub fn encode(&self, text: &str, add_bos: bool) -> Vec<usize> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        if add_bos {
+            out.push(BOS);
+        }
+        out.extend(text.bytes().map(|b| b as usize));
+        out
+    }
+
+    /// Decode ids back to text (specials and out-of-byte ids are skipped —
+    /// random-weight models emit arbitrary ids).
+    pub fn decode(&self, ids: &[usize]) -> String {
+        let bytes: Vec<u8> = ids.iter().filter(|&&t| t < 256).map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_eos(&self, id: usize) -> bool {
+        id == EOS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new(2048);
+        let ids = t.encode("hello", false);
+        assert_eq!(ids, vec![104, 101, 108, 108, 111]);
+        assert_eq!(t.decode(&ids), "hello");
+    }
+
+    #[test]
+    fn bos_prepended() {
+        let t = ByteTokenizer::new(2048);
+        let ids = t.encode("a", true);
+        assert_eq!(ids, vec![BOS, 97]);
+        assert_eq!(t.decode(&ids), "a");
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let t = ByteTokenizer::new(2048);
+        let s = "héllo ☃";
+        assert_eq!(t.decode(&t.encode(s, false)), s);
+    }
+
+    #[test]
+    fn skips_non_byte_ids() {
+        let t = ByteTokenizer::new(2048);
+        assert_eq!(t.decode(&[104, 1000, 105]), "hi");
+    }
+
+    #[test]
+    #[should_panic(expected = "vocab")]
+    fn tiny_vocab_rejected() {
+        ByteTokenizer::new(100);
+    }
+}

@@ -1,0 +1,194 @@
+//! weights.bin reader (container written by python/compile/aot.py):
+//!   magic "MNNW" | u32 version | u32 count |
+//!   per tensor: u16 name_len | name | u8 dtype | u8 ndim | u32 dims[] |
+//!               u64 nbytes | raw bytes.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// dtype codes shared with the exporter.
+pub const DT_F32: u8 = 0;
+pub const DT_I8: u8 = 1;
+pub const DT_U8: u8 = 2;
+pub const DT_BF16: u8 = 3;
+pub const DT_I32: u8 = 4;
+
+/// One loaded tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: u8,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// View as f32 (panics on dtype mismatch).
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DT_F32, "{}: not f32", self.name);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn as_i8(&self) -> &[u8] {
+        assert_eq!(self.dtype, DT_I8, "{}: not i8", self.name);
+        &self.data
+    }
+
+    pub fn as_u8(&self) -> &[u8] {
+        assert_eq!(self.dtype, DT_U8, "{}: not u8", self.name);
+        &self.data
+    }
+}
+
+/// The whole weight file, indexed by name (order preserved).
+pub struct WeightFile {
+    pub order: Vec<String>,
+    pub tensors: HashMap<String, Tensor>,
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, format!("weights.bin: {msg}"))
+}
+
+impl WeightFile {
+    pub fn load(path: &Path) -> std::io::Result<WeightFile> {
+        let bytes = std::fs::read(path)?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> std::io::Result<WeightFile> {
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> std::io::Result<&[u8]> {
+            if *off + n > bytes.len() {
+                return Err(bad("truncated"));
+            }
+            let s = &bytes[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        if take(&mut off, 4)? != b"MNNW" {
+            return Err(bad("bad magic"));
+        }
+        let version = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+        if version != 1 {
+            return Err(bad(&format!("unsupported version {version}")));
+        }
+        let count = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let mut order = Vec::with_capacity(count);
+        let mut tensors = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut off, nlen)?.to_vec())
+                .map_err(|_| bad("non-utf8 name"))?;
+            let hdr = take(&mut off, 2)?;
+            let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize);
+            }
+            let nbytes = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
+            let data = take(&mut off, nbytes)?.to_vec();
+            order.push(name.clone());
+            tensors.insert(name.clone(), Tensor { name, dtype, shape, data });
+        }
+        if off != bytes.len() {
+            return Err(bad("trailing bytes"));
+        }
+        Ok(WeightFile { order, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn require(&self, name: &str) -> std::io::Result<&Tensor> {
+        self.get(name).ok_or_else(|| bad(&format!("missing tensor {name}")))
+    }
+
+    /// Total payload bytes.
+    pub fn nbytes(&self) -> usize {
+        self.tensors.values().map(|t| t.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny container in-memory (mirror of the python writer).
+    fn sample() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"MNNW");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // "a": f32 [2,2]
+        b.extend_from_slice(&3u16.to_le_bytes());
+        b.extend_from_slice(b"t.a");
+        b.push(DT_F32);
+        b.push(2);
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&16u64.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        // "b": i8 [3]
+        b.extend_from_slice(&3u16.to_le_bytes());
+        b.extend_from_slice(b"t.b");
+        b.push(DT_I8);
+        b.push(1);
+        b.extend_from_slice(&3u32.to_le_bytes());
+        b.extend_from_slice(&3u64.to_le_bytes());
+        b.extend_from_slice(&[0xFF, 0x00, 0x7F]);
+        b
+    }
+
+    #[test]
+    fn parse_sample() {
+        let wf = WeightFile::parse(&sample()).unwrap();
+        assert_eq!(wf.order, vec!["t.a", "t.b"]);
+        let a = wf.require("t.a").unwrap();
+        assert_eq!(a.shape, vec![2, 2]);
+        assert_eq!(a.as_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+        let b = wf.require("t.b").unwrap();
+        assert_eq!(b.as_i8(), &[0xFF, 0x00, 0x7F]);
+        assert_eq!(wf.nbytes(), 19);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut s = sample();
+        s[0] = b'X';
+        assert!(WeightFile::parse(&s).is_err());
+        let mut t = sample();
+        t.truncate(t.len() - 1);
+        assert!(WeightFile::parse(&t).is_err());
+        let mut u = sample();
+        u.push(0);
+        assert!(WeightFile::parse(&u).is_err());
+    }
+
+    #[test]
+    fn parses_real_artifacts() {
+        let p = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/weights.bin"));
+        if !p.exists() {
+            return;
+        }
+        let wf = WeightFile::load(&p).unwrap();
+        assert!(wf.order.len() >= 100, "{} tensors", wf.order.len());
+        assert!(wf.get("L0.wq.q").is_some());
+        assert!(wf.get("lm_head.q").is_some());
+        // int4 MLP weights are packed: gate has half the bytes of its dims.
+        let gate = wf.require("L0.gate.q").unwrap();
+        assert_eq!(gate.dtype, DT_U8);
+        // gate: [inter=704, hidden/2=128] — two nibbles per byte along k.
+        assert_eq!(gate.shape, vec![704, 128]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Workload split policies + the virtual-time makespan model (Fig. 4).
+//!
+//! Work is `items` indivisible units (e.g. h/h_p GEMM tiles, or seqlen
+//! rows — the two parallel dimensions §5.2 names). Each core `i` has a
+//! relative rate r_i (prime = 1.0). A split assigns a contiguous range per
+//! core; the makespan in virtual time is max_i(n_i / r_i); the speedup vs
+//! one prime core is items / makespan.
+
+/// Split `items` uniformly across `rates.len()` cores (the baseline the
+/// paper compares against).
+pub fn uniform_split(items: usize, rates: &[f64]) -> Vec<usize> {
+    let n = rates.len();
+    let base = items / n;
+    let rem = items % n;
+    (0..n).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Split `items` proportionally to core rates (largest-remainder rounding),
+/// the paper's balanced policy.
+pub fn balanced_split(items: usize, rates: &[f64]) -> Vec<usize> {
+    let total: f64 = rates.iter().sum();
+    assert!(total > 0.0, "need at least one active core");
+    let ideal: Vec<f64> = rates.iter().map(|r| items as f64 * r / total).collect();
+    let mut out: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+    let assigned: usize = out.iter().sum();
+    // Hand the remaining units to the largest fractional parts.
+    let mut frac: Vec<(usize, f64)> = ideal
+        .iter()
+        .enumerate()
+        .map(|(i, x)| (i, x - x.floor()))
+        .collect();
+    frac.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for k in 0..(items - assigned) {
+        out[frac[k % frac.len()].0] += 1;
+    }
+    out
+}
+
+/// Virtual-time makespan of a split: max_i(n_i / r_i).
+pub fn makespan(split: &[usize], rates: &[f64]) -> f64 {
+    split
+        .iter()
+        .zip(rates)
+        .map(|(&n, &r)| if n == 0 { 0.0 } else { n as f64 / r })
+        .fold(0.0, f64::max)
+}
+
+/// Speedup vs running everything on core 0 (the prime core), for both
+/// policies at 1..=max_threads threads. Returns (balanced, uniform) curves —
+/// exactly Fig. 4's two series.
+pub fn speedup_curve(items: usize, rates: &[f64], max_threads: usize) -> (Vec<f64>, Vec<f64>) {
+    let serial = items as f64 / rates[0];
+    let mut bal = Vec::new();
+    let mut uni = Vec::new();
+    for t in 1..=max_threads.min(rates.len()) {
+        let r = &rates[..t];
+        bal.push(serial / makespan(&balanced_split(items, r), r));
+        uni.push(serial / makespan(&uniform_split(items, r), r));
+    }
+    (bal, uni)
+}
+
+/// Convert a split into contiguous index ranges (for the thread pool).
+pub fn split_ranges(split: &[usize]) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(split.len());
+    let mut start = 0;
+    for &n in split {
+        out.push((start, start + n));
+        start += n;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    /// Snapdragon-like 1 prime + 3 performance rates (Fig. 4's setup).
+    fn fig4_rates() -> Vec<f64> {
+        vec![1.0, 0.72, 0.72, 0.72]
+    }
+
+    #[test]
+    fn splits_conserve_items() {
+        prop_check(300, |rng| {
+            let items = rng.range(1, 10_000);
+            let n = rng.range(1, 8);
+            let rates: Vec<f64> = (0..n).map(|_| rng.range_f32(0.1, 1.0) as f64).collect();
+            for split in [balanced_split(items, &rates), uniform_split(items, &rates)] {
+                if split.iter().sum::<usize>() != items {
+                    return Err(format!("split {split:?} loses items"));
+                }
+                if split.len() != n {
+                    return Err("wrong core count".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn balanced_never_worse_than_uniform() {
+        // The §5.2 claim, as an invariant (up to rounding: allow 1 item).
+        prop_check(300, |rng| {
+            let items = rng.range(8, 5_000);
+            let n = rng.range(2, 8);
+            let rates: Vec<f64> = (0..n).map(|_| rng.range_f32(0.2, 1.0) as f64).collect();
+            let mb = makespan(&balanced_split(items, &rates), &rates);
+            let mu = makespan(&uniform_split(items, &rates), &rates);
+            // Rounding can cost at most one item on the slowest core.
+            let slack = 1.0 / rates.iter().cloned().fold(f64::INFINITY, f64::min);
+            if mb > mu + slack {
+                return Err(format!("balanced {mb} worse than uniform {mu}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn homogeneous_cores_make_policies_equal() {
+        let rates = vec![1.0; 4];
+        assert_eq!(balanced_split(1000, &rates), uniform_split(1000, &rates));
+    }
+
+    #[test]
+    fn fig4_shape_balanced_beats_uniform_beyond_one_thread() {
+        let (bal, uni) = speedup_curve(10_000, &fig4_rates(), 4);
+        assert!((bal[0] - 1.0).abs() < 1e-9, "1 thread == serial");
+        for t in 1..4 {
+            assert!(bal[t] > uni[t] + 0.05, "t={} bal {} uni {}", t + 1, bal[t], uni[t]);
+            assert!(bal[t] > bal[t - 1], "balanced speedup grows with threads");
+        }
+        // 4 threads balanced ≈ 1 + 3·0.72 = 3.16× vs prime-only.
+        assert!((bal[3] - 3.16).abs() < 0.05, "bal4 {}", bal[3]);
+        // Uniform is capped by the slowest core: 4×0.72 = 2.88×.
+        assert!((uni[3] - 2.88).abs() < 0.05, "uni4 {}", uni[3]);
+    }
+
+    #[test]
+    fn ranges_cover_exactly() {
+        let split = balanced_split(100, &fig4_rates());
+        let ranges = split_ranges(&split);
+        assert_eq!(ranges.first().unwrap().0, 0);
+        assert_eq!(ranges.last().unwrap().1, 100);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn zero_items_ok() {
+        let rates = fig4_rates();
+        assert_eq!(balanced_split(0, &rates).iter().sum::<usize>(), 0);
+        assert_eq!(makespan(&balanced_split(0, &rates), &rates), 0.0);
+    }
+}

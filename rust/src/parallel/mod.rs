@@ -1,0 +1,16 @@
+//! Multicore workload balancing (paper §5.2).
+//!
+//! Mobile SoCs are big.LITTLE: a prime core plus performance/efficiency
+//! cores with different sustained throughput. Splitting a parallel loop
+//! *uniformly* leaves the fast cores idle waiting for the slow ones; the
+//! paper instead splits work proportionally to measured per-core load
+//! rates, set at engine startup.
+//!
+//! * [`balancer`] — the split policy + makespan model (Fig. 4)
+//! * [`pool`] — a real thread pool that applies the split (correctness on
+//!   this 1-core testbed; speedups are evaluated on the device model)
+
+pub mod balancer;
+pub mod pool;
+
+pub use balancer::{balanced_split, uniform_split, makespan, speedup_curve};

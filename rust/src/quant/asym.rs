@@ -1,0 +1,311 @@
+//! Asymmetric affine quantization (paper Eq. 1), (scale, bias) form:
+//!   w ≈ w_q * scale + bias,
+//!   scale = (w_max - w_min) / (clip_max - clip_min),
+//!   bias  = w_min - clip_min * scale.
+
+/// Per-slice quantization parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AsymParams {
+    pub scale: f32,
+    pub bias: f32,
+}
+
+/// Weight bit width for the Linear classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightBits {
+    Int4,
+    Int8,
+}
+
+pub const I8_MIN: i32 = -128;
+pub const I8_MAX: i32 = 127;
+pub const I4_MIN: i32 = 0; // unsigned nibble + affine bias
+pub const I4_MAX: i32 = 15;
+
+/// Compute (scale, bias) for a slice into [clip_min, clip_max].
+pub fn params_for(xs: &[f32], clip_min: i32, clip_max: i32) -> AsymParams {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return AsymParams { scale: 1.0, bias: 0.0 };
+    }
+    let rng = (hi - lo).max(1e-8);
+    let scale = rng / (clip_max - clip_min) as f32;
+    AsymParams { scale, bias: lo - clip_min as f32 * scale }
+}
+
+/// Quantize one value under `p` into the clip range.
+#[inline]
+pub fn quantize_one(x: f32, p: AsymParams, clip_min: i32, clip_max: i32) -> i32 {
+    let q = ((x - p.bias) / p.scale).round() as i32;
+    q.clamp(clip_min, clip_max)
+}
+
+#[inline]
+pub fn dequantize_one(q: i32, p: AsymParams) -> f32 {
+    q as f32 * p.scale + p.bias
+}
+
+/// A row-major quantized matrix [n, k] with per-row (output-channel) params.
+/// int4 rows are packed two nibbles per byte (even k-index in the low
+/// nibble) — the same layout python/compile/quantize.py emits.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    pub bits: WeightBits,
+    pub n: usize,
+    pub k: usize,
+    /// int8: n*k bytes (i8 as u8 bits); int4: n*k/2 bytes.
+    pub data: Vec<u8>,
+    pub params: Vec<AsymParams>, // len n
+    /// Per-row sum of quantized values (precomputed for the GEMM affine
+    /// correction: Σ_k w_q — constant per row, paid once at load).
+    pub row_sums: Vec<i32>,
+}
+
+impl QuantizedMatrix {
+    /// Quantize a dense row-major [n, k] f32 matrix.
+    pub fn from_f32(w: &[f32], n: usize, k: usize, bits: WeightBits) -> Self {
+        assert_eq!(w.len(), n * k);
+        let (clip_min, clip_max) = match bits {
+            WeightBits::Int4 => (I4_MIN, I4_MAX),
+            WeightBits::Int8 => (I8_MIN, I8_MAX),
+        };
+        let mut data = match bits {
+            WeightBits::Int4 => {
+                assert!(k % 2 == 0, "int4 pack requires even k");
+                vec![0u8; n * k / 2]
+            }
+            WeightBits::Int8 => vec![0u8; n * k],
+        };
+        let mut params = Vec::with_capacity(n);
+        let mut row_sums = Vec::with_capacity(n);
+        for r in 0..n {
+            let row = &w[r * k..(r + 1) * k];
+            let p = params_for(row, clip_min, clip_max);
+            let mut sum = 0i32;
+            match bits {
+                WeightBits::Int8 => {
+                    for (c, &x) in row.iter().enumerate() {
+                        let q = quantize_one(x, p, clip_min, clip_max);
+                        sum += q;
+                        data[r * k + c] = q as i8 as u8;
+                    }
+                }
+                WeightBits::Int4 => {
+                    for c in (0..k).step_by(2) {
+                        let q0 = quantize_one(row[c], p, clip_min, clip_max);
+                        let q1 = quantize_one(row[c + 1], p, clip_min, clip_max);
+                        sum += q0 + q1;
+                        data[r * k / 2 + c / 2] = (q0 | (q1 << 4)) as u8;
+                    }
+                }
+            }
+            params.push(p);
+            row_sums.push(sum);
+        }
+        QuantizedMatrix { bits, n, k, data, params, row_sums }
+    }
+
+    /// Construct from pre-quantized artifact data (weights.bin tensors).
+    pub fn from_parts(
+        bits: WeightBits,
+        n: usize,
+        k: usize,
+        data: Vec<u8>,
+        scales: &[f32],
+        biases: &[f32],
+    ) -> Self {
+        assert_eq!(scales.len(), n);
+        assert_eq!(biases.len(), n);
+        let params: Vec<AsymParams> = scales
+            .iter()
+            .zip(biases)
+            .map(|(&scale, &bias)| AsymParams { scale, bias })
+            .collect();
+        let mut m = QuantizedMatrix { bits, n, k, data, params, row_sums: vec![0; n] };
+        for r in 0..n {
+            let mut sum = 0i32;
+            m.for_row(r, |q| sum += q);
+            m.row_sums[r] = sum;
+        }
+        m
+    }
+
+    /// Iterate the quantized values of row `r` in k order.
+    #[inline]
+    pub fn for_row(&self, r: usize, mut f: impl FnMut(i32)) {
+        match self.bits {
+            WeightBits::Int8 => {
+                for c in 0..self.k {
+                    f(self.data[r * self.k + c] as i8 as i32);
+                }
+            }
+            WeightBits::Int4 => {
+                let half = self.k / 2;
+                for c in 0..half {
+                    let b = self.data[r * half + c];
+                    f((b & 0xF) as i32);
+                    f((b >> 4) as i32);
+                }
+            }
+        }
+    }
+
+    /// Dequantize row `r` into `out`.
+    pub fn dequantize_row(&self, r: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.k);
+        let p = self.params[r];
+        let mut i = 0;
+        self.for_row(r, |q| {
+            out[i] = dequantize_one(q, p);
+            i += 1;
+        });
+    }
+
+    /// Full dense dequantization (tests / reference paths).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n * self.k];
+        for r in 0..self.n {
+            let (a, b) = (r * self.k, (r + 1) * self.k);
+            self.dequantize_row(r, &mut out[a..b]);
+        }
+        out
+    }
+
+    /// Storage bytes (data only).
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Dynamic per-row int8 activation quantization (the "A8" in W8A8/W4A8).
+/// Returns (quantized rows, per-row params, per-row sums).
+pub fn quantize_activations(x: &[f32], m: usize, k: usize) -> (Vec<i8>, Vec<AsymParams>, Vec<i32>) {
+    assert_eq!(x.len(), m * k);
+    let mut q = vec![0i8; m * k];
+    let mut params = Vec::with_capacity(m);
+    let mut sums = Vec::with_capacity(m);
+    for r in 0..m {
+        let row = &x[r * k..(r + 1) * k];
+        let p = params_for(row, I8_MIN, I8_MAX);
+        let mut sum = 0i32;
+        for (c, &v) in row.iter().enumerate() {
+            let qq = quantize_one(v, p, I8_MIN, I8_MAX);
+            sum += qq;
+            q[r * k + c] = qq as i8;
+        }
+        params.push(p);
+        sums.push(sum);
+    }
+    (q, params, sums)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn int8_roundtrip_within_half_step() {
+        prop_check(200, |rng: &mut Rng| {
+            let k = rng.range(2, 128) * 2;
+            let n = rng.range(1, 16);
+            let w = rng.normal_vec(n * k);
+            let q = QuantizedMatrix::from_f32(&w, n, k, WeightBits::Int8);
+            let deq = q.dequantize();
+            for (r, p) in q.params.iter().enumerate() {
+                for c in 0..k {
+                    let err = (deq[r * k + c] - w[r * k + c]).abs();
+                    if err > p.scale * 0.51 + 1e-6 {
+                        return Err(format!("row {r} col {c}: err {err} > step {}", p.scale));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int4_roundtrip_within_half_step() {
+        prop_check(200, |rng: &mut Rng| {
+            let k = rng.range(2, 64) * 2;
+            let n = rng.range(1, 8);
+            let w = rng.normal_vec(n * k);
+            let q = QuantizedMatrix::from_f32(&w, n, k, WeightBits::Int4);
+            let deq = q.dequantize();
+            for (r, p) in q.params.iter().enumerate() {
+                for c in 0..k {
+                    let err = (deq[r * k + c] - w[r * k + c]).abs();
+                    if err > p.scale * 0.51 + 1e-6 {
+                        return Err(format!("row {r} col {c}: err {err} > step {}", p.scale));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int4_packing_layout_matches_python() {
+        // Values chosen so nibbles are distinct: even index -> low nibble.
+        let w = [0.0f32, 15.0, 5.0, 10.0];
+        let q = QuantizedMatrix::from_f32(&w, 1, 4, WeightBits::Int4);
+        // scale = 1, bias = 0 for range [0,15].
+        assert!((q.params[0].scale - 1.0).abs() < 1e-6);
+        assert_eq!(q.data, vec![0x0 | (0xF << 4), 0x5 | (0xA << 4)]);
+    }
+
+    #[test]
+    fn row_sums_match_iteration() {
+        let mut rng = Rng::new(3);
+        let w = rng.normal_vec(8 * 32);
+        for bits in [WeightBits::Int8, WeightBits::Int4] {
+            let q = QuantizedMatrix::from_f32(&w, 8, 32, bits);
+            for r in 0..8 {
+                let mut s = 0;
+                q.for_row(r, |v| s += v);
+                assert_eq!(s, q.row_sums[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_reconstructs() {
+        let mut rng = Rng::new(4);
+        let w = rng.normal_vec(4 * 16);
+        let q = QuantizedMatrix::from_f32(&w, 4, 16, WeightBits::Int8);
+        let scales: Vec<f32> = q.params.iter().map(|p| p.scale).collect();
+        let biases: Vec<f32> = q.params.iter().map(|p| p.bias).collect();
+        let q2 = QuantizedMatrix::from_parts(
+            WeightBits::Int8, 4, 16, q.data.clone(), &scales, &biases,
+        );
+        assert_eq!(q.dequantize(), q2.dequantize());
+        assert_eq!(q.row_sums, q2.row_sums);
+    }
+
+    #[test]
+    fn activation_quant_constant_rows_finite() {
+        let x = vec![3.0f32; 2 * 8];
+        let (q, params, _) = quantize_activations(&x, 2, 8);
+        for r in 0..2 {
+            let d = dequantize_one(q[r * 8] as i32, params[r]);
+            assert!((d - 3.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn eq1_form_matches_paper() {
+        // Check the Eq.-1 algebra: w_q = round((w - w_min)/step) + clip_min.
+        let w = [-1.0f32, 0.0, 2.0, 3.0];
+        let p = params_for(&w, I8_MIN, I8_MAX);
+        let step = (3.0 - (-1.0)) / 255.0;
+        assert!((p.scale - step).abs() < 1e-7);
+        assert_eq!(quantize_one(-1.0, p, I8_MIN, I8_MAX), -128);
+        assert_eq!(quantize_one(3.0, p, I8_MIN, I8_MAX), 127);
+    }
+}

@@ -1,0 +1,172 @@
+//! fp8 e4m3 (e4m3fn, no infinities) codec for KV-cache values (paper §4.2).
+//!
+//! Matches ml_dtypes.float8_e4m3fn bit-for-bit for |x| ≤ 464 (verified
+//! against the full 256-code table), so encodings produced by the AOT
+//! graphs (which cross the PJRT boundary bit-cast as u8) round-trip through
+//! the Rust flash/spill path unchanged. One deliberate difference: above
+//! 464 ml_dtypes overflows to NaN (OCP rule) while we *saturate* to ±448 —
+//! attention values never reach that range and saturation is safer.
+
+/// Encode f32 → e4m3fn bits (round-to-nearest-even, saturate to ±448).
+pub fn f32_to_f8e4m3(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 24) & 0x80) as u8;
+    if x.is_nan() {
+        return sign | 0x7F; // e4m3fn NaN
+    }
+    let ax = f32::from_bits(bits & 0x7FFF_FFFF);
+    if ax >= 464.0 {
+        // Values ≥ halfway between 448 (max finite) and the next step
+        // saturate to NaN-free max 448 (e4m3fn has no inf).
+        return sign | 0x7E;
+    }
+    if ax < 2f32.powi(-10) {
+        // Below half the smallest subnormal (2^-9): round to zero.
+        return sign;
+    }
+    // Decompose |x| = m * 2^e with m in [1, 2).
+    let e = ax.log2().floor() as i32;
+    let e = e.clamp(-9, 8);
+    if e >= -6 {
+        // Normal range: exponent field = e + 7, 3 mantissa bits.
+        let m = ax / 2f32.powi(e); // [1, 2)
+        let frac = ((m - 1.0) * 8.0).round_ties_even() as u32;
+        let (e, frac) = if frac == 8 { (e + 1, 0) } else { (e, frac) };
+        if e > 8 {
+            return sign | 0x7E;
+        }
+        // Re-check: e could have crossed into saturation via rounding.
+        let exp_field = (e + 7) as u32;
+        let out = ((exp_field << 3) | frac) as u8;
+        // 0x7F is NaN; max finite is 0x7E (=448).
+        if out >= 0x7F {
+            return sign | 0x7E;
+        }
+        sign | out
+    } else {
+        // Subnormal: value = frac * 2^-9, frac in 1..=7.
+        let frac = (ax / 2f32.powi(-9)).round_ties_even() as u32;
+        if frac == 0 {
+            return sign;
+        }
+        if frac >= 8 {
+            return sign | 0x08; // rounds up into the smallest normal
+        }
+        sign | frac as u8
+    }
+}
+
+/// Decode e4m3fn bits → f32 (exact).
+pub fn f8e4m3_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((b >> 3) & 0xF) as i32;
+    let frac = (b & 0x7) as f32;
+    if exp == 0xF && (b & 0x7) == 0x7 {
+        return f32::NAN * sign;
+    }
+    if exp == 0 {
+        sign * frac * 2f32.powi(-9) // subnormal
+    } else {
+        sign * (1.0 + frac / 8.0) * 2f32.powi(exp - 7)
+    }
+}
+
+/// Encode a slice.
+pub fn encode_slice(xs: &[f32], out: &mut [u8]) {
+    assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = f32_to_f8e4m3(x);
+    }
+}
+
+/// Decode a slice.
+pub fn decode_slice(bs: &[u8], out: &mut [f32]) {
+    assert_eq!(bs.len(), out.len());
+    for (o, &b) in out.iter_mut().zip(bs) {
+        *o = f8e4m3_to_f32(b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn decode_spot_values() {
+        assert_eq!(f8e4m3_to_f32(0x00), 0.0);
+        assert_eq!(f8e4m3_to_f32(0x38), 1.0); // exp 7, frac 0
+        assert_eq!(f8e4m3_to_f32(0xB8), -1.0);
+        assert_eq!(f8e4m3_to_f32(0x7E), 448.0); // max finite
+        assert_eq!(f8e4m3_to_f32(0x01), 2f32.powi(-9)); // min subnormal
+        assert!(f8e4m3_to_f32(0x7F).is_nan());
+    }
+
+    #[test]
+    fn encode_spot_values() {
+        assert_eq!(f32_to_f8e4m3(0.0), 0x00);
+        assert_eq!(f32_to_f8e4m3(1.0), 0x38);
+        assert_eq!(f32_to_f8e4m3(-1.0), 0xB8);
+        assert_eq!(f32_to_f8e4m3(448.0), 0x7E);
+        assert_eq!(f32_to_f8e4m3(1e6), 0x7E); // saturates, no inf
+        assert_eq!(f32_to_f8e4m3(-1e6), 0xFE);
+    }
+
+    #[test]
+    fn roundtrip_is_identity_on_codes() {
+        // Every finite code must encode back to itself (codec exactness).
+        for b in 0u16..=255 {
+            let b = b as u8;
+            if (b & 0x7F) == 0x7F {
+                continue; // NaN
+            }
+            let f = f8e4m3_to_f32(b);
+            let b2 = f32_to_f8e4m3(f);
+            // -0.0 encodes as 0x80; both decode to 0.0 — accept sign of zero.
+            if f == 0.0 {
+                assert_eq!(b2 & 0x7F, 0);
+            } else {
+                assert_eq!(b2, b, "code {b:#04x} -> {f} -> {b2:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded_in_normal_range() {
+        prop_check(500, |rng| {
+            let x = rng.range_f32(-400.0, 400.0);
+            if x.abs() < 0.0625 {
+                return Ok(()); // below normal range
+            }
+            let y = f8e4m3_to_f32(f32_to_f8e4m3(x));
+            let rel = (y - x).abs() / x.abs();
+            if rel > 1.0 / 16.0 + 1e-6 {
+                return Err(format!("{x} -> {y}, rel {rel}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn encode_is_monotone() {
+        // Monotonicity over positive finite codes ⇒ order-preserving storage.
+        let mut last = -1.0f32;
+        for b in 0u8..0x7F {
+            let f = f8e4m3_to_f32(b);
+            assert!(f > last, "code {b:#04x}: {f} <= {last}");
+            last = f;
+        }
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs = [0.5f32, -2.25, 100.0, 0.001, -0.0625];
+        let mut enc = [0u8; 5];
+        encode_slice(&xs, &mut enc);
+        let mut dec = [0f32; 5];
+        decode_slice(&enc, &mut dec);
+        for (a, b) in xs.iter().zip(dec) {
+            assert!((a - b).abs() <= a.abs() / 8.0 + 2f32.powi(-9));
+        }
+    }
+}

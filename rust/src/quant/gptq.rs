@@ -1,0 +1,280 @@
+//! GPTQ-style post-training quantization + import (paper §3: "supports
+//! other quantization algorithms, such as GPTQ, and allows for the import
+//! of quantized weights").
+//!
+//! Implements the standard GPTQ procedure (Frantar et al. 2023): quantize
+//! weight columns one at a time against the calibration Hessian
+//! H = 2·X·Xᵀ + λI, propagating each column's rounding error into the
+//! not-yet-quantized columns via the Cholesky factor of H⁻¹. Against
+//! correlated calibration activations this strictly beats round-to-nearest
+//! (RTN — what `QuantizedMatrix::from_f32` does) in reconstruction error;
+//! the tests assert that.
+//!
+//! The output is a plain [`QuantizedMatrix`], so GPTQ-quantized weights
+//! drop into the same packed-GEMM path as everything else — that is the
+//! "import" in the paper's sentence.
+
+use crate::quant::asym::{self, AsymParams, QuantizedMatrix, WeightBits};
+
+/// Small dense symmetric-positive-definite helpers (no linalg crate
+/// offline). Matrices are row-major [n, n].
+mod spd {
+    /// Cholesky factorization A = L·Lᵀ (lower). Panics on non-SPD input.
+    pub fn cholesky(a: &[f64], n: usize) -> Vec<f64> {
+        let mut l = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[i * n + j];
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    assert!(s > 0.0, "matrix not SPD at {i}");
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        l
+    }
+
+    /// Invert an SPD matrix via its Cholesky factor.
+    pub fn inverse(a: &[f64], n: usize) -> Vec<f64> {
+        let l = cholesky(a, n);
+        // Invert L (lower triangular) by forward substitution.
+        let mut linv = vec![0f64; n * n];
+        for i in 0..n {
+            linv[i * n + i] = 1.0 / l[i * n + i];
+            for j in 0..i {
+                let mut s = 0.0;
+                for k in j..i {
+                    s += l[i * n + k] * linv[k * n + j];
+                }
+                linv[i * n + j] = -s / l[i * n + i];
+            }
+        }
+        // A⁻¹ = L⁻ᵀ · L⁻¹.
+        let mut inv = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in i.max(j)..n {
+                    s += linv[k * n + i] * linv[k * n + j];
+                }
+                inv[i * n + j] = s;
+            }
+        }
+        inv
+    }
+}
+
+/// GPTQ configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GptqConfig {
+    pub bits: WeightBits,
+    /// Hessian damping λ as a fraction of mean diagonal (paper uses 1%).
+    pub damping: f64,
+}
+
+impl Default for GptqConfig {
+    fn default() -> Self {
+        GptqConfig { bits: WeightBits::Int4, damping: 0.01 }
+    }
+}
+
+/// Quantize `w` ([n, k] row-major) with GPTQ against calibration
+/// activations `x` ([samples, k]). Returns a drop-in `QuantizedMatrix`.
+pub fn gptq_quantize(w: &[f32], n: usize, k: usize, x: &[f32], cfg: GptqConfig) -> QuantizedMatrix {
+    assert_eq!(w.len(), n * k);
+    assert!(x.len() % k == 0 && !x.is_empty(), "calibration must be [m, k]");
+    let m = x.len() / k;
+    let (clip_min, clip_max) = match cfg.bits {
+        WeightBits::Int4 => (asym::I4_MIN, asym::I4_MAX),
+        WeightBits::Int8 => (asym::I8_MIN, asym::I8_MAX),
+    };
+
+    // H = 2·XᵀX (k×k) + damping.
+    let mut h = vec![0f64; k * k];
+    for s in 0..m {
+        let row = &x[s * k..(s + 1) * k];
+        for i in 0..k {
+            let xi = row[i] as f64;
+            for j in 0..k {
+                h[i * k + j] += 2.0 * xi * row[j] as f64;
+            }
+        }
+    }
+    let mean_diag: f64 = (0..k).map(|i| h[i * k + i]).sum::<f64>() / k as f64;
+    let damp = cfg.damping * mean_diag + 1e-8;
+    for i in 0..k {
+        h[i * k + i] += damp;
+    }
+    // Hinv and its Cholesky (upper form used column-by-column).
+    let hinv = spd::inverse(&h, k);
+    let hinv_chol = spd::cholesky(&hinv, k); // lower L with Hinv = L·Lᵀ
+
+    // Quantize each output channel independently (shared per-row params, as
+    // in the asym scheme the engine uses).
+    let mut rows_q = vec![0i32; n * k];
+    let mut params: Vec<AsymParams> = Vec::with_capacity(n);
+    for r in 0..n {
+        let mut wr: Vec<f64> = w[r * k..(r + 1) * k].iter().map(|&v| v as f64).collect();
+        let p = asym::params_for(&w[r * k..(r + 1) * k], clip_min, clip_max);
+        for j in 0..k {
+            let d = hinv_chol[j * k + j];
+            let q = asym::quantize_one(wr[j] as f32, p, clip_min, clip_max);
+            rows_q[r * k + j] = q;
+            let deq = asym::dequantize_one(q, p) as f64;
+            let err = (wr[j] - deq) / d;
+            // Propagate the error into the remaining columns.
+            for j2 in (j + 1)..k {
+                wr[j2] -= err * hinv_chol[j2 * k + j];
+            }
+        }
+        params.push(p);
+    }
+
+    // Pack into the engine's container format.
+    let scales: Vec<f32> = params.iter().map(|p| p.scale).collect();
+    let biases: Vec<f32> = params.iter().map(|p| p.bias).collect();
+    let data = match cfg.bits {
+        WeightBits::Int8 => rows_q.iter().map(|&q| q as i8 as u8).collect(),
+        WeightBits::Int4 => {
+            let mut out = vec![0u8; n * k / 2];
+            for r in 0..n {
+                for c in (0..k).step_by(2) {
+                    let lo = rows_q[r * k + c] as u8 & 0xF;
+                    let hi = rows_q[r * k + c + 1] as u8 & 0xF;
+                    out[r * k / 2 + c / 2] = lo | (hi << 4);
+                }
+            }
+            out
+        }
+    };
+    QuantizedMatrix::from_parts(cfg.bits, n, k, data, &scales, &biases)
+}
+
+/// Mean-squared reconstruction error of quantized weights on calibration
+/// activations: E‖(W − Ŵ)·x‖² — the quantity GPTQ minimizes.
+pub fn calibration_mse(w: &[f32], qm: &QuantizedMatrix, x: &[f32]) -> f64 {
+    let (n, k) = (qm.n, qm.k);
+    let m = x.len() / k;
+    let deq = qm.dequantize();
+    let mut total = 0f64;
+    for s in 0..m {
+        let row = &x[s * k..(s + 1) * k];
+        for r in 0..n {
+            let mut acc = 0f64;
+            for c in 0..k {
+                acc += (w[r * k + c] - deq[r * k + c]) as f64 * row[c] as f64;
+            }
+            total += acc * acc;
+        }
+    }
+    total / (m * n) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Correlated calibration activations (GPTQ's advantage shows when the
+    /// Hessian is far from identity).
+    fn correlated_x(rng: &mut Rng, m: usize, k: usize) -> Vec<f32> {
+        let mut x = vec![0f32; m * k];
+        for s in 0..m {
+            let base = rng.normal();
+            for c in 0..k {
+                // Strong shared component + per-dim noise with varying power.
+                let power = 0.2 + 1.5 * (c as f32 / k as f32);
+                x[s * k + c] = base * 1.2 + rng.normal() * power;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn cholesky_inverse_roundtrip() {
+        let mut rng = Rng::new(1);
+        let n = 8;
+        // SPD via AᵀA + I.
+        let a: Vec<f64> = (0..n * n).map(|_| rng.normal() as f64).collect();
+        let mut spd_m = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    s += a[k * n + i] * a[k * n + j];
+                }
+                spd_m[i * n + j] = s;
+            }
+        }
+        let inv = spd::inverse(&spd_m, n);
+        // spd_m · inv ≈ I.
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += spd_m[i * n + k] * inv[k * n + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-8, "({i},{j}): {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_correlated_data() {
+        let mut rng = Rng::new(2);
+        let (n, k, m) = (16, 32, 256);
+        let w = rng.normal_vec(n * k);
+        let x = correlated_x(&mut rng, m, k);
+        for bits in [WeightBits::Int4, WeightBits::Int8] {
+            let rtn = QuantizedMatrix::from_f32(&w, n, k, bits);
+            let gptq = gptq_quantize(&w, n, k, &x, GptqConfig { bits, damping: 0.01 });
+            let e_rtn = calibration_mse(&w, &rtn, &x);
+            let e_gptq = calibration_mse(&w, &gptq, &x);
+            assert!(
+                e_gptq < e_rtn * 0.9,
+                "{bits:?}: GPTQ {e_gptq} should beat RTN {e_rtn} by >10%"
+            );
+        }
+    }
+
+    #[test]
+    fn gptq_output_drops_into_packed_gemm() {
+        // The imported matrix runs on the standard QLinear path.
+        use crate::cpu::gemm_q::QLinear;
+        use crate::reorder::solver::TileConfig;
+        let mut rng = Rng::new(3);
+        let (n, k) = (24, 16);
+        let w = rng.normal_vec(n * k);
+        let x = correlated_x(&mut rng, 64, k);
+        let qm = gptq_quantize(&w, n, k, &x, GptqConfig::default());
+        let lin = QLinear::new(&qm, TileConfig { e_p: 4, h_p: 8, l_p: 4 }, None);
+        let input = rng.normal_vec(2 * k);
+        let mut out = vec![0f32; 2 * n];
+        lin.forward(&input, 2, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+        // Tracks the float GEMM within quantization error.
+        let mut exact = vec![0f32; 2 * n];
+        crate::cpu::gemm::matmul_f32(&input, &w, &mut exact, 2, k, n);
+        let num: f32 = out.iter().zip(&exact).map(|(a, b)| (a - b) * (a - b)).sum();
+        let den: f32 = exact.iter().map(|v| v * v).sum();
+        assert!((num / den).sqrt() < 0.35, "rel {}", (num / den).sqrt());
+    }
+
+    #[test]
+    fn gptq_quantized_values_in_range() {
+        let mut rng = Rng::new(4);
+        let (n, k) = (4, 8);
+        let w = rng.normal_vec(n * k);
+        let x = correlated_x(&mut rng, 32, k);
+        let qm = gptq_quantize(&w, n, k, &x, GptqConfig { bits: WeightBits::Int4, damping: 0.01 });
+        for r in 0..n {
+            qm.for_row(r, |q| assert!((0..=15).contains(&q)));
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! KV-cache quantization codecs (paper §4.2): int8 asymmetric keys with
+//! per-token params, fp8 values. Shared by the native CPU backend and the
+//! flash spill path (which stores exactly these encodings on disk).
+
+use super::asym::{self, AsymParams};
+use super::fp8;
+
+/// One quantized key token: head_dim int8 values + (scale, bias).
+#[derive(Clone, Debug)]
+pub struct QuantKey {
+    pub q: Vec<i8>,
+    pub params: AsymParams,
+}
+
+/// Quantize one key vector (reduce dim = head_dim, fixed → per-token params).
+pub fn quantize_key(k: &[f32]) -> QuantKey {
+    let params = asym::params_for(k, asym::I8_MIN, asym::I8_MAX);
+    let q = k
+        .iter()
+        .map(|&x| asym::quantize_one(x, params, asym::I8_MIN, asym::I8_MAX) as i8)
+        .collect();
+    QuantKey { q, params }
+}
+
+/// Dequantize a key into `out`.
+pub fn dequantize_key(k: &QuantKey, out: &mut [f32]) {
+    for (o, &q) in out.iter_mut().zip(&k.q) {
+        *o = q as f32 * k.params.scale + k.params.bias;
+    }
+}
+
+/// Quantize a value vector to fp8 (stat-free: appends never touch history).
+pub fn quantize_value(v: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; v.len()];
+    fp8::encode_slice(v, &mut out);
+    out
+}
+
+pub fn dequantize_value(enc: &[u8], out: &mut [f32]) {
+    fp8::decode_slice(enc, out);
+}
+
+/// Dot product of an fp32 query with a quantized key, without materialising
+/// the dequantized key:  q·(k_q*s + b) = s·(q·k_q) + b·Σq.
+#[inline]
+pub fn query_key_dot(query: &[f32], key: &QuantKey) -> f32 {
+    debug_assert_eq!(query.len(), key.q.len());
+    let mut acc = 0f32;
+    let mut qsum = 0f32;
+    for (&qv, &kv) in query.iter().zip(&key.q) {
+        acc += qv * kv as f32;
+        qsum += qv;
+    }
+    key.params.scale * acc + key.params.bias * qsum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn key_roundtrip_half_step() {
+        prop_check(200, |rng| {
+            let d = rng.range(8, 128);
+            let k = rng.normal_vec(d);
+            let qk = quantize_key(&k);
+            let mut back = vec![0f32; d];
+            dequantize_key(&qk, &mut back);
+            for (a, b) in k.iter().zip(&back) {
+                if (a - b).abs() > qk.params.scale * 0.51 + 1e-6 {
+                    return Err(format!("{a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn query_key_dot_matches_dequantized() {
+        prop_check(200, |rng| {
+            let d = rng.range(4, 96);
+            let k = rng.normal_vec(d);
+            let q = rng.normal_vec(d);
+            let qk = quantize_key(&k);
+            let mut deq = vec![0f32; d];
+            dequantize_key(&qk, &mut deq);
+            let direct: f32 = q.iter().zip(&deq).map(|(a, b)| a * b).sum();
+            let fused = query_key_dot(&q, &qk);
+            if (direct - fused).abs() > 1e-3 * (1.0 + direct.abs()) {
+                return Err(format!("direct {direct} fused {fused}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn value_append_stability() {
+        // Encoding is element-wise: encoding more values never changes the
+        // encodings of earlier ones (the paper's reason to pick fp8).
+        let mut rng = crate::util::rng::Rng::new(1);
+        let old = rng.normal_vec(32);
+        let newer = rng.normal_vec(16);
+        let enc_old = quantize_value(&old);
+        let mut both = old.clone();
+        both.extend_from_slice(&newer);
+        let enc_both = quantize_value(&both);
+        assert_eq!(&enc_both[..32], &enc_old[..]);
+    }
+}

@@ -1,0 +1,67 @@
+//! Combined quantization (paper §4.2): asymmetric int8/int4 weights, dynamic
+//! int8 activations, int8 keys, fp8-e4m3 values, bf16 embedding.
+//!
+//! The scheme mirrors python/compile/quantize.py exactly (both sides are
+//! tested against the same invariants) so the Rust CPU backend and the AOT
+//! graphs agree numerically.
+
+pub mod asym;
+pub mod fp8;
+pub mod gptq;
+pub mod kv;
+
+pub use asym::{AsymParams, QuantizedMatrix, WeightBits};
+pub use fp8::{f32_to_f8e4m3, f8e4m3_to_f32};
+
+/// Combined-quantization policy choices per tensor class (paper Table-free
+/// description in §4.2; this is the "policy object" the engine consults).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorClass {
+    /// bf16, flash-resident (not DRAM) — lookup-only access pattern.
+    Embedding,
+    /// int4 or int8, DRAM — fully read every step (decode is ∝ their size).
+    LayerWeight,
+    /// int8 prioritised — accuracy-critical (§4.2 "LM head ... prioritized
+    /// for int8 quantization").
+    LmHead,
+    /// int8 asymmetric per token: reduce dim (head_dim) is fixed.
+    KvKey,
+    /// fp8 e4m3: append-only friendly, no running stats.
+    KvValue,
+    /// dynamic int8 per row at runtime.
+    Activation,
+}
+
+/// Bits chosen for a class under a given target (CPU uses int paths,
+/// GPU keeps activations in fp16 — W4A16/W8A16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    CpuInt8,  // W4A8 / W8A8
+    GpuFloat, // W4A16 / W8A16
+}
+
+/// Storage bytes per parameter for a class (used by the memory planner).
+pub fn bytes_per_param(class: TensorClass, bits: WeightBits) -> f64 {
+    match class {
+        TensorClass::Embedding => 2.0, // bf16
+        TensorClass::KvKey => 1.0,
+        TensorClass::KvValue => 1.0,
+        TensorClass::Activation => 1.0,
+        TensorClass::LayerWeight | TensorClass::LmHead => match bits {
+            WeightBits::Int4 => 0.5,
+            WeightBits::Int8 => 1.0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_bytes() {
+        assert_eq!(bytes_per_param(TensorClass::Embedding, WeightBits::Int8), 2.0);
+        assert_eq!(bytes_per_param(TensorClass::LayerWeight, WeightBits::Int4), 0.5);
+        assert_eq!(bytes_per_param(TensorClass::LmHead, WeightBits::Int8), 1.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! GPU weight layout (paper §5.1, OpenCL-image path).
+//!
+//! The paper stores GPU weights as an Image object with layout
+//! [l/l_p, h, l_p], l_p = 32: each work item then loads 32 4-bit weights =
+//! 128 bits at once (the GPU's maximum vectorized load, one CL_RGBA texel),
+//! and consecutive work items (consecutive h) touch consecutive addresses,
+//! so the hardware coalesces the loads.
+//!
+//! We cannot execute OpenCL here (DESIGN.md §Substitutions); instead this
+//! module implements the layout transformation + *property checkers* that
+//! verify the two claims the layout is chosen for — 128-bit alignment per
+//! work-item access and inter-work-item contiguity — and feeds the device
+//! model's bandwidth term for the Fig. 5 GPU series.
+
+/// GPU image layout parameters (paper: l_p = 32 int4 values = 128 bits).
+pub const GPU_LP: usize = 32;
+pub const BITS_PER_WEIGHT: usize = 4;
+pub const WORK_ITEM_LOAD_BITS: usize = GPU_LP * BITS_PER_WEIGHT; // 128
+
+/// Rearranged GPU weight buffer: [l/l_p, h, l_p] nibbles, densely packed.
+#[derive(Clone, Debug)]
+pub struct GpuWeightImage {
+    pub h: usize,
+    pub l: usize,
+    pub l_pad: usize,
+    /// Packed nibbles: byte i holds nibbles 2i (low) and 2i+1 (high) in
+    /// [l/l_p, h, l_p] element order.
+    pub data: Vec<u8>,
+}
+
+/// Pack dense int4 rows [h, l] (values 0..15) into the image layout.
+pub fn pack_gpu_image(w4: &[u8], h: usize, l: usize) -> GpuWeightImage {
+    assert_eq!(w4.len(), h * l, "expect one nibble value per byte on input");
+    let l_pad = l.div_ceil(GPU_LP) * GPU_LP;
+    let total = (l_pad / GPU_LP) * h * GPU_LP;
+    let mut nibbles = vec![0u8; total];
+    for r in 0..h {
+        for c in 0..l {
+            let (bj, jj) = (c / GPU_LP, c % GPU_LP);
+            nibbles[(bj * h + r) * GPU_LP + jj] = w4[r * l + c] & 0xF;
+        }
+    }
+    let mut data = vec![0u8; total / 2];
+    for (i, pair) in nibbles.chunks(2).enumerate() {
+        data[i] = pair[0] | (pair[1] << 4);
+    }
+    GpuWeightImage { h, l, l_pad, data }
+}
+
+impl GpuWeightImage {
+    /// Byte offset of work item (r, block bj)'s 128-bit load.
+    pub fn load_offset(&self, r: usize, bj: usize) -> usize {
+        ((bj * self.h + r) * GPU_LP) / 2
+    }
+
+    /// Nibble at dense (r, c) — for correctness checks.
+    pub fn get(&self, r: usize, c: usize) -> u8 {
+        let (bj, jj) = (c / GPU_LP, c % GPU_LP);
+        let n = (bj * self.h + r) * GPU_LP + jj;
+        let b = self.data[n / 2];
+        if n % 2 == 0 {
+            b & 0xF
+        } else {
+            b >> 4
+        }
+    }
+
+    /// Claim 1: every work-item load is one aligned 128-bit read.
+    pub fn loads_are_128bit_aligned(&self) -> bool {
+        let blocks = self.l_pad / GPU_LP;
+        (0..self.h).all(|r| {
+            (0..blocks).all(|bj| {
+                let off = self.load_offset(r, bj);
+                off % (WORK_ITEM_LOAD_BITS / 8) == 0
+            })
+        })
+    }
+
+    /// Claim 2: consecutive work items (consecutive h) read consecutive
+    /// 16-byte lines — i.e. the hardware can merge them.
+    pub fn work_items_coalesce(&self) -> bool {
+        let blocks = self.l_pad / GPU_LP;
+        (0..blocks).all(|bj| {
+            (1..self.h).all(|r| {
+                self.load_offset(r, bj) == self.load_offset(r - 1, bj) + WORK_ITEM_LOAD_BITS / 8
+            })
+        })
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_w4(rng: &mut Rng, h: usize, l: usize) -> Vec<u8> {
+        (0..h * l).map(|_| rng.below(16) as u8).collect()
+    }
+
+    #[test]
+    fn pack_preserves_values() {
+        let mut rng = Rng::new(1);
+        let (h, l) = (24, 96);
+        let w = random_w4(&mut rng, h, l);
+        let img = pack_gpu_image(&w, h, l);
+        for r in 0..h {
+            for c in 0..l {
+                assert_eq!(img.get(r, c), w[r * l + c], "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn loads_aligned_and_coalesced() {
+        let mut rng = Rng::new(2);
+        for (h, l) in [(8, 32), (17, 64), (64, 160)] {
+            let w = random_w4(&mut rng, h, l);
+            let img = pack_gpu_image(&w, h, l);
+            assert!(img.loads_are_128bit_aligned(), "{h}x{l}");
+            assert!(img.work_items_coalesce(), "{h}x{l}");
+        }
+    }
+
+    #[test]
+    fn l_gets_padded_to_lp() {
+        let mut rng = Rng::new(3);
+        let w = random_w4(&mut rng, 4, 40);
+        let img = pack_gpu_image(&w, 4, 40);
+        assert_eq!(img.l_pad, 64);
+        // Bytes: (64/32 blocks) * 4 rows * 32 nibbles / 2.
+        assert_eq!(img.nbytes(), 2 * 4 * 32 / 2);
+    }
+
+    #[test]
+    fn load_bits_match_paper() {
+        assert_eq!(WORK_ITEM_LOAD_BITS, 128);
+    }
+}

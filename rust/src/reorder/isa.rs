@@ -1,0 +1,136 @@
+//! CPU instruction-set profiles driving tile selection (paper §5.1, Table 2).
+//!
+//! The Eq. 3 register constraint counts *register slots*: the activation
+//! tile (e_p × l_p int8), the weight tile (h_p × l_p int8) and the int32
+//! accumulator tile (e_p × h_p) all live in the vector register file, in
+//! units of `reg_bytes`-wide registers. Outer-product engines (SME) hold
+//! the accumulator in dedicated tile storage instead (`acc_slots`).
+
+/// An instruction set as the solver sees it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IsaProfile {
+    pub name: &'static str,
+    /// Vector registers available to the microkernel (Eq. 3's R).
+    pub registers: u32,
+    /// Bytes per vector register (NEON/SVE128 = 16, AVX2 = 32).
+    pub reg_bytes: u32,
+    /// Elements consumed along l per MAC instruction → l_p (Eq. 4).
+    pub instruction_width: u32,
+    /// e_p must be a multiple of this (rows processed per instruction ×
+    /// pipeline unroll: sdot kernels step 4 rows, smmla steps 2).
+    pub e_step: u32,
+    /// h_p must be a multiple of this (output channels per register pair).
+    pub h_step: u32,
+    /// Outer-product accumulator capacity in int32 slots, if the engine has
+    /// dedicated tile storage (SME ZA). None → accumulators use registers.
+    pub acc_slots: Option<u32>,
+    /// Relative int8 MAC throughput vs sdot (for the perf model).
+    pub int8_throughput: f64,
+}
+
+/// ARMv8.2 dot-product (`sdot`): 32 NEON regs; 4×int8 per lane.
+pub const ARM_SDOT: IsaProfile = IsaProfile {
+    name: "armv8-sdot",
+    registers: 32,
+    reg_bytes: 16,
+    instruction_width: 4,
+    e_step: 4,
+    h_step: 8,
+    acc_slots: None,
+    int8_throughput: 1.0,
+};
+
+/// ARMv8.6 i8mm (`smmla`): 2×8 int8 blocks; double sdot throughput (paper:
+/// "the throughput of the smmla instruction on ARM i8mm is twice that of
+/// sdot"), and the weight repack uses l_p = 8 (paper §5.1).
+pub const ARM_I8MM: IsaProfile = IsaProfile {
+    name: "armv8-i8mm",
+    registers: 32,
+    reg_bytes: 16,
+    instruction_width: 8,
+    e_step: 2,
+    h_step: 8,
+    acc_slots: None,
+    int8_throughput: 2.0,
+};
+
+/// ARMv7 NEON (no dot product): 16 q-registers, widening int8 MACs.
+pub const ARM_V7_NEON: IsaProfile = IsaProfile {
+    name: "armv7-neon",
+    registers: 16,
+    reg_bytes: 16,
+    instruction_width: 4,
+    e_step: 4,
+    h_step: 8,
+    acc_slots: None,
+    int8_throughput: 0.5,
+};
+
+/// ARM SME: 16×16-int32 ZA outer-product tiles (256 accumulator slots);
+/// streaming operands only need a handful of vector registers, and the
+/// engine wants maximally wide h tiles (h_p = 64).
+pub const ARM_SME: IsaProfile = IsaProfile {
+    name: "arm-sme",
+    registers: 32,
+    reg_bytes: 16,
+    instruction_width: 4,
+    e_step: 4,
+    h_step: 64,
+    acc_slots: Some(256),
+    int8_throughput: 4.0,
+};
+
+/// x86-64 AVX2 (this testbed's host; not a Table 2 row). The int8 MAC
+/// sequence (pmaddubsw + pmaddwd) consumes 8+ int8 per 32-bit result lane,
+/// so l_p = 8 — measured 2.5× faster than l_p = 4 at 1024³ on this host
+/// (EXPERIMENTS.md §Perf).
+pub const X86_AVX2: IsaProfile = IsaProfile {
+    name: "x86-avx2",
+    registers: 16,
+    reg_bytes: 32,
+    instruction_width: 8,
+    e_step: 4,
+    h_step: 8,
+    acc_slots: None,
+    int8_throughput: 1.2,
+};
+
+/// The rows of Table 2, in paper order.
+pub fn table2_isas() -> Vec<IsaProfile> {
+    vec![ARM_SDOT, ARM_I8MM, ARM_V7_NEON, ARM_SME]
+}
+
+/// Best profile for the host this binary runs on.
+pub fn detect_host() -> IsaProfile {
+    #[cfg(target_arch = "aarch64")]
+    {
+        ARM_I8MM
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        X86_AVX2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i8mm_is_twice_sdot() {
+        assert_eq!(ARM_I8MM.int8_throughput / ARM_SDOT.int8_throughput, 2.0);
+        assert_eq!(ARM_I8MM.instruction_width, 2 * ARM_SDOT.instruction_width);
+    }
+
+    #[test]
+    fn host_detection_returns_valid_profile() {
+        let isa = detect_host();
+        assert!(isa.registers >= 16);
+        assert!(isa.instruction_width >= 4);
+    }
+
+    #[test]
+    fn table2_has_four_rows() {
+        assert_eq!(table2_isas().len(), 4);
+    }
+}

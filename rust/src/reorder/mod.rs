@@ -1,0 +1,20 @@
+//! Hardware-driven data reorder (paper §5.1).
+//!
+//! The paper's central compute idea: pick loop-tiling parameters
+//! (e_p, h_p, l_p) from the hardware description (register count,
+//! instruction width), then *pre-rearrange* weights at load time and
+//! activations at runtime into exactly the layout the GEMM microkernel
+//! consumes, so the inner loop streams memory linearly.
+//!
+//! * [`isa`] — instruction-set descriptions (ARM sdot/i8mm/SME, x86 AVX2…)
+//! * [`solver`] — the Eq. 2–4 optimizer that reproduces Table 2
+//! * [`pack`] — the [e/e_p, l/l_p, e_p, l_p] activation / weight packers
+//! * [`gpu_layout`] — the OpenCL-image layout ([l/l_p, h, l_p], l_p = 32)
+
+pub mod gpu_layout;
+pub mod isa;
+pub mod pack;
+pub mod solver;
+
+pub use isa::IsaProfile;
+pub use solver::{solve_tiles, TileConfig};

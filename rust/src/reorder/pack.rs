@@ -1,0 +1,249 @@
+//! Data rearrangement for the tiled GEMM (paper §5.1).
+//!
+//! Activations [e, l] are packed as [e/e_p, l/l_p, e_p, l_p] and weights
+//! [h, l] as [h/h_p, l/l_p, h_p, l_p] (int4: nibble pairs along l_p), so the
+//! microkernel reads both operands strictly sequentially. Dimensions are
+//! zero-padded up to tile multiples; zero int8 values contribute zero to the
+//! integer accumulator, and the affine corrections use the *true* l, so
+//! padding never changes results.
+
+use crate::quant::asym::{self, AsymParams, QuantizedMatrix, WeightBits};
+use crate::reorder::solver::TileConfig;
+
+/// Round `x` up to a multiple of `m`.
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Activations packed for the microkernel, already int8-quantized per row.
+#[derive(Clone, Debug)]
+pub struct PackedActivations {
+    pub e: usize,
+    pub l: usize,
+    pub e_pad: usize,
+    pub l_pad: usize,
+    pub tile: TileConfig,
+    /// [e_pad/e_p, l_pad/l_p, e_p, l_p] int8.
+    pub data: Vec<i8>,
+    /// Per true row: dynamic quant params + Σ x_q (affine corrections).
+    pub params: Vec<AsymParams>,
+    pub row_sums: Vec<i32>,
+}
+
+/// Pack + dynamically quantize an [e, l] f32 activation block.
+pub fn pack_activations(x: &[f32], e: usize, l: usize, tile: TileConfig) -> PackedActivations {
+    assert_eq!(x.len(), e * l);
+    let (q, params, row_sums) = asym::quantize_activations(x, e, l);
+    pack_quantized_activations(&q, e, l, tile, params, row_sums)
+}
+
+/// Pack activations that are already int8 (used when the caller fuses the
+/// quantization elsewhere).
+pub fn pack_quantized_activations(
+    q: &[i8],
+    e: usize,
+    l: usize,
+    tile: TileConfig,
+    params: Vec<AsymParams>,
+    row_sums: Vec<i32>,
+) -> PackedActivations {
+    let e_pad = round_up(e, tile.e_p);
+    let l_pad = round_up(l, tile.l_p);
+    let mut data = vec![0i8; e_pad * l_pad];
+    let tiles_l = l_pad / tile.l_p;
+    for r in 0..e {
+        let (bi, ii) = (r / tile.e_p, r % tile.e_p);
+        for c in 0..l {
+            let (bj, jj) = (c / tile.l_p, c % tile.l_p);
+            let idx = ((bi * tiles_l + bj) * tile.e_p + ii) * tile.l_p + jj;
+            data[idx] = q[r * l + c];
+        }
+    }
+    PackedActivations { e, l, e_pad, l_pad, tile, data, params, row_sums }
+}
+
+/// Weights packed for the microkernel (done once at model load — the paper
+/// repacks according to the detected ISA, e.g. l_p = 8 when i8mm exists).
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    pub h: usize,
+    pub l: usize,
+    pub h_pad: usize,
+    pub l_pad: usize,
+    pub tile: TileConfig,
+    pub bits: WeightBits,
+    /// int8: [h_pad/h_p, l_pad/l_p, h_p, l_p] bytes;
+    /// int4: same order, two values per byte along l_p (l_p/2 bytes).
+    pub data: Vec<u8>,
+    pub params: Vec<AsymParams>,
+    pub row_sums: Vec<i32>,
+}
+
+/// Repack a quantized matrix [h, l] into tile order.
+pub fn pack_weights(w: &QuantizedMatrix, tile: TileConfig) -> PackedWeights {
+    assert!(
+        w.bits == WeightBits::Int8 || tile.l_p % 2 == 0,
+        "int4 packing needs even l_p"
+    );
+    let (h, l) = (w.n, w.k);
+    let h_pad = round_up(h, tile.h_p);
+    let l_pad = round_up(l, tile.l_p);
+    let tiles_l = l_pad / tile.l_p;
+    // Materialize rows via for_row (handles the nibble layout), then place.
+    let mut dense = vec![0i32; l];
+    let mut data = match w.bits {
+        WeightBits::Int8 => vec![0u8; h_pad * l_pad],
+        WeightBits::Int4 => vec![0u8; h_pad * l_pad / 2],
+    };
+    for r in 0..h {
+        let mut i = 0;
+        w.for_row(r, |q| {
+            dense[i] = q;
+            i += 1;
+        });
+        let (bi, ii) = (r / tile.h_p, r % tile.h_p);
+        for c in 0..l {
+            let (bj, jj) = (c / tile.l_p, c % tile.l_p);
+            match w.bits {
+                WeightBits::Int8 => {
+                    let idx = ((bi * tiles_l + bj) * tile.h_p + ii) * tile.l_p + jj;
+                    data[idx] = dense[c] as i8 as u8;
+                }
+                WeightBits::Int4 => {
+                    let idx = (((bi * tiles_l + bj) * tile.h_p + ii) * tile.l_p + jj) / 2;
+                    let nib = (dense[c] as u8) & 0xF;
+                    if jj % 2 == 0 {
+                        data[idx] |= nib;
+                    } else {
+                        data[idx] |= nib << 4;
+                    }
+                }
+            }
+        }
+    }
+    PackedWeights {
+        h,
+        l,
+        h_pad,
+        l_pad,
+        tile,
+        bits: w.bits,
+        data,
+        params: w.params.clone(),
+        row_sums: w.row_sums.clone(),
+    }
+}
+
+impl PackedWeights {
+    /// Read back row `r` in dense k order (tests / fallback paths).
+    pub fn unpack_row(&self, r: usize) -> Vec<i32> {
+        let tiles_l = self.l_pad / self.tile.l_p;
+        let (bi, ii) = (r / self.tile.h_p, r % self.tile.h_p);
+        let mut out = vec![0i32; self.l];
+        for c in 0..self.l {
+            let (bj, jj) = (c / self.tile.l_p, c % self.tile.l_p);
+            out[c] = match self.bits {
+                WeightBits::Int8 => {
+                    let idx = ((bi * tiles_l + bj) * self.tile.h_p + ii) * self.tile.l_p + jj;
+                    self.data[idx] as i8 as i32
+                }
+                WeightBits::Int4 => {
+                    let idx =
+                        (((bi * tiles_l + bj) * self.tile.h_p + ii) * self.tile.l_p + jj) / 2;
+                    let b = self.data[idx];
+                    if jj % 2 == 0 {
+                        (b & 0xF) as i32
+                    } else {
+                        (b >> 4) as i32
+                    }
+                }
+            };
+        }
+        out
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    const TILE: TileConfig = TileConfig { e_p: 4, h_p: 8, l_p: 4 };
+
+    #[test]
+    fn activation_pack_roundtrip() {
+        prop_check(100, |rng| {
+            let e = rng.range(1, 20);
+            let l = rng.range(1, 40);
+            let x = rng.normal_vec(e * l);
+            let p = pack_activations(&x, e, l, TILE);
+            // Unpack and compare against direct quantization.
+            let (q, _, _) = asym::quantize_activations(&x, e, l);
+            let tiles_l = p.l_pad / TILE.l_p;
+            for r in 0..e {
+                for c in 0..l {
+                    let (bi, ii) = (r / TILE.e_p, r % TILE.e_p);
+                    let (bj, jj) = (c / TILE.l_p, c % TILE.l_p);
+                    let idx = ((bi * tiles_l + bj) * TILE.e_p + ii) * TILE.l_p + jj;
+                    if p.data[idx] != q[r * l + c] {
+                        return Err(format!("mismatch at ({r},{c})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weight_pack_roundtrip_int8_and_int4() {
+        prop_check(60, |rng| {
+            let h = rng.range(1, 24);
+            let l = rng.range(1, 16) * 2;
+            let w = rng.normal_vec(h * l);
+            for bits in [WeightBits::Int8, WeightBits::Int4] {
+                let qm = QuantizedMatrix::from_f32(&w, h, l, bits);
+                let packed = pack_weights(&qm, TILE);
+                for r in 0..h {
+                    let mut want = Vec::new();
+                    qm.for_row(r, |v| want.push(v));
+                    if packed.unpack_row(r) != want {
+                        return Err(format!("{bits:?} row {r} mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn padding_regions_are_zero() {
+        let x = vec![1.0f32; 3 * 5];
+        let p = pack_activations(&x, 3, 5, TILE);
+        assert_eq!(p.e_pad, 4);
+        assert_eq!(p.l_pad, 8);
+        // Padded row 3 must be all zeros.
+        let tiles_l = p.l_pad / TILE.l_p;
+        for bj in 0..tiles_l {
+            for jj in 0..TILE.l_p {
+                let idx = ((0 * tiles_l + bj) * TILE.e_p + 3) * TILE.l_p + jj;
+                assert_eq!(p.data[idx], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn int4_packed_half_the_bytes() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let w = rng.normal_vec(16 * 32);
+        let q8 = QuantizedMatrix::from_f32(&w, 16, 32, WeightBits::Int8);
+        let q4 = QuantizedMatrix::from_f32(&w, 16, 32, WeightBits::Int4);
+        let p8 = pack_weights(&q8, TILE);
+        let p4 = pack_weights(&q4, TILE);
+        assert_eq!(p4.nbytes() * 2, p8.nbytes());
+    }
+}

@@ -1,0 +1,73 @@
+//! bfloat16 <-> f32 conversion (embedding rows are stored bf16 in Flash,
+//! paper §4.1/§4.2: "Embedding data read in bfloat16 format").
+
+/// f32 → bf16 bits with round-to-nearest-even (matches numpy/ml_dtypes).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Quiet NaN, preserving the sign.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x0000_7FFF + lsb) >> 16) as u16
+}
+
+/// bf16 bits → f32 (exact).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Convert a little-endian bf16 byte slice into f32s.
+pub fn bytes_to_f32(bytes: &[u8], out: &mut [f32]) {
+    assert_eq!(bytes.len(), out.len() * 2, "bf16 byte length mismatch");
+    for (i, o) in out.iter_mut().enumerate() {
+        let b = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+        *o = bf16_to_f32(b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_for_bf16_values() {
+        for bits in [0u16, 0x3F80, 0xBF80, 0x4000, 0x7F00, 0x0080] {
+            let f = bf16_to_f32(bits);
+            assert_eq!(f32_to_bf16(f), bits, "bits {bits:#06x} f {f}");
+        }
+    }
+
+    #[test]
+    fn conversion_error_bounded() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..1000 {
+            let x = rng.normal() * 10.0;
+            let back = bf16_to_f32(f32_to_bf16(x));
+            // bf16 has 8 high mantissa bits: rel err ≤ 2^-8.
+            assert!((back - x).abs() <= x.abs() * (1.0 / 256.0) + 1e-30, "{x} -> {back}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even_matches_numpy_samples() {
+        // Spot values checked against numpy: np.float32(v).astype(bfloat16).
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16(-2.5), 0xC020);
+        assert_eq!(f32_to_bf16(3.14159265), 0x4049);
+        assert_eq!(f32_to_bf16(65504.0), 0x4780);
+    }
+
+    #[test]
+    fn bytes_decode() {
+        let vals = [1.0f32, -0.5, 2.25];
+        let bytes: Vec<u8> = vals
+            .iter()
+            .flat_map(|v| f32_to_bf16(*v).to_le_bytes())
+            .collect();
+        let mut out = [0f32; 3];
+        bytes_to_f32(&bytes, &mut out);
+        assert_eq!(out, vals);
+    }
+}

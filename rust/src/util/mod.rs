@@ -1,0 +1,9 @@
+//! Small self-contained substrates (no crates.io access in this environment,
+//! so JSON parsing, PRNG, bf16 conversion and property testing are in-tree).
+
+pub mod bf16;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,96 @@
+//! Miniature property-testing harness (proptest is not vendored offline).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(1000, |rng| {
+//!     let n = rng.range(1, 64);
+//!     let xs = rng.normal_vec(n);
+//!     // ... assert invariant, or return Err(description)
+//!     Ok(())
+//! });
+//! ```
+//! On failure it reports the case index and the deterministic seed so the
+//! exact case can be replayed with `prop_replay`.
+
+use super::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+const BASE_SEED: u64 = 0x5EED_CAFE_F00D_0001;
+
+/// Run `cases` random cases of `f`; panic with seed info on first failure.
+pub fn prop_check(cases: u64, mut f: impl FnMut(&mut Rng) -> PropResult) {
+    let f = &mut f;
+    for case in 0..cases {
+        let seed = BASE_SEED ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay one failing case by seed.
+pub fn prop_replay(seed: u64, f: impl FnOnce(&mut Rng) -> PropResult) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replayed property failure (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Convenience assert for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        prop_check(50, |rng| {
+            n += 1;
+            let a = rng.below(100);
+            if a < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check(100, |rng| {
+            if rng.below(10) < 9 {
+                Ok(())
+            } else {
+                Err("hit the 10% branch".into())
+            }
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<usize> = Vec::new();
+        prop_check(10, |rng| {
+            first.push(rng.below(1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        prop_check(10, |rng| {
+            second.push(rng.below(1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

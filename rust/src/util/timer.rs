@@ -1,0 +1,68 @@
+//! Wall-clock measurement helpers for the bench harness.
+
+use std::time::Instant;
+
+/// Run `f` once and return (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Measure `f` repeatedly: a warmup pass, then `iters` timed passes.
+/// Returns per-iteration seconds.
+pub fn time_iters(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Adaptive measurement: repeat `f` until `min_time_s` of samples or
+/// `max_iters`, whichever first. Good default for micro-benches.
+pub fn time_adaptive(min_time_s: f64, max_iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < max_iters
+        && (samples.len() < 3 || start.elapsed().as_secs_f64() < min_time_s)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_result() {
+        let (v, s) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn time_iters_counts() {
+        let mut n = 0;
+        let samples = time_iters(2, 5, || n += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn adaptive_respects_max() {
+        let samples = time_adaptive(10.0, 4, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(samples.len(), 4);
+    }
+}

@@ -1,0 +1,115 @@
+//! Cross-backend integration: the native Rust engine and the PJRT-executed
+//! AOT graphs implement the *same* model (same quantized weights, same
+//! combined-quantization scheme) — their outputs must agree.
+//!
+//! This is the strongest correctness signal in the repo: it ties L1 Pallas
+//! kernels + L2 JAX graphs to the independent Rust reimplementation.
+//!
+//! PJRT compilation is expensive and `PjRtClient` is not Sync, so all
+//! PJRT-dependent checks live in ONE test body sharing one runtime.
+
+use std::path::PathBuf;
+
+use mnn_llm::model::native::{EngineOptions, NativeModel};
+use mnn_llm::model::sampler::argmax;
+use mnn_llm::runtime::PjrtRuntime;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    d.join("manifest.json").exists().then_some(d)
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|v| v * v).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|v| v * v).sum::<f32>().sqrt();
+    dot / (na * nb)
+}
+
+#[test]
+fn pjrt_vs_native_suite() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::load(&dir).expect("load runtime");
+    let mut native = NativeModel::load(&dir, EngineOptions::default()).unwrap();
+
+    // 1. Prefill logits agree (tight cosine + identical top-1).
+    for prompt in [vec![104usize, 101, 108, 108, 111], vec![1, 2, 3], vec![500; 12]] {
+        let (pjrt_logits, _) = rt.prefill(&prompt).unwrap();
+        native.reset_session();
+        let native_logits = native.prefill(&prompt);
+        let cos = cosine(&pjrt_logits, &native_logits);
+        assert!(cos > 0.998, "prompt {prompt:?}: cosine {cos}");
+        assert_eq!(
+            argmax(&pjrt_logits),
+            argmax(&native_logits),
+            "top-1 disagrees for {prompt:?}"
+        );
+    }
+
+    // 2. Greedy generations agree token-for-token.
+    let prompt = [42usize, 43, 44, 45, 46];
+    let n = 8;
+    let pjrt_tokens = rt.generate(&prompt, n).unwrap();
+    native.reset_session();
+    let native_tokens = native.generate(&prompt, n);
+    assert_eq!(pjrt_tokens, native_tokens, "greedy chains must match");
+
+    // 3. Decode chain tracks prefill (PJRT KV correctness end-to-end).
+    let p = [9usize, 8, 7, 6, 5, 4];
+    let (full, _) = rt.prefill(&p).unwrap();
+    let (mut logits, mut kv) = rt.prefill(&p[..1]).unwrap();
+    for &t in &p[1..] {
+        logits = rt.decode(t, &mut kv).unwrap();
+    }
+    assert_eq!(argmax(&full), argmax(&logits));
+    assert!(cosine(&full, &logits) > 0.995);
+
+    // 4. KV state is isolated between interleaved sessions.
+    let (la, mut ka) = rt.prefill(&[1, 2, 3]).unwrap();
+    let (lb, mut kb) = rt.prefill(&[100, 200, 300]).unwrap();
+    let la2 = rt.decode(argmax(&la), &mut ka).unwrap();
+    let lb2 = rt.decode(argmax(&lb), &mut kb).unwrap();
+    let la3 = rt.decode(argmax(&la2), &mut ka).unwrap();
+    let _lb3 = rt.decode(argmax(&lb2), &mut kb).unwrap();
+    // Re-run session A alone; must reproduce the interleaved run bitwise.
+    let (la_r, mut ka_r) = rt.prefill(&[1, 2, 3]).unwrap();
+    let la2_r = rt.decode(argmax(&la_r), &mut ka_r).unwrap();
+    let la3_r = rt.decode(argmax(&la2_r), &mut ka_r).unwrap();
+    assert_eq!(la3, la3_r, "interleaving another session changed results");
+
+    // 5. KV memory accounting is sane: int8 K + params + fp8 V at capacity.
+    let m = &rt.manifest.model;
+    let expect = m.layers * m.kv_heads * m.max_len * (2 * m.head_dim() + 8);
+    assert_eq!(ka.nbytes(), expect);
+}
+
+#[test]
+fn native_options_never_change_numbers() {
+    // Every engine option combination is a pure performance/memory knob.
+    let Some(dir) = artifacts() else { return };
+    let prompt = [11usize, 22, 33, 44, 55, 66, 77];
+    let n = 6;
+    let base = NativeModel::load(&dir, EngineOptions::default())
+        .unwrap()
+        .generate(&prompt, n);
+    use mnn_llm::parallel::pool::WorkerConfig;
+    use mnn_llm::reorder::solver::TileConfig;
+    let variants: Vec<EngineOptions> = vec![
+        EngineOptions { embedding_in_flash: false, ..EngineOptions::default() },
+        EngineOptions { kv_budget_tokens: 3, ..EngineOptions::default() },
+        EngineOptions {
+            tile: TileConfig { e_p: 2, h_p: 8, l_p: 4 },
+            ..EngineOptions::default()
+        },
+        EngineOptions {
+            tile: TileConfig { e_p: 10, h_p: 8, l_p: 8 },
+            workers: WorkerConfig { rates: vec![1.0, 0.72, 0.72, 0.72] },
+            kv_budget_tokens: 5,
+            embedding_in_flash: true,
+        },
+    ];
+    for (i, opt) in variants.into_iter().enumerate() {
+        let got = NativeModel::load(&dir, opt).unwrap().generate(&prompt, n);
+        assert_eq!(got, base, "variant {i} changed outputs");
+    }
+}

@@ -1,0 +1,138 @@
+//! Failure injection: corrupted artifacts, truncated containers, hostile
+//! manifests — the engine must reject them with errors, never crash or
+//! serve garbage silently.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use mnn_llm::model::manifest::Manifest;
+use mnn_llm::model::native::{EngineOptions, NativeModel};
+use mnn_llm::model::weights::WeightFile;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    d.join("manifest.json").exists().then_some(d)
+}
+
+/// Copy the artifacts dir into a temp dir we can mutate.
+fn clone_artifacts(src: &Path, files: &[&str]) -> PathBuf {
+    let dst = std::env::temp_dir().join(format!(
+        "mnn_fi_{}_{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    fs::create_dir_all(&dst).unwrap();
+    for f in files {
+        fs::copy(src.join(f), dst.join(f)).unwrap();
+    }
+    dst
+}
+
+const ALL: &[&str] = &[
+    "manifest.json",
+    "weights.bin",
+    "embedding.bin",
+    "decode.hlo.txt",
+    "prefill_16.hlo.txt",
+    "prefill_64.hlo.txt",
+    "prefill_256.hlo.txt",
+];
+
+#[test]
+fn missing_manifest_is_clean_error() {
+    let dir = std::env::temp_dir().join("mnn_fi_empty");
+    let _ = fs::create_dir_all(&dir);
+    assert!(Manifest::load(&dir).is_err());
+    assert!(NativeModel::load(&dir, EngineOptions::default()).is_err());
+}
+
+#[test]
+fn truncated_weights_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = clone_artifacts(&src, ALL);
+    let path = dir.join("weights.bin");
+    let bytes = fs::read(&path).unwrap();
+    fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(WeightFile::load(&path).is_err());
+    assert!(NativeModel::load(&dir, EngineOptions::default()).is_err());
+}
+
+#[test]
+fn corrupted_magic_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = clone_artifacts(&src, ALL);
+    let path = dir.join("weights.bin");
+    let mut bytes = fs::read(&path).unwrap();
+    bytes[0] = b'X';
+    fs::write(&path, &bytes).unwrap();
+    assert!(NativeModel::load(&dir, EngineOptions::default()).is_err());
+}
+
+#[test]
+fn wrong_size_embedding_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = clone_artifacts(&src, ALL);
+    fs::write(dir.join("embedding.bin"), vec![0u8; 100]).unwrap();
+    assert!(NativeModel::load(&dir, EngineOptions::default()).is_err());
+}
+
+#[test]
+fn garbage_manifest_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = clone_artifacts(&src, ALL);
+    fs::write(dir.join("manifest.json"), b"{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // Valid JSON, missing required fields.
+    fs::write(dir.join("manifest.json"), b"{\"model\": {}}").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn missing_tensor_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = clone_artifacts(&src, ALL);
+    // Rename a tensor inside weights.bin (same length, different name):
+    // the engine's required-tensor lookup must fail cleanly.
+    let path = dir.join("weights.bin");
+    let bytes = fs::read(&path).unwrap();
+    let needle = b"L0.wq.q";
+    let pos = bytes
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .expect("tensor name present");
+    let mut patched = bytes.clone();
+    patched[pos..pos + needle.len()].copy_from_slice(b"L0.wq.X");
+    fs::write(&path, &patched).unwrap();
+    assert!(NativeModel::load(&dir, EngineOptions::default()).is_err());
+}
+
+#[test]
+fn weights_bin_with_trailing_garbage_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = clone_artifacts(&src, ALL);
+    let path = dir.join("weights.bin");
+    let mut bytes = fs::read(&path).unwrap();
+    bytes.extend_from_slice(b"EXTRA");
+    fs::write(&path, &bytes).unwrap();
+    assert!(WeightFile::load(&path).is_err());
+}
+
+#[test]
+fn bit_flip_in_weight_payload_changes_output_not_stability() {
+    // A payload bit flip cannot be *detected* (no checksums — documented),
+    // but it must never crash: the engine still produces finite logits.
+    let Some(src) = artifacts() else { return };
+    let dir = clone_artifacts(&src, ALL);
+    let path = dir.join("weights.bin");
+    let mut bytes = fs::read(&path).unwrap();
+    let n = bytes.len();
+    bytes[n / 2] ^= 0x55;
+    fs::write(&path, &bytes).unwrap();
+    if let Ok(mut m) = NativeModel::load(&dir, EngineOptions::default()) {
+        let logits = m.prefill(&[1, 2, 3]);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}
