@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use mnn_llm::bench as bh;
 use mnn_llm::device::SocProfile;
+use mnn_llm::kv::KvPool;
 use mnn_llm::memory::flash::FlashSim;
 use mnn_llm::memory::hybrid::HybridKvLayer;
 use mnn_llm::memory::prefetch::PrefetchPlanner;
@@ -103,4 +104,49 @@ fn main() {
     );
     println!("\n(Real spill I/O goes through an actual file; timing *figures* use the");
     println!(" UFS bandwidth model — this box's NVMe is far faster than mobile flash.)");
+
+    // Part 3: the paged pool under concurrent-session pressure — the byte
+    // budget is held by shedding the overflow to flash, and pages recycle
+    // through the free lists instead of reallocating.
+    bh::section("Paged KV pool — byte budget under concurrent sessions");
+    let (kv_heads, head_dim, layers_per_sess, sessions, toks) = (2usize, 64usize, 2usize, 4usize, 96usize);
+    let page = KvPool::page_bytes(kv_heads, head_dim);
+    let mut rows = Vec::new();
+    for (name, budget_pages) in [("unbounded", usize::MAX / page), ("8 pages", 8), ("3 pages", 3)] {
+        let budget = budget_pages.saturating_mul(page);
+        let pool = Arc::new(KvPool::new(budget));
+        let flash = Arc::new(FlashSim::temp(soc.flash).unwrap());
+        let mut layers: Vec<HybridKvLayer> = (0..sessions * layers_per_sess)
+            .map(|_| {
+                HybridKvLayer::with_pool(kv_heads, head_dim, flash.clone(), usize::MAX / 2,
+                                         pool.clone())
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        for _ in 0..toks {
+            for l in &mut layers {
+                let k = rng.normal_vec(kv_heads * head_dim);
+                let v = rng.normal_vec(kv_heads * head_dim);
+                l.append(&k, &v).unwrap();
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let spilled: u64 = layers.iter().map(|l| l.spill_count()).sum();
+        let stats = pool.stats();
+        assert!(pool.resident_bytes() <= pool.budget_bytes());
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1}", pool.resident_bytes() as f64 / page as f64),
+            spilled.to_string(),
+            stats.allocated.to_string(),
+            stats.reused.to_string(),
+            format!("{:.2}", wall * 1e3),
+        ]);
+    }
+    bh::table(
+        &["pool budget", "resident pages", "spilled rec", "pages alloc", "pages reused", "wall ms"],
+        &rows,
+    );
+    println!("\n({} sessions × {} layers, {} tokens each; page = {} B = {} records.)",
+             sessions, layers_per_sess, toks, page, mnn_llm::kv::PAGE_TOKENS);
 }

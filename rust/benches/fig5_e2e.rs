@@ -105,16 +105,22 @@ fn ratio_summary(soc: &SocProfile) {
     bh::table(&["ratio", "ours", "paper"], &rows);
 }
 
-/// Part 2: real ablations on the native engine (tiny model, this host).
+/// Part 2: real ablations on the native engine. Prefers real AOT
+/// artifacts; falls back to the self-contained fixture model so the
+/// measurement always runs.
 fn ablations() {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("\n[ablations skipped: run `make artifacts` first]");
-        return;
-    }
-    bh::section("Measured ablations — native engine, tiny-qwen2, this host");
+    let aot = std::path::PathBuf::from("artifacts");
+    let (_fx, dir, model_name) = if aot.join("manifest.json").exists() {
+        (None, aot, "tiny-qwen2 (AOT artifacts)")
+    } else {
+        let fx = mnn_llm::model::fixtures::write_fixture(11).expect("fixture");
+        let dir = fx.dir().to_path_buf();
+        (Some(fx), dir, "fixture-2l (generated)")
+    };
+    bh::section(&format!("Measured ablations — native engine, {model_name}, this host"));
+    let vocab = mnn_llm::model::Manifest::load(&dir).expect("manifest").model.vocab;
     let mut rng = Rng::new(11);
-    let prompt: Vec<usize> = (0..64).map(|_| rng.below(2048)).collect();
+    let prompt: Vec<usize> = (0..64).map(|_| rng.below(vocab)).collect();
     let mut rows = Vec::new();
     let mut baseline_prefill = 0.0;
     let mut baseline_decode = 0.0;
@@ -139,16 +145,17 @@ fn ablations() {
             EngineOptions { kv_budget_tokens: 48, ..EngineOptions::default() },
         ),
     ] {
-        let mut m = NativeModel::load(&dir, opts).unwrap();
+        let m = NativeModel::load(&dir, opts).unwrap();
+        let mut sess = m.new_session();
         // Prefill timing.
         let t0 = std::time::Instant::now();
-        let logits = m.prefill(&prompt);
+        let logits = m.prefill(&mut sess, &prompt);
         let prefill_s = t0.elapsed().as_secs_f64();
         // Decode timing (16 steps, paper cap).
         let mut tok = mnn_llm::model::sampler::argmax(&logits);
         let t1 = std::time::Instant::now();
         for _ in 0..16 {
-            let l = m.decode(tok);
+            let l = m.decode(&mut sess, tok);
             tok = mnn_llm::model::sampler::argmax(&l);
         }
         let decode_s = t1.elapsed().as_secs_f64() / 16.0;

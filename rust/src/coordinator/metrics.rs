@@ -37,10 +37,26 @@ impl RequestMetrics {
     }
 }
 
+/// KV-memory pressure counters (the paged-pool + DRAM-Flash spill path):
+/// how often the engine had to degrade to flash to stay inside the KV
+/// byte budget.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPressureMetrics {
+    /// Token records written to flash (per-layer token budget or pool
+    /// byte-budget eviction, plus preemptions).
+    pub spilled_records: u64,
+    /// Token records read back from flash (staging or streaming attention).
+    pub restored_records: u64,
+    /// Whole sessions preempted to flash by admission control.
+    pub preemptions: u64,
+}
+
 /// Aggregate over a batch of completed requests.
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
     pub completed: Vec<RequestMetrics>,
+    /// KV spill/restore/preemption accounting across all requests.
+    pub kv: KvPressureMetrics,
 }
 
 impl EngineMetrics {
@@ -81,7 +97,7 @@ impl EngineMetrics {
 
     /// One summary line for logs/examples.
     pub fn summary(&self, wall_s: f64) -> String {
-        format!(
+        let mut s = format!(
             "{} requests | prefill {:.1} tok/s | decode {:.1} tok/s | p50 TTFT {:.1} ms | p95 e2e {:.1} ms | engine {:.1} tok/s",
             self.count(),
             self.mean_prefill_tok_s(),
@@ -89,7 +105,14 @@ impl EngineMetrics {
             self.p50_ttft_s() * 1e3,
             self.p95_e2e_s() * 1e3,
             self.throughput_tok_s(wall_s),
-        )
+        );
+        if self.kv != KvPressureMetrics::default() {
+            s.push_str(&format!(
+                " | kv spill {} rec / restore {} rec / {} preempt",
+                self.kv.spilled_records, self.kv.restored_records, self.kv.preemptions
+            ));
+        }
+        s
     }
 }
 
@@ -131,5 +154,19 @@ mod tests {
         assert!((e.mean_prefill_tok_s() - (128.0 + 256.0) / 2.0).abs() < 1e-9);
         assert!((e.throughput_tok_s(4.0) - 8.0).abs() < 1e-9);
         assert!(e.summary(4.0).contains("2 requests"));
+    }
+
+    #[test]
+    fn kv_pressure_appears_in_summary_only_under_pressure() {
+        let mut e = EngineMetrics::default();
+        e.push(m(8, 4, 0.1, 0.2));
+        assert!(!e.summary(1.0).contains("kv spill"));
+        e.kv.spilled_records = 12;
+        e.kv.restored_records = 7;
+        e.kv.preemptions = 1;
+        let s = e.summary(1.0);
+        assert!(s.contains("kv spill 12 rec"), "{s}");
+        assert!(s.contains("restore 7 rec"), "{s}");
+        assert!(s.contains("1 preempt"), "{s}");
     }
 }

@@ -3,16 +3,19 @@
 //!
 //! Mobile deployment is single-device, so there is no distributed router;
 //! the coordinator's job (mirroring MNN-LLM's engine loop) is to (a) queue
-//! and admit requests, (b) schedule the two phases — prefill is
-//! compute-bound, decode is memory-bound (§2.1) — and (c) track per-request
-//! and engine-wide metrics. The PJRT backend keeps one KV state per
-//! session, so decode steps from concurrent sessions interleave
-//! round-robin; the native backend owns its KV and serves FIFO.
+//! and admit requests — on the native backend, admission consults the
+//! shared KV page pool's byte budget and preempts sessions to flash under
+//! pressure — (b) schedule the two phases — prefill is compute-bound,
+//! decode is memory-bound (§2.1) — and (c) track per-request and
+//! engine-wide metrics, including KV spill/restore/preemption counts.
+//! Both backends support `Interleaved` round-robin decode (continuous
+//! batching): the PJRT backend threads one `KvState` per session, the
+//! native backend one `NativeSession` over the paged KV pool.
 
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 
-pub use metrics::{EngineMetrics, RequestMetrics};
+pub use metrics::{EngineMetrics, KvPressureMetrics, RequestMetrics};
 pub use request::{Request, RequestId, Response};
 pub use scheduler::{Coordinator, SchedulePolicy};

@@ -2,12 +2,22 @@
 //! backend.
 //!
 //! Two policies:
-//! * `Fifo` — complete each request before starting the next (the native
-//!   backend's mode: its KV cache is engine-resident).
+//! * `Fifo` — complete each request before starting the next.
 //! * `Interleaved` — prefill on arrival, then round-robin single-token
-//!   decode across all active sessions (PJRT backend: one `KvState` per
-//!   session). This keeps TTFT low for late arrivals while decode
-//!   bandwidth is shared — the mobile analogue of continuous batching.
+//!   decode across all active sessions. This keeps TTFT low for late
+//!   arrivals while decode bandwidth is shared — the mobile analogue of
+//!   continuous batching. Works on **both** backends: the PJRT path
+//!   threads one `KvState` per session; the native path holds one
+//!   `NativeSession` per request, all drawing KV pages from the model's
+//!   shared budgeted pool.
+//!
+//! Native admission control: before prefilling a new request the
+//! coordinator asks the KV pool whether the prompt's estimated KV fits in
+//! the byte budget; if not, running sessions are **preempted to flash**
+//! (their resident pages spilled and released) oldest-first until it fits.
+//! Appends under residual pressure degrade the same way, so a budget
+//! smaller than the total working set still completes every request —
+//! spill/restore/preemption counts land in `EngineMetrics::kv`.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -16,7 +26,7 @@ use anyhow::Result;
 
 use crate::coordinator::metrics::{EngineMetrics, RequestMetrics};
 use crate::coordinator::request::{Request, Response};
-use crate::model::native::NativeModel;
+use crate::model::native::{NativeModel, NativeSession};
 use crate::model::sampler;
 use crate::model::tokenizer::EOS;
 use crate::runtime::{KvState, PjrtRuntime};
@@ -44,7 +54,12 @@ impl Backend {
     }
 }
 
-struct ActiveSession {
+/// New-token budget for a request under the backend's context cap.
+fn token_budget(req: &Request, cap: usize) -> usize {
+    req.max_new_tokens.min(cap.saturating_sub(req.prompt.len() + 1))
+}
+
+struct PjrtActive {
     req: Request,
     kv: KvState,
     tokens: Vec<usize>,
@@ -52,6 +67,26 @@ struct ActiveSession {
     admitted: Instant,
     prefill_s: f64,
     decode_started: Instant,
+    /// Final timings, captured the moment the session finishes — NOT at
+    /// batch collection time, which would charge early finishers for the
+    /// whole batch's tail.
+    decode_s: f64,
+    e2e_s: f64,
+    done: bool,
+}
+
+struct NativeActive {
+    req: Request,
+    sess: NativeSession,
+    tokens: Vec<usize>,
+    last: usize,
+    admitted: Instant,
+    prefill_s: f64,
+    decode_started: Instant,
+    /// Final timings, captured the moment the session finishes (see
+    /// `PjrtActive`).
+    decode_s: f64,
+    e2e_s: f64,
     done: bool,
 }
 
@@ -77,6 +112,11 @@ impl Coordinator {
         }
     }
 
+    /// The backend (e.g. to inspect the native model's KV pool).
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+
     /// Queue a request; returns its id.
     pub fn submit(&mut self, prompt: Vec<usize>, max_new_tokens: usize) -> u64 {
         let id = self.next_id;
@@ -100,9 +140,11 @@ impl Coordinator {
 
     /// Drain the queue to completion; returns responses in completion order.
     pub fn run_all(&mut self) -> Result<Vec<Response>> {
+        let native = matches!(self.backend, Backend::Native(_));
         match self.policy {
             SchedulePolicy::Fifo => self.run_fifo(),
-            SchedulePolicy::Interleaved => self.run_interleaved(),
+            SchedulePolicy::Interleaved if native => self.run_interleaved_native(),
+            SchedulePolicy::Interleaved => self.run_interleaved_pjrt(),
         }
     }
 
@@ -111,13 +153,13 @@ impl Coordinator {
         while let Some(req) = self.queue.pop_front() {
             let admitted = Instant::now();
             let cap = self.backend.max_len();
-            let budget = req.max_new_tokens.min(cap.saturating_sub(req.prompt.len() + 1));
+            let budget = token_budget(&req, cap);
             let (tokens, prefill_s, decode_s) = match &mut self.backend {
                 Backend::Native(m) => {
-                    m.reset_session();
-                    m.lora_task = req.lora_task.clone();
+                    let mut sess = m.new_session();
+                    sess.lora_task = req.lora_task.clone();
                     let t0 = Instant::now();
-                    let logits = m.prefill(&req.prompt);
+                    let logits = m.prefill(&mut sess, &req.prompt);
                     let prefill_s = t0.elapsed().as_secs_f64();
                     let mut tok = sampler::sample(&logits, req.sampler, &mut self.rng);
                     let mut tokens = vec![tok];
@@ -126,10 +168,12 @@ impl Coordinator {
                         if tok == EOS {
                             break;
                         }
-                        let logits = m.decode(tok);
+                        let logits = m.decode(&mut sess, tok);
                         tok = sampler::sample(&logits, req.sampler, &mut self.rng);
                         tokens.push(tok);
                     }
+                    self.metrics.kv.spilled_records += sess.spilled_records();
+                    self.metrics.kv.restored_records += sess.restored_records();
                     (tokens, prefill_s, t1.elapsed().as_secs_f64())
                 }
                 Backend::Pjrt(rt) => {
@@ -160,39 +204,150 @@ impl Coordinator {
             };
             self.metrics.push(m);
             out.push(Response { id: req.id, tokens, metrics: m });
+            // The request's session is gone; drop its spilled records too.
+            if let Backend::Native(m) = &self.backend {
+                m.reclaim_flash();
+            }
         }
         Ok(out)
     }
 
-    fn run_interleaved(&mut self) -> Result<Vec<Response>> {
+    /// Continuous batching on the native backend: one `NativeSession` per
+    /// request over the shared paged KV pool, with budget-aware admission.
+    fn run_interleaved_native(&mut self) -> Result<Vec<Response>> {
+        let cap = self.backend.max_len();
+        let Backend::Native(model) = &self.backend else {
+            unreachable!("run_interleaved_native requires a native backend");
+        };
+        // Phase 1: admit + prefill every queued request (compute-bound; run
+        // first so every session has a first token — lowest aggregate TTFT).
+        let mut active: Vec<NativeActive> = Vec::new();
+        while let Some(req) = self.queue.pop_front() {
+            let admitted = Instant::now();
+            // Admission control: will this prompt's KV fit the pool budget?
+            // If not, preempt running sessions (oldest first) to flash.
+            // Page-granular: the pool hands out whole pages, so short
+            // prompts still pin a full page per layer. When the prompt
+            // could never fit even in an empty pool, skip the pointless
+            // fleet-wide preemption — the new session will degrade by
+            // spilling its own KV as it appends.
+            let need = model.prefill_kv_page_bytes(req.prompt.len());
+            if model.kv_pool().would_exceed(need) && need <= model.kv_pool().budget_bytes() {
+                for s in active.iter_mut() {
+                    if !model.kv_pool().would_exceed(need) {
+                        break;
+                    }
+                    if s.sess.resident_kv_bytes() > 0 {
+                        s.sess.preempt_to_flash()?;
+                        self.metrics.kv.preemptions += 1;
+                    }
+                }
+                // If it still doesn't fit, admit anyway: appends degrade
+                // gracefully by spilling this session's own KV to flash.
+            }
+            let mut sess = model.new_session();
+            sess.lora_task = req.lora_task.clone();
+            let t0 = Instant::now();
+            let logits = model.prefill(&mut sess, &req.prompt);
+            let prefill_s = t0.elapsed().as_secs_f64();
+            let tok = sampler::sample(&logits, req.sampler, &mut self.rng);
+            let budget = token_budget(&req, cap);
+            let mut entry = NativeActive {
+                last: tok,
+                tokens: vec![tok],
+                sess,
+                admitted,
+                prefill_s,
+                decode_started: Instant::now(),
+                decode_s: 0.0,
+                e2e_s: 0.0,
+                done: tok == EOS || budget <= 1,
+                req,
+            };
+            if entry.done {
+                entry.e2e_s = entry.admitted.elapsed().as_secs_f64();
+                // Finished already: stop pinning pool pages / flash records.
+                entry.sess.release_kv();
+            }
+            active.push(entry);
+        }
+        // Phase 2: round-robin decode (memory-bound; one token per active
+        // session per sweep). Greedy streams are identical to Fifo's —
+        // sessions are isolated, only the order of work changes.
+        for s in active.iter_mut().filter(|s| !s.done) {
+            s.decode_started = Instant::now();
+        }
+        while active.iter().any(|s| !s.done) {
+            for s in active.iter_mut().filter(|s| !s.done) {
+                let logits = model.decode(&mut s.sess, s.last);
+                let tok = sampler::sample(&logits, s.req.sampler, &mut self.rng);
+                s.tokens.push(tok);
+                s.last = tok;
+                if tok == EOS || s.tokens.len() >= token_budget(&s.req, cap) {
+                    s.done = true;
+                    s.decode_s = s.decode_started.elapsed().as_secs_f64();
+                    s.e2e_s = s.admitted.elapsed().as_secs_f64();
+                    // Release the finished session's KV immediately so its
+                    // pages and flash records stop pressuring live sessions.
+                    s.sess.release_kv();
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for s in active {
+            self.metrics.kv.spilled_records += s.sess.spilled_records();
+            self.metrics.kv.restored_records += s.sess.restored_records();
+            let m = RequestMetrics {
+                prompt_tokens: s.req.prompt.len(),
+                new_tokens: s.tokens.len(),
+                ttft_s: s.prefill_s,
+                prefill_s: s.prefill_s,
+                decode_s: s.decode_s,
+                e2e_s: s.e2e_s,
+            };
+            self.metrics.push(m);
+            out.push(Response { id: s.req.id, tokens: s.tokens, metrics: m });
+        }
+        // Every session is dropped; truncate the shared spill store.
+        model.reclaim_flash();
+        Ok(out)
+    }
+
+    fn run_interleaved_pjrt(&mut self) -> Result<Vec<Response>> {
         let Backend::Pjrt(rt) = &self.backend else {
-            // The native backend owns one KV; fall back to FIFO.
-            return self.run_fifo();
+            unreachable!("run_interleaved_pjrt requires a PJRT backend");
         };
         let cap = rt.manifest.model.max_len;
-        // Phase 1: prefill every queued request (compute-bound; run first
-        // so every session has a first token — lowest aggregate TTFT).
-        let mut active: Vec<ActiveSession> = Vec::new();
+        // Phase 1: prefill every queued request.
+        let mut active: Vec<PjrtActive> = Vec::new();
         while let Some(req) = self.queue.pop_front() {
             let admitted = Instant::now();
             let t0 = Instant::now();
             let (logits, kv) = rt.prefill(&req.prompt)?;
             let prefill_s = t0.elapsed().as_secs_f64();
             let tok = sampler::sample(&logits, req.sampler, &mut self.rng);
-            active.push(ActiveSession {
+            let mut entry = PjrtActive {
                 last: tok,
                 tokens: vec![tok],
                 kv,
                 admitted,
                 prefill_s,
                 decode_started: Instant::now(),
-                done: tok == EOS || req.max_new_tokens <= 1,
+                decode_s: 0.0,
+                e2e_s: 0.0,
+                done: tok == EOS || token_budget(&req, cap) <= 1,
                 req,
-            });
+            };
+            if entry.done {
+                entry.e2e_s = entry.admitted.elapsed().as_secs_f64();
+            }
+            active.push(entry);
         }
-        // Phase 2: round-robin decode (memory-bound; one token per active
-        // session per sweep).
+        // Phase 2: round-robin decode.
         let mut out = Vec::new();
+        for s in active.iter_mut().filter(|s| !s.done) {
+            s.decode_started = Instant::now();
+        }
         while active.iter().any(|s| !s.done) {
             for s in active.iter_mut().filter(|s| !s.done) {
                 let logits = rt.decode(s.last, &mut s.kv)?;
@@ -200,10 +355,12 @@ impl Coordinator {
                 s.tokens.push(tok);
                 s.last = tok;
                 if tok == EOS
-                    || s.tokens.len() >= s.req.max_new_tokens
+                    || s.tokens.len() >= token_budget(&s.req, cap)
                     || s.kv.pos + 1 >= cap
                 {
                     s.done = true;
+                    s.decode_s = s.decode_started.elapsed().as_secs_f64();
+                    s.e2e_s = s.admitted.elapsed().as_secs_f64();
                 }
             }
         }
@@ -213,8 +370,8 @@ impl Coordinator {
                 new_tokens: s.tokens.len(),
                 ttft_s: s.prefill_s,
                 prefill_s: s.prefill_s,
-                decode_s: s.decode_started.elapsed().as_secs_f64(),
-                e2e_s: s.admitted.elapsed().as_secs_f64(),
+                decode_s: s.decode_s,
+                e2e_s: s.e2e_s,
             };
             self.metrics.push(m);
             out.push(Response { id: s.req.id, tokens: s.tokens, metrics: m });
@@ -226,18 +383,16 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::fixtures;
     use crate::model::native::EngineOptions;
-    use std::path::PathBuf;
 
-    fn artifacts() -> Option<PathBuf> {
-        let d = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
-        d.join("manifest.json").exists().then_some(d)
+    fn native() -> NativeModel {
+        fixtures::native_model(7, EngineOptions::default()).unwrap().1
     }
 
     #[test]
     fn fifo_native_serves_queue() {
-        let Some(dir) = artifacts() else { return };
-        let m = NativeModel::load(&dir, EngineOptions::default()).unwrap();
+        let m = native();
         let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
         let a = c.submit(vec![1, 2, 3], 4);
         let b = c.submit(vec![9, 8], 3);
@@ -247,15 +402,66 @@ mod tests {
         assert_eq!(responses.len(), 2);
         assert_eq!(responses[0].id, a);
         assert_eq!(responses[1].id, b);
-        assert_eq!(responses[0].tokens.len(), 4);
-        assert_eq!(responses[1].tokens.len(), 3);
+        // Full budget unless the random-weight model greedily emitted EOS.
+        for (r, want) in responses.iter().zip([4usize, 3]) {
+            assert!(
+                r.tokens.len() == want || r.tokens.last() == Some(&EOS),
+                "request {}: {} tokens, want {want} (or early EOS)",
+                r.id,
+                r.tokens.len()
+            );
+        }
         assert_eq!(c.metrics.count(), 2);
         assert!(c.metrics.mean_decode_tok_s() > 0.0);
     }
 
     #[test]
+    fn interleaved_native_matches_fifo_tokens() {
+        // Greedy decoding must produce identical tokens under both
+        // schedules — interleaving only changes the order of work. This is
+        // the native-backend (session-owned paged KV) parity check.
+        let m1 = native();
+        let mut fifo = Coordinator::new(Backend::Native(Box::new(m1)), SchedulePolicy::Fifo);
+        fifo.submit(vec![5, 6, 7], 4);
+        fifo.submit(vec![100, 101], 4);
+        fifo.submit(vec![42; 9], 5);
+        let r_fifo = fifo.run_all().unwrap();
+
+        let m2 = native();
+        let mut inter =
+            Coordinator::new(Backend::Native(Box::new(m2)), SchedulePolicy::Interleaved);
+        inter.submit(vec![5, 6, 7], 4);
+        inter.submit(vec![100, 101], 4);
+        inter.submit(vec![42; 9], 5);
+        let r_inter = inter.run_all().unwrap();
+
+        assert_eq!(r_fifo.len(), r_inter.len());
+        for (a, b) in r_fifo.iter().zip(&r_inter) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "schedule must not change greedy output");
+        }
+    }
+
+    #[test]
+    fn interleaved_native_frees_all_pool_pages() {
+        let m = native();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        for i in 0..4 {
+            c.submit(vec![10 + i; 6], 4);
+        }
+        let rs = c.run_all().unwrap();
+        assert_eq!(rs.len(), 4);
+        let Backend::Native(m) = c.backend() else { unreachable!() };
+        assert_eq!(m.kv_pool().resident_bytes(), 0, "all pages returned after run_all");
+    }
+
+    #[test]
+    #[cfg(feature = "pjrt")]
+    #[ignore = "needs real AOT artifacts (python/compile/aot.py) under rust/artifacts"]
     fn interleaved_pjrt_matches_fifo_tokens() {
-        let Some(dir) = artifacts() else { return };
+        use std::path::PathBuf;
+        let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        assert!(dir.join("manifest.json").exists(), "run the AOT pipeline first");
         // Greedy decoding must produce identical tokens under both
         // schedules — interleaving only changes the order of work.
         let rt1 = PjrtRuntime::load(&dir).unwrap();
@@ -278,8 +484,7 @@ mod tests {
 
     #[test]
     fn generation_respects_max_len() {
-        let Some(dir) = artifacts() else { return };
-        let m = NativeModel::load(&dir, EngineOptions::default()).unwrap();
+        let m = native();
         let cap = m.config.max_len;
         let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
         c.submit(vec![1; 10], cap * 2); // absurd budget gets clamped

@@ -6,34 +6,56 @@
 //! contiguous record (all kv heads), which is also the unit the
 //! DRAM-Flash spill path ships to flash (paper: "each computation produces
 //! only one set of new KV values … ≈1 KB for Qwen2-7B").
+//!
+//! Storage is **paged** ([`paged`]): records live in fixed-size
+//! [`paged::PAGE_TOKENS`]-record pages drawn from a shared [`KvPool`], so
+//! concurrent sessions draw from one budgeted DRAM arena and return pages
+//! as prefixes are spilled or sessions end. The record format and the
+//! `append`/`key_dot`/`accum_value`/`serialize_token` semantics are
+//! unchanged from the flat layout — paging is pure memory management.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::quant::asym::{self, AsymParams};
 use crate::quant::fp8;
 
-/// KV storage for one decoder layer, all kv heads, token-major.
-#[derive(Clone, Debug)]
+pub mod paged;
+
+pub use paged::{KvPool, PoolStats, PAGE_TOKENS};
+
+use paged::Page;
+
+/// KV storage for one decoder layer, all kv heads, token-major, paged.
+#[derive(Debug)]
 pub struct KvLayer {
     pub kv_heads: usize,
     pub head_dim: usize,
+    /// Live tokens (excluding the dropped prefix).
     len: usize,
-    /// int8 keys: [tok, head, d].
-    k_q: Vec<i8>,
-    /// Per (tok, head) asymmetric params.
-    k_params: Vec<AsymParams>,
-    /// fp8 values: [tok, head, d].
-    v_f8: Vec<u8>,
+    /// Dropped tokens still occupying leading slots of `pages[0]` —
+    /// `drop_prefix` is O(1) per token; the page is recycled once every
+    /// slot in it is dropped.
+    front: usize,
+    /// Deque so releasing a fully-dropped leading page is O(1) — spilling
+    /// a long prefix releases pages one by one.
+    pages: VecDeque<Page>,
+    pool: Arc<KvPool>,
 }
 
 impl KvLayer {
+    /// A layer on a private unbounded pool (single-layer / test use).
     pub fn new(kv_heads: usize, head_dim: usize) -> Self {
-        KvLayer {
-            kv_heads,
-            head_dim,
-            len: 0,
-            k_q: Vec::new(),
-            k_params: Vec::new(),
-            v_f8: Vec::new(),
-        }
+        Self::with_pool(kv_heads, head_dim, Arc::new(KvPool::unbounded()))
+    }
+
+    /// A layer drawing pages from a shared (budgeted) pool.
+    pub fn with_pool(kv_heads: usize, head_dim: usize, pool: Arc<KvPool>) -> Self {
+        KvLayer { kv_heads, head_dim, len: 0, front: 0, pages: VecDeque::new(), pool }
+    }
+
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
     }
 
     pub fn len(&self) -> usize {
@@ -49,25 +71,46 @@ impl KvLayer {
         self.kv_heads * (self.head_dim + 8 + self.head_dim)
     }
 
+    /// (page index, slot in page) of live token `tok`.
+    #[inline]
+    fn locate(&self, tok: usize) -> (usize, usize) {
+        debug_assert!(tok < self.len);
+        let a = self.front + tok;
+        (a / PAGE_TOKENS, a % PAGE_TOKENS)
+    }
+
+    /// Slot for the next append, taking a fresh page from the pool when
+    /// the tail page is full.
+    fn tail_slot(&mut self) -> (usize, usize) {
+        let a = self.front + self.len;
+        let (pi, si) = (a / PAGE_TOKENS, a % PAGE_TOKENS);
+        if pi == self.pages.len() {
+            self.pages.push_back(self.pool.take_page(self.kv_heads, self.head_dim));
+        }
+        (pi, si)
+    }
+
     /// Quantize + append one token: k, v are [kv_heads * head_dim] f32
     /// (keys already roped). fp8 values and per-token key params mean this
     /// never touches earlier records (§4.2).
     pub fn append(&mut self, k: &[f32], v: &[f32]) {
         let d = self.head_dim;
-        assert_eq!(k.len(), self.kv_heads * d);
-        assert_eq!(v.len(), self.kv_heads * d);
-        for h in 0..self.kv_heads {
+        let kvh = self.kv_heads;
+        assert_eq!(k.len(), kvh * d);
+        assert_eq!(v.len(), kvh * d);
+        let (pi, si) = self.tail_slot();
+        let page = &mut self.pages[pi];
+        let base = si * kvh * d;
+        for h in 0..kvh {
             let ks = &k[h * d..(h + 1) * d];
             let p = asym::params_for(ks, asym::I8_MIN, asym::I8_MAX);
-            for &x in ks {
-                self.k_q
-                    .push(asym::quantize_one(x, p, asym::I8_MIN, asym::I8_MAX) as i8);
+            for (i, &x) in ks.iter().enumerate() {
+                page.k_q[base + h * d + i] =
+                    asym::quantize_one(x, p, asym::I8_MIN, asym::I8_MAX) as i8;
             }
-            self.k_params.push(p);
+            page.k_params[si * kvh + h] = p;
             let vs = &v[h * d..(h + 1) * d];
-            let start = self.v_f8.len();
-            self.v_f8.resize(start + d, 0);
-            fp8::encode_slice(vs, &mut self.v_f8[start..]);
+            fp8::encode_slice(vs, &mut page.v_f8[base + h * d..base + (h + 1) * d]);
         }
         self.len += 1;
     }
@@ -78,12 +121,14 @@ impl KvLayer {
     pub fn key_dot(&self, head: usize, tok: usize, q: &[f32]) -> f32 {
         let d = self.head_dim;
         debug_assert_eq!(q.len(), d);
-        let base = (tok * self.kv_heads + head) * d;
-        let p = self.k_params[tok * self.kv_heads + head];
+        let (pi, si) = self.locate(tok);
+        let page = &self.pages[pi];
+        let base = (si * self.kv_heads + head) * d;
+        let p = page.k_params[si * self.kv_heads + head];
         let mut acc = 0f32;
         let mut qsum = 0f32;
         for i in 0..d {
-            acc += q[i] * self.k_q[base + i] as f32;
+            acc += q[i] * page.k_q[base + i] as f32;
             qsum += q[i];
         }
         p.scale * acc + p.bias * qsum
@@ -94,9 +139,11 @@ impl KvLayer {
     pub fn accum_value(&self, head: usize, tok: usize, w: f32, out: &mut [f32]) {
         let d = self.head_dim;
         debug_assert_eq!(out.len(), d);
-        let base = (tok * self.kv_heads + head) * d;
+        let (pi, si) = self.locate(tok);
+        let page = &self.pages[pi];
+        let base = (si * self.kv_heads + head) * d;
         for i in 0..d {
-            out[i] += w * fp8::f8e4m3_to_f32(self.v_f8[base + i]);
+            out[i] += w * fp8::f8e4m3_to_f32(page.v_f8[base + i]);
         }
     }
 
@@ -104,16 +151,18 @@ impl KvLayer {
     /// per head: k int8[d] | scale f32 | bias f32 | v u8[d].
     pub fn serialize_token(&self, tok: usize) -> Vec<u8> {
         let d = self.head_dim;
+        let (pi, si) = self.locate(tok);
+        let page = &self.pages[pi];
         let mut out = Vec::with_capacity(self.bytes_per_token());
         for h in 0..self.kv_heads {
-            let base = (tok * self.kv_heads + h) * d;
+            let base = (si * self.kv_heads + h) * d;
             for i in 0..d {
-                out.push(self.k_q[base + i] as u8);
+                out.push(page.k_q[base + i] as u8);
             }
-            let p = self.k_params[tok * self.kv_heads + h];
+            let p = page.k_params[si * self.kv_heads + h];
             out.extend_from_slice(&p.scale.to_le_bytes());
             out.extend_from_slice(&p.bias.to_le_bytes());
-            out.extend_from_slice(&self.v_f8[base..base + d]);
+            out.extend_from_slice(&page.v_f8[base..base + d]);
         }
         out
     }
@@ -121,44 +170,81 @@ impl KvLayer {
     /// Append a token from a serialized record (staging after flash load).
     pub fn push_serialized(&mut self, rec: &[u8]) {
         let d = self.head_dim;
+        let kvh = self.kv_heads;
         assert_eq!(rec.len(), self.bytes_per_token());
+        let (pi, si) = self.tail_slot();
+        let page = &mut self.pages[pi];
+        let base = si * kvh * d;
         let mut off = 0;
-        for _ in 0..self.kv_heads {
+        for h in 0..kvh {
             for i in 0..d {
-                self.k_q.push(rec[off + i] as i8);
+                page.k_q[base + h * d + i] = rec[off + i] as i8;
             }
             off += d;
             let scale = f32::from_le_bytes(rec[off..off + 4].try_into().unwrap());
             let bias = f32::from_le_bytes(rec[off + 4..off + 8].try_into().unwrap());
             off += 8;
-            self.k_params.push(AsymParams { scale, bias });
-            self.v_f8.extend_from_slice(&rec[off..off + d]);
+            page.k_params[si * kvh + h] = AsymParams { scale, bias };
+            page.v_f8[base + h * d..base + (h + 1) * d].copy_from_slice(&rec[off..off + d]);
             off += d;
         }
         self.len += 1;
     }
 
     /// Remove the first `n` tokens (after they were spilled to flash).
+    /// Fully-vacated leading pages return to the pool.
     pub fn drop_prefix(&mut self, n: usize) {
         assert!(n <= self.len);
-        let kd = self.kv_heads * self.head_dim;
-        self.k_q.drain(..n * kd);
-        self.k_params.drain(..n * self.kv_heads);
-        self.v_f8.drain(..n * kd);
         self.len -= n;
+        self.front += n;
+        while self.front >= PAGE_TOKENS {
+            let Some(page) = self.pages.pop_front() else { break };
+            self.pool.put_page(self.kv_heads, self.head_dim, page);
+            self.front -= PAGE_TOKENS;
+        }
     }
 
-    /// Drop all tokens (staging reuse).
+    /// Drop all tokens and return every page to the pool.
     pub fn clear(&mut self) {
-        self.k_q.clear();
-        self.k_params.clear();
-        self.v_f8.clear();
+        for page in self.pages.drain(..) {
+            self.pool.put_page(self.kv_heads, self.head_dim, page);
+        }
         self.len = 0;
+        self.front = 0;
     }
 
-    /// Resident bytes (DRAM occupancy).
+    /// Resident bytes (DRAM occupancy): page-granular, like the real
+    /// allocator — a partially filled tail page costs a full page.
     pub fn resident_bytes(&self) -> usize {
-        self.k_q.len() + self.k_params.len() * 8 + self.v_f8.len()
+        self.pages.len() * KvPool::page_bytes(self.kv_heads, self.head_dim)
+    }
+
+    /// Pages currently held.
+    pub fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+impl Clone for KvLayer {
+    /// Deep copy; the clone draws its own pages from the same pool.
+    fn clone(&self) -> Self {
+        let mut out = KvLayer::with_pool(self.kv_heads, self.head_dim, self.pool.clone());
+        for page in &self.pages {
+            let mut np = self.pool.take_page(self.kv_heads, self.head_dim);
+            np.k_q.copy_from_slice(&page.k_q);
+            np.k_params.copy_from_slice(&page.k_params);
+            np.v_f8.copy_from_slice(&page.v_f8);
+            out.pages.push_back(np);
+        }
+        out.len = self.len;
+        out.front = self.front;
+        out
+    }
+}
+
+impl Drop for KvLayer {
+    fn drop(&mut self) {
+        self.clear();
     }
 }
 
@@ -172,6 +258,15 @@ impl KvCache {
     pub fn new(layers: usize, kv_heads: usize, head_dim: usize) -> Self {
         KvCache {
             layers: (0..layers).map(|_| KvLayer::new(kv_heads, head_dim)).collect(),
+        }
+    }
+
+    /// All layers draw from one shared (budgeted) pool.
+    pub fn with_pool(layers: usize, kv_heads: usize, head_dim: usize, pool: Arc<KvPool>) -> Self {
+        KvCache {
+            layers: (0..layers)
+                .map(|_| KvLayer::with_pool(kv_heads, head_dim, pool.clone()))
+                .collect(),
         }
     }
 
@@ -205,6 +300,17 @@ mod tests {
         kv
     }
 
+    /// Decode one head's (k_q, scale, bias) out of the serialized record —
+    /// the spill format doubles as the test's view into the encoding.
+    fn record_head(rec: &[u8], head: usize, d: usize) -> (Vec<i8>, f32, f32) {
+        let stride = d + 8 + d;
+        let off = head * stride;
+        let kq: Vec<i8> = rec[off..off + d].iter().map(|&b| b as i8).collect();
+        let scale = f32::from_le_bytes(rec[off + d..off + d + 4].try_into().unwrap());
+        let bias = f32::from_le_bytes(rec[off + d + 4..off + d + 8].try_into().unwrap());
+        (kq, scale, bias)
+    }
+
     #[test]
     fn key_dot_matches_dequantized() {
         prop_check(100, |rng| {
@@ -215,11 +321,12 @@ mod tests {
             let v = rng.normal_vec(heads * d);
             kv.append(&k, &v);
             let q = rng.normal_vec(d);
+            let rec = kv.serialize_token(0);
             for h in 0..heads {
-                let p = kv.k_params[h];
+                let (kq, scale, bias) = record_head(&rec, h, d);
                 let mut direct = 0f32;
                 for i in 0..d {
-                    let kk = kv.k_q[h * d + i] as f32 * p.scale + p.bias;
+                    let kk = kq[i] as f32 * scale + bias;
                     direct += q[i] * kk;
                 }
                 let fused = kv.key_dot(h, 0, &q);
@@ -274,6 +381,25 @@ mod tests {
     }
 
     #[test]
+    fn drop_prefix_across_page_boundaries() {
+        // Data must survive the prefix walking through whole pages.
+        let mut rng = Rng::new(11);
+        let toks = 3 * PAGE_TOKENS + 5;
+        let mut kv = filled_layer(&mut rng, 2, 8, toks);
+        let q = rng.normal_vec(8);
+        let keep = toks - (PAGE_TOKENS + 3);
+        let want: Vec<f32> =
+            (0..keep).map(|t| kv.key_dot(1, PAGE_TOKENS + 3 + t, &q)).collect();
+        kv.drop_prefix(PAGE_TOKENS + 3);
+        assert_eq!(kv.len(), keep);
+        for (t, w) in want.iter().enumerate() {
+            assert_eq!(kv.key_dot(1, t, &q), *w, "token {t}");
+        }
+        // Exactly one fully-vacated page went back to the pool.
+        assert_eq!(kv.pool().stats().returned, 1);
+    }
+
+    #[test]
     fn append_never_mutates_history() {
         // The §4.2 design goal: new tokens leave old encodings untouched.
         let mut rng = Rng::new(2);
@@ -308,5 +434,72 @@ mod tests {
         }
         assert_eq!(c.len(), 1);
         assert!(c.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn shared_pool_accounts_across_layers_and_frees_on_drop() {
+        let pool = Arc::new(KvPool::new(1 << 20));
+        let mut rng = Rng::new(4);
+        {
+            let mut c = KvCache::with_pool(2, 2, 8, pool.clone());
+            for _ in 0..PAGE_TOKENS + 1 {
+                for l in 0..2 {
+                    let k = rng.normal_vec(16);
+                    let v = rng.normal_vec(16);
+                    c.layers[l].append(&k, &v);
+                }
+            }
+            // Each layer holds 2 pages (PAGE_TOKENS+1 tokens).
+            assert_eq!(pool.resident_bytes(), 4 * KvPool::page_bytes(2, 8));
+            assert_eq!(c.resident_bytes(), pool.resident_bytes());
+        }
+        // Dropping the cache returns every page.
+        assert_eq!(pool.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn clear_returns_pages_to_free_list() {
+        let pool = Arc::new(KvPool::unbounded());
+        let mut kv = KvLayer::with_pool(2, 8, pool.clone());
+        let mut rng = Rng::new(5);
+        for _ in 0..2 * PAGE_TOKENS {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            kv.append(&k, &v);
+        }
+        assert_eq!(kv.page_count(), 2);
+        kv.clear();
+        assert_eq!(kv.len(), 0);
+        assert_eq!(kv.page_count(), 0);
+        assert_eq!(pool.resident_bytes(), 0);
+        assert_eq!(pool.stats().returned, 2);
+        // Refilling reuses the freed pages instead of allocating.
+        let k = rng.normal_vec(16);
+        let v = rng.normal_vec(16);
+        kv.append(&k, &v);
+        assert_eq!(pool.stats().reused, 1);
+    }
+
+    #[test]
+    fn clone_is_deep_and_pool_accounted() {
+        let pool = Arc::new(KvPool::unbounded());
+        let mut rng = Rng::new(6);
+        let mut a = KvLayer::with_pool(2, 8, pool.clone());
+        for _ in 0..3 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            a.append(&k, &v);
+        }
+        let b = a.clone();
+        assert_eq!(pool.resident_bytes(), 2 * KvPool::page_bytes(2, 8));
+        let q = rng.normal_vec(8);
+        for t in 0..3 {
+            assert_eq!(a.key_dot(0, t, &q), b.key_dot(0, t, &q));
+        }
+        // Mutating the original must not touch the clone.
+        let k = rng.normal_vec(16);
+        let v = rng.normal_vec(16);
+        a.append(&k, &v);
+        assert_eq!(b.len(), 3);
     }
 }

@@ -1,0 +1,255 @@
+//! Paged KV block allocator (the session-owned KV cache's memory substrate).
+//!
+//! vLLM-style paging shrunk to the mobile setting: KV storage is carved
+//! into fixed-size **pages** of [`PAGE_TOKENS`] token records, drawn from a
+//! shared [`KvPool`] with an explicit byte budget. Sessions (via
+//! `kv::KvLayer`) take pages as they append tokens and return them on
+//! `drop_prefix`/`clear`/drop, so concurrent requests share one bounded
+//! DRAM arena instead of each growing unbounded `Vec`s.
+//!
+//! The pool never fails an allocation — mobile engines must degrade, not
+//! OOM — it instead *reports* pressure (`over_budget`, `would_exceed`) and
+//! the owners react: `memory::hybrid::HybridKvLayer` evicts its oldest
+//! records to the flash tier, and the coordinator's admission control
+//! preempts whole sessions to flash before prefilling new ones (§4.1's
+//! DRAM-Flash hybrid storage applied to multi-request serving).
+//!
+//! Freed pages go to free lists keyed by layer geometry
+//! `(kv_heads, head_dim)` so reuse never reallocates; a small cap bounds
+//! how much a burst leaves cached.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::quant::asym::AsymParams;
+
+/// Token records per page. 16 records keeps pages ≈ tens of KB for
+/// 7B-class geometry (4 kv heads × 128 dim ⇒ ~17 KB/page) — large enough
+/// that the per-page overhead vanishes, small enough that a session's
+/// tail waste is one short page.
+pub const PAGE_TOKENS: usize = 16;
+
+/// Max free pages cached per geometry before excess pages are actually
+/// deallocated.
+const FREE_LIST_CAP: usize = 64;
+
+/// One fixed-capacity block of [`PAGE_TOKENS`] token records in the §4.2
+/// token-major layout. Slot `s` of the page holds one token's record:
+/// int8 keys `[kv_heads, head_dim]`, per-(token,head) asymmetric params,
+/// fp8 values `[kv_heads, head_dim]`.
+#[derive(Clone, Debug)]
+pub struct Page {
+    pub(crate) k_q: Vec<i8>,
+    pub(crate) k_params: Vec<AsymParams>,
+    pub(crate) v_f8: Vec<u8>,
+}
+
+impl Page {
+    fn new(kv_heads: usize, head_dim: usize) -> Self {
+        let kd = PAGE_TOKENS * kv_heads * head_dim;
+        Page {
+            k_q: vec![0; kd],
+            k_params: vec![AsymParams { scale: 1.0, bias: 0.0 }; PAGE_TOKENS * kv_heads],
+            v_f8: vec![0; kd],
+        }
+    }
+}
+
+/// Allocation counters (observability; `coordinator::metrics` snapshots
+/// the byte figures).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Pages newly allocated (free list miss).
+    pub allocated: u64,
+    /// Pages served from a free list.
+    pub reused: u64,
+    /// Pages returned by their owners.
+    pub returned: u64,
+    /// High-water mark of in-use bytes.
+    pub peak_bytes: usize,
+}
+
+struct PoolInner {
+    in_use_bytes: usize,
+    free: HashMap<(usize, usize), Vec<Page>>,
+    stats: PoolStats,
+}
+
+/// Shared page arena with a byte budget. Cheap to share: wrap in an `Arc`
+/// and hand a clone to every session's `KvLayer`.
+pub struct KvPool {
+    budget_bytes: usize,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvPool {
+    pub fn new(budget_bytes: usize) -> Self {
+        KvPool {
+            budget_bytes,
+            inner: Mutex::new(PoolInner {
+                in_use_bytes: 0,
+                free: HashMap::new(),
+                stats: PoolStats::default(),
+            }),
+        }
+    }
+
+    /// A pool that reports no pressure (single-session / test use).
+    pub fn unbounded() -> Self {
+        KvPool::new(usize::MAX)
+    }
+
+    /// DRAM bytes of one page for the given layer geometry
+    /// (int8 K + 8-byte params + fp8 V per head, [`PAGE_TOKENS`] records).
+    pub fn page_bytes(kv_heads: usize, head_dim: usize) -> usize {
+        PAGE_TOKENS * kv_heads * (head_dim + 8 + head_dim)
+    }
+
+    /// Take a page (free list first, fresh allocation on miss). Never
+    /// fails: going over budget is reported, not enforced here — owners
+    /// must check [`KvPool::over_budget`] and evict (spill to flash).
+    pub fn take_page(&self, kv_heads: usize, head_dim: usize) -> Page {
+        let bytes = Self::page_bytes(kv_heads, head_dim);
+        let mut g = self.inner.lock().unwrap();
+        g.in_use_bytes += bytes;
+        if g.in_use_bytes > g.stats.peak_bytes {
+            g.stats.peak_bytes = g.in_use_bytes;
+        }
+        let recycled = g.free.get_mut(&(kv_heads, head_dim)).and_then(|v| v.pop());
+        match recycled {
+            Some(p) => {
+                g.stats.reused += 1;
+                p
+            }
+            None => {
+                g.stats.allocated += 1;
+                Page::new(kv_heads, head_dim)
+            }
+        }
+    }
+
+    /// Return a page to its geometry's free list (dropped outright once
+    /// the free list is full).
+    pub fn put_page(&self, kv_heads: usize, head_dim: usize, page: Page) {
+        let bytes = Self::page_bytes(kv_heads, head_dim);
+        let mut g = self.inner.lock().unwrap();
+        g.in_use_bytes = g.in_use_bytes.saturating_sub(bytes);
+        g.stats.returned += 1;
+        let list = g.free.entry((kv_heads, head_dim)).or_default();
+        if list.len() < FREE_LIST_CAP {
+            list.push(page);
+        }
+    }
+
+    /// Byte budget this pool was created with.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Bytes currently held by live pages (free-listed pages excluded:
+    /// they are reclaimable immediately and carry no KV state).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().in_use_bytes
+    }
+
+    /// True when live pages exceed the budget — owners should evict.
+    pub fn over_budget(&self) -> bool {
+        self.resident_bytes() > self.budget_bytes
+    }
+
+    /// Would taking `extra` more bytes exceed the budget? (Admission
+    /// control asks this before prefilling a new session.)
+    pub fn would_exceed(&self, extra: usize) -> bool {
+        self.resident_bytes().saturating_add(extra) > self.budget_bytes
+    }
+
+    /// Bytes left under the budget.
+    pub fn available_bytes(&self) -> usize {
+        self.budget_bytes.saturating_sub(self.resident_bytes())
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvPool")
+            .field("budget_bytes", &self.budget_bytes)
+            .field("resident_bytes", &self.resident_bytes())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_roundtrip_accounts_bytes() {
+        let pool = KvPool::new(1 << 20);
+        let pb = KvPool::page_bytes(2, 8);
+        assert_eq!(pb, PAGE_TOKENS * 2 * 24);
+        let p1 = pool.take_page(2, 8);
+        let p2 = pool.take_page(2, 8);
+        assert_eq!(pool.resident_bytes(), 2 * pb);
+        pool.put_page(2, 8, p1);
+        assert_eq!(pool.resident_bytes(), pb);
+        pool.put_page(2, 8, p2);
+        assert_eq!(pool.resident_bytes(), 0);
+        let s = pool.stats();
+        assert_eq!(s.allocated, 2);
+        assert_eq!(s.returned, 2);
+        assert_eq!(s.peak_bytes, 2 * pb);
+    }
+
+    #[test]
+    fn free_list_reuses_pages() {
+        let pool = KvPool::unbounded();
+        let p = pool.take_page(4, 16);
+        pool.put_page(4, 16, p);
+        let _p = pool.take_page(4, 16);
+        let s = pool.stats();
+        assert_eq!(s.allocated, 1);
+        assert_eq!(s.reused, 1);
+    }
+
+    #[test]
+    fn free_lists_are_per_geometry() {
+        let pool = KvPool::unbounded();
+        let p = pool.take_page(2, 8);
+        pool.put_page(2, 8, p);
+        // Different geometry must not get the cached (2, 8) page.
+        let q = pool.take_page(4, 16);
+        assert_eq!(q.k_q.len(), PAGE_TOKENS * 4 * 16);
+        assert_eq!(pool.stats().allocated, 2);
+    }
+
+    #[test]
+    fn budget_pressure_is_reported_not_enforced() {
+        let pb = KvPool::page_bytes(2, 8);
+        let pool = KvPool::new(pb); // budget: exactly one page
+        assert!(!pool.over_budget());
+        assert!(!pool.would_exceed(pb));
+        assert!(pool.would_exceed(pb + 1));
+        let p1 = pool.take_page(2, 8);
+        assert!(!pool.over_budget(), "at budget is not over budget");
+        assert_eq!(pool.available_bytes(), 0);
+        // Second page still succeeds (graceful degradation)…
+        let p2 = pool.take_page(2, 8);
+        // …but the pressure is visible to owners.
+        assert!(pool.over_budget());
+        pool.put_page(2, 8, p1);
+        pool.put_page(2, 8, p2);
+        assert!(!pool.over_budget());
+    }
+
+    #[test]
+    fn unbounded_pool_never_pressures() {
+        let pool = KvPool::unbounded();
+        let _p = pool.take_page(2, 8);
+        assert!(!pool.over_budget());
+        assert!(!pool.would_exceed(usize::MAX), "saturating math, no overflow");
+    }
+}

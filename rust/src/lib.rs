@@ -1,12 +1,23 @@
 //! MNN-LLM reproduction: a generic inference engine for fast LLM deployment
 //! on (simulated) mobile devices.
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Three-layer architecture (see DESIGN.md in this directory):
 //! * Layer 1/2 (build time, Python): Pallas kernels + JAX model, AOT-lowered
 //!   to `artifacts/*.hlo.txt`.
-//! * Layer 3 (this crate): the serving engine — PJRT runtime, DRAM-Flash
-//!   hybrid storage, combined quantization, hardware-driven data reorder,
-//!   multicore balancing, geometry compute, LoRA, scheduler/batcher.
+//! * Layer 3 (this crate): the serving engine — PJRT runtime (behind the
+//!   `pjrt` feature), DRAM-Flash hybrid storage, combined quantization,
+//!   hardware-driven data reorder, multicore balancing, geometry compute,
+//!   LoRA, and the scheduler/batcher with session-owned **paged KV**: all
+//!   per-request state lives in sessions drawing fixed-size KV pages from
+//!   a budgeted shared pool (`kv::paged`), spilling to flash under
+//!   pressure, which is what makes continuous batching work on the native
+//!   backend.
+
+// The codebase favors explicit index loops where they mirror the paper's
+// tiling math; keep clippy focused on real defects.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_memcpy)]
 
 pub mod baselines;
 pub mod bench;

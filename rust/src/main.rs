@@ -101,10 +101,11 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
             out
         }
         "native" => {
-            let mut m = NativeModel::load(&dir, EngineOptions::default())?;
+            let m = NativeModel::load(&dir, EngineOptions::default())?;
             println!("weights loaded+packed in {:.2}s", t0.elapsed().as_secs_f64());
             let t1 = std::time::Instant::now();
-            let out = m.generate(&ids, n);
+            let mut sess = m.new_session();
+            let out = m.generate(&mut sess, &ids, n);
             println!("generated {} tokens in {:.2}s", out.len(), t1.elapsed().as_secs_f64());
             out
         }

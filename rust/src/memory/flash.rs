@@ -54,16 +54,11 @@ impl FlashSim {
         })
     }
 
-    /// A tmpfile-backed device (tests, benches).
+    /// A tmpfile-backed device (tests, benches). The path is unique even
+    /// across concurrent callers — two FlashSims sharing a backing file
+    /// would corrupt each other's records.
     pub fn temp(tier: MemTier) -> std::io::Result<Self> {
-        let path = std::env::temp_dir().join(format!(
-            "mnn_flash_{}_{:x}.bin",
-            std::process::id(),
-            std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .unwrap()
-                .as_nanos()
-        ));
+        let path = crate::util::unique_temp_path("mnn_flash", ".bin");
         Self::create(&path, tier, false)
     }
 
@@ -102,6 +97,17 @@ impl FlashSim {
             std::thread::sleep(std::time::Duration::from_secs_f64(t));
         }
         Ok(t)
+    }
+
+    /// Truncate the backing file, discarding every stored record. Only
+    /// safe when no previously returned offset will be read again (e.g.
+    /// the engine reclaiming its KV spill store once all sessions ended).
+    /// Cumulative stats are preserved.
+    pub fn reset(&self) -> std::io::Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        g.file.set_len(0)?;
+        g.len = 0;
+        Ok(())
     }
 
     pub fn len(&self) -> u64 {

@@ -6,18 +6,31 @@
 //! (memory::prefetch) overlaps that load with the previous layer's compute
 //! window so it is free until the spilled span exceeds the
 //! bandwidth-delay product.
+//!
+//! Two eviction triggers:
+//! * the layer's own `dram_budget_tokens` (the paper's single-sequence
+//!   spill threshold), and
+//! * pressure on the shared [`KvPool`] the resident pages come from —
+//!   when concurrent sessions collectively exceed the pool's byte budget,
+//!   appends shed this layer's oldest records to flash until the pool is
+//!   back under budget (or the layer is empty). This is what lets the
+//!   coordinator keep admitting requests instead of OOMing.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::cpu::activation::softmax_inplace;
-use crate::kv::KvLayer;
+use crate::kv::{KvLayer, KvPool};
 use crate::memory::flash::FlashSim;
 
 /// One layer's KV with a flash tier below it.
 pub struct HybridKvLayer {
-    /// DRAM-resident suffix of the sequence.
+    /// DRAM-resident suffix of the sequence (pages from the shared pool).
     pub resident: KvLayer,
-    /// Staged copy of the spilled prefix (refreshed by prefetch).
+    /// Staged copy of the spilled prefix (refreshed by prefetch). Staging
+    /// is transient scratch and deliberately lives on its own unbounded
+    /// pool — the shared budget governs *resident* KV; long-context decode
+    /// under pressure uses the streaming path, which never stages.
     staging: KvLayer,
     /// True when `staging` holds all spilled tokens.
     staged_valid: bool,
@@ -26,6 +39,12 @@ pub struct HybridKvLayer {
     spilled: Vec<u64>,
     /// Spill threshold: max resident tokens before migration.
     pub dram_budget_tokens: usize,
+    /// Shared pool the resident pages are drawn from.
+    pool: Arc<KvPool>,
+    /// Cumulative records written to flash (spills).
+    spilled_records: u64,
+    /// Cumulative records read back from flash (stage + streaming).
+    restored_records: AtomicU64,
 }
 
 impl HybridKvLayer {
@@ -35,13 +54,28 @@ impl HybridKvLayer {
         flash: Arc<FlashSim>,
         dram_budget_tokens: usize,
     ) -> Self {
+        Self::with_pool(kv_heads, head_dim, flash, dram_budget_tokens,
+                        Arc::new(KvPool::unbounded()))
+    }
+
+    /// Resident pages come from `pool`; pool pressure triggers eviction.
+    pub fn with_pool(
+        kv_heads: usize,
+        head_dim: usize,
+        flash: Arc<FlashSim>,
+        dram_budget_tokens: usize,
+        pool: Arc<KvPool>,
+    ) -> Self {
         HybridKvLayer {
-            resident: KvLayer::new(kv_heads, head_dim),
+            resident: KvLayer::with_pool(kv_heads, head_dim, pool.clone()),
             staging: KvLayer::new(kv_heads, head_dim),
             staged_valid: true, // nothing spilled yet
             flash,
             spilled: Vec::new(),
             dram_budget_tokens: dram_budget_tokens.max(1),
+            pool,
+            spilled_records: 0,
+            restored_records: AtomicU64::new(0),
         }
     }
 
@@ -62,19 +96,68 @@ impl HybridKvLayer {
         self.resident.bytes_per_token()
     }
 
-    /// Append one token; spill the oldest resident tokens if over budget.
-    /// The spill is one sequential flash append per token (the paper: each
-    /// step produces ~1 KB of new KV).
+    /// Records ever spilled to flash (monotone counter for EngineMetrics).
+    pub fn spill_count(&self) -> u64 {
+        self.spilled_records
+    }
+
+    /// Records ever read back from flash (monotone counter).
+    pub fn restore_count(&self) -> u64 {
+        self.restored_records.load(Ordering::Relaxed)
+    }
+
+    /// Move the oldest resident record to flash.
+    fn spill_one(&mut self) -> std::io::Result<()> {
+        let rec = self.resident.serialize_token(0);
+        let off = self.flash.append(&rec)?;
+        self.spilled.push(off);
+        self.resident.drop_prefix(1);
+        self.spilled_records += 1;
+        self.staged_valid = false;
+        Ok(())
+    }
+
+    /// Append one token; evict the oldest resident tokens while over the
+    /// layer's token budget or while the shared pool is over its byte
+    /// budget. The spill is one sequential flash append per token (the
+    /// paper: each step produces ~1 KB of new KV).
     pub fn append(&mut self, k: &[f32], v: &[f32]) -> std::io::Result<()> {
         self.resident.append(k, v);
-        while self.resident.len() > self.dram_budget_tokens {
-            let rec = self.resident.serialize_token(0);
-            let off = self.flash.append(&rec)?;
-            self.spilled.push(off);
-            self.resident.drop_prefix(1);
-            self.staged_valid = false;
+        while !self.resident.is_empty()
+            && (self.resident.len() > self.dram_budget_tokens || self.pool.over_budget())
+        {
+            self.spill_one()?;
+        }
+        if self.resident.is_empty() {
+            // Everything went to flash: release the (empty) tail page too.
+            self.resident.clear();
         }
         Ok(())
+    }
+
+    /// Terminal release: drop ALL KV state — resident pages back to the
+    /// pool, staging freed, spilled flash offsets forgotten. For sessions
+    /// that have produced their last token: their KV will never be
+    /// attended again, so holding it only pressures live sessions. The
+    /// cumulative spill/restore counters survive for metrics.
+    pub fn release(&mut self) {
+        self.resident.clear();
+        self.staging.clear();
+        self.spilled.clear();
+        self.staged_valid = true;
+    }
+
+    /// Preemption hook: spill every resident record to flash and release
+    /// all of this layer's pages. Returns records spilled. Value-neutral:
+    /// decode continues via the streaming path (or `stage()`).
+    pub fn spill_all(&mut self) -> std::io::Result<usize> {
+        let n = self.resident.len();
+        for _ in 0..n {
+            self.spill_one()?;
+        }
+        self.resident.clear();
+        self.drop_staging();
+        Ok(n)
     }
 
     /// Load all spilled records into staging. Returns modeled flash seconds
@@ -102,6 +185,8 @@ impl HybridKvLayer {
             prev_end = Some(off + rec_len as u64);
             self.staging.push_serialized(&buf);
         }
+        self.restored_records
+            .fetch_add(self.spilled.len() as u64, Ordering::Relaxed);
         self.staged_valid = true;
         Ok(total)
     }
@@ -158,6 +243,11 @@ impl HybridKvLayer {
     /// DRAM occupancy (resident + staging).
     pub fn dram_bytes(&self) -> usize {
         self.resident.resident_bytes() + self.staging.resident_bytes()
+    }
+
+    /// Pool-accounted bytes of the resident suffix only.
+    pub fn resident_kv_bytes(&self) -> usize {
+        self.resident.resident_bytes()
     }
 
     /// Release the staging copy (tokens remain on flash).
@@ -220,25 +310,31 @@ impl HybridKvLayer {
                 cache.accum_value(kvh, tok, w, o);
             }
         };
-        // Stream the spilled prefix chunk by chunk.
-        let rec_len = self.resident.bytes_per_token();
+        // Stream the spilled prefix chunk by chunk. The chunk scratch (and
+        // its private pool) is only built when something is actually
+        // spilled — decode's common no-spill case allocates nothing here.
         let mut flash_s = 0.0;
-        let mut chunk = KvLayer::new(kvh_n, d);
-        let mut buf = vec![0u8; rec_len];
-        for ids in self.spilled.chunks(chunk_tokens) {
-            chunk.clear();
-            let mut prev_end: Option<u64> = None;
-            for &off in ids {
-                let t = self.flash.read_at(off, &mut buf)?;
-                flash_s += match prev_end {
-                    Some(end) if end == off => t - self.flash.tier().latency_s,
-                    _ => t,
-                };
-                prev_end = Some(off + rec_len as u64);
-                chunk.push_serialized(&buf);
-            }
-            for tok in 0..chunk.len() {
-                absorb(&chunk, tok, &mut run_m, &mut run_s, out);
+        if !self.spilled.is_empty() {
+            let rec_len = self.resident.bytes_per_token();
+            let mut chunk = KvLayer::new(kvh_n, d);
+            let mut buf = vec![0u8; rec_len];
+            for ids in self.spilled.chunks(chunk_tokens) {
+                chunk.clear();
+                let mut prev_end: Option<u64> = None;
+                for &off in ids {
+                    let t = self.flash.read_at(off, &mut buf)?;
+                    flash_s += match prev_end {
+                        Some(end) if end == off => t - self.flash.tier().latency_s,
+                        _ => t,
+                    };
+                    prev_end = Some(off + rec_len as u64);
+                    chunk.push_serialized(&buf);
+                }
+                self.restored_records
+                    .fetch_add(ids.len() as u64, Ordering::Relaxed);
+                for tok in 0..chunk.len() {
+                    absorb(&chunk, tok, &mut run_m, &mut run_s, out);
+                }
             }
         }
         // Then the DRAM-resident suffix.
@@ -278,6 +374,7 @@ mod tests {
         }
         assert_eq!(h.spilled_tokens(), 0);
         assert_eq!(h.len(), 10);
+        assert_eq!(h.spill_count(), 0);
     }
 
     #[test]
@@ -292,6 +389,86 @@ mod tests {
         assert_eq!(h.spilled_tokens(), 6);
         assert_eq!(h.resident.len(), 4);
         assert_eq!(h.len(), 10);
+        assert_eq!(h.spill_count(), 6);
+    }
+
+    #[test]
+    fn pool_pressure_evicts_instead_of_panicking() {
+        // Budget of ONE page shared by two layers: appends keep succeeding;
+        // the overflow is shed to flash and the pool ends under budget.
+        let pool = Arc::new(KvPool::new(KvPool::page_bytes(2, 8)));
+        let fl = flash();
+        let mut a = HybridKvLayer::with_pool(2, 8, fl.clone(), usize::MAX / 2, pool.clone());
+        let mut b = HybridKvLayer::with_pool(2, 8, fl, usize::MAX / 2, pool.clone());
+        let mut rng = Rng::new(9);
+        for _ in 0..40 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            a.append(&k, &v).unwrap();
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            b.append(&k, &v).unwrap();
+            // The budget is re-established after every append.
+            assert!(
+                pool.resident_bytes() <= pool.budget_bytes(),
+                "pool {} > budget {}",
+                pool.resident_bytes(),
+                pool.budget_bytes()
+            );
+        }
+        assert_eq!(a.len(), 40);
+        assert_eq!(b.len(), 40);
+        assert!(a.spill_count() > 0 && b.spill_count() > 0);
+    }
+
+    #[test]
+    fn spill_all_releases_pages_and_streaming_still_matches() {
+        let pool = Arc::new(KvPool::unbounded());
+        let fl = flash();
+        let mut rng = Rng::new(12);
+        let (heads, kv_heads, d, t) = (4, 2, 16, 20);
+        let mut plain = KvLayer::new(kv_heads, d);
+        let mut hybrid =
+            HybridKvLayer::with_pool(kv_heads, d, fl, usize::MAX / 2, pool.clone());
+        for _ in 0..t {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            plain.append(&k, &v);
+            hybrid.append(&k, &v).unwrap();
+        }
+        assert!(pool.resident_bytes() > 0);
+        let spilled = hybrid.spill_all().unwrap();
+        assert_eq!(spilled, t);
+        assert_eq!(pool.resident_bytes(), 0, "preemption releases all pages");
+        assert_eq!(hybrid.len(), t, "tokens survive on flash");
+        let q = rng.normal_vec(heads * d);
+        let mut want = vec![0f32; heads * d];
+        plain_attention(&q, heads, &plain, &mut want);
+        let mut got = vec![0f32; heads * d];
+        hybrid.decode_attention_streaming(&q, heads, &mut got, 8).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        assert_eq!(hybrid.restore_count(), t as u64);
+    }
+
+    #[test]
+    fn release_forgets_state_but_keeps_counters() {
+        let pool = Arc::new(KvPool::unbounded());
+        let mut h = HybridKvLayer::with_pool(2, 8, flash(), 2, pool.clone());
+        let mut rng = Rng::new(13);
+        for _ in 0..8 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            h.append(&k, &v).unwrap();
+        }
+        assert!(h.spill_count() > 0 && pool.resident_bytes() > 0);
+        let spills_before = h.spill_count();
+        h.release();
+        assert_eq!(h.len(), 0, "all KV gone");
+        assert_eq!(h.spilled_tokens(), 0);
+        assert_eq!(pool.resident_bytes(), 0, "pages back in the pool");
+        assert_eq!(h.spill_count(), spills_before, "counters survive");
     }
 
     #[test]
@@ -335,6 +512,7 @@ mod tests {
         let t2 = h.stage().unwrap();
         assert_eq!(t2, 0.0, "second stage is free");
         assert_eq!(h.stage_cost(), 0.0);
+        assert_eq!(h.restore_count(), 6, "stage restored the spilled prefix once");
     }
 
     #[test]

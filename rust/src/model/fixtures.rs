@@ -1,0 +1,217 @@
+//! Self-contained test fixture: a tiny deterministic 2-layer model written
+//! as a real artifacts directory (manifest.json + weights.bin +
+//! embedding.bin) the engine loads exactly like AOT output.
+//!
+//! The seed repo's integration tests silently early-returned when
+//! `artifacts/` (produced by the Python AOT pipeline) was absent, which
+//! made the whole tier-1 suite vacuous. This module removes that
+//! dependency for everything that doesn't strictly need compiled HLO
+//! graphs: weights are seeded-random, quantized with the same
+//! `QuantizedMatrix` scheme the exporter uses, and serialized through
+//! [`WeightWriter`] — the bit-exact mirror of the weights.bin parser.
+//!
+//! Only PJRT-backed tests (which execute lowered graphs) still require
+//! real AOT artifacts; those are `#[ignore]`d with a reason instead of
+//! early-returning.
+
+use std::path::{Path, PathBuf};
+
+use crate::model::config::ModelConfig;
+use crate::model::native::{EngineOptions, NativeModel};
+use crate::model::weights::{WeightWriter, DT_I8, DT_U8};
+use crate::quant::asym::{QuantizedMatrix, WeightBits};
+use crate::util::bf16;
+use crate::util::rng::Rng;
+
+/// The fixture's dimensions: 2 layers, GQA (4 heads / 2 kv heads), int4
+/// MLP-compatible even reduce dims, vocab covering the byte tokenizer's
+/// specials (≥ 258).
+pub fn fixture_config() -> ModelConfig {
+    ModelConfig {
+        name: "fixture-2l".into(),
+        vocab: 512,
+        hidden: 32,
+        inter: 48,
+        layers: 2,
+        heads: 4,
+        kv_heads: 2,
+        max_len: 128,
+        rope_theta: 1e4,
+        rms_eps: 1e-6,
+    }
+}
+
+/// A generated artifacts directory; removed from disk on drop.
+pub struct Fixture {
+    dir: PathBuf,
+}
+
+impl Fixture {
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Quantize a seeded-random [n, k] matrix and write its q/s/b tensors —
+/// the triplet `model::native::qlin` expects.
+fn push_linear(w: &mut WeightWriter, rng: &mut Rng, name: &str, n: usize, k: usize,
+               bits: WeightBits) {
+    let dense: Vec<f32> = rng.normal_vec(n * k).iter().map(|x| x * 0.1).collect();
+    let qm = QuantizedMatrix::from_f32(&dense, n, k, bits);
+    match bits {
+        WeightBits::Int8 => w.push(&format!("{name}.q"), DT_I8, &[n, k], &qm.data),
+        WeightBits::Int4 => w.push(&format!("{name}.q"), DT_U8, &[n, k / 2], &qm.data),
+    }
+    let scales: Vec<f32> = qm.params.iter().map(|p| p.scale).collect();
+    let biases: Vec<f32> = qm.params.iter().map(|p| p.bias).collect();
+    w.push_f32(&format!("{name}.s"), &[n], &scales);
+    w.push_f32(&format!("{name}.b"), &[n], &biases);
+}
+
+/// Norm weights near 1.0 (rmsnorm gains).
+fn norm_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    rng.normal_vec(n).iter().map(|x| 1.0 + 0.05 * x).collect()
+}
+
+/// Write a complete, loadable artifacts directory under the system temp
+/// dir. Deterministic in `seed` (the directory name is unique per call;
+/// the *contents* depend only on the seed).
+pub fn write_fixture(seed: u64) -> std::io::Result<Fixture> {
+    let cfg = fixture_config();
+    let dir = crate::util::unique_temp_path("mnn_fixture", "");
+    std::fs::create_dir_all(&dir)?;
+    let mut rng = Rng::new(seed);
+    let (h, kvd, inter, vocab) = (cfg.hidden, cfg.kv_dim(), cfg.inter, cfg.vocab);
+
+    let mut w = WeightWriter::new();
+    for i in 0..cfg.layers {
+        let p = format!("L{i}.");
+        push_linear(&mut w, &mut rng, &format!("{p}wq"), h, h, WeightBits::Int8);
+        push_linear(&mut w, &mut rng, &format!("{p}wk"), kvd, h, WeightBits::Int8);
+        push_linear(&mut w, &mut rng, &format!("{p}wv"), kvd, h, WeightBits::Int8);
+        push_linear(&mut w, &mut rng, &format!("{p}wo"), h, h, WeightBits::Int8);
+        push_linear(&mut w, &mut rng, &format!("{p}gate"), inter, h, WeightBits::Int4);
+        push_linear(&mut w, &mut rng, &format!("{p}up"), inter, h, WeightBits::Int4);
+        push_linear(&mut w, &mut rng, &format!("{p}down"), h, inter, WeightBits::Int4);
+        let bq: Vec<f32> = rng.normal_vec(h).iter().map(|x| x * 0.01).collect();
+        w.push_f32(&format!("{p}bq"), &[h], &bq);
+        let bk: Vec<f32> = rng.normal_vec(kvd).iter().map(|x| x * 0.01).collect();
+        w.push_f32(&format!("{p}bk"), &[kvd], &bk);
+        let bv: Vec<f32> = rng.normal_vec(kvd).iter().map(|x| x * 0.01).collect();
+        w.push_f32(&format!("{p}bv"), &[kvd], &bv);
+        w.push_f32(&format!("{p}ln1"), &[h], &norm_vec(&mut rng, h));
+        w.push_f32(&format!("{p}ln2"), &[h], &norm_vec(&mut rng, h));
+    }
+    w.push_f32("fnorm", &[h], &norm_vec(&mut rng, h));
+    push_linear(&mut w, &mut rng, "lm_head", vocab, h, WeightBits::Int8);
+    std::fs::write(dir.join("weights.bin"), w.finish())?;
+
+    // bf16 [vocab, hidden] embedding table.
+    let table: Vec<f32> = rng.normal_vec(vocab * h).iter().map(|x| x * 0.1).collect();
+    let mut emb = Vec::with_capacity(table.len() * 2);
+    for &v in &table {
+        emb.extend_from_slice(&bf16::f32_to_bf16(v).to_le_bytes());
+    }
+    std::fs::write(dir.join("embedding.bin"), emb)?;
+
+    // Manifest with empty graph/weight tables: the native backend ignores
+    // them; the PJRT backend (which needs compiled graphs) cannot load a
+    // fixture and is tested separately against real AOT artifacts.
+    let manifest = format!(
+        concat!(
+            "{{\n",
+            "  \"model\": {{\"name\": \"{name}\", \"vocab\": {vocab}, \"hidden\": {hidden}, ",
+            "\"inter\": {inter}, \"layers\": {layers}, \"heads\": {heads}, ",
+            "\"kv_heads\": {kv_heads}, \"max_len\": {max_len}, ",
+            "\"rope_theta\": 10000.0, \"rms_eps\": 1e-6}},\n",
+            "  \"prefill_buckets\": [16, 64],\n",
+            "  \"weights\": [],\n",
+            "  \"graphs\": {{}},\n",
+            "  \"embedding\": {{\"file\": \"embedding.bin\"}},\n",
+            "  \"seed\": {seed}\n",
+            "}}\n"
+        ),
+        name = cfg.name,
+        vocab = vocab,
+        hidden = h,
+        inter = inter,
+        layers = cfg.layers,
+        heads = cfg.heads,
+        kv_heads = cfg.kv_heads,
+        max_len = cfg.max_len,
+        seed = seed,
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)?;
+    Ok(Fixture { dir })
+}
+
+/// Fixture + loaded native model in one call (the common test setup).
+/// Keep the `Fixture` alive as long as you may reload from its dir.
+pub fn native_model(seed: u64, options: EngineOptions)
+                    -> std::io::Result<(Fixture, NativeModel)> {
+    let fx = write_fixture(seed)?;
+    let m = NativeModel::load(fx.dir(), options)?;
+    Ok((fx, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+
+    #[test]
+    fn fixture_manifest_parses_and_matches_config() {
+        let fx = write_fixture(1).unwrap();
+        let m = Manifest::load(fx.dir()).unwrap();
+        assert_eq!(m.model, fixture_config());
+        assert_eq!(m.prefill_buckets, vec![16, 64]);
+        assert_eq!(m.embedding_file, "embedding.bin");
+        assert_eq!(m.seed, 1);
+    }
+
+    #[test]
+    fn fixture_contents_are_seed_deterministic() {
+        let a = write_fixture(3).unwrap();
+        let b = write_fixture(3).unwrap();
+        let c = write_fixture(4).unwrap();
+        for f in ["weights.bin", "embedding.bin", "manifest.json"] {
+            let wa = std::fs::read(a.dir().join(f)).unwrap();
+            let wb = std::fs::read(b.dir().join(f)).unwrap();
+            assert_eq!(wa, wb, "{f}: same seed, same bytes");
+        }
+        assert_ne!(
+            std::fs::read(a.dir().join("weights.bin")).unwrap(),
+            std::fs::read(c.dir().join("weights.bin")).unwrap(),
+            "different seed, different weights"
+        );
+    }
+
+    #[test]
+    fn fixture_model_loads_and_generates_in_vocab() {
+        let (_fx, m) = native_model(2, EngineOptions::default()).unwrap();
+        let out = m.generate_once(&[104, 101, 108, 108, 111], 8);
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|&t| t < m.config.vocab));
+        let logits = {
+            let mut sess = m.new_session();
+            m.prefill(&mut sess, &[1, 2, 3])
+        };
+        assert_eq!(logits.len(), m.config.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fixture_dir_removed_on_drop() {
+        let path = {
+            let fx = write_fixture(5).unwrap();
+            fx.dir().to_path_buf()
+        };
+        assert!(!path.exists());
+    }
+}

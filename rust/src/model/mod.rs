@@ -3,6 +3,7 @@
 //! exercises the paper's CPU optimizations end-to-end.
 
 pub mod config;
+pub mod fixtures;
 pub mod graph;
 pub mod manifest;
 pub mod native;
@@ -12,6 +13,6 @@ pub mod weights;
 
 pub use config::ModelConfig;
 pub use manifest::Manifest;
-pub use native::NativeModel;
+pub use native::{NativeModel, NativeSession};
 pub use tokenizer::ByteTokenizer;
 pub use weights::WeightFile;

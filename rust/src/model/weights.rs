@@ -118,6 +118,60 @@ impl WeightFile {
     }
 }
 
+/// weights.bin writer — the exact mirror of [`WeightFile::parse`]. Used by
+/// `model::fixtures` to generate self-contained test artifacts without the
+/// Python exporter.
+pub struct WeightWriter {
+    count: u32,
+    body: Vec<u8>,
+}
+
+impl WeightWriter {
+    pub fn new() -> Self {
+        WeightWriter { count: 0, body: Vec::new() }
+    }
+
+    /// Append one tensor entry. `data` must already be the raw bytes of
+    /// `dtype` (e.g. packed nibbles for int4 → `DT_U8`).
+    pub fn push(&mut self, name: &str, dtype: u8, shape: &[usize], data: &[u8]) {
+        assert!(name.len() <= u16::MAX as usize);
+        assert!(shape.len() <= u8::MAX as usize);
+        self.body.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        self.body.extend_from_slice(name.as_bytes());
+        self.body.push(dtype);
+        self.body.push(shape.len() as u8);
+        for &d in shape {
+            self.body.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        self.body.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        self.body.extend_from_slice(data);
+        self.count += 1;
+    }
+
+    /// Push a f32 tensor from a slice.
+    pub fn push_f32(&mut self, name: &str, shape: &[usize], data: &[f32]) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.push(name, DT_F32, shape, &bytes);
+    }
+
+    /// Finish the container: magic | version | count | entries.
+    pub fn finish(self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.body.len());
+        out.extend_from_slice(b"MNNW");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&self.count.to_le_bytes());
+        out.extend_from_slice(&self.body);
+        out
+    }
+}
+
+impl Default for WeightWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +227,18 @@ mod tests {
         let mut u = sample();
         u.push(0);
         assert!(WeightFile::parse(&u).is_err());
+    }
+
+    #[test]
+    fn writer_roundtrips_through_parser() {
+        let mut w = WeightWriter::new();
+        w.push_f32("t.a", &[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        w.push("t.b", DT_I8, &[3], &[0xFF, 0x00, 0x7F]);
+        let bytes = w.finish();
+        // Bit-identical to the hand-rolled sample container.
+        assert_eq!(bytes, sample());
+        let wf = WeightFile::parse(&bytes).unwrap();
+        assert_eq!(wf.require("t.a").unwrap().as_f32(), vec![1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]

@@ -7,3 +7,6 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+pub mod tmpname;
+
+pub use tmpname::unique_temp_path;

@@ -1,0 +1,39 @@
+//! Unique temp-path generation shared by the flash simulator, the test
+//! fixture writer, and tests that clone artifacts for mutation.
+//!
+//! Uniqueness must hold across *concurrent* callers in one process (cargo
+//! runs tests in parallel threads) and across processes: the wall clock
+//! alone can collide on coarse-resolution hosts, so the name combines the
+//! pid, a process-wide sequence number, and nanoseconds.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// `$TMPDIR/{prefix}_{pid}_{seq}_{nanos}{suffix}` — unique per call.
+/// `suffix` should include its dot (e.g. ".bin") or be empty for a dir.
+pub fn unique_temp_path(prefix: &str, suffix: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    std::env::temp_dir().join(format!(
+        "{prefix}_{}_{}_{nanos:x}{suffix}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_are_unique_and_shaped() {
+        let a = unique_temp_path("mnn_t", ".bin");
+        let b = unique_temp_path("mnn_t", ".bin");
+        assert_ne!(a, b, "sequence number guarantees uniqueness");
+        let name = a.file_name().unwrap().to_str().unwrap();
+        assert!(name.starts_with("mnn_t_") && name.ends_with(".bin"));
+    }
+}

@@ -2,14 +2,17 @@
 //! AOT graphs implement the *same* model (same quantized weights, same
 //! combined-quantization scheme) — their outputs must agree.
 //!
-//! This is the strongest correctness signal in the repo: it ties L1 Pallas
-//! kernels + L2 JAX graphs to the independent Rust reimplementation.
+//! The PJRT half needs real AOT artifacts (compiled HLO from
+//! python/compile/aot.py) *and* the `pjrt` feature; it is `#[ignore]`d
+//! rather than silently skipped. The native-only invariants run against
+//! the self-contained fixture model.
 //!
 //! PJRT compilation is expensive and `PjRtClient` is not Sync, so all
 //! PJRT-dependent checks live in ONE test body sharing one runtime.
 
 use std::path::PathBuf;
 
+use mnn_llm::model::fixtures;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::model::sampler::argmax;
 use mnn_llm::runtime::PjrtRuntime;
@@ -27,16 +30,17 @@ fn cosine(a: &[f32], b: &[f32]) -> f32 {
 }
 
 #[test]
+#[ignore = "needs real AOT artifacts (make artifacts) and --features pjrt"]
 fn pjrt_vs_native_suite() {
-    let Some(dir) = artifacts() else { return };
+    let dir = artifacts().expect("artifacts/ with compiled HLO graphs");
     let rt = PjrtRuntime::load(&dir).expect("load runtime");
-    let mut native = NativeModel::load(&dir, EngineOptions::default()).unwrap();
+    let native = NativeModel::load(&dir, EngineOptions::default()).unwrap();
 
     // 1. Prefill logits agree (tight cosine + identical top-1).
     for prompt in [vec![104usize, 101, 108, 108, 111], vec![1, 2, 3], vec![500; 12]] {
         let (pjrt_logits, _) = rt.prefill(&prompt).unwrap();
-        native.reset_session();
-        let native_logits = native.prefill(&prompt);
+        let mut sess = native.new_session();
+        let native_logits = native.prefill(&mut sess, &prompt);
         let cos = cosine(&pjrt_logits, &native_logits);
         assert!(cos > 0.998, "prompt {prompt:?}: cosine {cos}");
         assert_eq!(
@@ -50,8 +54,7 @@ fn pjrt_vs_native_suite() {
     let prompt = [42usize, 43, 44, 45, 46];
     let n = 8;
     let pjrt_tokens = rt.generate(&prompt, n).unwrap();
-    native.reset_session();
-    let native_tokens = native.generate(&prompt, n);
+    let native_tokens = native.generate_once(&prompt, n);
     assert_eq!(pjrt_tokens, native_tokens, "greedy chains must match");
 
     // 3. Decode chain tracks prefill (PJRT KV correctness end-to-end).
@@ -85,18 +88,23 @@ fn pjrt_vs_native_suite() {
 
 #[test]
 fn native_options_never_change_numbers() {
-    // Every engine option combination is a pure performance/memory knob.
-    let Some(dir) = artifacts() else { return };
+    // Every engine option combination is a pure performance/memory knob —
+    // including the new paged-pool byte budget.
+    let fx = fixtures::write_fixture(7).unwrap();
     let prompt = [11usize, 22, 33, 44, 55, 66, 77];
     let n = 6;
-    let base = NativeModel::load(&dir, EngineOptions::default())
+    let base = NativeModel::load(fx.dir(), EngineOptions::default())
         .unwrap()
-        .generate(&prompt, n);
+        .generate_once(&prompt, n);
+    use mnn_llm::kv::KvPool;
     use mnn_llm::parallel::pool::WorkerConfig;
     use mnn_llm::reorder::solver::TileConfig;
+    let cfg = fixtures::fixture_config();
+    let page = KvPool::page_bytes(cfg.kv_heads, cfg.head_dim());
     let variants: Vec<EngineOptions> = vec![
         EngineOptions { embedding_in_flash: false, ..EngineOptions::default() },
         EngineOptions { kv_budget_tokens: 3, ..EngineOptions::default() },
+        EngineOptions { kv_pool_bytes: page, ..EngineOptions::default() },
         EngineOptions {
             tile: TileConfig { e_p: 2, h_p: 8, l_p: 4 },
             ..EngineOptions::default()
@@ -105,11 +113,12 @@ fn native_options_never_change_numbers() {
             tile: TileConfig { e_p: 10, h_p: 8, l_p: 8 },
             workers: WorkerConfig { rates: vec![1.0, 0.72, 0.72, 0.72] },
             kv_budget_tokens: 5,
+            kv_pool_bytes: 2 * page,
             embedding_in_flash: true,
         },
     ];
     for (i, opt) in variants.into_iter().enumerate() {
-        let got = NativeModel::load(&dir, opt).unwrap().generate(&prompt, n);
+        let got = NativeModel::load(fx.dir(), opt).unwrap().generate_once(&prompt, n);
         assert_eq!(got, base, "variant {i} changed outputs");
     }
 }

@@ -1,45 +1,35 @@
 //! Failure injection: corrupted artifacts, truncated containers, hostile
 //! manifests — the engine must reject them with errors, never crash or
 //! serve garbage silently.
+//!
+//! Runs against the self-contained fixture artifacts (`model::fixtures`),
+//! so every test here executes unconditionally.
 
 use std::fs;
 use std::path::{Path, PathBuf};
 
+use mnn_llm::model::fixtures;
 use mnn_llm::model::manifest::Manifest;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::model::weights::WeightFile;
 
-fn artifacts() -> Option<PathBuf> {
-    let d = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
-    d.join("manifest.json").exists().then_some(d)
-}
+const FILES: &[&str] = &["manifest.json", "weights.bin", "embedding.bin"];
 
-/// Copy the artifacts dir into a temp dir we can mutate.
-fn clone_artifacts(src: &Path, files: &[&str]) -> PathBuf {
-    let dst = std::env::temp_dir().join(format!(
-        "mnn_fi_{}_{:x}",
-        std::process::id(),
-        std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .unwrap()
-            .as_nanos()
-    ));
+/// Copy the fixture dir into a temp dir we can mutate.
+fn clone_artifacts(src: &Path) -> PathBuf {
+    let dst = mnn_llm::util::unique_temp_path("mnn_fi", "");
     fs::create_dir_all(&dst).unwrap();
-    for f in files {
+    for f in FILES {
         fs::copy(src.join(f), dst.join(f)).unwrap();
     }
     dst
 }
 
-const ALL: &[&str] = &[
-    "manifest.json",
-    "weights.bin",
-    "embedding.bin",
-    "decode.hlo.txt",
-    "prefill_16.hlo.txt",
-    "prefill_64.hlo.txt",
-    "prefill_256.hlo.txt",
-];
+fn corrupted_fixture() -> (fixtures::Fixture, PathBuf) {
+    let fx = fixtures::write_fixture(11).unwrap();
+    let dir = clone_artifacts(fx.dir());
+    (fx, dir)
+}
 
 #[test]
 fn missing_manifest_is_clean_error() {
@@ -50,9 +40,15 @@ fn missing_manifest_is_clean_error() {
 }
 
 #[test]
+fn pristine_clone_loads() {
+    // Control case: the mutation helpers start from a loadable dir.
+    let (_fx, dir) = corrupted_fixture();
+    assert!(NativeModel::load(&dir, EngineOptions::default()).is_ok());
+}
+
+#[test]
 fn truncated_weights_rejected() {
-    let Some(src) = artifacts() else { return };
-    let dir = clone_artifacts(&src, ALL);
+    let (_fx, dir) = corrupted_fixture();
     let path = dir.join("weights.bin");
     let bytes = fs::read(&path).unwrap();
     fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
@@ -62,8 +58,7 @@ fn truncated_weights_rejected() {
 
 #[test]
 fn corrupted_magic_rejected() {
-    let Some(src) = artifacts() else { return };
-    let dir = clone_artifacts(&src, ALL);
+    let (_fx, dir) = corrupted_fixture();
     let path = dir.join("weights.bin");
     let mut bytes = fs::read(&path).unwrap();
     bytes[0] = b'X';
@@ -73,16 +68,14 @@ fn corrupted_magic_rejected() {
 
 #[test]
 fn wrong_size_embedding_rejected() {
-    let Some(src) = artifacts() else { return };
-    let dir = clone_artifacts(&src, ALL);
+    let (_fx, dir) = corrupted_fixture();
     fs::write(dir.join("embedding.bin"), vec![0u8; 100]).unwrap();
     assert!(NativeModel::load(&dir, EngineOptions::default()).is_err());
 }
 
 #[test]
 fn garbage_manifest_rejected() {
-    let Some(src) = artifacts() else { return };
-    let dir = clone_artifacts(&src, ALL);
+    let (_fx, dir) = corrupted_fixture();
     fs::write(dir.join("manifest.json"), b"{not json").unwrap();
     assert!(Manifest::load(&dir).is_err());
     // Valid JSON, missing required fields.
@@ -92,8 +85,7 @@ fn garbage_manifest_rejected() {
 
 #[test]
 fn missing_tensor_rejected() {
-    let Some(src) = artifacts() else { return };
-    let dir = clone_artifacts(&src, ALL);
+    let (_fx, dir) = corrupted_fixture();
     // Rename a tensor inside weights.bin (same length, different name):
     // the engine's required-tensor lookup must fail cleanly.
     let path = dir.join("weights.bin");
@@ -111,8 +103,7 @@ fn missing_tensor_rejected() {
 
 #[test]
 fn weights_bin_with_trailing_garbage_rejected() {
-    let Some(src) = artifacts() else { return };
-    let dir = clone_artifacts(&src, ALL);
+    let (_fx, dir) = corrupted_fixture();
     let path = dir.join("weights.bin");
     let mut bytes = fs::read(&path).unwrap();
     bytes.extend_from_slice(b"EXTRA");
@@ -124,15 +115,24 @@ fn weights_bin_with_trailing_garbage_rejected() {
 fn bit_flip_in_weight_payload_changes_output_not_stability() {
     // A payload bit flip cannot be *detected* (no checksums — documented),
     // but it must never crash: the engine still produces finite logits.
-    let Some(src) = artifacts() else { return };
-    let dir = clone_artifacts(&src, ALL);
+    // Flip a byte well inside lm_head's int8 payload so the corruption hits
+    // weight codes, not a scale (a flipped f32 exponent could legitimately
+    // push logits to inf — that is a different failure class).
+    let (_fx, dir) = corrupted_fixture();
     let path = dir.join("weights.bin");
     let mut bytes = fs::read(&path).unwrap();
-    let n = bytes.len();
-    bytes[n / 2] ^= 0x55;
+    let needle = b"lm_head.q";
+    let pos = bytes
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .expect("tensor name present");
+    // Entry layout after the name: dtype u8 | ndim u8 | dims u32[2] |
+    // nbytes u64 — payload starts 18 bytes past the name's end.
+    let payload = pos + needle.len() + 18;
+    bytes[payload + 100] ^= 0x55;
     fs::write(&path, &bytes).unwrap();
-    if let Ok(mut m) = NativeModel::load(&dir, EngineOptions::default()) {
-        let logits = m.prefill(&[1, 2, 3]);
-        assert!(logits.iter().all(|v| v.is_finite()));
-    }
+    let m = NativeModel::load(&dir, EngineOptions::default()).unwrap();
+    let mut sess = m.new_session();
+    let logits = m.prefill(&mut sess, &[1, 2, 3]);
+    assert!(logits.iter().all(|v| v.is_finite()));
 }

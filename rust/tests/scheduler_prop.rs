@@ -1,0 +1,182 @@
+//! Property tests (seeded `util::rng`, many random schedules) for the
+//! scheduler and the paged-KV spill path:
+//! * every submitted id completes exactly once under Fifo and Interleaved,
+//!   across random workloads and pool budgets, on the fixture model;
+//! * all KV pool pages are freed after `run_all`;
+//! * greedy Interleaved == Fifo token streams (continuous batching is a
+//!   pure reordering);
+//! * spill→restore round-trips quantized records bit-exactly.
+
+use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
+use mnn_llm::coordinator::SchedulePolicy;
+use mnn_llm::device::SocProfile;
+use mnn_llm::kv::{KvLayer, PAGE_TOKENS};
+use mnn_llm::memory::flash::FlashSim;
+use mnn_llm::model::fixtures;
+use mnn_llm::model::native::{EngineOptions, NativeModel};
+use mnn_llm::util::prop::prop_check;
+use mnn_llm::util::rng::Rng;
+
+fn random_workload(rng: &mut Rng, vocab: usize) -> Vec<(Vec<usize>, usize)> {
+    let nreq = rng.range(1, 5);
+    (0..nreq)
+        .map(|_| {
+            let plen = rng.range(1, 20);
+            let prompt = (0..plen).map(|_| rng.below(vocab)).collect();
+            (prompt, rng.range(1, 6))
+        })
+        .collect()
+}
+
+#[test]
+fn every_id_completes_exactly_once_under_random_schedules_and_budgets() {
+    let fx = fixtures::write_fixture(21).unwrap();
+    let vocab = fixtures::fixture_config().vocab;
+    prop_check(6, |rng| {
+        let workload = random_workload(rng, vocab);
+        let policy = if rng.bool() {
+            SchedulePolicy::Interleaved
+        } else {
+            SchedulePolicy::Fifo
+        };
+        // From "no pressure" down to "a fraction of one request's KV".
+        let budgets = [usize::MAX, 8192, 2048, 700];
+        let kv_pool_bytes = budgets[rng.below(budgets.len())];
+        let m = NativeModel::load(
+            fx.dir(),
+            EngineOptions { kv_pool_bytes, ..EngineOptions::default() },
+        )
+        .map_err(|e| e.to_string())?;
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), policy);
+        let mut ids = Vec::new();
+        for (p, n) in &workload {
+            ids.push(c.submit(p.clone(), *n));
+        }
+        let rs = c.run_all().map_err(|e| e.to_string())?;
+        if rs.len() != ids.len() {
+            return Err(format!("{} responses for {} requests", rs.len(), ids.len()));
+        }
+        let mut got: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        if got != ids {
+            return Err(format!("ids {got:?} != submitted {ids:?}"));
+        }
+        for r in &rs {
+            if r.tokens.is_empty() {
+                return Err(format!("request {} produced no tokens", r.id));
+            }
+            if r.tokens.iter().any(|&t| t >= vocab) {
+                return Err(format!("request {} emitted out-of-vocab token", r.id));
+            }
+        }
+        if c.metrics.count() != ids.len() {
+            return Err("metrics count mismatch".into());
+        }
+        let Backend::Native(m) = c.backend() else { unreachable!() };
+        if m.kv_pool().resident_bytes() != 0 {
+            return Err(format!(
+                "{} pool bytes leaked after run_all (budget {kv_pool_bytes})",
+                m.kv_pool().resident_bytes()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn interleaved_matches_fifo_greedy_on_random_workloads() {
+    let fx = fixtures::write_fixture(22).unwrap();
+    let vocab = fixtures::fixture_config().vocab;
+    prop_check(4, |rng| {
+        let workload = random_workload(rng, vocab);
+        let mut streams: Vec<Vec<(u64, Vec<usize>)>> = Vec::new();
+        for policy in [SchedulePolicy::Fifo, SchedulePolicy::Interleaved] {
+            let m = NativeModel::load(fx.dir(), EngineOptions::default())
+                .map_err(|e| e.to_string())?;
+            let mut c = Coordinator::new(Backend::Native(Box::new(m)), policy);
+            for (p, n) in &workload {
+                c.submit(p.clone(), *n);
+            }
+            let mut rs: Vec<(u64, Vec<usize>)> = c
+                .run_all()
+                .map_err(|e| e.to_string())?
+                .into_iter()
+                .map(|r| (r.id, r.tokens))
+                .collect();
+            rs.sort_by_key(|(id, _)| *id);
+            streams.push(rs);
+        }
+        if streams[0] != streams[1] {
+            return Err(format!(
+                "greedy streams diverged between schedules: {:?} vs {:?}",
+                streams[0], streams[1]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spill_restore_roundtrips_bit_exact() {
+    // The §4.2 record format through the flash tier: serialize → append →
+    // read_at → push_serialized must reproduce every record bit-for-bit,
+    // across page boundaries.
+    prop_check(30, |rng| {
+        let heads = rng.range(1, 4);
+        let d = rng.range(4, 32);
+        let toks = rng.range(1, 2 * PAGE_TOKENS + 5);
+        let flash = FlashSim::temp(SocProfile::snapdragon_8gen3().flash)
+            .map_err(|e| e.to_string())?;
+        let mut kv = KvLayer::new(heads, d);
+        for _ in 0..toks {
+            let k = rng.normal_vec(heads * d);
+            let v = rng.normal_vec(heads * d);
+            kv.append(&k, &v);
+        }
+        let mut offsets = Vec::new();
+        for t in 0..toks {
+            let rec = kv.serialize_token(t);
+            offsets.push(flash.append(&rec).map_err(|e| e.to_string())?);
+        }
+        let mut restored = KvLayer::new(heads, d);
+        let mut buf = vec![0u8; kv.bytes_per_token()];
+        for &off in &offsets {
+            flash.read_at(off, &mut buf).map_err(|e| e.to_string())?;
+            restored.push_serialized(&buf);
+        }
+        if restored.len() != toks {
+            return Err("length mismatch after restore".into());
+        }
+        for t in 0..toks {
+            if restored.serialize_token(t) != kv.serialize_token(t) {
+                return Err(format!("record {t} not bit-exact after flash roundtrip"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn preempted_sessions_resume_bit_exact() {
+    // Preempt-to-flash mid-generation, then keep decoding: the stream must
+    // equal an undisturbed session's (single code path ⇒ bit-exact).
+    let (_fx, m) = fixtures::native_model(23, EngineOptions::default()).unwrap();
+    let prompt = [40usize, 41, 42, 43, 44];
+    let undisturbed = m.generate_once(&prompt, 8);
+    let mut sess = m.new_session();
+    let logits = m.prefill(&mut sess, &prompt);
+    let mut tok = mnn_llm::model::sampler::argmax(&logits);
+    let mut tokens = vec![tok];
+    for step in 1..8 {
+        if step == 3 {
+            let spilled = sess.preempt_to_flash().unwrap();
+            assert!(spilled > 0, "preemption spilled the resident KV");
+            assert_eq!(sess.resident_kv_bytes(), 0);
+        }
+        let logits = m.decode(&mut sess, tok);
+        tok = mnn_llm::model::sampler::argmax(&logits);
+        tokens.push(tok);
+    }
+    assert_eq!(tokens, undisturbed, "preemption must not change the stream");
+    assert!(sess.restored_records() > 0, "decode streamed records back");
+}

@@ -1,33 +1,37 @@
 //! Serving-level integration: coordinator invariants over the native
 //! backend (queue conservation, metric sanity, LoRA routing, determinism
-//! under scheduling).
-
-use std::path::PathBuf;
+//! under scheduling, KV-pool budget pressure).
+//!
+//! Everything here runs against the self-contained fixture model
+//! (`model::fixtures`) — no AOT artifacts required.
 
 use mnn_llm::coordinator::request::Request;
 use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
 use mnn_llm::coordinator::SchedulePolicy;
+use mnn_llm::kv::KvPool;
 use mnn_llm::lora::LoraAdapter;
+use mnn_llm::model::fixtures;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::model::sampler::SamplerConfig;
 use mnn_llm::model::tokenizer::ByteTokenizer;
 use mnn_llm::util::rng::Rng;
 
-fn artifacts() -> Option<PathBuf> {
-    let d = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
-    d.join("manifest.json").exists().then_some(d)
+const SEED: u64 = 7;
+
+fn native() -> NativeModel {
+    fixtures::native_model(SEED, EngineOptions::default()).unwrap().1
 }
 
-fn native() -> Option<NativeModel> {
-    artifacts().map(|d| NativeModel::load(&d, EngineOptions::default()).unwrap())
+fn tok() -> ByteTokenizer {
+    ByteTokenizer::new(fixtures::fixture_config().vocab)
 }
 
 #[test]
 fn every_submitted_request_completes_exactly_once() {
-    let Some(m) = native() else { return };
+    let m = native();
     let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
     let mut ids = Vec::new();
-    let tok = ByteTokenizer::new(2048);
+    let tok = tok();
     for i in 0..7 {
         ids.push(c.submit(tok.encode(&format!("request number {i}"), false), 3 + i % 4));
     }
@@ -41,10 +45,9 @@ fn every_submitted_request_completes_exactly_once() {
 
 #[test]
 fn metrics_are_internally_consistent() {
-    let Some(m) = native() else { return };
+    let m = native();
     let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
-    let tok = ByteTokenizer::new(2048);
-    c.submit(tok.encode("check the metrics", false), 5);
+    c.submit(tok().encode("check the metrics", false), 5);
     let r = &c.run_all().unwrap()[0];
     let m = r.metrics;
     assert_eq!(m.new_tokens, r.tokens.len());
@@ -56,19 +59,17 @@ fn metrics_are_internally_consistent() {
 
 #[test]
 fn empty_queue_is_fine_and_rerunnable() {
-    let Some(m) = native() else { return };
+    let m = native();
     let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
     assert!(c.run_all().unwrap().is_empty());
-    let tok = ByteTokenizer::new(2048);
-    c.submit(tok.encode("after empty run", false), 2);
+    c.submit(tok().encode("after empty run", false), 2);
     assert_eq!(c.run_all().unwrap().len(), 1);
     assert!(c.run_all().unwrap().is_empty(), "queue drained");
 }
 
 #[test]
 fn lora_task_routing_through_coordinator() {
-    let Some(dir) = artifacts() else { return };
-    let mut m = NativeModel::load(&dir, EngineOptions::default()).unwrap();
+    let mut m = native();
     let mut rng = Rng::new(77);
     let h = m.config.hidden;
     let mut layers = std::collections::HashMap::new();
@@ -76,8 +77,7 @@ fn lora_task_routing_through_coordinator() {
     layers.insert("L1.wo".to_string(), LoraAdapter::random(&mut rng, h, h, 4));
     m.lora.load_task("styleA", layers);
     let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
-    let tok = ByteTokenizer::new(2048);
-    let prompt = tok.encode("route by task", false);
+    let prompt = tok().encode("route by task", false);
     // Base request.
     c.submit(prompt.clone(), 5);
     // LoRA request.
@@ -93,10 +93,9 @@ fn lora_task_routing_through_coordinator() {
 
 #[test]
 fn temperature_zero_is_deterministic_nonzero_varies() {
-    let Some(m) = native() else { return };
+    let m = native();
     let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
-    let tok = ByteTokenizer::new(2048);
-    let prompt = tok.encode("sampling check", false);
+    let prompt = tok().encode("sampling check", false);
     for _ in 0..2 {
         c.submit(prompt.clone(), 6); // greedy default
     }
@@ -114,11 +113,11 @@ fn temperature_zero_is_deterministic_nonzero_varies() {
 
 #[test]
 fn long_prompt_near_bucket_edges() {
-    let Some(m) = native() else { return };
+    let m = native();
     let cap = m.config.max_len;
     let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
-    // Prompt lengths straddling the AOT bucket boundaries {16, 64, 256}.
-    for len in [15usize, 16, 17, 63, 64, 65, 200] {
+    // Prompt lengths straddling the AOT bucket boundaries {16, 64}.
+    for len in [15usize, 16, 17, 63, 64, 65, 100] {
         c.submit(vec![7; len], 2);
     }
     let rs = c.run_all().unwrap();
@@ -127,4 +126,82 @@ fn long_prompt_near_bucket_edges() {
         assert!(!r.tokens.is_empty());
         assert!(r.metrics.prompt_tokens + r.tokens.len() <= cap);
     }
+}
+
+#[test]
+fn interleaved_serving_matches_fifo_under_mixed_lengths() {
+    // End-to-end parity (the coordinator-level form of the acceptance
+    // criterion): greedy token streams per request id are identical under
+    // Fifo and Interleaved on the native backend.
+    let prompts: Vec<Vec<usize>> = vec![
+        tok().encode("the quick brown fox", false),
+        tok().encode("hi", false),
+        vec![300, 301, 302, 303, 304, 305],
+        tok().encode("mobile inference engines", false),
+    ];
+    let run = |policy: SchedulePolicy| {
+        let m = native();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), policy);
+        for (i, p) in prompts.iter().enumerate() {
+            c.submit(p.clone(), 3 + i);
+        }
+        c.run_all().unwrap()
+    };
+    let fifo = run(SchedulePolicy::Fifo);
+    let inter = run(SchedulePolicy::Interleaved);
+    assert_eq!(fifo.len(), inter.len());
+    for (a, b) in fifo.iter().zip(&inter) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {}", a.id);
+    }
+}
+
+#[test]
+fn kv_pool_budget_under_working_set_completes_via_spill() {
+    // The acceptance scenario: a pool budget smaller than the concurrent
+    // working set. All requests must still complete (degrading to flash),
+    // with spill/restore/preemption visible in EngineMetrics, and every
+    // page back in the pool afterwards.
+    let cfg = fixtures::fixture_config();
+    let page = KvPool::page_bytes(cfg.kv_heads, cfg.head_dim());
+    // Budget: exactly one 12-token session's pinned KV (one page per
+    // layer) — admission can make each new prompt fit by preempting the
+    // previous session, but the 4-session working set is 4× the budget.
+    let budget = 2 * page;
+    let (_fx, m) = fixtures::native_model(
+        SEED,
+        EngineOptions { kv_pool_bytes: budget, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+    let mut ids = Vec::new();
+    for i in 0..4 {
+        ids.push(c.submit(vec![20 + i; 12], 6));
+    }
+    let rs = c.run_all().unwrap();
+    assert_eq!(rs.len(), 4, "every request completes despite the tight budget");
+    let mut got: Vec<u64> = rs.iter().map(|r| r.id).collect();
+    got.sort_unstable();
+    assert_eq!(got, ids);
+    for r in &rs {
+        assert!(!r.tokens.is_empty());
+        assert!(r.tokens.iter().all(|&t| t < cfg.vocab));
+    }
+    // Pressure actually happened and is reported.
+    assert!(c.metrics.kv.spilled_records > 0, "spills recorded");
+    assert!(c.metrics.kv.restored_records > 0, "restores recorded");
+    assert!(c.metrics.kv.preemptions > 0, "admission preempted sessions");
+    assert!(c.metrics.summary(1.0).contains("kv spill"), "summary surfaces pressure");
+    // The budget held once the dust settled, and all pages were returned.
+    let Backend::Native(m) = c.backend() else { unreachable!() };
+    assert!(m.kv_pool().resident_bytes() <= m.kv_pool().budget_bytes());
+    assert_eq!(m.kv_pool().resident_bytes(), 0, "run_all returns every page");
+    assert_eq!(m.spill_store_bytes(), 0, "spill store reclaimed after run_all");
+    // Spilling must not have produced garbage: a fresh unbounded run of the
+    // same first request yields the same greedy tokens.
+    let clean = native();
+    let mut c2 = Coordinator::new(Backend::Native(Box::new(clean)), SchedulePolicy::Fifo);
+    c2.submit(vec![20; 12], 6);
+    let clean_rs = c2.run_all().unwrap();
+    assert_eq!(clean_rs[0].tokens, rs[0].tokens, "spill-to-flash is value-neutral");
 }
