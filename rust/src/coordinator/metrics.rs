@@ -1,7 +1,8 @@
 //! Serving metrics: the quantities Figure 5 reports (prefill speed in
 //! tok/s, decode speed in tok/s) plus latency percentiles for the e2e
-//! example.
+//! example, KV-pressure counters, and weight-residency counters.
 
+use crate::memory::weight_store::WeightResidencyMetrics;
 use crate::util::stats;
 
 /// Per-request timings.
@@ -57,6 +58,9 @@ pub struct EngineMetrics {
     pub completed: Vec<RequestMetrics>,
     /// KV spill/restore/preemption accounting across all requests.
     pub kv: KvPressureMetrics,
+    /// Weight residency accounting (native backend): cumulative snapshot
+    /// taken from the model at the end of each coordinator drain.
+    pub weights: WeightResidencyMetrics,
 }
 
 impl EngineMetrics {
@@ -112,6 +116,15 @@ impl EngineMetrics {
                 self.kv.spilled_records, self.kv.restored_records, self.kv.preemptions
             ));
         }
+        if self.weights.under_pressure() {
+            s.push_str(&format!(
+                " | weights {} fetch / {} evict / {} pf hit / {} pf stall",
+                self.weights.demand_fetches,
+                self.weights.evictions,
+                self.weights.prefetch_hits,
+                self.weights.prefetch_stalls
+            ));
+        }
         s
     }
 }
@@ -154,6 +167,21 @@ mod tests {
         assert!((e.mean_prefill_tok_s() - (128.0 + 256.0) / 2.0).abs() < 1e-9);
         assert!((e.throughput_tok_s(4.0) - 8.0).abs() < 1e-9);
         assert!(e.summary(4.0).contains("2 requests"));
+    }
+
+    #[test]
+    fn weight_pressure_appears_in_summary_only_under_pressure() {
+        let mut e = EngineMetrics::default();
+        e.push(m(8, 4, 0.1, 0.2));
+        // Residency snapshots alone (bytes) are not pressure.
+        e.weights.resident_bytes = 1 << 20;
+        e.weights.packed_bytes = 1 << 20;
+        assert!(!e.summary(1.0).contains("weights"));
+        e.weights.demand_fetches = 3;
+        e.weights.evictions = 2;
+        let s = e.summary(1.0);
+        assert!(s.contains("weights 3 fetch"), "{s}");
+        assert!(s.contains("2 evict"), "{s}");
     }
 
     #[test]

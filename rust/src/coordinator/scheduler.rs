@@ -209,6 +209,11 @@ impl Coordinator {
                 m.reclaim_flash();
             }
         }
+        // Weight-residency counters are cumulative on the model; snapshot
+        // them into the engine metrics now that the queue is drained.
+        if let Backend::Native(m) = &self.backend {
+            self.metrics.weights = m.weight_metrics();
+        }
         Ok(out)
     }
 
@@ -310,6 +315,7 @@ impl Coordinator {
         }
         // Every session is dropped; truncate the shared spill store.
         model.reclaim_flash();
+        self.metrics.weights = model.weight_metrics();
         Ok(out)
     }
 

@@ -20,22 +20,26 @@ pub struct FlashEmbedding {
 }
 
 impl FlashEmbedding {
-    /// Load `embedding.bin` (bf16 [vocab, hidden] rows) onto `flash`.
+    /// Load `embedding.bin` (bf16 [vocab, hidden] rows) onto `flash`,
+    /// streaming file → flash in bounded chunks: the full table is never
+    /// resident in DRAM, not even transiently during load.
     pub fn from_file(
         path: &Path,
         vocab: usize,
         hidden: usize,
         flash: FlashSim,
     ) -> std::io::Result<Self> {
-        let bytes = std::fs::read(path)?;
+        let file = std::fs::File::open(path)?;
         let want = vocab * hidden * 2;
-        if bytes.len() != want {
+        let have = file.metadata()?.len();
+        if have != want as u64 {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
-                format!("embedding.bin: {} bytes, expected {}", bytes.len(), want),
+                format!("embedding.bin: {have} bytes, expected {want}"),
             ));
         }
-        let base = flash.append(&bytes)?;
+        let mut r = std::io::BufReader::new(file);
+        let base = flash.append_reader(&mut r, want)?;
         Ok(FlashEmbedding { flash, base, vocab, hidden })
     }
 
@@ -133,6 +137,40 @@ mod tests {
         let (emb, _) = make(8, 4);
         let mut out = vec![0f32; 4];
         let _ = emb.lookup(9, &mut out);
+    }
+
+    #[test]
+    fn from_file_streams_and_matches_from_f32() {
+        let mut rng = Rng::new(11);
+        let (vocab, hidden) = (16usize, 8usize);
+        let table = rng.normal_vec(vocab * hidden);
+        let mut bytes = Vec::with_capacity(table.len() * 2);
+        for &v in &table {
+            bytes.extend_from_slice(&crate::util::bf16::f32_to_bf16(v).to_le_bytes());
+        }
+        let path = crate::util::unique_temp_path("mnn_emb_stream", ".bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let from_file = FlashEmbedding::from_file(
+            &path,
+            vocab,
+            hidden,
+            FlashSim::temp(SocProfile::snapdragon_8gen3().flash).unwrap(),
+        )
+        .unwrap();
+        let from_mem = FlashEmbedding::from_f32(
+            &table,
+            vocab,
+            hidden,
+            FlashSim::temp(SocProfile::snapdragon_8gen3().flash).unwrap(),
+        );
+        let mut a = vec![0f32; hidden];
+        let mut b = vec![0f32; hidden];
+        for id in [0usize, 7, 15] {
+            from_file.lookup(id, &mut a).unwrap();
+            from_mem.lookup(id, &mut b).unwrap();
+            assert_eq!(a, b);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -82,6 +82,33 @@ impl FlashSim {
         Ok(off)
     }
 
+    /// Append one record of exactly `len` bytes streamed from `r` in
+    /// bounded chunks — DRAM never holds more than one chunk of the
+    /// payload, which is what lets weight/embedding loading copy
+    /// file → flash without a whole-table transient. The device lock is
+    /// held across the stream so concurrent appends cannot interleave into
+    /// the record; the device length only advances once all bytes landed,
+    /// so a short read leaves the store consistent. Returns the offset.
+    pub fn append_reader(&self, r: &mut dyn Read, len: usize) -> std::io::Result<u64> {
+        const CHUNK: usize = 256 << 10;
+        let mut g = self.inner.lock().unwrap();
+        let off = g.len;
+        g.file.seek(SeekFrom::Start(off))?;
+        let mut buf = vec![0u8; len.clamp(1, CHUNK)];
+        let mut remaining = len;
+        while remaining > 0 {
+            let n = remaining.min(buf.len());
+            r.read_exact(&mut buf[..n])?;
+            g.file.write_all(&buf[..n])?;
+            remaining -= n;
+        }
+        g.len += len as u64;
+        g.stats.writes += 1;
+        g.stats.write_bytes += len as u64;
+        g.stats.busy_s += len as f64 / self.tier.read_bw;
+        Ok(off)
+    }
+
     /// Read `buf.len()` bytes at `off`, charging modeled time.
     pub fn read_at(&self, off: u64, buf: &mut [u8]) -> std::io::Result<f64> {
         let t = self.read_time(buf.len());
@@ -157,6 +184,25 @@ mod tests {
         // 1 MB at 1 GB/s ≈ 1 ms + 15 µs latency.
         let t = f.read_time(1 << 20);
         assert!((t - (15e-6 + (1 << 20) as f64 / 1e9)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn append_reader_streams_whole_record() {
+        let f = FlashSim::temp(ufs()).unwrap();
+        // Payload larger than one copy chunk exercises the chunk loop.
+        let data: Vec<u8> = (0..(300 << 10)).map(|i| (i % 251) as u8).collect();
+        let off = f.append_reader(&mut &data[..], data.len()).unwrap();
+        assert_eq!(off, 0);
+        assert_eq!(f.len(), data.len() as u64);
+        let mut back = vec![0u8; data.len()];
+        f.read_at(off, &mut back).unwrap();
+        assert_eq!(back, data);
+        // A short reader is an error and must not advance the store.
+        let short = [0u8; 10];
+        assert!(f.append_reader(&mut &short[..], 11).is_err());
+        assert_eq!(f.len(), data.len() as u64, "failed append leaves length unchanged");
+        let off2 = f.append(b"after").unwrap();
+        assert_eq!(off2, data.len() as u64, "next append lands at the same offset");
     }
 
     #[test]

@@ -13,13 +13,22 @@
 //!   layer's spilled KV while the current layer computes (MLP + qkv
 //!   window), hiding flash latency until the spilled span exceeds the
 //!   bandwidth-delay product (Fig. 2's 3072K crossover).
+//! * [`weight_store`] — the weight half of hybrid storage: `weights.bin`
+//!   streamed onto flash at load, layers packed into relocatable blobs,
+//!   held in a byte-budgeted LRU DRAM arena with async one-layer-ahead
+//!   prefetch — models whose packed weights exceed DRAM still run,
+//!   bit-identically, paying only modeled flash-read time.
 
 pub mod embedding;
 pub mod flash;
 pub mod hybrid;
 pub mod prefetch;
+pub mod weight_store;
 
 pub use embedding::FlashEmbedding;
 pub use flash::FlashSim;
 pub use hybrid::HybridKvLayer;
 pub use prefetch::{PrefetchPlanner, PrefetchStats};
+pub use weight_store::{
+    FlashTensorStore, LayerWeights, WeightResidencyMetrics, WeightStore, WeightStoreBuilder,
+};

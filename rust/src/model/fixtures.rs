@@ -27,12 +27,20 @@ use crate::util::rng::Rng;
 /// MLP-compatible even reduce dims, vocab covering the byte tokenizer's
 /// specials (≥ 258).
 pub fn fixture_config() -> ModelConfig {
+    fixture_config_with_layers(2)
+}
+
+/// Like [`fixture_config`] with a configurable decoder depth. Weight
+/// residency tests want ≥ 3 layers so LRU eviction and the one-ahead
+/// prefetch actually churn (with 2 layers, budget + prefetch covers the
+/// whole model).
+pub fn fixture_config_with_layers(layers: usize) -> ModelConfig {
     ModelConfig {
-        name: "fixture-2l".into(),
+        name: format!("fixture-{layers}l"),
         vocab: 512,
         hidden: 32,
         inter: 48,
-        layers: 2,
+        layers,
         heads: 4,
         kv_heads: 2,
         max_len: 128,
@@ -83,7 +91,13 @@ fn norm_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
 /// dir. Deterministic in `seed` (the directory name is unique per call;
 /// the *contents* depend only on the seed).
 pub fn write_fixture(seed: u64) -> std::io::Result<Fixture> {
-    let cfg = fixture_config();
+    write_fixture_with_layers(seed, 2)
+}
+
+/// [`write_fixture`] at a chosen decoder depth. Contents are
+/// deterministic in `(seed, layers)`.
+pub fn write_fixture_with_layers(seed: u64, layers: usize) -> std::io::Result<Fixture> {
+    let cfg = fixture_config_with_layers(layers);
     let dir = crate::util::unique_temp_path("mnn_fixture", "");
     std::fs::create_dir_all(&dir)?;
     let mut rng = Rng::new(seed);
@@ -160,6 +174,17 @@ pub fn native_model(seed: u64, options: EngineOptions)
     Ok((fx, m))
 }
 
+/// [`native_model`] at a chosen decoder depth (weight-residency tests).
+pub fn native_model_with_layers(
+    seed: u64,
+    layers: usize,
+    options: EngineOptions,
+) -> std::io::Result<(Fixture, NativeModel)> {
+    let fx = write_fixture_with_layers(seed, layers)?;
+    let m = NativeModel::load(fx.dir(), options)?;
+    Ok((fx, m))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +229,16 @@ mod tests {
         };
         assert_eq!(logits.len(), m.config.vocab);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deep_fixture_loads_and_generates() {
+        let (_fx, m) = native_model_with_layers(6, 4, EngineOptions::default()).unwrap();
+        assert_eq!(m.config.layers, 4);
+        assert_eq!(m.config.name, "fixture-4l");
+        let out = m.generate_once(&[1, 2, 3], 5);
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|&t| t < m.config.vocab));
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! * hardware-driven reorder — weights repacked at load for the detected
 //!   ISA's solved tile (§5.1);
 //! * flash-resident bf16 embedding + KV spill with prefetch (§4.1);
+//! * layer-granular **weight residency** (§4.1, the weight half):
+//!   `weights.bin` is streamed onto flash at load (never fully in DRAM),
+//!   each layer is packed into a relocatable blob, and forward passes pull
+//!   layers through a byte-budgeted LRU arena
+//!   ([`EngineOptions::weight_dram_bytes`]) with async one-layer-ahead
+//!   prefetch — bit-identical at any budget;
 //! * multicore balanced GEMM splits (§5.2);
 //! * fp32 softmax + pre-scaled queries (§5.3);
 //! * per-request LoRA bypass in the associative order (§5.5).
@@ -32,10 +38,13 @@ use crate::lora::LoraManager;
 use crate::memory::embedding::FlashEmbedding;
 use crate::memory::flash::FlashSim;
 use crate::memory::hybrid::HybridKvLayer;
+use crate::memory::weight_store::{
+    FlashTensorStore, LayerWeights, WeightResidencyMetrics, WeightStore, WeightStoreBuilder,
+};
 use crate::model::config::ModelConfig;
 use crate::model::manifest::Manifest;
-use crate::model::weights::{WeightFile, DT_I8, DT_U8};
-use crate::parallel::pool::{run_balanced, WorkerConfig};
+use crate::model::weights::{DT_I8, DT_U8};
+use crate::parallel::pool::{run_balanced, BackgroundWorker, WorkerConfig};
 use crate::quant::asym::{QuantizedMatrix, WeightBits};
 use crate::reorder::solver::TileConfig;
 
@@ -53,6 +62,13 @@ pub struct EngineOptions {
     /// layers. Under pressure, appends evict to flash and the coordinator
     /// preempts sessions instead of admitting past the budget.
     pub kv_pool_bytes: usize,
+    /// DRAM byte budget for packed transformer-layer weights. Layers
+    /// beyond the budget live on flash as relocatable blobs and are
+    /// fetched — one layer ahead, asynchronously — during forward;
+    /// `usize::MAX` (the default) keeps every layer resident. The lm_head,
+    /// final norm and embedding are pinned outside the budget. Residency
+    /// is bit-exact value-neutral at any budget.
+    pub weight_dram_bytes: usize,
     /// If false, the embedding is copied to DRAM (baseline configuration).
     pub embedding_in_flash: bool,
 }
@@ -64,21 +80,10 @@ impl Default for EngineOptions {
             workers: WorkerConfig::uniform(1),
             kv_budget_tokens: usize::MAX / 2,
             kv_pool_bytes: usize::MAX,
+            weight_dram_bytes: usize::MAX,
             embedding_in_flash: true,
         }
     }
-}
-
-struct Layer {
-    wq: QLinear,
-    wk: QLinear,
-    wv: QLinear,
-    wo: QLinear,
-    gate: QLinear,
-    up: QLinear,
-    down: QLinear,
-    ln1: Vec<f32>,
-    ln2: Vec<f32>,
 }
 
 /// Per-request generation state: paged KV (one hybrid layer per decoder
@@ -151,13 +156,20 @@ impl NativeSession {
 pub struct NativeModel {
     pub config: ModelConfig,
     pub options: EngineOptions,
-    layers: Vec<Layer>,
+    /// Declared before `weights` so drop order joins in-flight prefetch
+    /// jobs while the store they reference is still alive.
+    prefetcher: BackgroundWorker,
+    /// Layer-residency arena over flash-resident packed blobs. The
+    /// lm_head, final norm and embedding below are pinned outside it.
+    weights: WeightStore,
     fnorm: Vec<f32>,
     lm_head: QLinear,
     embedding: FlashEmbedding,
     embedding_dram: Option<Vec<f32>>,
     pub lora: LoraManager,
-    /// Shared flash device all sessions spill KV to.
+    /// Shared flash device all sessions spill KV to. Distinct from the
+    /// weight store's device: `reclaim_flash` truncates this one, which
+    /// must never eat weight blobs.
     flash: Arc<FlashSim>,
     /// Shared paged-KV arena all sessions draw from.
     kv_pool: Arc<KvPool>,
@@ -167,68 +179,119 @@ pub struct NativeModel {
     inv_freq: Vec<f32>,
 }
 
+fn invalid(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, format!("weights.bin: {msg}"))
+}
+
 fn qlin(
-    wf: &WeightFile,
+    store: &FlashTensorStore,
     name: &str,
     bits: WeightBits,
     tile: TileConfig,
     bias: Option<Vec<f32>>,
 ) -> std::io::Result<QLinear> {
-    let q = wf.require(&format!("{name}.q"))?;
-    let s = wf.require(&format!("{name}.s"))?;
-    let b = wf.require(&format!("{name}.b"))?;
+    let q = store.read(&format!("{name}.q"))?;
+    let s = store.read(&format!("{name}.s"))?;
+    let b = store.read(&format!("{name}.b"))?;
+    if q.shape.len() != 2 {
+        return Err(invalid(&format!("{name}: expected 2-D weights, shape {:?}", q.shape)));
+    }
     let (n, k) = match bits {
         WeightBits::Int8 => {
-            assert_eq!(q.dtype, DT_I8, "{name}: expected i8");
+            if q.dtype != DT_I8 {
+                return Err(invalid(&format!("{name}: expected i8 weights")));
+            }
             (q.shape[0], q.shape[1])
         }
         WeightBits::Int4 => {
-            assert_eq!(q.dtype, DT_U8, "{name}: expected packed u8");
+            if q.dtype != DT_U8 {
+                return Err(invalid(&format!("{name}: expected packed u8 weights")));
+            }
             (q.shape[0], q.shape[1] * 2)
         }
     };
-    let qm = QuantizedMatrix::from_parts(bits, n, k, q.data.clone(), &s.as_f32(), &b.as_f32());
+    let scales = s.try_f32()?;
+    let biases = b.try_f32()?;
+    if scales.len() != n || biases.len() != n {
+        return Err(invalid(&format!(
+            "{name}: {} scales / {} biases for {n} output rows",
+            scales.len(),
+            biases.len()
+        )));
+    }
+    let qm = QuantizedMatrix::from_parts(bits, n, k, q.data, &scales, &biases);
     Ok(QLinear::new(&qm, tile, bias))
+}
+
+/// Stream a bf16 table file into an f32 DRAM table in bounded chunks (the
+/// baseline embedding config — no transient second copy of the table).
+fn read_bf16_table(path: &Path, elems: usize) -> std::io::Result<Vec<f32>> {
+    const CHUNK_ELEMS: usize = 128 << 10;
+    let file = std::fs::File::open(path)?;
+    let have = file.metadata()?.len();
+    if have != (elems * 2) as u64 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("{}: {have} bytes, expected {}", path.display(), elems * 2),
+        ));
+    }
+    let mut r = std::io::BufReader::new(file);
+    let mut table = vec![0f32; elems];
+    let mut buf = vec![0u8; CHUNK_ELEMS * 2];
+    let mut done = 0usize;
+    while done < elems {
+        let n = (elems - done).min(CHUNK_ELEMS);
+        std::io::Read::read_exact(&mut r, &mut buf[..n * 2])?;
+        crate::util::bf16::bytes_to_f32(&buf[..n * 2], &mut table[done..done + n]);
+        done += n;
+    }
+    Ok(table)
 }
 
 impl NativeModel {
     /// Load from an artifacts directory (manifest + weights + embedding).
+    ///
+    /// The weight path is fully streaming: `weights.bin` goes file → flash
+    /// in bounded chunks, layers are packed one at a time into blobs, and
+    /// at most [`EngineOptions::weight_dram_bytes`] of packed layers stay
+    /// resident — peak load DRAM is one layer's tensors plus the budget,
+    /// never two copies of the weights.
     pub fn load(dir: &Path, options: EngineOptions) -> std::io::Result<NativeModel> {
         let manifest = Manifest::load(dir)?;
-        let wf = WeightFile::load(&dir.join("weights.bin"))?;
-        Self::from_parts(&manifest, &wf, dir, options)
-    }
-
-    pub fn from_parts(
-        manifest: &Manifest,
-        wf: &WeightFile,
-        dir: &Path,
-        options: EngineOptions,
-    ) -> std::io::Result<NativeModel> {
         let cfg = manifest.model.clone();
         let tile = options.tile;
-        let mut layers = Vec::with_capacity(cfg.layers);
+        let soc = SocProfile::snapdragon_8gen3();
+        // Raw tensors are staged on their own device, dropped after
+        // packing; only the packed blobs live on the long-lived weight
+        // device — the model doesn't carry the raw container around.
+        let staging_flash = Arc::new(FlashSim::temp(soc.flash)?);
+        let store =
+            FlashTensorStore::stream_from_file(&dir.join("weights.bin"), staging_flash)?;
+        let weight_flash = Arc::new(FlashSim::temp(soc.flash)?);
+        let mut builder = WeightStoreBuilder::new(weight_flash, options.weight_dram_bytes);
         for i in 0..cfg.layers {
             let p = format!("L{i}.");
-            layers.push(Layer {
-                wq: qlin(wf, &format!("{p}wq"), WeightBits::Int8, tile,
-                         Some(wf.require(&format!("{p}bq"))?.as_f32()))?,
-                wk: qlin(wf, &format!("{p}wk"), WeightBits::Int8, tile,
-                         Some(wf.require(&format!("{p}bk"))?.as_f32()))?,
-                wv: qlin(wf, &format!("{p}wv"), WeightBits::Int8, tile,
-                         Some(wf.require(&format!("{p}bv"))?.as_f32()))?,
-                wo: qlin(wf, &format!("{p}wo"), WeightBits::Int8, tile, None)?,
-                gate: qlin(wf, &format!("{p}gate"), WeightBits::Int4, tile, None)?,
-                up: qlin(wf, &format!("{p}up"), WeightBits::Int4, tile, None)?,
-                down: qlin(wf, &format!("{p}down"), WeightBits::Int4, tile, None)?,
-                ln1: wf.require(&format!("{p}ln1"))?.as_f32(),
-                ln2: wf.require(&format!("{p}ln2"))?.as_f32(),
-            });
+            let layer = LayerWeights {
+                wq: qlin(&store, &format!("{p}wq"), WeightBits::Int8, tile,
+                         Some(store.read(&format!("{p}bq"))?.try_f32()?))?,
+                wk: qlin(&store, &format!("{p}wk"), WeightBits::Int8, tile,
+                         Some(store.read(&format!("{p}bk"))?.try_f32()?))?,
+                wv: qlin(&store, &format!("{p}wv"), WeightBits::Int8, tile,
+                         Some(store.read(&format!("{p}bv"))?.try_f32()?))?,
+                wo: qlin(&store, &format!("{p}wo"), WeightBits::Int8, tile, None)?,
+                gate: qlin(&store, &format!("{p}gate"), WeightBits::Int4, tile, None)?,
+                up: qlin(&store, &format!("{p}up"), WeightBits::Int4, tile, None)?,
+                down: qlin(&store, &format!("{p}down"), WeightBits::Int4, tile, None)?,
+                ln1: store.read(&format!("{p}ln1"))?.try_f32()?,
+                ln2: store.read(&format!("{p}ln2"))?.try_f32()?,
+            };
+            builder.push_layer(layer)?;
         }
-        let fnorm = wf.require("fnorm")?.as_f32();
-        let lm_head = qlin(wf, "lm_head", WeightBits::Int8, tile, None)?;
-        let soc = SocProfile::snapdragon_8gen3();
-        let flash = Arc::new(FlashSim::temp(soc.flash).map_err(std::io::Error::from)?);
+        let weights = builder.finish();
+        let fnorm = store.read("fnorm")?.try_f32()?;
+        let lm_head = qlin(&store, "lm_head", WeightBits::Int8, tile, None)?;
+        drop(store);
+        let flash = Arc::new(FlashSim::temp(soc.flash)?);
         let embedding = FlashEmbedding::from_file(
             &dir.join(&manifest.embedding_file),
             cfg.vocab,
@@ -239,10 +302,7 @@ impl NativeModel {
             None
         } else {
             // Baseline: decode-path DRAM residency.
-            let bytes = std::fs::read(dir.join(&manifest.embedding_file))?;
-            let mut table = vec![0f32; cfg.vocab * cfg.hidden];
-            crate::util::bf16::bytes_to_f32(&bytes, &mut table);
-            Some(table)
+            Some(read_bf16_table(&dir.join(&manifest.embedding_file), cfg.vocab * cfg.hidden)?)
         };
         let kv_pool = Arc::new(KvPool::new(options.kv_pool_bytes));
         let half = cfg.head_dim() / 2;
@@ -252,7 +312,8 @@ impl NativeModel {
         Ok(NativeModel {
             config: cfg,
             options,
-            layers,
+            prefetcher: BackgroundWorker::new("mnn-weight-prefetch"),
+            weights,
             fnorm,
             lm_head,
             embedding,
@@ -407,7 +468,11 @@ impl NativeModel {
         let mut act = vec![0f32; s * cfg.inter];
         let mut mlp = vec![0f32; s * h];
         for li in 0..cfg.layers {
-            let layer = &self.layers[li];
+            // Kick the next layer's flash fetch before touching this one so
+            // the read overlaps this layer's compute (§4.1 overlap, weights
+            // edition). No-op when the layer is already resident.
+            self.weights.prefetch(&self.prefetcher, li + 1);
+            let layer = self.weights.layer(li).expect("weight residency");
             rmsnorm(&x, &layer.ln1, &mut norm, s, cfg.rms_eps);
             self.linear(&layer.wq, &norm, s, &mut q);
             self.linear(&layer.wk, &norm, s, &mut k);
@@ -472,7 +537,9 @@ impl NativeModel {
         let mut act = vec![0f32; cfg.inter];
         let mut mlp = vec![0f32; h];
         for li in 0..cfg.layers {
-            let layer = &self.layers[li];
+            // One-layer-ahead prefetch, same contract as in prefill.
+            self.weights.prefetch(&self.prefetcher, li + 1);
+            let layer = self.weights.layer(li).expect("weight residency");
             rmsnorm(&x, &layer.ln1, &mut norm, 1, cfg.rms_eps);
             self.linear(&layer.wq, &norm, 1, &mut q);
             self.linear(&layer.wk, &norm, 1, &mut k);
@@ -533,23 +600,23 @@ impl NativeModel {
         self.generate(&mut sess, prompt, n)
     }
 
-    /// DRAM resident bytes of weights (packed) — memory accounting.
+    /// DRAM resident bytes of weights — memory accounting: the residency
+    /// arena's current occupancy plus the pinned lm_head (and the DRAM
+    /// embedding table in the baseline configuration).
     pub fn weight_dram_bytes(&self) -> usize {
-        let per_layer: usize = self
-            .layers
-            .iter()
-            .map(|l| {
-                l.wq.weight_bytes()
-                    + l.wk.weight_bytes()
-                    + l.wv.weight_bytes()
-                    + l.wo.weight_bytes()
-                    + l.gate.weight_bytes()
-                    + l.up.weight_bytes()
-                    + l.down.weight_bytes()
-            })
-            .sum();
         let emb = self.embedding_dram.as_ref().map_or(0, |t| t.len() * 4);
-        per_layer + self.lm_head.weight_bytes() + emb
+        self.weights.resident_bytes() + self.lm_head.weight_bytes() + emb
+    }
+
+    /// The layer-residency arena (budget / residency introspection).
+    pub fn weight_store(&self) -> &WeightStore {
+        &self.weights
+    }
+
+    /// Cumulative weight-residency counters + residency snapshot. The
+    /// coordinator copies this into `EngineMetrics` after each drain.
+    pub fn weight_metrics(&self) -> WeightResidencyMetrics {
+        self.weights.metrics()
     }
 }
 
@@ -680,6 +747,36 @@ mod tests {
         assert_eq!(a, b, "pool pressure is value-neutral");
         assert!(sess.spilled_records() > 0);
         assert!(tight.kv_pool().resident_bytes() <= tight.kv_pool().budget_bytes());
+    }
+
+    #[test]
+    fn weight_budget_below_packed_total_is_bit_identical() {
+        // The weight-residency acceptance invariant at model level: a DRAM
+        // budget smaller than the packed weights produces the exact same
+        // tokens, with flash traffic and evictions visible in metrics.
+        let (fx, plain) = load();
+        let total = plain.weight_metrics().packed_bytes;
+        assert!(total > 0);
+        let tight = NativeModel::load(
+            fx.dir(),
+            EngineOptions { weight_dram_bytes: total / 2, ..EngineOptions::default() },
+        )
+        .unwrap();
+        let prompt = [10usize, 20, 30, 40, 50];
+        assert_eq!(
+            plain.generate_once(&prompt, 4),
+            tight.generate_once(&prompt, 4),
+            "weight residency is bit-exact value-neutral"
+        );
+        let wm = tight.weight_metrics();
+        assert!(wm.under_pressure(), "{wm:?}");
+        assert!(wm.flash_read_s > 0.0);
+        assert!(tight.weight_store().resident_bytes() <= total / 2);
+        // The unlimited model never touched flash for weights after load.
+        let um = plain.weight_metrics();
+        assert_eq!(um.demand_fetches, 0);
+        assert_eq!(um.evictions, 0);
+        assert_eq!(um.resident_bytes, total);
     }
 
     #[test]

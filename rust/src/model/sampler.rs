@@ -17,28 +17,42 @@ impl Default for SamplerConfig {
     }
 }
 
-/// Greedy argmax (ties → lowest index, deterministic).
+/// Greedy argmax, deterministic even under NaN: NaN logits are never
+/// selected (a NaN compares greater than everything under `total_cmp`,
+/// which would make a single poisoned logit win), ties go to the lowest
+/// index, and an all-NaN/empty input returns 0.
 pub fn argmax(logits: &[f32]) -> usize {
     let mut best = 0;
     let mut bv = f32::NEG_INFINITY;
+    let mut seen = false;
     for (i, &v) in logits.iter().enumerate() {
-        if v > bv {
+        if v.is_nan() {
+            continue;
+        }
+        if !seen || v > bv {
             bv = v;
             best = i;
+            seen = true;
         }
     }
     best
 }
 
-/// Sample a token under `cfg` using `rng`.
+/// Sample a token under `cfg` using `rng`. NaN logits are excluded from
+/// the candidate set (they carry no probability mass) and the top-k sort
+/// uses `total_cmp` — a poisoned logit can no longer panic the serving
+/// loop the way `partial_cmp().unwrap()` did.
 pub fn sample(logits: &[f32], cfg: SamplerConfig, rng: &mut Rng) -> usize {
     if cfg.temperature <= 0.0 {
         return argmax(logits);
     }
-    // Candidate set: top-k (or all).
-    let mut idx: Vec<usize> = (0..logits.len()).collect();
-    if cfg.top_k > 0 && cfg.top_k < logits.len() {
-        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    // Candidate set: non-NaN, then top-k (or all).
+    let mut idx: Vec<usize> = (0..logits.len()).filter(|&i| !logits[i].is_nan()).collect();
+    if idx.is_empty() {
+        return argmax(logits);
+    }
+    if cfg.top_k > 0 && cfg.top_k < idx.len() {
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
         idx.truncate(cfg.top_k);
     }
     // Softmax with temperature over candidates (fp32, max-subtracted).
@@ -66,6 +80,36 @@ mod tests {
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[1.0, 1.0]), 0, "tie → lowest index");
+    }
+
+    #[test]
+    fn argmax_deterministic_under_nan() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 0.5]), 1, "NaN never wins");
+        assert_eq!(argmax(&[0.1, f32::NAN, 3.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0, "all-NaN → index 0");
+        assert_eq!(
+            argmax(&[f32::NEG_INFINITY, f32::NAN, f32::NEG_INFINITY]),
+            0,
+            "-inf is a real candidate, NaN is not"
+        );
+    }
+
+    /// Regression: a single NaN logit used to panic the whole serving loop
+    /// via `partial_cmp().unwrap()` in the top-k sort.
+    #[test]
+    fn nan_logit_does_not_panic_or_get_sampled() {
+        let mut rng = Rng::new(4);
+        let mut logits = vec![0.5f32; 16];
+        logits[3] = f32::NAN;
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 4 };
+        for _ in 0..100 {
+            let t = sample(&logits, cfg, &mut rng);
+            assert!(t < 16);
+            assert_ne!(t, 3, "NaN logit must carry no probability mass");
+        }
+        // All-NaN degenerates to the deterministic argmax fallback.
+        let poisoned = vec![f32::NAN; 8];
+        assert_eq!(sample(&poisoned, cfg, &mut rng), 0);
     }
 
     #[test]

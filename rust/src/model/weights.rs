@@ -2,8 +2,17 @@
 //!   magic "MNNW" | u32 version | u32 count |
 //!   per tensor: u16 name_len | name | u8 dtype | u8 ndim | u32 dims[] |
 //!               u64 nbytes | raw bytes.
+//!
+//! The parser is **streaming**: [`stream_entries`] walks the container from
+//! any `Read`, validating each header (known dtype, overflow-checked shape
+//! product, `nbytes == elements × dtype size`) *before* handing the sink a
+//! reader restricted to exactly the payload bytes. [`WeightFile::parse`]
+//! buffers tensors through it; the weight residency manager
+//! (`memory::weight_store`) streams payloads straight onto flash instead,
+//! so the load path never holds the whole file in DRAM.
 
 use std::collections::HashMap;
+use std::io::{ErrorKind, Read};
 use std::path::Path;
 
 /// dtype codes shared with the exporter.
@@ -12,6 +21,16 @@ pub const DT_I8: u8 = 1;
 pub const DT_U8: u8 = 2;
 pub const DT_BF16: u8 = 3;
 pub const DT_I32: u8 = 4;
+
+/// Bytes per element of a dtype code (None for unknown codes).
+pub fn dtype_size(dtype: u8) -> Option<usize> {
+    match dtype {
+        DT_F32 | DT_I32 => Some(4),
+        DT_BF16 => Some(2),
+        DT_I8 | DT_U8 => Some(1),
+        _ => None,
+    }
+}
 
 /// One loaded tensor.
 #[derive(Clone, Debug)]
@@ -36,6 +55,19 @@ impl Tensor {
             .collect()
     }
 
+    /// View as f32, returning an error instead of panicking — the load-path
+    /// variant (a corrupt artifact must fail the load, not the process).
+    pub fn try_f32(&self) -> std::io::Result<Vec<f32>> {
+        if self.dtype != DT_F32 {
+            return Err(bad(&format!("{}: expected f32, dtype {}", self.name, self.dtype)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
     pub fn as_i8(&self) -> &[u8] {
         assert_eq!(self.dtype, DT_I8, "{}: not i8", self.name);
         &self.data
@@ -45,6 +77,17 @@ impl Tensor {
         assert_eq!(self.dtype, DT_U8, "{}: not u8", self.name);
         &self.data
     }
+}
+
+/// Header of one container entry, handed to streaming sinks ahead of the
+/// payload bytes. Already validated: dtype is known and `nbytes` equals the
+/// shape's element count times the dtype size (both overflow-checked).
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: u8,
+    pub shape: Vec<usize>,
+    pub nbytes: usize,
 }
 
 /// The whole weight file, indexed by name (order preserved).
@@ -57,50 +100,126 @@ fn bad(msg: &str) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, format!("weights.bin: {msg}"))
 }
 
+fn map_eof(e: std::io::Error) -> std::io::Error {
+    if e.kind() == ErrorKind::UnexpectedEof {
+        bad("truncated")
+    } else {
+        e
+    }
+}
+
+fn read_arr<R: Read, const N: usize>(r: &mut R) -> std::io::Result<[u8; N]> {
+    let mut a = [0u8; N];
+    r.read_exact(&mut a).map_err(map_eof)?;
+    Ok(a)
+}
+
+/// Parse the container from `r`, invoking `sink` once per tensor with its
+/// validated header and a reader restricted to exactly the payload bytes.
+/// The sink may consume any prefix of the payload; the remainder is drained
+/// (and a short file is reported as truncation). Header fields are checked
+/// with overflow-safe arithmetic, so a crafted `nbytes`/shape can neither
+/// wrap an offset (the old parser's `off + n` panic) nor justify an
+/// allocation larger than the shape allows.
+pub fn stream_entries<R, F>(mut r: R, mut sink: F) -> std::io::Result<()>
+where
+    R: Read,
+    F: FnMut(&TensorMeta, &mut dyn Read) -> std::io::Result<()>,
+{
+    let magic: [u8; 4] = read_arr(&mut r)?;
+    if &magic != b"MNNW" {
+        return Err(bad("bad magic"));
+    }
+    let version = u32::from_le_bytes(read_arr(&mut r)?);
+    if version != 1 {
+        return Err(bad(&format!("unsupported version {version}")));
+    }
+    let count = u32::from_le_bytes(read_arr(&mut r)?) as usize;
+    for _ in 0..count {
+        let nlen = u16::from_le_bytes(read_arr(&mut r)?) as usize;
+        let mut name_buf = vec![0u8; nlen];
+        r.read_exact(&mut name_buf).map_err(map_eof)?;
+        let name = String::from_utf8(name_buf).map_err(|_| bad("non-utf8 name"))?;
+        let hdr: [u8; 2] = read_arr(&mut r)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(read_arr(&mut r)?) as usize);
+        }
+        let nbytes64 = u64::from_le_bytes(read_arr(&mut r)?);
+        let size = dtype_size(dtype)
+            .ok_or_else(|| bad(&format!("{name}: unknown dtype {dtype}")))?;
+        let elements = shape
+            .iter()
+            .try_fold(1u64, |acc, &d| acc.checked_mul(d as u64))
+            .ok_or_else(|| bad(&format!("{name}: shape element count overflows")))?;
+        let expected = elements
+            .checked_mul(size as u64)
+            .ok_or_else(|| bad(&format!("{name}: shape byte size overflows")))?;
+        if nbytes64 != expected {
+            return Err(bad(&format!(
+                "{name}: payload {nbytes64} B does not match shape {shape:?} × {size} B/elem"
+            )));
+        }
+        let nbytes = usize::try_from(nbytes64)
+            .map_err(|_| bad(&format!("{name}: payload too large for this platform")))?;
+        let meta = TensorMeta { name, dtype, shape, nbytes };
+        let mut payload = (&mut r).take(nbytes64);
+        sink(&meta, &mut payload)?;
+        // Drain whatever prefix the sink left unread; coming up short means
+        // the file ended inside this payload.
+        std::io::copy(&mut payload, &mut std::io::sink())?;
+        if payload.limit() > 0 {
+            return Err(bad("truncated"));
+        }
+    }
+    let mut probe = [0u8; 1];
+    match r.read_exact(&mut probe) {
+        Ok(()) => Err(bad("trailing bytes")),
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => Ok(()),
+        Err(e) => Err(e),
+    }
+}
+
 impl WeightFile {
     pub fn load(path: &Path) -> std::io::Result<WeightFile> {
-        let bytes = std::fs::read(path)?;
-        Self::parse(&bytes)
+        Self::from_reader(std::io::BufReader::new(std::fs::File::open(path)?))
     }
 
     pub fn parse(bytes: &[u8]) -> std::io::Result<WeightFile> {
-        let mut off = 0usize;
-        let take = |off: &mut usize, n: usize| -> std::io::Result<&[u8]> {
-            if *off + n > bytes.len() {
-                return Err(bad("truncated"));
+        Self::from_reader(bytes)
+    }
+
+    /// Parse from any reader, buffering each tensor's payload. One copy per
+    /// tensor — the old parser additionally held the entire file. Payloads
+    /// grow incrementally in bounded chunks, so a header lying about its
+    /// size fails with `truncated` before any oversized allocation.
+    pub fn from_reader<R: Read>(r: R) -> std::io::Result<WeightFile> {
+        const CHUNK: usize = 1 << 20;
+        let mut order = Vec::new();
+        let mut tensors = HashMap::new();
+        stream_entries(r, |meta, payload| {
+            let mut data = Vec::new();
+            let mut buf = vec![0u8; meta.nbytes.min(CHUNK)];
+            let mut remaining = meta.nbytes;
+            while remaining > 0 {
+                let n = remaining.min(buf.len());
+                payload.read_exact(&mut buf[..n]).map_err(map_eof)?;
+                data.extend_from_slice(&buf[..n]);
+                remaining -= n;
             }
-            let s = &bytes[*off..*off + n];
-            *off += n;
-            Ok(s)
-        };
-        if take(&mut off, 4)? != b"MNNW" {
-            return Err(bad("bad magic"));
-        }
-        let version = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
-        if version != 1 {
-            return Err(bad(&format!("unsupported version {version}")));
-        }
-        let count = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
-        let mut order = Vec::with_capacity(count);
-        let mut tensors = HashMap::with_capacity(count);
-        for _ in 0..count {
-            let nlen = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
-            let name = String::from_utf8(take(&mut off, nlen)?.to_vec())
-                .map_err(|_| bad("non-utf8 name"))?;
-            let hdr = take(&mut off, 2)?;
-            let (dtype, ndim) = (hdr[0], hdr[1] as usize);
-            let mut shape = Vec::with_capacity(ndim);
-            for _ in 0..ndim {
-                shape.push(u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize);
-            }
-            let nbytes = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
-            let data = take(&mut off, nbytes)?.to_vec();
-            order.push(name.clone());
-            tensors.insert(name.clone(), Tensor { name, dtype, shape, data });
-        }
-        if off != bytes.len() {
-            return Err(bad("trailing bytes"));
-        }
+            order.push(meta.name.clone());
+            tensors.insert(
+                meta.name.clone(),
+                Tensor {
+                    name: meta.name.clone(),
+                    dtype: meta.dtype,
+                    shape: meta.shape.clone(),
+                    data,
+                },
+            );
+            Ok(())
+        })?;
         Ok(WeightFile { order, tensors })
     }
 
@@ -175,6 +294,7 @@ impl Default for WeightWriter {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::prop_check;
 
     /// Build a tiny container in-memory (mirror of the python writer).
     fn sample() -> Vec<u8> {
@@ -211,8 +331,10 @@ mod tests {
         let a = wf.require("t.a").unwrap();
         assert_eq!(a.shape, vec![2, 2]);
         assert_eq!(a.as_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.try_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
         let b = wf.require("t.b").unwrap();
         assert_eq!(b.as_i8(), &[0xFF, 0x00, 0x7F]);
+        assert!(b.try_f32().is_err(), "try_f32 on i8 is a clean error");
         assert_eq!(wf.nbytes(), 19);
     }
 
@@ -239,6 +361,145 @@ mod tests {
         assert_eq!(bytes, sample());
         let wf = WeightFile::parse(&bytes).unwrap();
         assert_eq!(wf.require("t.a").unwrap().as_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    /// Regression: a crafted huge `nbytes` used to overflow `off + n` and
+    /// panic (debug) or wrap into an out-of-bounds slice (release). It must
+    /// be InvalidData.
+    #[test]
+    fn huge_nbytes_is_invalid_data_not_panic() {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"MNNW");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'x');
+        b.push(DT_F32);
+        b.push(1);
+        b.extend_from_slice(&4u32.to_le_bytes());
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        let err = WeightFile::parse(&b).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    /// Regression: a payload whose size disagrees with dtype × shape used to
+    /// parse fine and blow up later (wrong element count at use time). It
+    /// must be rejected at load.
+    #[test]
+    fn shape_payload_mismatch_rejected_at_load() {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"MNNW");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'x');
+        b.push(DT_F32);
+        b.push(2);
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // Claims 12 bytes for a [2,2] f32 tensor (needs 16).
+        b.extend_from_slice(&12u64.to_le_bytes());
+        b.extend_from_slice(&[0u8; 12]);
+        let err = WeightFile::parse(&b).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn unknown_dtype_rejected() {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"MNNW");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'x');
+        b.push(0xEE); // no such dtype
+        b.push(1);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u64.to_le_bytes());
+        b.push(0);
+        assert!(WeightFile::parse(&b).is_err());
+    }
+
+    #[test]
+    fn shape_product_overflow_rejected() {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"MNNW");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'x');
+        b.push(DT_F32);
+        b.push(3);
+        for _ in 0..3 {
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        b.extend_from_slice(&16u64.to_le_bytes());
+        b.extend_from_slice(&[0u8; 16]);
+        let err = WeightFile::parse(&b).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    /// Property: every strict prefix of a valid container is an error —
+    /// never a panic, never a silent partial parse.
+    #[test]
+    fn truncation_always_errors_never_panics() {
+        let full = {
+            let mut w = WeightWriter::new();
+            w.push_f32("t.a", &[4, 3], &[0.5f32; 12]);
+            w.push("t.b", DT_I8, &[7], &[1, 2, 3, 4, 5, 6, 7]);
+            w.push("t.c", DT_U8, &[2, 2], &[9, 9, 9, 9]);
+            w.finish()
+        };
+        prop_check(300, |rng| {
+            let cut = rng.below(full.len());
+            match WeightFile::parse(&full[..cut]) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("prefix of {cut} bytes parsed as a whole container")),
+            }
+        });
+    }
+
+    /// Property: random bit flips anywhere in the container never panic;
+    /// when the flipped file still parses (payload flips are undetectable —
+    /// no checksums, documented), every tensor's payload size still matches
+    /// its dtype × shape, so downstream indexing stays in bounds.
+    #[test]
+    fn bit_flips_never_panic_and_preserve_size_invariants() {
+        let full = {
+            let mut w = WeightWriter::new();
+            w.push_f32("flip.a", &[3, 5], &[1.25f32; 15]);
+            w.push("flip.b", DT_I8, &[11], &[7u8; 11]);
+            w.finish()
+        };
+        prop_check(500, |rng| {
+            let mut b = full.clone();
+            let flips = 1 + rng.below(4);
+            for _ in 0..flips {
+                let i = rng.below(b.len());
+                let bit = rng.below(8);
+                b[i] ^= 1 << bit;
+            }
+            match WeightFile::parse(&b) {
+                Err(_) => Ok(()),
+                Ok(wf) => {
+                    for t in wf.tensors.values() {
+                        let size = match dtype_size(t.dtype) {
+                            Some(s) => s,
+                            None => return Err(format!("{}: unknown dtype parsed", t.name)),
+                        };
+                        if t.data.len() != t.elements() * size {
+                            return Err(format!(
+                                "{}: {} payload bytes for shape {:?}",
+                                t.name,
+                                t.data.len(),
+                                t.shape
+                            ));
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        });
     }
 
     #[test]

@@ -6,30 +6,44 @@
 //! core; the makespan in virtual time is max_i(n_i / r_i); the speedup vs
 //! one prime core is items / makespan.
 
-/// Split `items` uniformly across `rates.len()` cores (the baseline the
-/// paper compares against).
+/// Split `items` uniformly across the *active* (rate > 0) cores — the
+/// baseline the paper compares against. A core whose rate is 0 (parked /
+/// thermally offlined) gets nothing: one item on a zero-rate core would
+/// drive the makespan to infinity.
 pub fn uniform_split(items: usize, rates: &[f64]) -> Vec<usize> {
-    let n = rates.len();
-    let base = items / n;
-    let rem = items % n;
-    (0..n).map(|i| base + usize::from(i < rem)).collect()
+    let active: Vec<usize> = (0..rates.len()).filter(|&i| rates[i] > 0.0).collect();
+    assert!(!active.is_empty(), "need at least one active core");
+    let base = items / active.len();
+    let rem = items % active.len();
+    let mut out = vec![0usize; rates.len()];
+    for (j, &i) in active.iter().enumerate() {
+        out[i] = base + usize::from(j < rem);
+    }
+    out
 }
 
 /// Split `items` proportionally to core rates (largest-remainder rounding),
-/// the paper's balanced policy.
+/// the paper's balanced policy. Zero-rate cores get exactly zero items —
+/// including during remainder distribution, whose wraparound used to be
+/// able to land units on an inactive core.
 pub fn balanced_split(items: usize, rates: &[f64]) -> Vec<usize> {
-    let total: f64 = rates.iter().sum();
+    let total: f64 = rates.iter().filter(|r| **r > 0.0).sum();
     assert!(total > 0.0, "need at least one active core");
-    let ideal: Vec<f64> = rates.iter().map(|r| items as f64 * r / total).collect();
+    let ideal: Vec<f64> = rates
+        .iter()
+        .map(|&r| if r > 0.0 { items as f64 * r / total } else { 0.0 })
+        .collect();
     let mut out: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
     let assigned: usize = out.iter().sum();
-    // Hand the remaining units to the largest fractional parts.
+    // Hand the remaining units to the largest fractional parts, cycling
+    // over active cores only.
     let mut frac: Vec<(usize, f64)> = ideal
         .iter()
         .enumerate()
+        .filter(|(i, _)| rates[*i] > 0.0)
         .map(|(i, x)| (i, x - x.floor()))
         .collect();
-    frac.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    frac.sort_by(|a, b| b.1.total_cmp(&a.1));
     for k in 0..(items - assigned) {
         out[frac[k % frac.len()].0] += 1;
     }
@@ -83,10 +97,23 @@ mod tests {
 
     #[test]
     fn splits_conserve_items() {
+        // Rates include exact 0.0 (parked cores) — the former floor of 0.1
+        // is why handing items to inactive cores went unnoticed.
         prop_check(300, |rng| {
             let items = rng.range(1, 10_000);
             let n = rng.range(1, 8);
-            let rates: Vec<f64> = (0..n).map(|_| rng.range_f32(0.1, 1.0) as f64).collect();
+            let mut rates: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.below(4) == 0 {
+                        0.0
+                    } else {
+                        rng.range_f32(0.1, 1.0) as f64
+                    }
+                })
+                .collect();
+            if rates.iter().all(|&r| r == 0.0) {
+                rates[rng.below(n)] = 1.0; // precondition: ≥ 1 active core
+            }
             for split in [balanced_split(items, &rates), uniform_split(items, &rates)] {
                 if split.iter().sum::<usize>() != items {
                     return Err(format!("split {split:?} loses items"));
@@ -94,9 +121,37 @@ mod tests {
                 if split.len() != n {
                     return Err("wrong core count".into());
                 }
+                for (i, (&cnt, &r)) in split.iter().zip(&rates).enumerate() {
+                    if r == 0.0 && cnt > 0 {
+                        return Err(format!("core {i} is inactive but got {cnt} items"));
+                    }
+                }
+                let m = makespan(&split, &rates);
+                if !m.is_finite() {
+                    return Err(format!("rates {rates:?} split {split:?}: makespan {m}"));
+                }
             }
             Ok(())
         });
+    }
+
+    /// Regression: `uniform_split` used to hand items to zero-rate cores
+    /// (and `balanced_split`'s largest-remainder wraparound could too),
+    /// driving the makespan to infinity.
+    #[test]
+    fn zero_rate_cores_get_no_items() {
+        let rates = vec![1.0, 0.0, 0.72, 0.0];
+        for split in [uniform_split(100, &rates), balanced_split(100, &rates)] {
+            assert_eq!(split.iter().sum::<usize>(), 100);
+            assert_eq!(split[1], 0, "{split:?}");
+            assert_eq!(split[3], 0, "{split:?}");
+            assert!(makespan(&split, &rates).is_finite());
+        }
+        // All remainder pressure on a single active core still conserves.
+        let one = vec![0.0, 0.3, 0.0];
+        let split = balanced_split(7, &one);
+        assert_eq!(split, vec![0, 7, 0]);
+        assert_eq!(uniform_split(7, &one), vec![0, 7, 0]);
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! A small scoped thread pool applying the balanced split (paper §5.2).
+//! A small scoped thread pool applying the balanced split (paper §5.2),
+//! plus a persistent [`BackgroundWorker`] for asynchronous one-shot jobs
+//! (the weight residency manager's layer-ahead prefetch).
 //!
 //! The engine sets per-core load rates at startup (big.LITTLE aware); each
 //! parallel GEMM then distributes its h-tiles with `balanced_split` and
@@ -6,6 +8,8 @@
 //! testbed the *policy* is what matters (virtual-time speedups come from
 //! the device model); the pool still runs real threads so correctness under
 //! concurrency is exercised.
+
+use std::sync::mpsc;
 
 use super::balancer::{balanced_split, split_ranges};
 
@@ -60,6 +64,56 @@ where
     });
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One persistent background thread running submitted jobs in order.
+///
+/// `run_balanced` is synchronous by design (scoped threads joined per
+/// call); prefetch wants the opposite — fire a flash read now, overlap it
+/// with the current layer's compute, pick the result up later. Dropping
+/// the worker closes the queue, runs what was already submitted, and joins
+/// the thread, so jobs never outlive the state they capture by `Arc`.
+pub struct BackgroundWorker {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BackgroundWorker {
+    pub fn new(name: &str) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    job();
+                }
+            })
+            .expect("spawn background worker");
+        BackgroundWorker { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Enqueue a job; it runs asynchronously, after all previously
+    /// submitted jobs. Returns false when the job could not be enqueued
+    /// (the worker thread died — a previous job panicked); callers that
+    /// track in-flight work must roll that state back on false, or waiters
+    /// would block on a job that will never run.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> bool {
+        match &self.tx {
+            Some(tx) => tx.send(Box::new(job)).is_ok(),
+            None => false,
+        }
+    }
+}
+
+impl Drop for BackgroundWorker {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Like `run_balanced` but each worker produces a Vec; results are returned
 /// in worker order (for reductions).
 pub fn run_balanced_collect<T, F>(cfg: &WorkerConfig, items: usize, f: F) -> Vec<T>
@@ -110,15 +164,34 @@ mod tests {
 
     #[test]
     fn single_thread_runs_inline() {
+        // Regression for a vacuous predecessor: it set its flag *after* the
+        // call, so it asserted nothing. This one records, from inside the
+        // closure, that the work ran on the calling thread itself.
+        use std::sync::atomic::AtomicBool;
         let cfg = WorkerConfig::uniform(1);
-        let mut hit = false;
+        let caller = std::thread::current().id();
+        let ran_inline = AtomicBool::new(false);
         run_balanced(&cfg, 10, |w, lo, hi| {
             assert_eq!((w, lo, hi), (0, 0, 10));
-            // Inline closure can't capture &mut through Sync bound; use a cell.
-            let _ = &hit;
+            ran_inline.store(std::thread::current().id() == caller, Ordering::SeqCst);
         });
-        hit = true;
-        assert!(hit);
+        assert!(
+            ran_inline.load(Ordering::SeqCst),
+            "1-thread config must execute on the calling thread, not a spawned one"
+        );
+    }
+
+    #[test]
+    fn background_worker_runs_jobs_in_order_and_joins_on_drop() {
+        use std::sync::{Arc, Mutex};
+        let w = BackgroundWorker::new("test-bg");
+        let log: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..8 {
+            let log = log.clone();
+            w.submit(move || log.lock().unwrap().push(i));
+        }
+        drop(w); // closes the queue, drains, joins
+        assert_eq!(*log.lock().unwrap(), (0..8).collect::<Vec<_>>());
     }
 
     #[test]

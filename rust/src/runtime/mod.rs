@@ -4,6 +4,13 @@
 //! kernels (L1) inside the JAX graphs (L2), driven from Rust (L3) — Python
 //! never runs at serving time.
 //!
+//! `WeightFile::load` is the streaming parser (one buffered copy per
+//! tensor, never the whole file), so this backend's load-path peak DRAM is
+//! the tensor set it uploads, not 2× it. The native backend goes further
+//! and keeps layers flash-resident (`memory::weight_store`); PJRT keeps
+//! everything as device buffers because the compiled graphs close over
+//! every weight argument per call.
+//!
 //! The executable half depends on the `xla` crate, which is not part of
 //! the offline toolchain, so it is compiled only under the `pjrt` feature
 //! (see Cargo.toml). Without the feature a stub with the identical API is

@@ -105,6 +105,9 @@ fn native_options_never_change_numbers() {
         EngineOptions { embedding_in_flash: false, ..EngineOptions::default() },
         EngineOptions { kv_budget_tokens: 3, ..EngineOptions::default() },
         EngineOptions { kv_pool_bytes: page, ..EngineOptions::default() },
+        // Weight residency budgets, from roughly-one-layer to pathological.
+        EngineOptions { weight_dram_bytes: 10 << 10, ..EngineOptions::default() },
+        EngineOptions { weight_dram_bytes: 1, ..EngineOptions::default() },
         EngineOptions {
             tile: TileConfig { e_p: 2, h_p: 8, l_p: 4 },
             ..EngineOptions::default()
@@ -114,6 +117,7 @@ fn native_options_never_change_numbers() {
             workers: WorkerConfig { rates: vec![1.0, 0.72, 0.72, 0.72] },
             kv_budget_tokens: 5,
             kv_pool_bytes: 2 * page,
+            weight_dram_bytes: 1 << 16,
             embedding_in_flash: true,
         },
     ];

@@ -1,0 +1,140 @@
+//! Weight-residency acceptance tests: the fixture model running with a
+//! DRAM weight budget *below* its total packed size must produce tokens
+//! bit-identical to the unlimited-budget run, while `EngineMetrics`
+//! surfaces nonzero evictions and prefetch traffic — the weight half of
+//! the paper's DRAM–Flash hybrid storage (§4.1), mirroring PR 1's KV-spill
+//! contract.
+//!
+//! Everything runs against the self-contained fixture (`model::fixtures`)
+//! at 4 decoder layers, deep enough for LRU + one-layer-ahead prefetch to
+//! actually churn.
+
+use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
+use mnn_llm::coordinator::SchedulePolicy;
+use mnn_llm::model::fixtures;
+use mnn_llm::model::native::{EngineOptions, NativeModel};
+
+const SEED: u64 = 21;
+const LAYERS: usize = 4;
+
+fn with_budget(dir: &std::path::Path, budget: usize) -> NativeModel {
+    NativeModel::load(
+        dir,
+        EngineOptions { weight_dram_bytes: budget, ..EngineOptions::default() },
+    )
+    .unwrap()
+}
+
+#[test]
+fn tight_budget_is_bit_identical_and_reports_pressure() {
+    let (fx, unlimited) =
+        fixtures::native_model_with_layers(SEED, LAYERS, EngineOptions::default()).unwrap();
+    let total = unlimited.weight_metrics().packed_bytes;
+    assert!(total > 0);
+
+    // Budget for half the packed layers: every forward pass must fault
+    // layers in from flash and evict others to stay under it.
+    let budget = total / 2;
+    let tight = with_budget(fx.dir(), budget);
+
+    let prompt: Vec<usize> = (0..12).map(|i| 60 + i).collect();
+    // Logits, not just argmax tokens, must be bit-identical.
+    let la = {
+        let mut s = unlimited.new_session();
+        unlimited.prefill(&mut s, &prompt)
+    };
+    let lb = {
+        let mut s = tight.new_session();
+        tight.prefill(&mut s, &prompt)
+    };
+    assert_eq!(la, lb, "prefill logits must be bit-identical under the budget");
+    let a = unlimited.generate_once(&prompt, 8);
+    let b = tight.generate_once(&prompt, 8);
+    assert_eq!(a, b, "weight residency must be bit-exact value-neutral");
+
+    let wm = tight.weight_metrics();
+    assert!(wm.evictions > 0, "tight budget must evict: {wm:?}");
+    assert!(wm.prefetch_issued > 0, "forward must prefetch one layer ahead: {wm:?}");
+    assert!(wm.prefetch_hits + wm.prefetch_stalls > 0, "prefetches must be consumed: {wm:?}");
+    assert!(wm.flash_read_s > 0.0, "flash reads carry modeled time: {wm:?}");
+    assert!(wm.resident_bytes <= budget, "arena over budget: {wm:?}");
+    assert_eq!(wm.packed_bytes, total);
+
+    // The unlimited model holds everything and never touches flash again.
+    let um = unlimited.weight_metrics();
+    assert_eq!(um.resident_bytes, total);
+    assert_eq!(um.demand_fetches, 0, "{um:?}");
+    assert_eq!(um.evictions, 0, "{um:?}");
+    assert_eq!(um.prefetch_issued, 0, "{um:?}");
+}
+
+#[test]
+fn every_budget_point_matches_unlimited_tokens() {
+    // Sweep budgets from generous to pathological (smaller than one
+    // layer's blob); tokens must never change — only the metrics do.
+    let (fx, unlimited) =
+        fixtures::native_model_with_layers(SEED, LAYERS, EngineOptions::default()).unwrap();
+    let total = unlimited.weight_metrics().packed_bytes;
+    let prompt = [7usize, 8, 9, 10, 11];
+    let want = unlimited.generate_once(&prompt, 6);
+    for budget in [total, total * 3 / 4, total / 2, total / LAYERS, 1] {
+        let m = with_budget(fx.dir(), budget);
+        let got = m.generate_once(&prompt, 6);
+        assert_eq!(got, want, "budget {budget} of {total} changed tokens");
+    }
+}
+
+#[test]
+fn coordinator_surfaces_weight_pressure_in_engine_metrics() {
+    let (fx, probe) =
+        fixtures::native_model_with_layers(SEED, LAYERS, EngineOptions::default()).unwrap();
+    let total = probe.weight_metrics().packed_bytes;
+    drop(probe);
+
+    let m = with_budget(fx.dir(), total / 2);
+    let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+    c.submit(vec![1, 2, 3], 4);
+    c.submit(vec![9, 8, 7, 6], 4);
+    let rs = c.run_all().unwrap();
+    assert_eq!(rs.len(), 2);
+
+    let wm = &c.metrics.weights;
+    assert!(wm.under_pressure(), "{wm:?}");
+    assert!(wm.evictions > 0, "{wm:?}");
+    assert!(wm.prefetch_issued > 0, "{wm:?}");
+    let s = c.metrics.summary(1.0);
+    assert!(s.contains("weights"), "summary must surface weight pressure: {s}");
+
+    // A drained unconstrained coordinator stays quiet.
+    let m = with_budget(fx.dir(), usize::MAX);
+    let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
+    c.submit(vec![1, 2, 3], 3);
+    c.run_all().unwrap();
+    assert!(!c.metrics.weights.under_pressure());
+    assert!(!c.metrics.summary(1.0).contains("weights"));
+}
+
+#[test]
+fn weight_budget_composes_with_kv_budget() {
+    // Both halves of hybrid storage under pressure at once: KV spilling
+    // to flash *and* weights faulting from flash, still bit-identical.
+    let (fx, plain) =
+        fixtures::native_model_with_layers(SEED, LAYERS, EngineOptions::default()).unwrap();
+    let total = plain.weight_metrics().packed_bytes;
+    let constrained = NativeModel::load(
+        fx.dir(),
+        EngineOptions {
+            weight_dram_bytes: total / 2,
+            kv_budget_tokens: 3,
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let prompt = [40usize, 41, 42, 43, 44, 45, 46, 47];
+    let a = plain.generate_once(&prompt, 6);
+    let mut sess = constrained.new_session();
+    let b = constrained.generate(&mut sess, &prompt, 6);
+    assert_eq!(a, b, "kv spill + weight residency must compose value-neutrally");
+    assert!(sess.spilled_records() > 0, "kv budget actually spilled");
+    assert!(constrained.weight_metrics().under_pressure(), "weight budget actually faulted");
+}
