@@ -3,18 +3,19 @@
 //! occupancy dropping as embedding + KV move to flash, (c) the modeled
 //! latency cost of each configuration.
 //!
-//! Run: `make artifacts && cargo run --release --example memory_constrained`
+//! Runs against real AOT artifacts when `artifacts/` exists, otherwise
+//! against the self-contained fixture model.
 
 use mnn_llm::device::SocProfile;
 use mnn_llm::memory::prefetch::PrefetchPlanner;
+use mnn_llm::model::fixtures;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::model::tokenizer::ByteTokenizer;
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
+    let (_fx, dir) = fixtures::artifacts_or_fixture(42)?;
+    if _fx.is_some() {
+        println!("artifacts/ missing — using the generated fixture model");
     }
     let tok = ByteTokenizer::new(2048);
     let prompt = tok.encode("memory constrained mobile inference with a long-ish prompt", false);
@@ -29,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         ("embedding + KV>32 tok → flash", true, 32),
         ("embedding + KV>8 tok → flash", true, 8),
     ] {
-        let mut m = NativeModel::load(
+        let m = NativeModel::load(
             &dir,
             EngineOptions {
                 embedding_in_flash: emb_flash,
@@ -37,7 +38,8 @@ fn main() -> anyhow::Result<()> {
                 ..EngineOptions::default()
             },
         )?;
-        let out = m.generate(&prompt, gen);
+        let mut sess = m.new_session();
+        let out = m.generate(&mut sess, &prompt, gen);
         let same = match &reference {
             None => {
                 reference = Some(out.clone());
@@ -45,8 +47,8 @@ fn main() -> anyhow::Result<()> {
             }
             Some(r) => *r == out,
         };
-        let kv_bytes: usize = m.kv.iter().map(|l| l.dram_bytes()).sum();
-        let spilled: usize = m.kv.iter().map(|l| l.spilled_tokens()).sum();
+        let kv_bytes: usize = sess.kv.iter().map(|l| l.dram_bytes()).sum();
+        let spilled: usize = sess.kv.iter().map(|l| l.spilled_tokens()).sum();
         println!(
             "{:<38}| {:>10.1} KB      | {:<16} | {:>4} tok",
             name,

@@ -1,11 +1,17 @@
 //! Multi-LoRA serving (paper §5.5): one base model, several online-loaded
 //! adapters selected per request, with the associative-order optimization.
+//! Adapter selection is per *session* (and per `Request::lora_task` when
+//! going through the engine), so concurrent requests can run different
+//! tasks against the shared base weights.
 //!
-//! Run: `make artifacts && cargo run --release --example multi_lora`
+//! Runs against real AOT artifacts when `artifacts/` exists, otherwise
+//! against the self-contained fixture model.
 
 use std::collections::HashMap;
 
+use mnn_llm::coordinator::{Backend, Coordinator, Request, SchedulePolicy};
 use mnn_llm::lora::LoraAdapter;
+use mnn_llm::model::fixtures;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::model::tokenizer::ByteTokenizer;
 use mnn_llm::util::rng::Rng;
@@ -20,10 +26,9 @@ fn adapter_set(rng: &mut Rng, layers: usize, hidden: usize, r: usize) -> HashMap
 }
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
+    let (_fx, dir) = fixtures::artifacts_or_fixture(42)?;
+    if _fx.is_some() {
+        println!("artifacts/ missing — using the generated fixture model");
     }
     let mut m = NativeModel::load(&dir, EngineOptions::default())?;
     let (layers, hidden) = (m.config.layers, m.config.hidden);
@@ -41,11 +46,13 @@ fn main() -> anyhow::Result<()> {
 
     let tok = ByteTokenizer::new(m.config.vocab);
     let prompt = tok.encode("route this request", false);
+
+    // Per-session adapter selection on the bare model.
     let mut outputs: HashMap<String, Vec<usize>> = HashMap::new();
     for task in [None, Some("translate"), Some("summarize"), Some("chat")] {
-        m.reset_session();
-        m.lora_task = task.map(String::from);
-        let out = m.generate(&prompt, 8);
+        let mut sess = m.new_session();
+        sess.lora_task = task.map(String::from);
+        let out = m.generate(&mut sess, &prompt, 8);
         let name = task.unwrap_or("base");
         println!("  task {name:<10} → {out:?}");
         outputs.insert(name.to_string(), out);
@@ -54,10 +61,42 @@ fn main() -> anyhow::Result<()> {
     assert_ne!(outputs["base"], outputs["translate"]);
     assert_ne!(outputs["translate"], outputs["summarize"]);
     // And re-running a task reproduces its output (determinism).
-    m.reset_session();
-    m.lora_task = Some("chat".into());
-    assert_eq!(m.generate(&prompt, 8), outputs["chat"]);
+    let mut sess = m.new_session();
+    sess.lora_task = Some("chat".into());
+    assert_eq!(m.generate(&mut sess, &prompt, 8), outputs["chat"]);
+    drop(sess);
     println!("per-task outputs differ; per-task reruns are deterministic ✓");
+
+    // The same routing through the serving engine: one interleaved batch,
+    // one adapter per request (§5.5 multitask serving).
+    let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+    let mut ids = Vec::new();
+    for task in [None, Some("translate"), Some("chat")] {
+        let mut req = Request::new(0, prompt.clone(), 8);
+        req.lora_task = task.map(String::from);
+        ids.push((c.submit_request(req), task.unwrap_or("base")));
+    }
+    let rs = c.run_all()?;
+    // The engine stops at EOS; the bare `generate` emits the raw stream.
+    let until_eos = |toks: &[usize]| {
+        let mut out = Vec::new();
+        for &t in toks {
+            out.push(t);
+            if t == mnn_llm::model::tokenizer::EOS {
+                break;
+            }
+        }
+        out
+    };
+    for (r, (id, name)) in rs.iter().zip(&ids) {
+        assert_eq!(r.id, *id);
+        assert_eq!(
+            r.tokens,
+            until_eos(&outputs[*name]),
+            "engine routing must match the bare-session run for {name}"
+        );
+    }
+    println!("engine-routed multitask batch matches per-session runs ✓");
 
     // Table 3: the associative-order analytics at paper scale.
     let row = LoraAdapter::table3_costs(3584, 8);

@@ -1,61 +1,72 @@
-//! Quickstart: load the AOT artifacts on the PJRT runtime and generate a
-//! few tokens — the smallest end-to-end exercise of all three layers
-//! (Pallas kernels → JAX graphs → Rust engine).
+//! Quickstart: the smallest end-to-end exercise of the streaming serving
+//! API — load a model on the native backend, submit one request, and
+//! observe tokens the moment the `step()` scheduler emits them.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Runs against real AOT artifacts when `artifacts/` exists (`make
+//! artifacts`), otherwise against the self-contained deterministic fixture
+//! model — so `cargo run --release --example quickstart` always works
+//! (random weights → gibberish text is expected).
 
+use mnn_llm::coordinator::{Backend, Coordinator, EngineEvent, Request, SchedulePolicy};
+use mnn_llm::model::fixtures;
+use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::model::tokenizer::ByteTokenizer;
-use mnn_llm::runtime::PjrtRuntime;
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
+    // Prefer real AOT artifacts; fall back to the fixture model.
+    let (_fx, dir) = fixtures::artifacts_or_fixture(42)?;
+    let which = if _fx.is_some() { "generated fixture" } else { "AOT artifacts" };
 
-    println!("loading + compiling AOT artifacts (HLO text → PJRT)...");
     let t0 = std::time::Instant::now();
-    let rt = PjrtRuntime::load(&dir)?;
+    let model = NativeModel::load(&dir, EngineOptions::default())?;
+    let vocab = model.config.vocab;
     println!(
-        "  {} ready in {:.2}s ({} weight tensors resident)",
-        rt.manifest.model.name,
-        t0.elapsed().as_secs_f64(),
-        rt.manifest.weights.len()
+        "loaded {} ({which}) in {:.2}s",
+        model.config.name,
+        t0.elapsed().as_secs_f64()
     );
 
-    let tok = ByteTokenizer::new(rt.manifest.model.vocab);
+    let tok = ByteTokenizer::new(vocab);
     let prompt = "Deploying large language models on mobile devices";
     let ids = tok.encode(prompt, false);
+    println!("prompt: {prompt:?} → {} tokens", ids.len());
 
-    let t1 = std::time::Instant::now();
-    let (logits, mut kv) = rt.prefill(&ids)?;
-    let prefill_s = t1.elapsed().as_secs_f64();
-    println!(
-        "prefill: {} tokens in {:.1} ms ({:.1} tok/s)",
-        ids.len(),
-        prefill_s * 1e3,
-        ids.len() as f64 / prefill_s
-    );
+    // The event-driven engine: step() advances one scheduler tick and the
+    // TokenStream handle sees each token in decode order.
+    let mut engine =
+        Coordinator::new(Backend::Native(Box::new(model)), SchedulePolicy::Interleaved);
+    let stream = engine.submit_streaming(Request::new(0, ids, 24));
 
-    let mut token = mnn_llm::model::sampler::argmax(&logits);
-    let mut out = vec![token];
-    let t2 = std::time::Instant::now();
-    let n = 24;
-    for _ in 1..n {
-        let logits = rt.decode(token, &mut kv)?;
-        token = mnn_llm::model::sampler::argmax(&logits);
-        out.push(token);
+    let mut out = Vec::new();
+    while engine.step()? {
+        while let Some(ev) = stream.try_next() {
+            match ev {
+                EngineEvent::Started { .. } => println!("prefill done; decoding..."),
+                EngineEvent::Token { tok: t, index, ttft_s, .. } => {
+                    if let Some(ttft) = ttft_s {
+                        println!("first token after {:.1} ms (TTFT)", ttft * 1e3);
+                    }
+                    println!("  token[{index}] = {t}");
+                    out.push(t);
+                }
+                EngineEvent::Finished { reason, .. } => println!("finished: {reason:?}"),
+                other => println!("  event: {other:?}"),
+            }
+        }
     }
-    let decode_s = t2.elapsed().as_secs_f64();
+
+    let responses = engine.take_finished();
+    let r = responses
+        .iter()
+        .find(|r| r.id == stream.id())
+        .expect("request completed");
+    assert_eq!(r.tokens, out, "stream saw exactly the response tokens");
     println!(
-        "decode : {} tokens in {:.1} ms ({:.1} tok/s)",
-        out.len(),
-        decode_s * 1e3,
-        out.len() as f64 / decode_s
+        "\n{} tokens | prefill {:.1} tok/s | decode {:.1} tok/s",
+        r.tokens.len(),
+        r.metrics.prefill_tok_s(),
+        r.metrics.decode_tok_s()
     );
-    println!("tokens : {out:?}");
-    println!("text   : {:?} (random weights — gibberish is expected)", tok.decode(&out));
-    println!("KV     : {} tokens cached, {:.1} KB", kv.pos, kv.nbytes() as f64 / 1024.0);
+    println!("text: {:?} (random weights — gibberish is expected)", tok.decode(&r.tokens));
     Ok(())
 }

@@ -1,14 +1,18 @@
-//! End-to-end serving driver (the EXPERIMENTS.md validation run): queue a
-//! batch of requests against the coordinator on both backends and report
-//! latency/throughput — prefill tok/s, decode tok/s, TTFT, p95 e2e.
+//! End-to-end serving driver: queue a batch of requests against the
+//! engine, on both schedule policies, and report latency/throughput —
+//! prefill tok/s, decode tok/s, TTFT, p95 e2e. Ends with a **streaming**
+//! section: a step()-driven drain with a mid-flight submission and a
+//! cancellation, showing the event-driven API the batch wrapper sits on.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_batch`
+//! Runs against real AOT artifacts when `artifacts/` exists, otherwise
+//! against the self-contained fixture model. The PJRT section needs the
+//! `pjrt` cargo feature + compiled HLO and is skipped (with a note) when
+//! unavailable.
 
-use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
-use mnn_llm::coordinator::SchedulePolicy;
+use mnn_llm::coordinator::{Backend, Coordinator, EngineEvent, SchedulePolicy};
+use mnn_llm::model::fixtures;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::model::tokenizer::ByteTokenizer;
-use mnn_llm::parallel::pool::WorkerConfig;
 use mnn_llm::runtime::PjrtRuntime;
 
 const PROMPTS: [&str; 6] = [
@@ -31,56 +35,106 @@ fn drive(name: &str, mut c: Coordinator, gen: usize) -> anyhow::Result<()> {
     println!("\n--- {name} ---");
     for r in &responses {
         println!(
-            "  req {}: prompt {:>3} tok | out {:>2} tok | ttft {:>7.1} ms | prefill {:>7.1} tok/s | decode {:>6.1} tok/s",
+            "  req {}: prompt {:>3} tok | out {:>2} tok | ttft {:>7.1} ms | prefill {:>7.1} tok/s | decode {:>6.1} tok/s | {:?}",
             r.id,
             r.metrics.prompt_tokens,
             r.tokens.len(),
             r.metrics.ttft_s * 1e3,
             r.metrics.prefill_tok_s(),
             r.metrics.decode_tok_s(),
+            r.finish_reason,
         );
     }
     println!("  => {}", c.metrics.summary(wall));
     Ok(())
 }
 
+/// The streaming API itself: drive `step()` by hand, submit a request
+/// mid-flight, cancel another, and watch typed events arrive in decode
+/// order.
+fn drive_streaming(dir: &std::path::Path, gen: usize) -> anyhow::Result<()> {
+    let tok = ByteTokenizer::new(2048);
+    let model = NativeModel::load(dir, EngineOptions::default())?;
+    let mut c = Coordinator::new(Backend::Native(Box::new(model)), SchedulePolicy::Interleaved);
+    println!("\n--- native backend — streaming step() drain ---");
+    let a = c.submit(tok.encode(PROMPTS[0], false), gen);
+    let b = c.submit(tok.encode(PROMPTS[1], false), gen);
+    let mut injected = None;
+    let mut steps = 0usize;
+    let mut first_tokens = Vec::new();
+    let t0 = std::time::Instant::now();
+    loop {
+        let more = c.step()?;
+        steps += 1;
+        if steps == 4 && injected.is_none() {
+            // Mid-flight: submitted while a and b are decoding; admitted
+            // (prefilled) by the very next step.
+            let id = c.submit(tok.encode(PROMPTS[2], false), gen);
+            println!("  [mid-flight] submitted req {id} while {a} and {b} decode");
+            injected = Some(id);
+        }
+        if steps == 6 {
+            println!("  [cancel] req {b} cancelled mid-decode: {}", c.cancel(b));
+        }
+        for ev in c.drain_events() {
+            match ev {
+                EngineEvent::Token { id, tok, index: 0, ttft_s: Some(ttft) } => {
+                    println!("  req {id}: first token {tok} after {:.1} ms", ttft * 1e3);
+                    first_tokens.push(id);
+                }
+                EngineEvent::Finished { id, reason } => {
+                    println!("  req {id}: finished ({reason:?})")
+                }
+                EngineEvent::Cancelled { id } => println!("  req {id}: cancelled"),
+                _ => {}
+            }
+        }
+        if !more && !c.has_work() {
+            break;
+        }
+    }
+    println!("  first-token order: {first_tokens:?}");
+    println!("  => {}", c.metrics.summary(t0.elapsed().as_secs_f64()));
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
+    // Prefer real AOT artifacts; fall back to the fixture model.
+    let (_fx, dir) = fixtures::artifacts_or_fixture(42)?;
+    if _fx.is_some() {
+        println!("artifacts/ missing — using the generated fixture model");
     }
     let gen = 16; // paper §6 caps decode at 16 tokens
 
     // 1. Native backend (the paper's optimized CPU pipeline), FIFO.
-    let native = NativeModel::load(
-        &dir,
-        EngineOptions {
-            workers: WorkerConfig::uniform(1), // 1 physical core on this box
-            ..EngineOptions::default()
-        },
-    )?;
+    let native = NativeModel::load(&dir, EngineOptions::default())?;
     drive(
         "native CPU backend (W4A8/W8A8, flash embedding, solved tiles) — FIFO",
         Coordinator::new(Backend::Native(Box::new(native)), SchedulePolicy::Fifo),
         gen,
     )?;
 
-    // 2. PJRT backend (AOT Pallas/JAX graphs), FIFO.
-    let rt = PjrtRuntime::load(&dir)?;
+    // 2. Native backend, interleaved round-robin decode (continuous
+    // batching): same greedy tokens, shared decode bandwidth.
+    let native = NativeModel::load(&dir, EngineOptions::default())?;
     drive(
-        "PJRT backend (AOT L1/L2 graphs) — FIFO",
-        Coordinator::new(Backend::Pjrt(Box::new(rt)), SchedulePolicy::Fifo),
+        "native CPU backend — interleaved round-robin decode",
+        Coordinator::new(Backend::Native(Box::new(native)), SchedulePolicy::Interleaved),
         gen,
     )?;
 
-    // 3. PJRT backend, interleaved decode across sessions.
-    let rt = PjrtRuntime::load(&dir)?;
-    drive(
-        "PJRT backend — interleaved round-robin decode",
-        Coordinator::new(Backend::Pjrt(Box::new(rt)), SchedulePolicy::Interleaved),
-        gen,
-    )?;
+    // 3. The streaming API: step()-driven, mid-flight arrival, cancel.
+    drive_streaming(&dir, gen)?;
+
+    // 4. PJRT backend (AOT Pallas/JAX graphs), when available.
+    match PjrtRuntime::load(&dir) {
+        Ok(rt) => drive(
+            "PJRT backend (AOT L1/L2 graphs) — interleaved",
+            Coordinator::new(Backend::Pjrt(Box::new(rt)), SchedulePolicy::Interleaved),
+            gen,
+        )?,
+        Err(e) => println!("\n(PJRT backend unavailable here: {e})"),
+    }
 
     Ok(())
 }

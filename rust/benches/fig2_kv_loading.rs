@@ -11,8 +11,10 @@
 use std::sync::Arc;
 
 use mnn_llm::bench as bh;
+use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
+use mnn_llm::coordinator::SchedulePolicy;
 use mnn_llm::device::SocProfile;
-use mnn_llm::kv::KvPool;
+use mnn_llm::kv::{EvictionPolicy, KvPool, PAGE_TOKENS};
 use mnn_llm::memory::flash::FlashSim;
 use mnn_llm::memory::hybrid::HybridKvLayer;
 use mnn_llm::memory::prefetch::PrefetchPlanner;
@@ -200,4 +202,56 @@ fn main() {
     println!("\n(Packed layers total {:.1} KB; tokens bit-identical at every budget —",
              total as f64 / 1024.0);
     println!(" the budget trades DRAM for modeled flash-read time, same as KV spill.)");
+
+    // Part 5: cross-session eviction policy — who pays for pool pressure.
+    // ShedSelf: whichever session appends over budget spills itself.
+    // LargestHolder: the engine spills the biggest context between ticks.
+    // Tokens are bit-identical either way; the flash-traffic attribution
+    // moves from "whoever appends" to "whoever holds the most".
+    bh::section("Eviction policy under a shared KV budget — ShedSelf vs LargestHolder");
+    let fxe = fixtures::write_fixture(35).unwrap();
+    let cfge = fixtures::fixture_config();
+    let pagee = KvPool::page_bytes(cfge.kv_heads, cfge.head_dim());
+    let long_prompt: Vec<usize> = (0..2 * PAGE_TOKENS - 1).map(|i| 40 + i % 200).collect();
+    let short_prompt: Vec<usize> = (0..PAGE_TOKENS - 1).map(|i| 30 + i % 200).collect();
+    let mut rows = Vec::new();
+    let mut reference: Option<Vec<Vec<usize>>> = None;
+    for (name, policy) in [
+        ("shed-self (PR 1)", EvictionPolicy::ShedSelf),
+        ("largest-holder", EvictionPolicy::LargestHolder),
+    ] {
+        let m = NativeModel::load(
+            fxe.dir(),
+            EngineOptions {
+                kv_pool_bytes: 6 * pagee,
+                eviction: policy,
+                ..EngineOptions::default()
+            },
+        )
+        .unwrap();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        let long_id = c.submit(long_prompt.clone(), 12);
+        let short_id = c.submit(short_prompt.clone(), 12);
+        let rs = c.run_all().unwrap();
+        let tokens: Vec<Vec<usize>> = rs.iter().map(|r| r.tokens.clone()).collect();
+        match &reference {
+            None => reference = Some(tokens),
+            Some(want) => assert_eq!(&tokens, want, "eviction policy changed tokens"),
+        }
+        let spill_of = |id: u64| {
+            rs.iter().find(|r| r.id == id).map(|r| r.metrics.spilled_records).unwrap_or(0)
+        };
+        rows.push(vec![
+            name.to_string(),
+            spill_of(long_id).to_string(),
+            spill_of(short_id).to_string(),
+            c.metrics.kv.holder_sheds.to_string(),
+            c.metrics.kv.preemptions.to_string(),
+        ]);
+    }
+    bh::table(
+        &["policy", "long-req spills", "short-req spills", "holder sheds", "preemptions"],
+        &rows,
+    );
+    println!("\n(Two sessions over a 6-page budget; tokens asserted identical across policies.)");
 }

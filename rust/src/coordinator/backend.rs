@@ -1,0 +1,356 @@
+//! The one backend abstraction the engine schedules over.
+//!
+//! PR 1's coordinator carried four copies of the sample/decode loop —
+//! `{Fifo, Interleaved} × {Native, Pjrt}` — because the two runtimes had
+//! different shapes: the native model owns sessions (paged KV over the
+//! shared pool), the PJRT runtime threads a host-side [`KvState`] per
+//! request. [`InferenceBackend`] is the common surface: a backend knows
+//! how to open a session, prefill it, decode one token, report its
+//! position, and release its resources; everything scheduling-related
+//! (admission, round-robin, stop conditions, events, cancellation) lives
+//! once in `scheduler::Engine`.
+//!
+//! Native-only mechanisms — KV-pool admission preemption, the
+//! largest-holder eviction pass, weight-residency metrics — are trait
+//! hooks with no-op defaults, so the PJRT impl stays trivial and the
+//! engine never matches on the backend kind.
+
+use anyhow::Result;
+
+use crate::coordinator::request::Request;
+use crate::memory::weight_store::WeightResidencyMetrics;
+use crate::model::native::{NativeModel, NativeSession};
+use crate::runtime::{KvState, PjrtRuntime};
+
+/// A runtime the engine can schedule requests onto. `Session` holds all
+/// per-request state; the backend itself stays shared and immutable
+/// during stepping.
+pub trait InferenceBackend {
+    type Session;
+
+    /// Context window (prompt + generated tokens).
+    fn max_len(&self) -> usize;
+
+    /// Open a session for `req` (LoRA task selected, no KV yet).
+    fn new_session(&self, req: &Request) -> Result<Self::Session>;
+
+    /// Run prefill over `ids`; returns last-token logits and leaves the
+    /// session's KV filled and its position advanced.
+    fn prefill(&self, sess: &mut Self::Session, ids: &[usize]) -> Result<Vec<f32>>;
+
+    /// One decode step at the session's position; returns logits.
+    fn decode(&self, sess: &mut Self::Session, tok: usize) -> Result<Vec<f32>>;
+
+    /// Tokens the session has consumed/produced so far (== KV length).
+    fn session_pos(&self, sess: &Self::Session) -> usize;
+
+    /// Terminal release of the session's per-request memory (KV pool
+    /// pages, spilled flash records, host buffers). Called the moment a
+    /// request finishes or is cancelled, so dead requests stop pressuring
+    /// live ones.
+    fn release(&self, sess: &mut Self::Session);
+
+    /// Reclaim shared stores once no session references them (e.g. the
+    /// native flash spill store). Called when the engine goes idle.
+    fn reclaim(&self);
+
+    /// (spilled, restored) KV flash-record counters for this session.
+    fn kv_counters(&self, _sess: &Self::Session) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Admission hook: make room for a `prompt_len`-token prefill, e.g. by
+    /// preempting `running` sessions to flash. Returns sessions preempted.
+    fn make_room(
+        &self,
+        _prompt_len: usize,
+        _running: &mut [&mut Self::Session],
+    ) -> Result<u64> {
+        Ok(0)
+    }
+
+    /// Cross-session KV budget enforcement between scheduler ticks (the
+    /// `EvictionPolicy::LargestHolder` pass). Returns records shed.
+    fn enforce_kv_budget(&self, _running: &mut [&mut Self::Session]) -> Result<u64> {
+        Ok(0)
+    }
+
+    /// Weight-residency counters snapshot (native backend only).
+    fn weight_metrics(&self) -> WeightResidencyMetrics {
+        WeightResidencyMetrics::default()
+    }
+}
+
+impl InferenceBackend for NativeModel {
+    type Session = NativeSession;
+
+    fn max_len(&self) -> usize {
+        self.config.max_len
+    }
+
+    fn new_session(&self, req: &Request) -> Result<NativeSession> {
+        let mut sess = NativeModel::new_session(self);
+        sess.lora_task = req.lora_task.clone();
+        Ok(sess)
+    }
+
+    fn prefill(&self, sess: &mut NativeSession, ids: &[usize]) -> Result<Vec<f32>> {
+        Ok(NativeModel::prefill(self, sess, ids))
+    }
+
+    fn decode(&self, sess: &mut NativeSession, tok: usize) -> Result<Vec<f32>> {
+        Ok(NativeModel::decode(self, sess, tok))
+    }
+
+    fn session_pos(&self, sess: &NativeSession) -> usize {
+        sess.pos
+    }
+
+    fn release(&self, sess: &mut NativeSession) {
+        sess.release_kv();
+    }
+
+    fn reclaim(&self) {
+        self.reclaim_flash();
+    }
+
+    fn kv_counters(&self, sess: &NativeSession) -> (u64, u64) {
+        (sess.spilled_records(), sess.restored_records())
+    }
+
+    fn make_room(
+        &self,
+        prompt_len: usize,
+        running: &mut [&mut NativeSession],
+    ) -> Result<u64> {
+        Ok(NativeModel::make_room(self, prompt_len, running)?)
+    }
+
+    fn enforce_kv_budget(&self, running: &mut [&mut NativeSession]) -> Result<u64> {
+        Ok(NativeModel::enforce_kv_budget(self, running)?)
+    }
+
+    fn weight_metrics(&self) -> WeightResidencyMetrics {
+        NativeModel::weight_metrics(self)
+    }
+}
+
+impl InferenceBackend for PjrtRuntime {
+    type Session = KvState;
+
+    fn max_len(&self) -> usize {
+        self.manifest.model.max_len
+    }
+
+    fn new_session(&self, _req: &Request) -> Result<KvState> {
+        Ok(KvState::empty())
+    }
+
+    fn prefill(&self, sess: &mut KvState, ids: &[usize]) -> Result<Vec<f32>> {
+        let (logits, kv) = PjrtRuntime::prefill(self, ids)?;
+        *sess = kv;
+        Ok(logits)
+    }
+
+    fn decode(&self, sess: &mut KvState, tok: usize) -> Result<Vec<f32>> {
+        PjrtRuntime::decode(self, tok, sess)
+    }
+
+    fn session_pos(&self, sess: &KvState) -> usize {
+        sess.pos
+    }
+
+    fn release(&self, sess: &mut KvState) {
+        // Host-side buffers are the session's only resource.
+        *sess = KvState::empty();
+    }
+
+    fn reclaim(&self) {}
+}
+
+/// The serving backend, type-erased over the two runtimes so callers can
+/// pick one at run time (`Engine<Backend>` — the default `Coordinator`).
+/// Code generic over [`InferenceBackend`] can also use `NativeModel` or
+/// `PjrtRuntime` directly.
+pub enum Backend {
+    Native(Box<NativeModel>),
+    Pjrt(Box<PjrtRuntime>),
+}
+
+/// Session type for the type-erased [`Backend`].
+pub enum AnySession {
+    Native(NativeSession),
+    Pjrt(KvState),
+}
+
+impl AnySession {
+    fn native(&mut self) -> &mut NativeSession {
+        match self {
+            AnySession::Native(s) => s,
+            AnySession::Pjrt(_) => unreachable!("pjrt session on native backend"),
+        }
+    }
+
+    fn pjrt(&mut self) -> &mut KvState {
+        match self {
+            AnySession::Pjrt(s) => s,
+            AnySession::Native(_) => unreachable!("native session on pjrt backend"),
+        }
+    }
+}
+
+impl Backend {
+    /// The native model, when this is the native backend (e.g. to inspect
+    /// the KV pool).
+    pub fn as_native(&self) -> Option<&NativeModel> {
+        match self {
+            Backend::Native(m) => Some(m),
+            Backend::Pjrt(_) => None,
+        }
+    }
+}
+
+impl InferenceBackend for Backend {
+    type Session = AnySession;
+
+    fn max_len(&self) -> usize {
+        match self {
+            Backend::Native(m) => InferenceBackend::max_len(m.as_ref()),
+            Backend::Pjrt(rt) => InferenceBackend::max_len(rt.as_ref()),
+        }
+    }
+
+    fn new_session(&self, req: &Request) -> Result<AnySession> {
+        match self {
+            Backend::Native(m) => {
+                Ok(AnySession::Native(InferenceBackend::new_session(m.as_ref(), req)?))
+            }
+            Backend::Pjrt(rt) => {
+                Ok(AnySession::Pjrt(InferenceBackend::new_session(rt.as_ref(), req)?))
+            }
+        }
+    }
+
+    fn prefill(&self, sess: &mut AnySession, ids: &[usize]) -> Result<Vec<f32>> {
+        match self {
+            Backend::Native(m) => InferenceBackend::prefill(m.as_ref(), sess.native(), ids),
+            Backend::Pjrt(rt) => InferenceBackend::prefill(rt.as_ref(), sess.pjrt(), ids),
+        }
+    }
+
+    fn decode(&self, sess: &mut AnySession, tok: usize) -> Result<Vec<f32>> {
+        match self {
+            Backend::Native(m) => InferenceBackend::decode(m.as_ref(), sess.native(), tok),
+            Backend::Pjrt(rt) => InferenceBackend::decode(rt.as_ref(), sess.pjrt(), tok),
+        }
+    }
+
+    fn session_pos(&self, sess: &AnySession) -> usize {
+        match sess {
+            AnySession::Native(s) => s.pos,
+            AnySession::Pjrt(s) => s.pos,
+        }
+    }
+
+    fn release(&self, sess: &mut AnySession) {
+        match self {
+            Backend::Native(m) => InferenceBackend::release(m.as_ref(), sess.native()),
+            Backend::Pjrt(rt) => InferenceBackend::release(rt.as_ref(), sess.pjrt()),
+        }
+    }
+
+    fn reclaim(&self) {
+        match self {
+            Backend::Native(m) => InferenceBackend::reclaim(m.as_ref()),
+            Backend::Pjrt(rt) => InferenceBackend::reclaim(rt.as_ref()),
+        }
+    }
+
+    fn kv_counters(&self, sess: &AnySession) -> (u64, u64) {
+        match (self, sess) {
+            (Backend::Native(m), AnySession::Native(s)) => {
+                InferenceBackend::kv_counters(m.as_ref(), s)
+            }
+            _ => (0, 0),
+        }
+    }
+
+    fn make_room(
+        &self,
+        prompt_len: usize,
+        running: &mut [&mut AnySession],
+    ) -> Result<u64> {
+        match self {
+            Backend::Native(m) => {
+                let mut native: Vec<&mut NativeSession> =
+                    running.iter_mut().map(|s| s.native()).collect();
+                InferenceBackend::make_room(m.as_ref(), prompt_len, &mut native)
+            }
+            Backend::Pjrt(_) => Ok(0),
+        }
+    }
+
+    fn enforce_kv_budget(&self, running: &mut [&mut AnySession]) -> Result<u64> {
+        match self {
+            Backend::Native(m) => {
+                let mut native: Vec<&mut NativeSession> =
+                    running.iter_mut().map(|s| s.native()).collect();
+                InferenceBackend::enforce_kv_budget(m.as_ref(), &mut native)
+            }
+            Backend::Pjrt(_) => Ok(0),
+        }
+    }
+
+    fn weight_metrics(&self) -> WeightResidencyMetrics {
+        match self {
+            Backend::Native(m) => NativeModel::weight_metrics(m),
+            Backend::Pjrt(_) => WeightResidencyMetrics::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixtures;
+    use crate::model::native::EngineOptions;
+
+    #[test]
+    fn native_model_implements_the_trait_directly() {
+        // The trait surface alone is enough to run a request end to end —
+        // what the generic engine relies on.
+        let (_fx, m) = fixtures::native_model(7, EngineOptions::default()).unwrap();
+        let req = Request::new(1, vec![5, 6, 7], 4);
+        let cap = InferenceBackend::max_len(&m);
+        assert!(cap > 0);
+        let mut sess = InferenceBackend::new_session(&m, &req).unwrap();
+        let logits = InferenceBackend::prefill(&m, &mut sess, &req.prompt).unwrap();
+        assert_eq!(InferenceBackend::session_pos(&m, &sess), 3);
+        let tok = crate::model::sampler::argmax(&logits);
+        let _ = InferenceBackend::decode(&m, &mut sess, tok).unwrap();
+        assert_eq!(InferenceBackend::session_pos(&m, &sess), 4);
+        InferenceBackend::release(&m, &mut sess);
+        assert_eq!(sess.resident_kv_bytes(), 0);
+        drop(sess);
+        InferenceBackend::reclaim(&m);
+        assert_eq!(m.spill_store_bytes(), 0);
+    }
+
+    #[test]
+    fn erased_backend_matches_direct_native_calls() {
+        let (_fx, m1) = fixtures::native_model(7, EngineOptions::default()).unwrap();
+        let (_fx2, m2) = fixtures::native_model(7, EngineOptions::default()).unwrap();
+        let req = Request::new(1, vec![10, 20, 30], 4);
+        let direct = {
+            let mut s = InferenceBackend::new_session(&m1, &req).unwrap();
+            InferenceBackend::prefill(&m1, &mut s, &req.prompt).unwrap()
+        };
+        let be = Backend::Native(Box::new(m2));
+        let erased = {
+            let mut s = be.new_session(&req).unwrap();
+            be.prefill(&mut s, &req.prompt).unwrap()
+        };
+        assert_eq!(direct, erased, "type erasure must not change numbers");
+        assert!(be.as_native().is_some());
+    }
+}

@@ -1,0 +1,165 @@
+//! Typed engine events and per-request token streams — the observable
+//! surface of the step()-based serving API.
+//!
+//! Every submitted request produces exactly one **terminal** event
+//! ([`EngineEvent::Finished`], [`EngineEvent::Cancelled`] or
+//! [`EngineEvent::Rejected`]); tokens are emitted in decode order as
+//! [`EngineEvent::Token`] the moment the scheduler produces them, not at
+//! drain time. Callers observe events globally (`Engine::next_event` /
+//! `Engine::drain_events`) or per request through a [`TokenStream`]
+//! handle returned by `Engine::submit_streaming`; routing is exclusive —
+//! a streaming request's events go to its handle only, so handle-driven
+//! consumers never grow the engine-wide queue.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::request::RequestId;
+
+/// Why a request finished normally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The model emitted the tokenizer's EOS token.
+    Eos,
+    /// A token in `Request::stop_tokens` was generated.
+    StopToken,
+    /// The generated tail matched one of `Request::stop_sequences`.
+    StopSequence,
+    /// `Request::max_new_tokens` (clamped by the context cap) was reached.
+    MaxTokens,
+    /// The backend's context window is full.
+    ContextCap,
+}
+
+/// One scheduler-observable event. `Token::index` counts generated tokens
+/// from 0; `ttft_s` is set only on the first token (arrival → first token).
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineEvent {
+    /// The request was admitted and its prefill completed.
+    Started { id: RequestId },
+    /// One generated token, in decode order.
+    Token { id: RequestId, tok: usize, index: usize, ttft_s: Option<f64> },
+    /// Terminal: the request completed; its `Response` is available.
+    Finished { id: RequestId, reason: FinishReason },
+    /// Terminal: the request was cancelled (queued or mid-decode).
+    Cancelled { id: RequestId },
+    /// Terminal: the request could not be admitted (e.g. empty prompt, or
+    /// a prompt that cannot fit the context window at all).
+    Rejected { id: RequestId, reason: String },
+}
+
+impl EngineEvent {
+    /// The request this event belongs to.
+    pub fn id(&self) -> RequestId {
+        match self {
+            EngineEvent::Started { id }
+            | EngineEvent::Token { id, .. }
+            | EngineEvent::Finished { id, .. }
+            | EngineEvent::Cancelled { id }
+            | EngineEvent::Rejected { id, .. } => *id,
+        }
+    }
+
+    /// True for events that end a request's lifecycle. Every submitted id
+    /// receives exactly one terminal event.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            EngineEvent::Finished { .. }
+                | EngineEvent::Cancelled { .. }
+                | EngineEvent::Rejected { .. }
+        )
+    }
+}
+
+#[derive(Default)]
+pub(crate) struct StreamInner {
+    pub(crate) events: VecDeque<EngineEvent>,
+    /// Set when a terminal event has been delivered into `events`.
+    pub(crate) terminal_seen: bool,
+}
+
+/// A per-request handle over the engine's event flow: the engine routes
+/// every event for this request id here (instead of the engine-wide
+/// queue) as it steps; the caller drains with [`TokenStream::try_next`]
+/// between `Engine::step` calls. Purely pull-based — no threads, no
+/// async runtime.
+pub struct TokenStream {
+    id: RequestId,
+    pub(crate) inner: Arc<Mutex<StreamInner>>,
+}
+
+impl TokenStream {
+    pub(crate) fn new(id: RequestId, inner: Arc<Mutex<StreamInner>>) -> Self {
+        TokenStream { id, inner }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Next undelivered event for this request, if any.
+    pub fn try_next(&self) -> Option<EngineEvent> {
+        self.inner.lock().unwrap().events.pop_front()
+    }
+
+    /// True once the terminal event has been queued (there may still be
+    /// undrained events before it).
+    pub fn finished(&self) -> bool {
+        self.inner.lock().unwrap().terminal_seen
+    }
+
+    /// True when the terminal event has been queued *and* every event has
+    /// been drained.
+    pub fn drained(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.terminal_seen && g.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_ids_and_terminality() {
+        let evs = [
+            EngineEvent::Started { id: 3 },
+            EngineEvent::Token { id: 3, tok: 7, index: 0, ttft_s: Some(0.1) },
+            EngineEvent::Finished { id: 3, reason: FinishReason::MaxTokens },
+            EngineEvent::Cancelled { id: 3 },
+            EngineEvent::Rejected { id: 3, reason: "no".into() },
+        ];
+        for e in &evs {
+            assert_eq!(e.id(), 3);
+        }
+        assert!(!evs[0].is_terminal());
+        assert!(!evs[1].is_terminal());
+        assert!(evs[2].is_terminal());
+        assert!(evs[3].is_terminal());
+        assert!(evs[4].is_terminal());
+    }
+
+    #[test]
+    fn stream_delivers_in_order_and_tracks_terminal() {
+        let inner = Arc::new(Mutex::new(StreamInner::default()));
+        let s = TokenStream::new(9, inner.clone());
+        assert!(!s.finished());
+        assert_eq!(s.try_next(), None);
+        {
+            let mut g = inner.lock().unwrap();
+            g.events.push_back(EngineEvent::Started { id: 9 });
+            g.events
+                .push_back(EngineEvent::Token { id: 9, tok: 1, index: 0, ttft_s: Some(0.5) });
+            g.events
+                .push_back(EngineEvent::Finished { id: 9, reason: FinishReason::Eos });
+            g.terminal_seen = true;
+        }
+        assert!(s.finished());
+        assert!(!s.drained());
+        assert_eq!(s.try_next(), Some(EngineEvent::Started { id: 9 }));
+        assert!(matches!(s.try_next(), Some(EngineEvent::Token { index: 0, .. })));
+        assert!(matches!(s.try_next(), Some(EngineEvent::Finished { .. })));
+        assert!(s.drained());
+    }
+}

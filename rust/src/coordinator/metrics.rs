@@ -5,19 +5,24 @@
 use crate::memory::weight_store::WeightResidencyMetrics;
 use crate::util::stats;
 
-/// Per-request timings.
+/// Per-request timings and pressure counters.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RequestMetrics {
     pub prompt_tokens: usize,
     pub new_tokens: usize,
-    /// Queue admission → first token (TTFT), seconds.
+    /// Queue arrival → first token (TTFT), seconds. Includes queue wait,
+    /// so under load it exceeds `prefill_s`.
     pub ttft_s: f64,
     /// Prefill wall time.
     pub prefill_s: f64,
     /// Total decode wall time.
     pub decode_s: f64,
-    /// Admission → completion.
+    /// Arrival → completion.
     pub e2e_s: f64,
+    /// KV records this request's session spilled to flash.
+    pub spilled_records: u64,
+    /// KV records this request's session restored from flash.
+    pub restored_records: u64,
 }
 
 impl RequestMetrics {
@@ -50,16 +55,24 @@ pub struct KvPressureMetrics {
     pub restored_records: u64,
     /// Whole sessions preempted to flash by admission control.
     pub preemptions: u64,
+    /// Records shed from the largest-holding session by the
+    /// `EvictionPolicy::LargestHolder` cross-session policy (subset of
+    /// `spilled_records`).
+    pub holder_sheds: u64,
 }
 
 /// Aggregate over a batch of completed requests.
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
     pub completed: Vec<RequestMetrics>,
+    /// Requests cancelled via `Engine::cancel` (queued or mid-decode).
+    pub cancelled: u64,
+    /// Requests rejected at admission (never ran).
+    pub rejected: u64,
     /// KV spill/restore/preemption accounting across all requests.
     pub kv: KvPressureMetrics,
     /// Weight residency accounting (native backend): cumulative snapshot
-    /// taken from the model at the end of each coordinator drain.
+    /// taken from the model as requests finish.
     pub weights: WeightResidencyMetrics,
 }
 
@@ -110,19 +123,29 @@ impl EngineMetrics {
             self.p95_e2e_s() * 1e3,
             self.throughput_tok_s(wall_s),
         );
+        if self.cancelled > 0 || self.rejected > 0 {
+            s.push_str(&format!(
+                " | {} cancelled / {} rejected",
+                self.cancelled, self.rejected
+            ));
+        }
         if self.kv != KvPressureMetrics::default() {
             s.push_str(&format!(
                 " | kv spill {} rec / restore {} rec / {} preempt",
                 self.kv.spilled_records, self.kv.restored_records, self.kv.preemptions
             ));
+            if self.kv.holder_sheds > 0 {
+                s.push_str(&format!(" / {} holder-shed", self.kv.holder_sheds));
+            }
         }
         if self.weights.under_pressure() {
             s.push_str(&format!(
-                " | weights {} fetch / {} evict / {} pf hit / {} pf stall",
+                " | weights {} fetch / {} evict / {} pf hit / {} pf stall / depth {}",
                 self.weights.demand_fetches,
                 self.weights.evictions,
                 self.weights.prefetch_hits,
-                self.weights.prefetch_stalls
+                self.weights.prefetch_stalls,
+                self.weights.prefetch_depth
             ));
         }
         s
@@ -141,6 +164,7 @@ mod tests {
             prefill_s: prefill,
             decode_s: decode,
             e2e_s: prefill + decode,
+            ..Default::default()
         }
     }
 
@@ -196,5 +220,18 @@ mod tests {
         assert!(s.contains("kv spill 12 rec"), "{s}");
         assert!(s.contains("restore 7 rec"), "{s}");
         assert!(s.contains("1 preempt"), "{s}");
+        assert!(!s.contains("holder-shed"), "{s}");
+        e.kv.holder_sheds = 5;
+        assert!(e.summary(1.0).contains("5 holder-shed"));
+    }
+
+    #[test]
+    fn lifecycle_counters_appear_in_summary() {
+        let mut e = EngineMetrics::default();
+        e.push(m(8, 4, 0.1, 0.2));
+        assert!(!e.summary(1.0).contains("cancelled"));
+        e.cancelled = 2;
+        e.rejected = 1;
+        assert!(e.summary(1.0).contains("2 cancelled / 1 rejected"));
     }
 }

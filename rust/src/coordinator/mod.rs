@@ -1,21 +1,30 @@
-//! The serving coordinator: request queue, prefill/decode scheduler,
+//! The serving coordinator: request queue, event-driven step scheduler,
 //! session management, metrics.
 //!
 //! Mobile deployment is single-device, so there is no distributed router;
-//! the coordinator's job (mirroring MNN-LLM's engine loop) is to (a) queue
-//! and admit requests — on the native backend, admission consults the
-//! shared KV page pool's byte budget and preempts sessions to flash under
-//! pressure — (b) schedule the two phases — prefill is compute-bound,
-//! decode is memory-bound (§2.1) — and (c) track per-request and
-//! engine-wide metrics, including KV spill/restore/preemption counts.
-//! Both backends support `Interleaved` round-robin decode (continuous
-//! batching): the PJRT backend threads one `KvState` per session, the
-//! native backend one `NativeSession` over the paged KV pool.
+//! the engine's job (mirroring MNN-LLM's engine loop) is to (a) queue and
+//! admit requests — mid-flight submission included; on the native backend
+//! admission consults the shared KV page pool's byte budget and preempts
+//! sessions to flash under pressure — (b) schedule the two phases one
+//! [`scheduler::Engine::step`] at a time — prefill is compute-bound,
+//! decode is memory-bound (§2.1) — emitting typed [`events::EngineEvent`]s
+//! in decode order, and (c) track per-request and engine-wide metrics,
+//! including KV spill/restore/preemption counts.
+//!
+//! Both runtimes sit behind one [`backend::InferenceBackend`] trait
+//! (`NativeModel` with `NativeSession`s over the paged KV pool;
+//! `PjrtRuntime` threading one `KvState` per session), so the sample/decode
+//! loop exists exactly once, policy-parameterized (`Fifo` / `Interleaved`
+//! round-robin continuous batching).
 
+pub mod backend;
+pub mod events;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 
+pub use backend::{AnySession, Backend, InferenceBackend};
+pub use events::{EngineEvent, FinishReason, TokenStream};
 pub use metrics::{EngineMetrics, KvPressureMetrics, RequestMetrics};
 pub use request::{Request, RequestId, Response};
-pub use scheduler::{Coordinator, SchedulePolicy};
+pub use scheduler::{Coordinator, Engine, SchedulePolicy};

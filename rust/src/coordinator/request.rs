@@ -1,5 +1,7 @@
 //! Request/response types for the serving API.
 
+use std::time::Instant;
+
 use crate::model::sampler::SamplerConfig;
 
 pub type RequestId = u64;
@@ -13,6 +15,21 @@ pub struct Request {
     /// Select a loaded LoRA task for this request (§5.5 multitask).
     pub lora_task: Option<String>,
     pub sampler: SamplerConfig,
+    /// Generation stops (with `FinishReason::StopToken`) when any of these
+    /// tokens is produced. The tokenizer's EOS always stops, independently
+    /// of this list.
+    pub stop_tokens: Vec<usize>,
+    /// Generation stops (with `FinishReason::StopSequence`) when the
+    /// generated tail matches any of these sequences. The matched sequence
+    /// is included in the output tokens.
+    pub stop_sequences: Vec<Vec<usize>>,
+    /// Seed for this request's private sampling RNG. `None` derives a
+    /// deterministic per-request stream from the request id, so sampled
+    /// (temperature > 0) outputs are schedule-invariant either way.
+    pub seed: Option<u64>,
+    /// Set by the engine when the request is submitted; TTFT and e2e
+    /// latency are measured from here (queue wait included).
+    pub arrival: Option<Instant>,
 }
 
 impl Request {
@@ -23,7 +40,43 @@ impl Request {
             max_new_tokens,
             lora_task: None,
             sampler: SamplerConfig::default(),
+            stop_tokens: Vec::new(),
+            stop_sequences: Vec::new(),
+            seed: None,
+            arrival: None,
         }
+    }
+
+    /// Builder-style: set the sampling seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Builder-style: add stop tokens.
+    pub fn with_stop_tokens(mut self, toks: Vec<usize>) -> Self {
+        self.stop_tokens = toks;
+        self
+    }
+
+    /// Builder-style: add stop sequences.
+    pub fn with_stop_sequences(mut self, seqs: Vec<Vec<usize>>) -> Self {
+        self.stop_sequences = seqs;
+        self
+    }
+
+    /// Builder-style: set the sampler configuration.
+    pub fn with_sampler(mut self, sampler: SamplerConfig) -> Self {
+        self.sampler = sampler;
+        self
+    }
+
+    /// True when `tokens` (the generated stream so far) ends with one of
+    /// this request's stop sequences.
+    pub fn matches_stop_sequence(&self, tokens: &[usize]) -> bool {
+        self.stop_sequences
+            .iter()
+            .any(|seq| !seq.is_empty() && tokens.ends_with(seq))
     }
 }
 
@@ -33,6 +86,8 @@ pub struct Response {
     pub id: RequestId,
     pub tokens: Vec<usize>,
     pub metrics: crate::coordinator::metrics::RequestMetrics,
+    /// Why generation stopped.
+    pub finish_reason: crate::coordinator::events::FinishReason,
 }
 
 #[cfg(test)]
@@ -46,5 +101,32 @@ mod tests {
         assert_eq!(r.max_new_tokens, 8);
         assert!(r.lora_task.is_none());
         assert_eq!(r.sampler.temperature, 0.0);
+        assert!(r.stop_tokens.is_empty());
+        assert!(r.stop_sequences.is_empty());
+        assert!(r.seed.is_none());
+        assert!(r.arrival.is_none());
+    }
+
+    #[test]
+    fn builders_set_fields() {
+        let r = Request::new(1, vec![1], 4)
+            .with_seed(42)
+            .with_stop_tokens(vec![9])
+            .with_stop_sequences(vec![vec![1, 2]]);
+        assert_eq!(r.seed, Some(42));
+        assert_eq!(r.stop_tokens, vec![9]);
+        assert_eq!(r.stop_sequences, vec![vec![1, 2]]);
+    }
+
+    #[test]
+    fn stop_sequence_matches_tail_only() {
+        let r = Request::new(1, vec![1], 8).with_stop_sequences(vec![vec![4, 5], vec![7]]);
+        assert!(!r.matches_stop_sequence(&[4, 5, 6]));
+        assert!(r.matches_stop_sequence(&[3, 4, 5]));
+        assert!(r.matches_stop_sequence(&[7]));
+        assert!(!r.matches_stop_sequence(&[]));
+        // Empty stop sequences never match.
+        let e = Request::new(2, vec![1], 8).with_stop_sequences(vec![vec![]]);
+        assert!(!e.matches_stop_sequence(&[1, 2]));
     }
 }

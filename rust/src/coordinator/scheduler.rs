@@ -1,35 +1,54 @@
-//! The engine loop: admission queue + prefill/decode scheduling over either
-//! backend.
+//! The engine loop: an **incremental, event-driven scheduler** over any
+//! [`InferenceBackend`].
+//!
+//! [`Engine::step`] advances one scheduler tick — admit one queued request
+//! (prefill) or run one round-robin decode round — and emits typed
+//! [`EngineEvent`]s the moment tokens exist, so callers observe generation
+//! in decode order instead of at drain time. Requests can be submitted
+//! **while the engine is stepping** (mid-flight admission goes through the
+//! same KV-pool admission control) and cancelled at any point
+//! ([`Engine::cancel`] frees the session's KV pages and flash spill
+//! immediately). [`Engine::run_all`] survives as a thin compatibility
+//! wrapper: `step()` until idle, then return completed responses in
+//! submission order — bit-identical greedy outputs to the old drain-only
+//! coordinator.
 //!
 //! Two policies:
-//! * `Fifo` — complete each request before starting the next.
-//! * `Interleaved` — prefill on arrival, then round-robin single-token
-//!   decode across all active sessions. This keeps TTFT low for late
-//!   arrivals while decode bandwidth is shared — the mobile analogue of
-//!   continuous batching. Works on **both** backends: the PJRT path
-//!   threads one `KvState` per session; the native path holds one
-//!   `NativeSession` per request, all drawing KV pages from the model's
-//!   shared budgeted pool.
+//! * `Fifo` — admit a request only when none is active: each request
+//!   completes before the next starts.
+//! * `Interleaved` — admit (prefill) every queued request before decoding,
+//!   then round-robin single-token decode across all active sessions.
+//!   This keeps TTFT low for late arrivals while decode bandwidth is
+//!   shared — the mobile analogue of continuous batching. Works on both
+//!   backends through the one trait; sessions are isolated, so greedy
+//!   token streams are identical under either policy.
 //!
-//! Native admission control: before prefilling a new request the
-//! coordinator asks the KV pool whether the prompt's estimated KV fits in
-//! the byte budget; if not, running sessions are **preempted to flash**
-//! (their resident pages spilled and released) oldest-first until it fits.
-//! Appends under residual pressure degrade the same way, so a budget
-//! smaller than the total working set still completes every request —
-//! spill/restore/preemption counts land in `EngineMetrics::kv`.
+//! Sampling is **per-request**: each request derives a private RNG stream
+//! from `Request::seed` (or deterministically from its id), so
+//! temperature > 0 outputs are schedule-invariant — the old shared
+//! coordinator RNG made sampled outputs depend on queue order and policy.
+//!
+//! Native admission control: before prefilling a new request the backend's
+//! `make_room` hook asks the KV pool whether the prompt's estimated KV
+//! fits the byte budget; if not, running sessions are **preempted to
+//! flash** (oldest first). Under `EvictionPolicy::LargestHolder` the
+//! engine additionally runs `enforce_kv_budget` before every decode round,
+//! shedding the largest-holding session's oldest records instead of
+//! letting whichever session appends pay. All spilling is bit-exact
+//! value-neutral; counts land in `EngineMetrics::kv`.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
+pub use crate::coordinator::backend::{AnySession, Backend, InferenceBackend};
+use crate::coordinator::events::{EngineEvent, FinishReason, StreamInner, TokenStream};
 use crate::coordinator::metrics::{EngineMetrics, RequestMetrics};
-use crate::coordinator::request::{Request, Response};
-use crate::model::native::{NativeModel, NativeSession};
+use crate::coordinator::request::{Request, RequestId, Response};
 use crate::model::sampler;
 use crate::model::tokenizer::EOS;
-use crate::runtime::{KvState, PjrtRuntime};
 use crate::util::rng::Rng;
 
 /// Scheduling policy.
@@ -39,350 +58,412 @@ pub enum SchedulePolicy {
     Interleaved,
 }
 
-/// The serving backend.
-pub enum Backend {
-    Native(Box<NativeModel>),
-    Pjrt(Box<PjrtRuntime>),
-}
-
-impl Backend {
-    pub fn max_len(&self) -> usize {
-        match self {
-            Backend::Native(m) => m.config.max_len,
-            Backend::Pjrt(rt) => rt.manifest.model.max_len,
-        }
-    }
-}
+/// Seed base for per-request RNG derivation (requests without an explicit
+/// `Request::seed`). Mixed with the request id, never shared across
+/// requests — the derived stream depends only on (base, id), not on
+/// scheduling.
+const SEED_BASE: u64 = 0x5e5510;
 
 /// New-token budget for a request under the backend's context cap.
 fn token_budget(req: &Request, cap: usize) -> usize {
     req.max_new_tokens.min(cap.saturating_sub(req.prompt.len() + 1))
 }
 
-struct PjrtActive {
-    req: Request,
-    kv: KvState,
-    tokens: Vec<usize>,
-    last: usize,
-    admitted: Instant,
-    prefill_s: f64,
-    decode_started: Instant,
-    /// Final timings, captured the moment the session finishes — NOT at
-    /// batch collection time, which would charge early finishers for the
-    /// whole batch's tail.
-    decode_s: f64,
-    e2e_s: f64,
-    done: bool,
+/// The request's private sampling RNG (schedule-invariant by construction).
+fn request_rng(req: &Request) -> Rng {
+    let seed = req
+        .seed
+        .unwrap_or_else(|| SEED_BASE ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
+    Rng::new(seed)
 }
 
-struct NativeActive {
-    req: Request,
-    sess: NativeSession,
-    tokens: Vec<usize>,
-    last: usize,
-    admitted: Instant,
-    prefill_s: f64,
-    decode_started: Instant,
-    /// Final timings, captured the moment the session finishes (see
-    /// `PjrtActive`).
-    decode_s: f64,
-    e2e_s: f64,
-    done: bool,
+/// Why generation must stop after `tok` was produced, if it must.
+/// Checked in the order EOS → stop token → stop sequence → token budget →
+/// context capacity.
+fn stop_reason(
+    req: &Request,
+    tokens: &[usize],
+    tok: usize,
+    budget: usize,
+    pos: usize,
+    cap: usize,
+) -> Option<FinishReason> {
+    if tok == EOS {
+        Some(FinishReason::Eos)
+    } else if req.stop_tokens.contains(&tok) {
+        Some(FinishReason::StopToken)
+    } else if req.matches_stop_sequence(tokens) {
+        Some(FinishReason::StopSequence)
+    } else if tokens.len() >= budget {
+        Some(FinishReason::MaxTokens)
+    } else if pos + 1 >= cap {
+        Some(FinishReason::ContextCap)
+    } else {
+        None
+    }
 }
 
-/// The coordinator: queue + scheduler + metrics.
-pub struct Coordinator {
-    backend: Backend,
+/// Deliver an event: to the request's `TokenStream` when one is attached
+/// (`submit_streaming`), otherwise to the engine-wide queue. Routing is
+/// exclusive so a long-running streaming caller that only drains its
+/// handles never grows the global queue unboundedly; requests submitted
+/// without a stream surface through `next_event`/`drain_events`. Free
+/// function so callers can hold disjoint borrows of other engine fields
+/// (e.g. the active list) while emitting.
+fn deliver(
+    events: &mut VecDeque<EngineEvent>,
+    streams: &mut HashMap<RequestId, Arc<Mutex<StreamInner>>>,
+    ev: EngineEvent,
+) {
+    let id = ev.id();
+    let terminal = ev.is_terminal();
+    if let Some(inner) = streams.get(&id) {
+        {
+            let mut g = inner.lock().unwrap();
+            g.events.push_back(ev);
+            if terminal {
+                g.terminal_seen = true;
+            }
+        }
+        if terminal {
+            streams.remove(&id);
+        }
+        return;
+    }
+    events.push_back(ev);
+}
+
+/// One admitted request's in-flight state.
+struct Active<S> {
+    req: Request,
+    sess: S,
+    rng: Rng,
+    tokens: Vec<usize>,
+    last: usize,
+    budget: usize,
+    arrival: Instant,
+    prefill_s: f64,
+    ttft_s: f64,
+    decode_started: Instant,
+    decoded_any: bool,
+}
+
+/// The streaming engine: admission queue + step scheduler + event queue +
+/// metrics, generic over the backend. `Engine<Backend>` (the type-erased
+/// pair) is aliased as [`Coordinator`] for the batch-style API.
+pub struct Engine<B: InferenceBackend> {
+    backend: B,
     pub policy: SchedulePolicy,
     queue: VecDeque<Request>,
+    active: Vec<Active<B::Session>>,
     next_id: u64,
     pub metrics: EngineMetrics,
-    rng: Rng,
+    events: VecDeque<EngineEvent>,
+    streams: HashMap<RequestId, Arc<Mutex<StreamInner>>>,
+    finished: Vec<Response>,
 }
 
-impl Coordinator {
-    pub fn new(backend: Backend, policy: SchedulePolicy) -> Self {
-        Coordinator {
+/// The classic batch coordinator: the engine over the type-erased backend.
+pub type Coordinator = Engine<Backend>;
+
+impl<B: InferenceBackend> Engine<B> {
+    pub fn new(backend: B, policy: SchedulePolicy) -> Self {
+        Engine {
             backend,
             policy,
             queue: VecDeque::new(),
+            active: Vec::new(),
             next_id: 1,
             metrics: EngineMetrics::default(),
-            rng: Rng::new(0x5e5510),
+            events: VecDeque::new(),
+            streams: HashMap::new(),
+            finished: Vec::new(),
         }
     }
 
     /// The backend (e.g. to inspect the native model's KV pool).
-    pub fn backend(&self) -> &Backend {
+    pub fn backend(&self) -> &B {
         &self.backend
     }
 
-    /// Queue a request; returns its id.
-    pub fn submit(&mut self, prompt: Vec<usize>, max_new_tokens: usize) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.queue.push_back(Request::new(id, prompt, max_new_tokens));
-        id
+    /// Queue a request; returns its id. Valid mid-flight: the next step
+    /// admits it through the same admission control.
+    pub fn submit(&mut self, prompt: Vec<usize>, max_new_tokens: usize) -> RequestId {
+        self.submit_request(Request::new(0, prompt, max_new_tokens))
     }
 
-    /// Queue a fully-specified request.
-    pub fn submit_request(&mut self, mut req: Request) -> u64 {
+    /// Queue a fully-specified request; its id is assigned here.
+    pub fn submit_request(&mut self, mut req: Request) -> RequestId {
         req.id = self.next_id;
         self.next_id += 1;
+        req.arrival = Some(Instant::now());
         let id = req.id;
         self.queue.push_back(req);
         id
     }
 
+    /// Queue a request and get a [`TokenStream`] handle that receives its
+    /// events (drain between `step()` calls). Routing is exclusive: a
+    /// streaming request's events go to the handle, not the engine-wide
+    /// queue, so handle-only consumers never accumulate global events.
+    pub fn submit_streaming(&mut self, req: Request) -> TokenStream {
+        let id = self.submit_request(req);
+        let inner = Arc::new(Mutex::new(StreamInner::default()));
+        self.streams.insert(id, inner.clone());
+        TokenStream::new(id, inner)
+    }
+
+    /// Queued (not yet admitted) requests.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
-    /// Drain the queue to completion; returns responses in completion order.
+    /// Admitted, still-decoding requests.
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// True while a `step()` would do work.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    /// Pop the oldest undelivered event.
+    pub fn next_event(&mut self) -> Option<EngineEvent> {
+        self.events.pop_front()
+    }
+
+    /// Drain all undelivered events.
+    pub fn drain_events(&mut self) -> Vec<EngineEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Take the responses completed since the last call (completion order).
+    pub fn take_finished(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Advance one scheduler tick: admit one queued request (prefill and
+    /// first token) when the policy allows, otherwise run one round-robin
+    /// decode round (one token per active session). Returns false when
+    /// idle — no queued or active work.
+    pub fn step(&mut self) -> Result<bool> {
+        let may_admit = match self.policy {
+            SchedulePolicy::Fifo => self.active.is_empty(),
+            SchedulePolicy::Interleaved => true,
+        };
+        let did = if may_admit && !self.queue.is_empty() {
+            self.admit_one()?;
+            true
+        } else if !self.active.is_empty() {
+            self.decode_round()?;
+            true
+        } else {
+            false
+        };
+        if self.active.is_empty() {
+            // No live sessions: completed requests' flash spill is
+            // reclaimable (native backend truncates the spill store).
+            self.backend.reclaim();
+        }
+        Ok(did)
+    }
+
+    /// Cancel a request by id, queued or mid-decode. An active request's
+    /// KV pool pages and flash spill records are freed immediately; a
+    /// `Cancelled` terminal event is emitted. Returns false for unknown
+    /// (or already-terminal) ids.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(qi) = self.queue.iter().position(|r| r.id == id) {
+            self.queue.remove(qi);
+            self.metrics.cancelled += 1;
+            deliver(&mut self.events, &mut self.streams, EngineEvent::Cancelled { id });
+            return true;
+        }
+        if let Some(ai) = self.active.iter().position(|a| a.req.id == id) {
+            let mut act = self.active.remove(ai);
+            let (spilled, restored) = self.backend.kv_counters(&act.sess);
+            self.metrics.kv.spilled_records += spilled;
+            self.metrics.kv.restored_records += restored;
+            self.backend.release(&mut act.sess);
+            drop(act);
+            self.metrics.cancelled += 1;
+            deliver(&mut self.events, &mut self.streams, EngineEvent::Cancelled { id });
+            if self.active.is_empty() {
+                self.backend.reclaim();
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Compatibility wrapper over [`step`](Self::step): drive the engine
+    /// until idle and return every response completed since the last
+    /// drain, in submission (id) order — bit-identical greedy outputs to
+    /// the old batch-only coordinator. Undelivered engine-wide events are
+    /// discarded (attached `TokenStream`s keep theirs). Long-running
+    /// step() callers should periodically `take_finished()` (and drain
+    /// events) — completed responses are buffered until taken.
     pub fn run_all(&mut self) -> Result<Vec<Response>> {
-        let native = matches!(self.backend, Backend::Native(_));
-        match self.policy {
-            SchedulePolicy::Fifo => self.run_fifo(),
-            SchedulePolicy::Interleaved if native => self.run_interleaved_native(),
-            SchedulePolicy::Interleaved => self.run_interleaved_pjrt(),
-        }
-    }
-
-    fn run_fifo(&mut self) -> Result<Vec<Response>> {
-        let mut out = Vec::new();
-        while let Some(req) = self.queue.pop_front() {
-            let admitted = Instant::now();
-            let cap = self.backend.max_len();
-            let budget = token_budget(&req, cap);
-            let (tokens, prefill_s, decode_s) = match &mut self.backend {
-                Backend::Native(m) => {
-                    let mut sess = m.new_session();
-                    sess.lora_task = req.lora_task.clone();
-                    let t0 = Instant::now();
-                    let logits = m.prefill(&mut sess, &req.prompt);
-                    let prefill_s = t0.elapsed().as_secs_f64();
-                    let mut tok = sampler::sample(&logits, req.sampler, &mut self.rng);
-                    let mut tokens = vec![tok];
-                    let t1 = Instant::now();
-                    for _ in 1..budget {
-                        if tok == EOS {
-                            break;
-                        }
-                        let logits = m.decode(&mut sess, tok);
-                        tok = sampler::sample(&logits, req.sampler, &mut self.rng);
-                        tokens.push(tok);
-                    }
-                    self.metrics.kv.spilled_records += sess.spilled_records();
-                    self.metrics.kv.restored_records += sess.restored_records();
-                    (tokens, prefill_s, t1.elapsed().as_secs_f64())
-                }
-                Backend::Pjrt(rt) => {
-                    let t0 = Instant::now();
-                    let (logits, mut kv) = rt.prefill(&req.prompt)?;
-                    let prefill_s = t0.elapsed().as_secs_f64();
-                    let mut tok = sampler::sample(&logits, req.sampler, &mut self.rng);
-                    let mut tokens = vec![tok];
-                    let t1 = Instant::now();
-                    for _ in 1..budget {
-                        if tok == EOS {
-                            break;
-                        }
-                        let logits = rt.decode(tok, &mut kv)?;
-                        tok = sampler::sample(&logits, req.sampler, &mut self.rng);
-                        tokens.push(tok);
-                    }
-                    (tokens, prefill_s, t1.elapsed().as_secs_f64())
-                }
-            };
-            let m = RequestMetrics {
-                prompt_tokens: req.prompt.len(),
-                new_tokens: tokens.len(),
-                ttft_s: prefill_s,
-                prefill_s,
-                decode_s,
-                e2e_s: admitted.elapsed().as_secs_f64(),
-            };
-            self.metrics.push(m);
-            out.push(Response { id: req.id, tokens, metrics: m });
-            // The request's session is gone; drop its spilled records too.
-            if let Backend::Native(m) = &self.backend {
-                m.reclaim_flash();
-            }
-        }
-        // Weight-residency counters are cumulative on the model; snapshot
-        // them into the engine metrics now that the queue is drained.
-        if let Backend::Native(m) = &self.backend {
-            self.metrics.weights = m.weight_metrics();
-        }
+        while self.step()? {}
+        self.events.clear();
+        let mut out = std::mem::take(&mut self.finished);
+        out.sort_by_key(|r| r.id);
         Ok(out)
     }
 
-    /// Continuous batching on the native backend: one `NativeSession` per
-    /// request over the shared paged KV pool, with budget-aware admission.
-    fn run_interleaved_native(&mut self) -> Result<Vec<Response>> {
+    /// Admit the front of the queue: validate, make room (admission
+    /// control may preempt running sessions), prefill, sample the first
+    /// token, and emit `Started` + the first `Token` (with TTFT).
+    fn admit_one(&mut self) -> Result<()> {
+        let Some(req) = self.queue.pop_front() else {
+            return Ok(());
+        };
         let cap = self.backend.max_len();
-        let Backend::Native(model) = &self.backend else {
-            unreachable!("run_interleaved_native requires a native backend");
+        if req.prompt.is_empty() || req.prompt.len() + 1 > cap {
+            let reason = if req.prompt.is_empty() {
+                "empty prompt".to_string()
+            } else {
+                format!(
+                    "prompt of {} tokens cannot fit context window {} with room to generate",
+                    req.prompt.len(),
+                    cap
+                )
+            };
+            self.metrics.rejected += 1;
+            deliver(
+                &mut self.events,
+                &mut self.streams,
+                EngineEvent::Rejected { id: req.id, reason },
+            );
+            return Ok(());
+        }
+        {
+            let mut running: Vec<&mut B::Session> =
+                self.active.iter_mut().map(|a| &mut a.sess).collect();
+            let preempted = self.backend.make_room(req.prompt.len(), &mut running)?;
+            self.metrics.kv.preemptions += preempted;
+        }
+        let arrival = req.arrival.unwrap_or_else(Instant::now);
+        let mut sess = self.backend.new_session(&req)?;
+        let t0 = Instant::now();
+        let logits = self.backend.prefill(&mut sess, &req.prompt)?;
+        let prefill_s = t0.elapsed().as_secs_f64();
+        let mut rng = request_rng(&req);
+        let tok = sampler::sample(&logits, req.sampler, &mut rng);
+        let ttft_s = arrival.elapsed().as_secs_f64();
+        let id = req.id;
+        deliver(&mut self.events, &mut self.streams, EngineEvent::Started { id });
+        deliver(
+            &mut self.events,
+            &mut self.streams,
+            EngineEvent::Token { id, tok, index: 0, ttft_s: Some(ttft_s) },
+        );
+        let budget = token_budget(&req, cap);
+        let pos = self.backend.session_pos(&sess);
+        let tokens = vec![tok];
+        let reason = stop_reason(&req, &tokens, tok, budget.max(1), pos, cap);
+        let act = Active {
+            last: tok,
+            tokens,
+            sess,
+            rng,
+            budget: budget.max(1),
+            arrival,
+            prefill_s,
+            ttft_s,
+            decode_started: Instant::now(),
+            decoded_any: false,
+            req,
         };
-        // Phase 1: admit + prefill every queued request (compute-bound; run
-        // first so every session has a first token — lowest aggregate TTFT).
-        let mut active: Vec<NativeActive> = Vec::new();
-        while let Some(req) = self.queue.pop_front() {
-            let admitted = Instant::now();
-            // Admission control: will this prompt's KV fit the pool budget?
-            // If not, preempt running sessions (oldest first) to flash.
-            // Page-granular: the pool hands out whole pages, so short
-            // prompts still pin a full page per layer. When the prompt
-            // could never fit even in an empty pool, skip the pointless
-            // fleet-wide preemption — the new session will degrade by
-            // spilling its own KV as it appends.
-            let need = model.prefill_kv_page_bytes(req.prompt.len());
-            if model.kv_pool().would_exceed(need) && need <= model.kv_pool().budget_bytes() {
-                for s in active.iter_mut() {
-                    if !model.kv_pool().would_exceed(need) {
-                        break;
-                    }
-                    if s.sess.resident_kv_bytes() > 0 {
-                        s.sess.preempt_to_flash()?;
-                        self.metrics.kv.preemptions += 1;
-                    }
-                }
-                // If it still doesn't fit, admit anyway: appends degrade
-                // gracefully by spilling this session's own KV to flash.
-            }
-            let mut sess = model.new_session();
-            sess.lora_task = req.lora_task.clone();
-            let t0 = Instant::now();
-            let logits = model.prefill(&mut sess, &req.prompt);
-            let prefill_s = t0.elapsed().as_secs_f64();
-            let tok = sampler::sample(&logits, req.sampler, &mut self.rng);
-            let budget = token_budget(&req, cap);
-            let mut entry = NativeActive {
-                last: tok,
-                tokens: vec![tok],
-                sess,
-                admitted,
-                prefill_s,
-                decode_started: Instant::now(),
-                decode_s: 0.0,
-                e2e_s: 0.0,
-                done: tok == EOS || budget <= 1,
-                req,
-            };
-            if entry.done {
-                entry.e2e_s = entry.admitted.elapsed().as_secs_f64();
-                // Finished already: stop pinning pool pages / flash records.
-                entry.sess.release_kv();
-            }
-            active.push(entry);
+        match reason {
+            Some(r) => self.finalize(act, r),
+            None => self.active.push(act),
         }
-        // Phase 2: round-robin decode (memory-bound; one token per active
-        // session per sweep). Greedy streams are identical to Fifo's —
-        // sessions are isolated, only the order of work changes.
-        for s in active.iter_mut().filter(|s| !s.done) {
-            s.decode_started = Instant::now();
-        }
-        while active.iter().any(|s| !s.done) {
-            for s in active.iter_mut().filter(|s| !s.done) {
-                let logits = model.decode(&mut s.sess, s.last);
-                let tok = sampler::sample(&logits, s.req.sampler, &mut self.rng);
-                s.tokens.push(tok);
-                s.last = tok;
-                if tok == EOS || s.tokens.len() >= token_budget(&s.req, cap) {
-                    s.done = true;
-                    s.decode_s = s.decode_started.elapsed().as_secs_f64();
-                    s.e2e_s = s.admitted.elapsed().as_secs_f64();
-                    // Release the finished session's KV immediately so its
-                    // pages and flash records stop pressuring live sessions.
-                    s.sess.release_kv();
-                }
-            }
-        }
-        let mut out = Vec::new();
-        for s in active {
-            self.metrics.kv.spilled_records += s.sess.spilled_records();
-            self.metrics.kv.restored_records += s.sess.restored_records();
-            let m = RequestMetrics {
-                prompt_tokens: s.req.prompt.len(),
-                new_tokens: s.tokens.len(),
-                ttft_s: s.prefill_s,
-                prefill_s: s.prefill_s,
-                decode_s: s.decode_s,
-                e2e_s: s.e2e_s,
-            };
-            self.metrics.push(m);
-            out.push(Response { id: s.req.id, tokens: s.tokens, metrics: m });
-        }
-        // Every session is dropped; truncate the shared spill store.
-        model.reclaim_flash();
-        self.metrics.weights = model.weight_metrics();
-        Ok(out)
+        Ok(())
     }
 
-    fn run_interleaved_pjrt(&mut self) -> Result<Vec<Response>> {
-        let Backend::Pjrt(rt) = &self.backend else {
-            unreachable!("run_interleaved_pjrt requires a PJRT backend");
-        };
-        let cap = rt.manifest.model.max_len;
-        // Phase 1: prefill every queued request.
-        let mut active: Vec<PjrtActive> = Vec::new();
-        while let Some(req) = self.queue.pop_front() {
-            let admitted = Instant::now();
-            let t0 = Instant::now();
-            let (logits, kv) = rt.prefill(&req.prompt)?;
-            let prefill_s = t0.elapsed().as_secs_f64();
-            let tok = sampler::sample(&logits, req.sampler, &mut self.rng);
-            let mut entry = PjrtActive {
-                last: tok,
-                tokens: vec![tok],
-                kv,
-                admitted,
-                prefill_s,
-                decode_started: Instant::now(),
-                decode_s: 0.0,
-                e2e_s: 0.0,
-                done: tok == EOS || token_budget(&req, cap) <= 1,
-                req,
-            };
-            if entry.done {
-                entry.e2e_s = entry.admitted.elapsed().as_secs_f64();
-            }
-            active.push(entry);
+    /// One round-robin decode round: one token per active session, with
+    /// finished sessions finalized (and their KV released) on the spot.
+    fn decode_round(&mut self) -> Result<()> {
+        {
+            let mut running: Vec<&mut B::Session> =
+                self.active.iter_mut().map(|a| &mut a.sess).collect();
+            let shed = self.backend.enforce_kv_budget(&mut running)?;
+            self.metrics.kv.holder_sheds += shed;
         }
-        // Phase 2: round-robin decode.
-        let mut out = Vec::new();
-        for s in active.iter_mut().filter(|s| !s.done) {
-            s.decode_started = Instant::now();
-        }
-        while active.iter().any(|s| !s.done) {
-            for s in active.iter_mut().filter(|s| !s.done) {
-                let logits = rt.decode(s.last, &mut s.kv)?;
-                let tok = sampler::sample(&logits, s.req.sampler, &mut self.rng);
-                s.tokens.push(tok);
-                s.last = tok;
-                if tok == EOS
-                    || s.tokens.len() >= token_budget(&s.req, cap)
-                    || s.kv.pos + 1 >= cap
-                {
-                    s.done = true;
-                    s.decode_s = s.decode_started.elapsed().as_secs_f64();
-                    s.e2e_s = s.admitted.elapsed().as_secs_f64();
+        let cap = self.backend.max_len();
+        let mut i = 0;
+        while i < self.active.len() {
+            let (id, tok, index, reason) = {
+                let a = &mut self.active[i];
+                if !a.decoded_any {
+                    a.decode_started = Instant::now();
+                    a.decoded_any = true;
                 }
+                let logits = self.backend.decode(&mut a.sess, a.last)?;
+                let tok = sampler::sample(&logits, a.req.sampler, &mut a.rng);
+                a.tokens.push(tok);
+                a.last = tok;
+                let pos = self.backend.session_pos(&a.sess);
+                let reason = stop_reason(&a.req, &a.tokens, tok, a.budget, pos, cap);
+                (a.req.id, tok, a.tokens.len() - 1, reason)
+            };
+            deliver(
+                &mut self.events,
+                &mut self.streams,
+                EngineEvent::Token { id, tok, index, ttft_s: None },
+            );
+            match reason {
+                Some(r) => {
+                    let act = self.active.remove(i);
+                    self.finalize(act, r);
+                    // The next session shifted into slot i; don't skip it.
+                }
+                None => i += 1,
             }
         }
-        for s in active {
-            let m = RequestMetrics {
-                prompt_tokens: s.req.prompt.len(),
-                new_tokens: s.tokens.len(),
-                ttft_s: s.prefill_s,
-                prefill_s: s.prefill_s,
-                decode_s: s.decode_s,
-                e2e_s: s.e2e_s,
-            };
-            self.metrics.push(m);
-            out.push(Response { id: s.req.id, tokens: s.tokens, metrics: m });
-        }
-        Ok(out)
+        Ok(())
+    }
+
+    /// Capture metrics, release the session's KV, emit the terminal
+    /// `Finished` event and record the response.
+    fn finalize(&mut self, mut act: Active<B::Session>, reason: FinishReason) {
+        let decode_s = if act.decoded_any {
+            act.decode_started.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+        let (spilled, restored) = self.backend.kv_counters(&act.sess);
+        self.backend.release(&mut act.sess);
+        let m = RequestMetrics {
+            prompt_tokens: act.req.prompt.len(),
+            new_tokens: act.tokens.len(),
+            ttft_s: act.ttft_s,
+            prefill_s: act.prefill_s,
+            decode_s,
+            e2e_s: act.arrival.elapsed().as_secs_f64(),
+            spilled_records: spilled,
+            restored_records: restored,
+        };
+        self.metrics.kv.spilled_records += spilled;
+        self.metrics.kv.restored_records += restored;
+        self.metrics.push(m);
+        self.metrics.weights = self.backend.weight_metrics();
+        let id = act.req.id;
+        deliver(
+            &mut self.events,
+            &mut self.streams,
+            EngineEvent::Finished { id, reason },
+        );
+        self.finished.push(Response {
+            id,
+            tokens: std::mem::take(&mut act.tokens),
+            metrics: m,
+            finish_reason: reason,
+        });
+        // `act` (and its session) drops here: pages return to the pool and
+        // the live-session count falls, gating spill-store reclamation.
     }
 }
 
@@ -390,7 +471,7 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::model::fixtures;
-    use crate::model::native::EngineOptions;
+    use crate::model::native::{EngineOptions, NativeModel};
 
     fn native() -> NativeModel {
         fixtures::native_model(7, EngineOptions::default()).unwrap().1
@@ -457,14 +538,178 @@ mod tests {
         }
         let rs = c.run_all().unwrap();
         assert_eq!(rs.len(), 4);
-        let Backend::Native(m) = c.backend() else { unreachable!() };
+        let m = c.backend().as_native().unwrap();
         assert_eq!(m.kv_pool().resident_bytes(), 0, "all pages returned after run_all");
+    }
+
+    #[test]
+    fn step_emits_events_in_decode_order() {
+        let m = native();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
+        let id = c.submit(vec![3, 4, 5], 3);
+        // First step admits: Started + first Token (with TTFT) arrive
+        // before any further stepping.
+        assert!(c.step().unwrap());
+        let mut evs = c.drain_events();
+        assert_eq!(evs[0], EngineEvent::Started { id });
+        assert!(
+            matches!(evs[1], EngineEvent::Token { index: 0, ttft_s: Some(t), .. } if t >= 0.0),
+            "{evs:?}"
+        );
+        // Stepping to idle yields the remaining tokens and one terminal.
+        while c.step().unwrap() {}
+        evs.extend(c.drain_events());
+        let terminals = evs.iter().filter(|e| e.is_terminal()).count();
+        assert_eq!(terminals, 1, "{evs:?}");
+        assert!(matches!(evs.last().unwrap(), EngineEvent::Finished { .. }));
+        // Token indices are consecutive from 0, in decode order.
+        let idxs: Vec<usize> = evs
+            .iter()
+            .filter_map(|e| match e {
+                EngineEvent::Token { index, .. } => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(idxs, (0..idxs.len()).collect::<Vec<_>>());
+        assert!(!c.has_work());
+        assert_eq!(c.take_finished().len(), 1);
+    }
+
+    #[test]
+    fn token_stream_handle_follows_one_request() {
+        let m = native();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        c.submit(vec![9; 5], 3); // unrelated traffic
+        let stream = c.submit_streaming(Request::new(0, vec![5, 6, 7], 3));
+        while c.step().unwrap() {}
+        assert!(stream.finished());
+        let mut toks = Vec::new();
+        let mut saw_terminal = false;
+        while let Some(ev) = stream.try_next() {
+            assert_eq!(ev.id(), stream.id(), "stream only sees its own request");
+            match ev {
+                EngineEvent::Token { tok, .. } => toks.push(tok),
+                EngineEvent::Finished { .. } => saw_terminal = true,
+                _ => {}
+            }
+        }
+        assert!(saw_terminal);
+        assert!(stream.drained());
+        // Exclusive routing: the streamed request's events never hit the
+        // engine-wide queue (no unbounded growth for handle consumers),
+        // while the non-streaming request's events do.
+        let global = c.drain_events();
+        assert!(global.iter().all(|e| e.id() != stream.id()), "{global:?}");
+        assert!(!global.is_empty(), "non-streaming request surfaces globally");
+        // The stream saw exactly the response's tokens, in order.
+        let rs = c.run_all().unwrap();
+        let r = rs.iter().find(|r| r.id == stream.id()).unwrap();
+        assert_eq!(toks, r.tokens);
+    }
+
+    #[test]
+    fn cancel_and_reject_are_terminal() {
+        let m = native();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        let queued = c.submit(vec![1, 2], 4);
+        assert!(c.cancel(queued), "cancel while queued");
+        assert!(!c.cancel(queued), "second cancel is a no-op");
+        let empty = c.submit_request(Request::new(0, vec![], 4));
+        let huge = c.submit(vec![7; 4096], 4);
+        let ok = c.submit(vec![1, 2, 3], 2);
+        let rs = c.run_all().unwrap();
+        assert_eq!(rs.len(), 1, "only the valid request completes");
+        assert_eq!(rs[0].id, ok);
+        assert_eq!(c.metrics.cancelled, 1);
+        assert_eq!(c.metrics.rejected, 2);
+        let _ = (empty, huge);
+    }
+
+    /// Prompts whose first `n` greedy tokens avoid EOS on the fixture
+    /// model (so lifecycle tests can rely on sessions staying alive).
+    fn long_running_prompts(m: &NativeModel, want: usize, n: usize) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for base in [4usize, 5, 21, 33, 57, 73, 90, 111] {
+            let p = vec![base; 8];
+            if !m.generate_once(&p, n).contains(&EOS) {
+                out.push(p);
+            }
+            if out.len() == want {
+                break;
+            }
+        }
+        assert_eq!(out.len(), want, "fixture yields too few EOS-free prompts");
+        out
+    }
+
+    #[test]
+    fn mid_decode_cancel_frees_kv() {
+        let m = native();
+        let prompts = long_running_prompts(&m, 2, 4);
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        let a = c.submit(prompts[0].clone(), 20);
+        let b = c.submit(prompts[1].clone(), 20);
+        // Admit both, then a couple of decode rounds.
+        for _ in 0..4 {
+            assert!(c.step().unwrap());
+        }
+        assert_eq!(c.active_count(), 2);
+        let pool = {
+            let m = c.backend().as_native().unwrap();
+            m.kv_pool().resident_bytes()
+        };
+        assert!(pool > 0);
+        assert!(c.cancel(a));
+        let after = c.backend().as_native().unwrap().kv_pool().resident_bytes();
+        assert!(after < pool, "cancel must free the session's pages now");
+        while c.step().unwrap() {}
+        let rs = c.take_finished();
+        assert_eq!(rs.len(), 1, "only b completes");
+        assert_eq!(rs[0].id, b);
+        let evs = c.drain_events();
+        assert!(evs.contains(&EngineEvent::Cancelled { id: a }));
+        assert_eq!(c.backend().as_native().unwrap().kv_pool().resident_bytes(), 0);
+    }
+
+    #[test]
+    fn stop_token_and_stop_sequence_end_generation() {
+        // Learn a greedy stream whose first 3 tokens are distinct and
+        // EOS-free, then stop on its tokens.
+        let probe = native();
+        let mut picked = None;
+        for base in [11usize, 30, 44, 61, 95, 120] {
+            let p = vec![base, base + 1, base + 2];
+            let out = probe.generate_once(&p, 6);
+            if !out[..3].contains(&EOS) && out[0] != out[1] && out[1] != out[2] && out[0] != out[2]
+            {
+                picked = Some((p, out));
+                break;
+            }
+        }
+        let (prompt, free) = picked.expect("fixture yields a distinct-token stream");
+
+        let m = native();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
+        c.submit_request(Request::new(0, prompt.clone(), 6).with_stop_tokens(vec![free[1]]));
+        let r = c.run_all().unwrap().remove(0);
+        assert_eq!(r.tokens, free[..2].to_vec(), "stops at the stop token");
+        assert_eq!(r.finish_reason, FinishReason::StopToken);
+
+        let m = native();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
+        c.submit_request(
+            Request::new(0, prompt, 6).with_stop_sequences(vec![free[1..3].to_vec()]),
+        );
+        let r = c.run_all().unwrap().remove(0);
+        assert_eq!(r.tokens, free[..3].to_vec(), "stops after the sequence");
+        assert_eq!(r.finish_reason, FinishReason::StopSequence);
     }
 
     #[test]
     #[cfg(feature = "pjrt")]
     #[ignore = "needs real AOT artifacts (python/compile/aot.py) under rust/artifacts"]
     fn interleaved_pjrt_matches_fifo_tokens() {
+        use crate::runtime::PjrtRuntime;
         use std::path::PathBuf;
         let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
         assert!(dir.join("manifest.json").exists(), "run the AOT pipeline first");

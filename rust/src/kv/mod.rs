@@ -22,7 +22,7 @@ use crate::quant::fp8;
 
 pub mod paged;
 
-pub use paged::{KvPool, PoolStats, PAGE_TOKENS};
+pub use paged::{EvictionPolicy, KvPool, PoolStats, PAGE_TOKENS};
 
 use paged::Page;
 

@@ -29,6 +29,30 @@ use crate::quant::asym::AsymParams;
 /// tail waste is one short page.
 pub const PAGE_TOKENS: usize = 16;
 
+/// Cross-session policy for restoring the pool's byte budget when
+/// concurrent sessions collectively exceed it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// The appending layer sheds its *own* oldest records to flash until
+    /// the pool is back under budget (the PR 1 behavior). Self-contained —
+    /// every `HybridKvLayer::append` restores the budget — but unfair: a
+    /// short session appending under pressure pays for a long one's
+    /// residency, and sustained pressure degrades to per-token flush
+    /// thrash on whichever session happens to append.
+    #[default]
+    ShedSelf,
+    /// The *engine* spills oldest records from the session holding the
+    /// most resident KV (between scheduler ticks, via
+    /// `NativeModel::enforce_kv_budget`). Fairer under concurrency — the
+    /// largest context pays — and value-neutral like all spilling. The
+    /// pool may transiently exceed its budget by at most one scheduler
+    /// tick's appends; only meaningful when requests are driven through
+    /// the `Engine` (direct `NativeModel::generate` calls have a single
+    /// session, where largest-holder and shed-self coincide, but nothing
+    /// restores the budget between their decode steps).
+    LargestHolder,
+}
+
 /// Max free pages cached per geometry before excess pages are actually
 /// deallocated.
 const FREE_LIST_CAP: usize = 64;

@@ -7,11 +7,13 @@
 //! * Layer 3 (this crate): the serving engine — PJRT runtime (behind the
 //!   `pjrt` feature), DRAM-Flash hybrid storage, combined quantization,
 //!   hardware-driven data reorder, multicore balancing, geometry compute,
-//!   LoRA, and the scheduler/batcher with session-owned **paged KV**: all
-//!   per-request state lives in sessions drawing fixed-size KV pages from
-//!   a budgeted shared pool (`kv::paged`), spilling to flash under
-//!   pressure, which is what makes continuous batching work on the native
-//!   backend.
+//!   LoRA, and an **event-driven streaming scheduler** over one
+//!   `InferenceBackend` trait: `Engine::step()` admits/decodes one tick at
+//!   a time, emits typed `EngineEvent`s in decode order, and supports
+//!   mid-flight submission and cancellation. Per-request state lives in
+//!   sessions drawing fixed-size KV pages from a budgeted shared pool
+//!   (`kv::paged`), spilling to flash under pressure, which is what makes
+//!   continuous batching work on the native backend.
 
 // The codebase favors explicit index loops where they mirror the paper's
 // tiling math; keep clippy focused on real defects.

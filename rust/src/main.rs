@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use mnn_llm::baselines;
 use mnn_llm::bench as bh;
 use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
-use mnn_llm::coordinator::SchedulePolicy;
+use mnn_llm::coordinator::{EngineEvent, Request, SchedulePolicy};
 use mnn_llm::device::SocProfile;
 use mnn_llm::model::config::ModelConfig;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
@@ -82,6 +82,45 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn backend_from_flag(dir: &std::path::Path, backend: &str) -> anyhow::Result<Backend> {
+    Ok(match backend {
+        "native" => Backend::Native(Box::new(NativeModel::load(dir, EngineOptions::default())?)),
+        "pjrt" => Backend::Pjrt(Box::new(PjrtRuntime::load(dir)?)),
+        other => anyhow::bail!("unknown backend {other} (pjrt|native)"),
+    })
+}
+
+/// Drive an engine to idle, printing events as the scheduler emits them
+/// (`--stream` mode for `generate` and `serve`).
+fn pump_streaming(c: &mut Coordinator, tok: &ByteTokenizer) -> anyhow::Result<()> {
+    loop {
+        let more = c.step()?;
+        for ev in c.drain_events() {
+            match ev {
+                EngineEvent::Started { id } => println!("  req {id}: started (prefill done)"),
+                EngineEvent::Token { id, tok: t, index, ttft_s: Some(ttft) } => println!(
+                    "  req {id}: token[{index}] = {t} {:?} (ttft {:.1} ms)",
+                    tok.decode(&[t]),
+                    ttft * 1e3
+                ),
+                EngineEvent::Token { id, tok: t, index, ttft_s: None } => {
+                    println!("  req {id}: token[{index}] = {t} {:?}", tok.decode(&[t]))
+                }
+                EngineEvent::Finished { id, reason } => {
+                    println!("  req {id}: finished ({reason:?})")
+                }
+                EngineEvent::Cancelled { id } => println!("  req {id}: cancelled"),
+                EngineEvent::Rejected { id, reason } => {
+                    println!("  req {id}: rejected ({reason})")
+                }
+            }
+        }
+        if !more {
+            return Ok(());
+        }
+    }
+}
+
 fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     let dir = artifacts_dir(args);
     let prompt_text = args.get("prompt", "hello mobile world");
@@ -91,6 +130,20 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     let ids = tok.encode(&prompt_text, false);
     println!("prompt: {prompt_text:?} → {} tokens | backend: {backend}", ids.len());
     let t0 = std::time::Instant::now();
+    if args.get("stream", "false") == "true" {
+        // Streaming path: tokens print the moment the scheduler emits them.
+        let be = backend_from_flag(&dir, &backend)?;
+        println!("backend ready in {:.2}s", t0.elapsed().as_secs_f64());
+        let mut c = Coordinator::new(be, SchedulePolicy::Interleaved);
+        let id = c.submit_request(Request::new(0, ids, n));
+        pump_streaming(&mut c, &tok)?;
+        let rs = c.take_finished();
+        if let Some(r) = rs.iter().find(|r| r.id == id) {
+            println!("token ids: {:?}", r.tokens);
+            println!("decoded  : {:?}", tok.decode(&r.tokens));
+        }
+        return Ok(());
+    }
     let out = match backend.as_str() {
         "pjrt" => {
             let rt = PjrtRuntime::load(&dir)?;
@@ -125,27 +178,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "interleaved" => SchedulePolicy::Interleaved,
         _ => SchedulePolicy::Fifo,
     };
-    let be = match backend.as_str() {
-        "native" => Backend::Native(Box::new(NativeModel::load(&dir, EngineOptions::default())?)),
-        "pjrt" => Backend::Pjrt(Box::new(PjrtRuntime::load(&dir)?)),
-        other => anyhow::bail!("unknown backend {other}"),
-    };
+    let be = backend_from_flag(&dir, &backend)?;
     let mut c = Coordinator::new(be, policy);
+    let tok = ByteTokenizer::new(2048);
     let prompts = ["the quick brown fox", "hello world", "mobile inference", "llm on device"];
     for i in 0..n {
-        let tok = ByteTokenizer::new(2048);
         c.submit(tok.encode(prompts[i % prompts.len()], false), gen);
     }
     let t0 = std::time::Instant::now();
+    if args.get("stream", "false") == "true" {
+        pump_streaming(&mut c, &tok)?;
+        println!("{}", c.metrics.summary(t0.elapsed().as_secs_f64()));
+        return Ok(());
+    }
     let responses = c.run_all()?;
     let wall = t0.elapsed().as_secs_f64();
     for r in &responses {
         println!(
-            "req {}: {} tokens | prefill {:.1} tok/s | decode {:.1} tok/s",
+            "req {}: {} tokens | prefill {:.1} tok/s | decode {:.1} tok/s | {:?}",
             r.id,
             r.tokens.len(),
             r.metrics.prefill_tok_s(),
-            r.metrics.decode_tok_s()
+            r.metrics.decode_tok_s(),
+            r.finish_reason,
         );
     }
     println!("{}", c.metrics.summary(wall));
@@ -206,11 +261,14 @@ fn help() {
         "mnn-llm — MNN-LLM reproduction engine
 USAGE: mnn-llm <cmd> [--flag value]...
   info                                   artifact + device info
-  generate --prompt T --tokens N --backend pjrt|native
-  serve --requests N --tokens N --backend native|pjrt --policy fifo|interleaved
+  generate --prompt T --tokens N --backend pjrt|native [--stream]
+  serve --requests N --tokens N --backend native|pjrt --policy fifo|interleaved [--stream]
   solve-tiles                            print Table 2
   params --model qwen2-7b|qwen2-1.5b|llama3-8b
-  help"
+  help
+
+  --stream prints typed engine events (Started/Token/Finished) the moment
+  the step() scheduler emits them, instead of waiting for the batch drain."
     );
 }
 

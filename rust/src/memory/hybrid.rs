@@ -20,7 +20,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::cpu::activation::softmax_inplace;
-use crate::kv::{KvLayer, KvPool};
+use crate::kv::{EvictionPolicy, KvLayer, KvPool};
 use crate::memory::flash::FlashSim;
 
 /// One layer's KV with a flash tier below it.
@@ -39,6 +39,10 @@ pub struct HybridKvLayer {
     spilled: Vec<u64>,
     /// Spill threshold: max resident tokens before migration.
     pub dram_budget_tokens: usize,
+    /// Who sheds under *pool* (cross-session) pressure: this layer itself
+    /// on every append (`ShedSelf`), or the engine's largest-holder pass
+    /// between scheduler ticks (`LargestHolder`).
+    eviction: EvictionPolicy,
     /// Shared pool the resident pages are drawn from.
     pool: Arc<KvPool>,
     /// Cumulative records written to flash (spills).
@@ -58,13 +62,36 @@ impl HybridKvLayer {
                         Arc::new(KvPool::unbounded()))
     }
 
-    /// Resident pages come from `pool`; pool pressure triggers eviction.
+    /// Resident pages come from `pool`; pool pressure triggers eviction
+    /// under the default `ShedSelf` policy.
     pub fn with_pool(
         kv_heads: usize,
         head_dim: usize,
         flash: Arc<FlashSim>,
         dram_budget_tokens: usize,
         pool: Arc<KvPool>,
+    ) -> Self {
+        Self::with_pool_policy(
+            kv_heads,
+            head_dim,
+            flash,
+            dram_budget_tokens,
+            pool,
+            EvictionPolicy::ShedSelf,
+        )
+    }
+
+    /// [`with_pool`](Self::with_pool) with an explicit cross-session
+    /// eviction policy. Under `LargestHolder`, `append` honors only the
+    /// layer's own token budget; restoring the *pool* budget is the
+    /// engine's job (`NativeModel::enforce_kv_budget`).
+    pub fn with_pool_policy(
+        kv_heads: usize,
+        head_dim: usize,
+        flash: Arc<FlashSim>,
+        dram_budget_tokens: usize,
+        pool: Arc<KvPool>,
+        eviction: EvictionPolicy,
     ) -> Self {
         HybridKvLayer {
             resident: KvLayer::with_pool(kv_heads, head_dim, pool.clone()),
@@ -73,6 +100,7 @@ impl HybridKvLayer {
             flash,
             spilled: Vec::new(),
             dram_budget_tokens: dram_budget_tokens.max(1),
+            eviction,
             pool,
             spilled_records: 0,
             restored_records: AtomicU64::new(0),
@@ -118,13 +146,15 @@ impl HybridKvLayer {
     }
 
     /// Append one token; evict the oldest resident tokens while over the
-    /// layer's token budget or while the shared pool is over its byte
-    /// budget. The spill is one sequential flash append per token (the
-    /// paper: each step produces ~1 KB of new KV).
+    /// layer's token budget or — under `ShedSelf` — while the shared pool
+    /// is over its byte budget. The spill is one sequential flash append
+    /// per token (the paper: each step produces ~1 KB of new KV).
     pub fn append(&mut self, k: &[f32], v: &[f32]) -> std::io::Result<()> {
         self.resident.append(k, v);
+        let shed_self = self.eviction == EvictionPolicy::ShedSelf;
         while !self.resident.is_empty()
-            && (self.resident.len() > self.dram_budget_tokens || self.pool.over_budget())
+            && (self.resident.len() > self.dram_budget_tokens
+                || (shed_self && self.pool.over_budget()))
         {
             self.spill_one()?;
         }
@@ -133,6 +163,20 @@ impl HybridKvLayer {
             self.resident.clear();
         }
         Ok(())
+    }
+
+    /// Spill up to `n` of the oldest resident records to flash (the
+    /// largest-holder eviction unit). Returns records actually spilled —
+    /// 0 when nothing is resident. Value-neutral like all spilling.
+    pub fn shed_oldest(&mut self, n: usize) -> std::io::Result<usize> {
+        let n = n.min(self.resident.len());
+        for _ in 0..n {
+            self.spill_one()?;
+        }
+        if self.resident.is_empty() {
+            self.resident.clear();
+        }
+        Ok(n)
     }
 
     /// Terminal release: drop ALL KV state — resident pages back to the
@@ -593,5 +637,58 @@ mod tests {
             h.append(&k, &v).unwrap();
         }
         assert!(h.resident.len() <= budget);
+    }
+
+    #[test]
+    fn largest_holder_policy_leaves_pool_pressure_to_the_engine() {
+        // Under LargestHolder, append honors only the layer's own token
+        // budget: pool pressure no longer makes the appender shed itself.
+        let pool = Arc::new(KvPool::new(KvPool::page_bytes(2, 8)));
+        let mut a = HybridKvLayer::with_pool_policy(
+            2,
+            8,
+            flash(),
+            usize::MAX / 2,
+            pool.clone(),
+            EvictionPolicy::LargestHolder,
+        );
+        let mut rng = Rng::new(14);
+        for _ in 0..3 * crate::kv::PAGE_TOKENS {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            a.append(&k, &v).unwrap();
+        }
+        assert_eq!(a.spill_count(), 0, "no self-shedding under LargestHolder");
+        assert!(pool.over_budget(), "pressure is left for the engine pass");
+        // The engine-side eviction unit restores the budget explicitly.
+        let shed = a.shed_oldest(2 * crate::kv::PAGE_TOKENS).unwrap();
+        assert_eq!(shed, 2 * crate::kv::PAGE_TOKENS);
+        assert!(!pool.over_budget());
+        assert_eq!(a.len(), 3 * crate::kv::PAGE_TOKENS, "tokens survive on flash");
+    }
+
+    #[test]
+    fn shed_oldest_caps_at_resident_and_stays_value_neutral() {
+        let mut rng = Rng::new(15);
+        let (heads, kv_heads, d, t) = (4usize, 2usize, 16usize, 10usize);
+        let mut plain = KvLayer::new(kv_heads, d);
+        let mut hybrid = HybridKvLayer::new(kv_heads, d, flash(), usize::MAX / 2);
+        for _ in 0..t {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            plain.append(&k, &v);
+            hybrid.append(&k, &v).unwrap();
+        }
+        assert_eq!(hybrid.shed_oldest(4).unwrap(), 4);
+        assert_eq!(hybrid.shed_oldest(100).unwrap(), t - 4, "capped at resident");
+        assert_eq!(hybrid.shed_oldest(1).unwrap(), 0, "nothing left to shed");
+        let q = rng.normal_vec(heads * d);
+        let mut want = vec![0f32; heads * d];
+        plain_attention(&q, heads, &plain, &mut want);
+        let mut got = vec![0f32; heads * d];
+        hybrid.decode_attention_streaming(&q, heads, &mut got, 4).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
     }
 }

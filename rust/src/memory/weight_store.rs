@@ -348,6 +348,10 @@ pub struct WeightResidencyMetrics {
     pub prefetch_hits: u64,
     /// `layer()` calls that had to wait for an in-flight prefetch.
     pub prefetch_stalls: u64,
+    /// Deepest lookahead a single `prefetch_ahead` call issued: how many
+    /// upcoming layers the budget let the engine keep in flight at once
+    /// (0 = never constrained enough to prefetch, 1 = classic one-ahead).
+    pub prefetch_depth: usize,
     /// Modeled flash seconds spent reading layer blobs (demand + prefetch).
     pub flash_read_s: f64,
 }
@@ -378,6 +382,9 @@ struct Resident {
 struct State {
     resident: HashMap<usize, Resident>,
     in_flight: HashSet<usize>,
+    /// Blob bytes of the layers in `in_flight` (budget-aware prefetch
+    /// depth accounts these against the budget before issuing more).
+    in_flight_bytes: usize,
     tick: u64,
     resident_bytes: usize,
     demand_fetches: u64,
@@ -385,6 +392,7 @@ struct State {
     prefetch_issued: u64,
     prefetch_hits: u64,
     prefetch_stalls: u64,
+    prefetch_depth: usize,
     flash_read_s: f64,
 }
 
@@ -487,11 +495,13 @@ impl WeightStore {
             break;
         }
         st.in_flight.insert(li);
+        st.in_flight_bytes += self.slots[li].len;
         st.demand_fetches += 1;
         drop(st);
         let res = fetch_blob(&self.flash, self.slots[li]);
         let mut st = shared.state.lock().unwrap();
         st.in_flight.remove(&li);
+        st.in_flight_bytes = st.in_flight_bytes.saturating_sub(self.slots[li].len);
         let out = match res {
             Ok((lw, t)) => {
                 st.flash_read_s += t;
@@ -516,9 +526,13 @@ impl WeightStore {
     /// the current layer would evict the never-claimed prefetched one (or
     /// vice versa), doubling flash reads instead of hiding them — so those
     /// budgets skip prefetch and run pure demand paging.
-    pub fn prefetch(&self, worker: &BackgroundWorker, li: usize) {
+    ///
+    /// Returns true when the layer is *covered* (already resident, already
+    /// in flight, or a fetch was just issued); false when out of range or
+    /// skipped by the anti-thrash guard.
+    pub fn prefetch(&self, worker: &BackgroundWorker, li: usize) -> bool {
         if li >= self.slots.len() {
-            return;
+            return false;
         }
         let largest_other = self
             .slots
@@ -529,14 +543,15 @@ impl WeightStore {
             .max()
             .unwrap_or(0);
         if self.budget < self.slots[li].len + largest_other {
-            return;
+            return false;
         }
         {
             let mut st = self.shared.state.lock().unwrap();
             if st.resident.contains_key(&li) || st.in_flight.contains(&li) {
-                return;
+                return true;
             }
             st.in_flight.insert(li);
+            st.in_flight_bytes += self.slots[li].len;
             st.prefetch_issued += 1;
         }
         let flash = self.flash.clone();
@@ -547,6 +562,7 @@ impl WeightStore {
             let res = fetch_blob(&flash, slots[li]);
             let mut st = shared.state.lock().unwrap();
             st.in_flight.remove(&li);
+            st.in_flight_bytes = st.in_flight_bytes.saturating_sub(slots[li].len);
             if let Ok((lw, t)) = res {
                 st.flash_read_s += t;
                 insert_resident(&mut st, &slots, budget, li, lw, true);
@@ -559,10 +575,61 @@ impl WeightStore {
             // `layer()` demand-fetches instead of waiting forever.
             let mut st = self.shared.state.lock().unwrap();
             st.in_flight.remove(&li);
+            st.in_flight_bytes = st.in_flight_bytes.saturating_sub(self.slots[li].len);
             st.prefetch_issued -= 1;
             drop(st);
             self.shared.cv.notify_all();
+            return false;
         }
+        true
+    }
+
+    /// Budget-aware multi-layer prefetch: cover layers `start, start+1, …`
+    /// while the **upcoming working set** — the current layer's blob
+    /// (`start-1`), blobs already in flight, and the blobs covered by this
+    /// call — fits the budget. (The raw `resident_bytes` gauge cannot gate
+    /// depth: a steady-state LRU arena is always full; what matters is
+    /// that the layers being prefetched plus the one being served fit,
+    /// with LRU eviction freeing the just-used layers as fetches land.)
+    ///
+    /// The first layer ahead follows [`prefetch`](Self::prefetch)'s rules
+    /// exactly (including its anti-thrash guard), so at any budget this is
+    /// at least as deep as PR 2's classic one-ahead; a generous budget
+    /// buys deeper lookahead, hiding more flash time on deep models. A
+    /// budget that holds every layer issues nothing (all layers stay
+    /// resident). Returns the depth covered this call; the deepest depth
+    /// is surfaced as [`WeightResidencyMetrics::prefetch_depth`].
+    pub fn prefetch_ahead(&self, worker: &BackgroundWorker, start: usize) -> usize {
+        if self.budget >= self.total_packed_bytes() {
+            return 0; // everything resident forever: nothing to hide
+        }
+        let current_len = match start.checked_sub(1) {
+            Some(cur) if cur < self.slots.len() => self.slots[cur].len,
+            _ => 0,
+        };
+        // Snapshot in-flight state once: those bytes are already committed,
+        // and an upcoming layer that is in this set must not be counted a
+        // second time when the loop walks over it.
+        let (in_flight_bytes, in_flight_ids) = {
+            let st = self.shared.state.lock().unwrap();
+            (st.in_flight_bytes, st.in_flight.clone())
+        };
+        let mut working = current_len.saturating_add(in_flight_bytes);
+        let mut depth = 0usize;
+        for li in start..self.slots.len() {
+            let add = if in_flight_ids.contains(&li) { 0 } else { self.slots[li].len };
+            if depth > 0 && working.saturating_add(add) > self.budget {
+                break;
+            }
+            if !self.prefetch(worker, li) {
+                break;
+            }
+            working = working.saturating_add(add);
+            depth += 1;
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        st.prefetch_depth = st.prefetch_depth.max(depth);
+        depth
     }
 
     pub fn metrics(&self) -> WeightResidencyMetrics {
@@ -575,6 +642,7 @@ impl WeightStore {
             prefetch_issued: st.prefetch_issued,
             prefetch_hits: st.prefetch_hits,
             prefetch_stalls: st.prefetch_stalls,
+            prefetch_depth: st.prefetch_depth,
             flash_read_s: st.flash_read_s,
         }
     }
@@ -858,6 +926,44 @@ mod tests {
         let m = store.metrics();
         assert_eq!(m.demand_fetches, 1, "{m:?}");
         assert_eq!(m.prefetch_hits + m.prefetch_stalls, 0, "{m:?}");
+    }
+
+    #[test]
+    fn prefetch_ahead_depth_scales_with_budget() {
+        let unlimited = store_with(6, usize::MAX);
+        let per_layer = unlimited.total_packed_bytes() / 6;
+        let worker = BackgroundWorker::new("test-prefetch-ahead");
+
+        // Budget for every layer: nothing to prefetch, depth 0.
+        let all = store_with(6, usize::MAX);
+        assert_eq!(all.prefetch_ahead(&worker, 1), 0);
+        assert_eq!(all.metrics().prefetch_depth, 0);
+
+        // Two-blob budget: current + one ahead is all that fits — the
+        // classic PR 2 depth.
+        let two = store_with(6, per_layer * 2);
+        two.layer(0).unwrap();
+        let d = two.prefetch_ahead(&worker, 1);
+        assert_eq!(d, 1, "{:?}", two.metrics());
+        assert_eq!(two.metrics().prefetch_depth, 1);
+
+        // Four-blob budget: current + three ahead fit the working set.
+        let four = store_with(6, per_layer * 4);
+        let d = four.prefetch_ahead(&worker, 1);
+        assert_eq!(d, 3, "{:?}", four.metrics());
+        assert_eq!(four.metrics().prefetch_depth, 3);
+        // Every covered layer reads back bit-exact.
+        for li in 0..6 {
+            assert_eq!(
+                four.layer(li).unwrap().to_blob(),
+                unlimited.layer(li).unwrap().to_blob()
+            );
+        }
+
+        // Below-two-blob budget: the anti-thrash guard keeps depth at 0.
+        let tiny = store_with(6, per_layer);
+        assert_eq!(tiny.prefetch_ahead(&worker, 1), 0);
+        assert_eq!(tiny.metrics().prefetch_issued, 0);
     }
 
     #[test]

@@ -174,6 +174,20 @@ pub fn native_model(seed: u64, options: EngineOptions)
     Ok((fx, m))
 }
 
+/// Real AOT artifacts when `artifacts/manifest.json` exists in the
+/// working directory, otherwise a generated fixture — the examples' and
+/// benches' "always runnable" model source. Keep the returned guard
+/// (`Some` only in the fixture case) alive while loading from the path.
+pub fn artifacts_or_fixture(seed: u64) -> std::io::Result<(Option<Fixture>, PathBuf)> {
+    let aot = PathBuf::from("artifacts");
+    if aot.join("manifest.json").exists() {
+        return Ok((None, aot));
+    }
+    let fx = write_fixture(seed)?;
+    let dir = fx.dir().to_path_buf();
+    Ok((Some(fx), dir))
+}
+
 /// [`native_model`] at a chosen decoder depth (weight-residency tests).
 pub fn native_model_with_layers(
     seed: u64,

@@ -33,7 +33,7 @@ use crate::cpu::activation::{add_inplace, rmsnorm, swiglu};
 use crate::cpu::attention::prefill_attention;
 use crate::cpu::gemm_q::QLinear;
 use crate::device::SocProfile;
-use crate::kv::{KvPool, PAGE_TOKENS};
+use crate::kv::{EvictionPolicy, KvPool, PAGE_TOKENS};
 use crate::lora::LoraManager;
 use crate::memory::embedding::FlashEmbedding;
 use crate::memory::flash::FlashSim;
@@ -71,6 +71,12 @@ pub struct EngineOptions {
     pub weight_dram_bytes: usize,
     /// If false, the embedding is copied to DRAM (baseline configuration).
     pub embedding_in_flash: bool,
+    /// Who sheds KV when concurrent sessions exceed the pool byte budget:
+    /// the appending layer itself (`ShedSelf`, the default), or the
+    /// engine's cross-session largest-holder pass between scheduler ticks
+    /// (`LargestHolder`, see [`NativeModel::enforce_kv_budget`]). Both are
+    /// bit-exact value-neutral; only who pays the flash traffic changes.
+    pub eviction: EvictionPolicy,
 }
 
 impl Default for EngineOptions {
@@ -82,6 +88,7 @@ impl Default for EngineOptions {
             kv_pool_bytes: usize::MAX,
             weight_dram_bytes: usize::MAX,
             embedding_in_flash: true,
+            eviction: EvictionPolicy::ShedSelf,
         }
     }
 }
@@ -146,6 +153,18 @@ impl NativeSession {
         let mut n = 0;
         for l in &mut self.kv {
             n += l.spill_all()?;
+        }
+        Ok(n)
+    }
+
+    /// Spill up to `records_per_layer` of the oldest resident records from
+    /// *every* layer (KV grows uniformly across layers, so uniform
+    /// shedding is the natural eviction unit). Returns total records
+    /// spilled; 0 means nothing was resident. Value-neutral.
+    pub fn shed_oldest(&mut self, records_per_layer: usize) -> std::io::Result<usize> {
+        let mut n = 0;
+        for l in &mut self.kv {
+            n += l.shed_oldest(records_per_layer)?;
         }
         Ok(n)
     }
@@ -363,12 +382,13 @@ impl NativeModel {
         let cfg = &self.config;
         let kv = (0..cfg.layers)
             .map(|_| {
-                HybridKvLayer::with_pool(
+                HybridKvLayer::with_pool_policy(
                     cfg.kv_heads,
                     cfg.head_dim(),
                     self.flash.clone(),
                     self.options.kv_budget_tokens,
                     self.kv_pool.clone(),
+                    self.options.eviction,
                 )
             })
             .collect();
@@ -379,6 +399,65 @@ impl NativeModel {
             lora_task: None,
             _live: SessionGuard(self.live_sessions.clone()),
         }
+    }
+
+    /// Admission control: make room in the KV pool for a `prompt_len`-token
+    /// prefill by preempting `running` sessions (oldest first) to flash
+    /// until the prompt's page-granular KV estimate fits the budget. When
+    /// the prompt could never fit even an empty pool, fleet-wide preemption
+    /// is pointless and skipped — the new session degrades by spilling its
+    /// own KV as it appends. Returns sessions preempted.
+    pub fn make_room(
+        &self,
+        prompt_len: usize,
+        running: &mut [&mut NativeSession],
+    ) -> std::io::Result<u64> {
+        let need = self.prefill_kv_page_bytes(prompt_len);
+        let mut preempted = 0;
+        if self.kv_pool.would_exceed(need) && need <= self.kv_pool.budget_bytes() {
+            for s in running.iter_mut() {
+                if !self.kv_pool.would_exceed(need) {
+                    break;
+                }
+                if s.resident_kv_bytes() > 0 {
+                    s.preempt_to_flash()?;
+                    preempted += 1;
+                }
+            }
+            // If it still doesn't fit, admit anyway: appends degrade
+            // gracefully by spilling to flash.
+        }
+        Ok(preempted)
+    }
+
+    /// The `EvictionPolicy::LargestHolder` enforcement pass: while the KV
+    /// pool is over budget, spill one page-worth of oldest records per
+    /// layer from the session holding the most resident KV. The engine
+    /// calls this between scheduler ticks (after admissions and before
+    /// each decode round), so under `LargestHolder` the pool exceeds its
+    /// budget by at most one tick's appends. A no-op under `ShedSelf`
+    /// (appends restore the budget themselves). Returns records shed.
+    pub fn enforce_kv_budget(
+        &self,
+        running: &mut [&mut NativeSession],
+    ) -> std::io::Result<u64> {
+        if self.options.eviction != EvictionPolicy::LargestHolder {
+            return Ok(0);
+        }
+        let mut shed = 0u64;
+        while self.kv_pool.over_budget() {
+            let victim = running
+                .iter_mut()
+                .filter(|s| s.resident_kv_bytes() > 0)
+                .max_by_key(|s| s.resident_kv_bytes());
+            let Some(victim) = victim else { break };
+            let n = victim.shed_oldest(PAGE_TOKENS)?;
+            if n == 0 {
+                break; // nothing sheddable left anywhere
+            }
+            shed += n as u64;
+        }
+        Ok(shed)
     }
 
     fn embed(&self, ids: &[usize], out: &mut [f32]) {
@@ -468,10 +547,12 @@ impl NativeModel {
         let mut act = vec![0f32; s * cfg.inter];
         let mut mlp = vec![0f32; s * h];
         for li in 0..cfg.layers {
-            // Kick the next layer's flash fetch before touching this one so
-            // the read overlaps this layer's compute (§4.1 overlap, weights
-            // edition). No-op when the layer is already resident.
-            self.weights.prefetch(&self.prefetcher, li + 1);
+            // Kick upcoming layers' flash fetches before touching this one
+            // so the reads overlap this layer's compute (§4.1 overlap,
+            // weights edition). Depth is budget-aware: as many layers ahead
+            // as the arena can hold next to the current one. No-op when
+            // everything is already resident.
+            self.weights.prefetch_ahead(&self.prefetcher, li + 1);
             let layer = self.weights.layer(li).expect("weight residency");
             rmsnorm(&x, &layer.ln1, &mut norm, s, cfg.rms_eps);
             self.linear(&layer.wq, &norm, s, &mut q);
@@ -537,8 +618,8 @@ impl NativeModel {
         let mut act = vec![0f32; cfg.inter];
         let mut mlp = vec![0f32; h];
         for li in 0..cfg.layers {
-            // One-layer-ahead prefetch, same contract as in prefill.
-            self.weights.prefetch(&self.prefetcher, li + 1);
+            // Budget-aware lookahead prefetch, same contract as in prefill.
+            self.weights.prefetch_ahead(&self.prefetcher, li + 1);
             let layer = self.weights.layer(li).expect("weight residency");
             rmsnorm(&x, &layer.ln1, &mut norm, 1, cfg.rms_eps);
             self.linear(&layer.wq, &norm, 1, &mut q);

@@ -38,6 +38,13 @@ pub struct KvState {
 }
 
 impl KvState {
+    /// An empty (pre-prefill) state: what `InferenceBackend::new_session`
+    /// hands out before the first prefill fills it, and what cancellation
+    /// resets to so the host buffers are freed immediately.
+    pub fn empty() -> Self {
+        KvState { k_q: Vec::new(), k_s: Vec::new(), k_b: Vec::new(), v_u8: Vec::new(), pos: 0 }
+    }
+
     /// DRAM bytes held by this state (the paper's KV-memory accounting).
     pub fn nbytes(&self) -> usize {
         self.k_q.len() + 4 * self.k_s.len() + 4 * self.k_b.len() + self.v_u8.len()

@@ -12,6 +12,8 @@
 
 use std::path::PathBuf;
 
+use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
+use mnn_llm::coordinator::SchedulePolicy;
 use mnn_llm::model::fixtures;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::model::sampler::argmax;
@@ -84,6 +86,58 @@ fn pjrt_vs_native_suite() {
     let m = &rt.manifest.model;
     let expect = m.layers * m.kv_heads * m.max_len * (2 * m.head_dim() + 8);
     assert_eq!(ka.nbytes(), expect);
+
+    // 6. The run_all() compatibility wrapper is bit-identical to a
+    // step()-driven drain on the PJRT backend too (one InferenceBackend
+    // trait, one scheduler loop). Mirrors the native-backend test below.
+    let rt_a = PjrtRuntime::load(&dir).unwrap();
+    let mut batch = Coordinator::new(Backend::Pjrt(Box::new(rt_a)), SchedulePolicy::Interleaved);
+    batch.submit(vec![5, 6, 7], 4);
+    batch.submit(vec![100, 101], 4);
+    let want = batch.run_all().unwrap();
+    let rt_b = PjrtRuntime::load(&dir).unwrap();
+    let mut step = Coordinator::new(Backend::Pjrt(Box::new(rt_b)), SchedulePolicy::Interleaved);
+    step.submit(vec![5, 6, 7], 4);
+    step.submit(vec![100, 101], 4);
+    while step.step().unwrap() {}
+    let mut got = step.take_finished();
+    got.sort_by_key(|r| r.id);
+    assert_eq!(want.len(), got.len());
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "pjrt run_all vs step drain diverged");
+    }
+}
+
+#[test]
+fn run_all_matches_step_drain_native() {
+    // The compatibility half of the acceptance criterion on the always-on
+    // backend: run_all() (the thin wrapper) and a manual step() drain
+    // produce bit-identical greedy responses, under both policies.
+    let fx = fixtures::write_fixture(7).unwrap();
+    for policy in [SchedulePolicy::Fifo, SchedulePolicy::Interleaved] {
+        let m = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+        let mut batch = Coordinator::new(Backend::Native(Box::new(m)), policy);
+        batch.submit(vec![11, 22, 33], 5);
+        batch.submit(vec![44; 7], 4);
+        batch.submit(vec![200, 201], 6);
+        let want = batch.run_all().unwrap();
+
+        let m = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+        let mut step = Coordinator::new(Backend::Native(Box::new(m)), policy);
+        step.submit(vec![11, 22, 33], 5);
+        step.submit(vec![44; 7], 4);
+        step.submit(vec![200, 201], 6);
+        while step.step().unwrap() {}
+        let mut got = step.take_finished();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "{policy:?}: run_all vs step drain diverged");
+            assert_eq!(a.finish_reason, b.finish_reason);
+        }
+    }
 }
 
 #[test]
@@ -96,7 +150,7 @@ fn native_options_never_change_numbers() {
     let base = NativeModel::load(fx.dir(), EngineOptions::default())
         .unwrap()
         .generate_once(&prompt, n);
-    use mnn_llm::kv::KvPool;
+    use mnn_llm::kv::{EvictionPolicy, KvPool};
     use mnn_llm::parallel::pool::WorkerConfig;
     use mnn_llm::reorder::solver::TileConfig;
     let cfg = fixtures::fixture_config();
@@ -108,6 +162,12 @@ fn native_options_never_change_numbers() {
         // Weight residency budgets, from roughly-one-layer to pathological.
         EngineOptions { weight_dram_bytes: 10 << 10, ..EngineOptions::default() },
         EngineOptions { weight_dram_bytes: 1, ..EngineOptions::default() },
+        // The eviction-policy knob is also numbers-neutral.
+        EngineOptions {
+            kv_pool_bytes: 2 * page,
+            eviction: EvictionPolicy::LargestHolder,
+            ..EngineOptions::default()
+        },
         EngineOptions {
             tile: TileConfig { e_p: 2, h_p: 8, l_p: 4 },
             ..EngineOptions::default()
@@ -119,6 +179,7 @@ fn native_options_never_change_numbers() {
             kv_pool_bytes: 2 * page,
             weight_dram_bytes: 1 << 16,
             embedding_in_flash: true,
+            eviction: EvictionPolicy::ShedSelf,
         },
     ];
     for (i, opt) in variants.into_iter().enumerate() {

@@ -117,6 +117,69 @@ fn interleaved_matches_fifo_greedy_on_random_workloads() {
 }
 
 #[test]
+fn random_step_schedules_match_run_all_greedy() {
+    // Property form of the compatibility criterion: however the caller
+    // interleaves step() with mid-flight submissions, greedy token
+    // streams per id equal a plain run_all() of the same workload.
+    let fx = fixtures::write_fixture(24).unwrap();
+    let vocab = fixtures::fixture_config().vocab;
+    prop_check(4, |rng| {
+        let workload = random_workload(rng, vocab);
+        let policy = if rng.bool() {
+            SchedulePolicy::Interleaved
+        } else {
+            SchedulePolicy::Fifo
+        };
+        let m = NativeModel::load(fx.dir(), EngineOptions::default())
+            .map_err(|e| e.to_string())?;
+        let mut batch = Coordinator::new(Backend::Native(Box::new(m)), policy);
+        for (p, n) in &workload {
+            batch.submit(p.clone(), *n);
+        }
+        let mut want: Vec<(u64, Vec<usize>)> = batch
+            .run_all()
+            .map_err(|e| e.to_string())?
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+        want.sort_by_key(|(id, _)| *id);
+
+        let m = NativeModel::load(fx.dir(), EngineOptions::default())
+            .map_err(|e| e.to_string())?;
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), policy);
+        // Submit a random prefix up front, the rest mid-flight at random
+        // points of the step schedule.
+        let split = rng.below(workload.len()) + 1;
+        for (p, n) in &workload[..split] {
+            c.submit(p.clone(), *n);
+        }
+        let mut rest = workload[split..].to_vec();
+        let mut guard = 0;
+        loop {
+            let more = c.step().map_err(|e| e.to_string())?;
+            if !rest.is_empty() && rng.bool() {
+                let (p, n) = rest.remove(0);
+                c.submit(p, n);
+            }
+            if !more && !c.has_work() && rest.is_empty() {
+                break;
+            }
+            guard += 1;
+            if guard > 1000 {
+                return Err("step schedule failed to drain".into());
+            }
+        }
+        let mut got: Vec<(u64, Vec<usize>)> =
+            c.take_finished().into_iter().map(|r| (r.id, r.tokens)).collect();
+        got.sort_by_key(|(id, _)| *id);
+        if got != want {
+            return Err(format!("step drain diverged: {got:?} vs {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn spill_restore_roundtrips_bit_exact() {
     // The §4.2 record format through the flash tier: serialize → append →
     // read_at → push_serialized must reproduce every record bit-for-bit,
