@@ -5,10 +5,12 @@
 //! different shapes: the native model owns sessions (paged KV over the
 //! shared pool), the PJRT runtime threads a host-side [`KvState`] per
 //! request. [`InferenceBackend`] is the common surface: a backend knows
-//! how to open a session, prefill it, decode one token, report its
-//! position, and release its resources; everything scheduling-related
-//! (admission, round-robin, stop conditions, events, cancellation) lives
-//! once in `scheduler::Engine`.
+//! how to open a session, prefill it, decode one token (or one fused
+//! `decode_batch` round for every active session — value-neutral by
+//! contract, defaulting to the loop), report its position, and release
+//! its resources; everything scheduling-related (admission, batched
+//! rounds, stop conditions, events, cancellation) lives once in
+//! `scheduler::Engine`.
 //!
 //! Native-only mechanisms — KV-pool admission preemption, the
 //! largest-holder eviction pass, weight-residency metrics — are trait
@@ -40,6 +42,28 @@ pub trait InferenceBackend {
 
     /// One decode step at the session's position; returns logits.
     fn decode(&self, sess: &mut Self::Session, tok: usize) -> Result<Vec<f32>>;
+
+    /// One decode step for a whole batch: row r consumes `toks[r]` on
+    /// `sessions[r]` and receives its logits in returned row r. The
+    /// contract is **value-neutrality**: any implementation must produce
+    /// exactly the logits `decode` would produce row by row — batching may
+    /// only change how the work is scheduled (e.g. the native backend runs
+    /// one fused layer walk, paying one weight fetch per layer per round
+    /// instead of one per layer per session). The default is the loop
+    /// itself, so backends without a fused path (PJRT) are batched-decode
+    /// correct for free.
+    fn decode_batch(
+        &self,
+        sessions: &mut [&mut Self::Session],
+        toks: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(sessions.len(), toks.len(), "one token per session");
+        let mut out = Vec::with_capacity(toks.len());
+        for (sess, &tok) in sessions.iter_mut().zip(toks) {
+            out.push(self.decode(sess, tok)?);
+        }
+        Ok(out)
+    }
 
     /// Tokens the session has consumed/produced so far (== KV length).
     fn session_pos(&self, sess: &Self::Session) -> usize;
@@ -100,6 +124,14 @@ impl InferenceBackend for NativeModel {
 
     fn decode(&self, sess: &mut NativeSession, tok: usize) -> Result<Vec<f32>> {
         Ok(NativeModel::decode(self, sess, tok))
+    }
+
+    fn decode_batch(
+        &self,
+        sessions: &mut [&mut NativeSession],
+        toks: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(NativeModel::decode_batch(self, sessions, toks))
     }
 
     fn session_pos(&self, sess: &NativeSession) -> usize {
@@ -242,6 +274,30 @@ impl InferenceBackend for Backend {
         match self {
             Backend::Native(m) => InferenceBackend::decode(m.as_ref(), sess.native(), tok),
             Backend::Pjrt(rt) => InferenceBackend::decode(rt.as_ref(), sess.pjrt(), tok),
+        }
+    }
+
+    fn decode_batch(
+        &self,
+        sessions: &mut [&mut AnySession],
+        toks: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Backend::Native(m) => {
+                let mut native: Vec<&mut NativeSession> =
+                    sessions.iter_mut().map(|s| s.native()).collect();
+                InferenceBackend::decode_batch(m.as_ref(), &mut native, toks)
+            }
+            Backend::Pjrt(rt) => {
+                // The trait's default loop-over-decode fallback: PJRT has
+                // no fused path, and the contract makes that pure policy.
+                assert_eq!(sessions.len(), toks.len(), "one token per session");
+                let mut out = Vec::with_capacity(toks.len());
+                for (sess, &tok) in sessions.iter_mut().zip(toks) {
+                    out.push(InferenceBackend::decode(rt.as_ref(), sess.pjrt(), tok)?);
+                }
+                Ok(out)
+            }
         }
     }
 

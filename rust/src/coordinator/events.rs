@@ -33,6 +33,13 @@ pub enum FinishReason {
 
 /// One scheduler-observable event. `Token::index` counts generated tokens
 /// from 0; `ttft_s` is set only on the first token (arrival → first token).
+///
+/// Ordering under fused decode rounds: although a decode tick computes all
+/// active sessions' tokens in **one** `decode_batch` call, the engine
+/// emits that tick's `Token` events (and any resulting `Finished`) in
+/// admission order, one request at a time — exactly the stream the old
+/// per-session round-robin loop produced, so event consumers cannot
+/// observe the fusion.
 #[derive(Clone, Debug, PartialEq)]
 pub enum EngineEvent {
     /// The request was admitted and its prefill completed.

@@ -147,6 +147,15 @@ impl EngineMetrics {
                 self.weights.prefetch_stalls,
                 self.weights.prefetch_depth
             ));
+            if self.weights.tokens_generated > 0 {
+                // The batched-decode amortization gauge: flash blob reads
+                // per generated decode token (fused rounds divide this by
+                // the batch size).
+                s.push_str(&format!(
+                    " / {:.2} fetch/tok",
+                    self.weights.fetches_per_token()
+                ));
+            }
         }
         s
     }
@@ -206,6 +215,13 @@ mod tests {
         let s = e.summary(1.0);
         assert!(s.contains("weights 3 fetch"), "{s}");
         assert!(s.contains("2 evict"), "{s}");
+        // fetch/tok appears only once decode tokens were generated, and is
+        // computed from decode-phase fetches only.
+        assert!(!s.contains("fetch/tok"), "{s}");
+        e.weights.decode_fetches = 6;
+        e.weights.tokens_generated = 4;
+        let s = e.summary(1.0);
+        assert!(s.contains("1.50 fetch/tok"), "{s}");
     }
 
     #[test]

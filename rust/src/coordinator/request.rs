@@ -23,6 +23,12 @@ pub struct Request {
     /// generated tail matches any of these sequences. The matched sequence
     /// is included in the output tokens.
     pub stop_sequences: Vec<Vec<usize>>,
+    /// Admission priority class: higher classes are admitted first; ties
+    /// break by arrival time (earliest first — EDF with arrival as the
+    /// deadline proxy), then id. `None` is the default class 0, so
+    /// requests that never set a priority are admitted in strict FIFO
+    /// order, exactly as before the field existed.
+    pub priority: Option<u8>,
     /// Seed for this request's private sampling RNG. `None` derives a
     /// deterministic per-request stream from the request id, so sampled
     /// (temperature > 0) outputs are schedule-invariant either way.
@@ -42,9 +48,21 @@ impl Request {
             sampler: SamplerConfig::default(),
             stop_tokens: Vec::new(),
             stop_sequences: Vec::new(),
+            priority: None,
             seed: None,
             arrival: None,
         }
+    }
+
+    /// Builder-style: set the admission priority class (higher = sooner).
+    pub fn with_priority(mut self, class: u8) -> Self {
+        self.priority = Some(class);
+        self
+    }
+
+    /// The effective admission class (`None` ≡ class 0).
+    pub fn priority_class(&self) -> u8 {
+        self.priority.unwrap_or(0)
     }
 
     /// Builder-style: set the sampling seed.
@@ -103,6 +121,8 @@ mod tests {
         assert_eq!(r.sampler.temperature, 0.0);
         assert!(r.stop_tokens.is_empty());
         assert!(r.stop_sequences.is_empty());
+        assert!(r.priority.is_none());
+        assert_eq!(r.priority_class(), 0);
         assert!(r.seed.is_none());
         assert!(r.arrival.is_none());
     }
@@ -112,10 +132,13 @@ mod tests {
         let r = Request::new(1, vec![1], 4)
             .with_seed(42)
             .with_stop_tokens(vec![9])
-            .with_stop_sequences(vec![vec![1, 2]]);
+            .with_stop_sequences(vec![vec![1, 2]])
+            .with_priority(3);
         assert_eq!(r.seed, Some(42));
         assert_eq!(r.stop_tokens, vec![9]);
         assert_eq!(r.stop_sequences, vec![vec![1, 2]]);
+        assert_eq!(r.priority, Some(3));
+        assert_eq!(r.priority_class(), 3);
     }
 
     #[test]

@@ -2,16 +2,23 @@
 //! [`InferenceBackend`].
 //!
 //! [`Engine::step`] advances one scheduler tick — admit one queued request
-//! (prefill) or run one round-robin decode round — and emits typed
-//! [`EngineEvent`]s the moment tokens exist, so callers observe generation
-//! in decode order instead of at drain time. Requests can be submitted
-//! **while the engine is stepping** (mid-flight admission goes through the
-//! same KV-pool admission control) and cancelled at any point
-//! ([`Engine::cancel`] frees the session's KV pages and flash spill
-//! immediately). [`Engine::run_all`] survives as a thin compatibility
-//! wrapper: `step()` until idle, then return completed responses in
-//! submission order — bit-identical greedy outputs to the old drain-only
-//! coordinator.
+//! (prefill) or run one **fused decode round**: a single
+//! `InferenceBackend::decode_batch` call advances every active session by
+//! one token (on the native backend, one layer walk and one weight fetch
+//! per layer per tick shared by all sessions, instead of one walk per
+//! session) — and emits typed [`EngineEvent`]s the moment tokens exist, so
+//! callers observe generation in decode order instead of at drain time.
+//! Admission pops the **highest-priority** ready request
+//! (`Request::priority` class, then earliest arrival, then id; unset
+//! priorities all share class 0, where admission is exactly the old FIFO).
+//! Requests can be submitted **while the engine is stepping** (mid-flight
+//! admission goes through the same KV-pool admission control) and
+//! cancelled at any point ([`Engine::cancel`] frees the session's KV pages
+//! and flash spill immediately). [`Engine::run_all`] survives as a thin
+//! compatibility wrapper: `step()` until idle, then return completed
+//! responses in submission order — bit-identical greedy outputs to the old
+//! drain-only coordinator (batched rows are value-neutral by the backend
+//! contract).
 //!
 //! Two policies:
 //! * `Fifo` — admit a request only when none is active: each request
@@ -243,10 +250,10 @@ impl<B: InferenceBackend> Engine<B> {
         std::mem::take(&mut self.finished)
     }
 
-    /// Advance one scheduler tick: admit one queued request (prefill and
-    /// first token) when the policy allows, otherwise run one round-robin
-    /// decode round (one token per active session). Returns false when
-    /// idle — no queued or active work.
+    /// Advance one scheduler tick: admit the best queued request (prefill
+    /// and first token) when the policy allows, otherwise run one fused
+    /// decode round (one `decode_batch` call, one token per active
+    /// session). Returns false when idle — no queued or active work.
     pub fn step(&mut self) -> Result<bool> {
         let may_admit = match self.policy {
             SchedulePolicy::Fifo => self.active.is_empty(),
@@ -312,11 +319,31 @@ impl<B: InferenceBackend> Engine<B> {
         Ok(out)
     }
 
-    /// Admit the front of the queue: validate, make room (admission
+    /// Pop the highest-priority ready request: priority class first
+    /// (higher admitted sooner), then arrival time (earliest first — EDF
+    /// with arrival as the deadline proxy), then id. Requests that never
+    /// set a priority all share class 0, where the arrival tiebreak
+    /// reduces to exactly the old FIFO pop (regression-tested).
+    fn pop_ready(&mut self) -> Option<Request> {
+        let best = self
+            .queue
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                b.priority_class()
+                    .cmp(&a.priority_class())
+                    .then_with(|| a.arrival.cmp(&b.arrival))
+                    .then_with(|| a.id.cmp(&b.id))
+            })
+            .map(|(i, _)| i)?;
+        self.queue.remove(best)
+    }
+
+    /// Admit the best ready request: validate, make room (admission
     /// control may preempt running sessions), prefill, sample the first
     /// token, and emit `Started` + the first `Token` (with TTFT).
     fn admit_one(&mut self) -> Result<()> {
-        let Some(req) = self.queue.pop_front() else {
+        let Some(req) = self.pop_ready() else {
             return Ok(());
         };
         let cap = self.backend.max_len();
@@ -383,8 +410,15 @@ impl<B: InferenceBackend> Engine<B> {
         Ok(())
     }
 
-    /// One round-robin decode round: one token per active session, with
-    /// finished sessions finalized (and their KV released) on the spot.
+    /// One fused decode round: **one** `decode_batch` call advances every
+    /// active session by one token — on the native backend a single layer
+    /// walk (one weight fetch per layer per tick) instead of one walk per
+    /// session. Rows are value-neutral by the backend contract, and the
+    /// results are processed in the same admission order the old
+    /// per-session loop used, so events, per-request RNG draws, stop
+    /// handling, and greedy outputs are unchanged — only the weight
+    /// traffic is. Finished sessions are finalized (and their KV
+    /// released) on the spot.
     fn decode_round(&mut self) -> Result<()> {
         {
             let mut running: Vec<&mut B::Session> =
@@ -393,15 +427,26 @@ impl<B: InferenceBackend> Engine<B> {
             self.metrics.kv.holder_sheds += shed;
         }
         let cap = self.backend.max_len();
+        let now = Instant::now();
+        let toks: Vec<usize> = self.active.iter().map(|a| a.last).collect();
+        for a in &mut self.active {
+            if !a.decoded_any {
+                a.decode_started = now;
+                a.decoded_any = true;
+            }
+        }
+        let rows = {
+            let mut sessions: Vec<&mut B::Session> =
+                self.active.iter_mut().map(|a| &mut a.sess).collect();
+            self.backend.decode_batch(&mut sessions, &toks)?
+        };
+        debug_assert_eq!(rows.len(), toks.len());
+        // Row r belongs to the session admitted r-th this round; finalized
+        // sessions shift later rows down by exactly the removals so far.
         let mut i = 0;
-        while i < self.active.len() {
+        for logits in rows {
             let (id, tok, index, reason) = {
                 let a = &mut self.active[i];
-                if !a.decoded_any {
-                    a.decode_started = Instant::now();
-                    a.decoded_any = true;
-                }
-                let logits = self.backend.decode(&mut a.sess, a.last)?;
                 let tok = sampler::sample(&logits, a.req.sampler, &mut a.rng);
                 a.tokens.push(tok);
                 a.last = tok;
@@ -731,6 +776,81 @@ mod tests {
         for (a, b) in r_fifo.iter().zip(&r_inter) {
             assert_eq!(a.tokens, b.tokens, "schedule must not change greedy output");
         }
+    }
+
+    /// Started-event order = admission order (one admission per tick).
+    fn started_order(c: &mut Coordinator) -> Vec<RequestId> {
+        let mut order = Vec::new();
+        while c.step().unwrap() {
+            for ev in c.drain_events() {
+                if let EngineEvent::Started { id } = ev {
+                    order.push(id);
+                }
+            }
+        }
+        for ev in c.drain_events() {
+            if let EngineEvent::Started { id } = ev {
+                order.push(id);
+            }
+        }
+        order
+    }
+
+    #[test]
+    fn priority_classes_admit_before_arrival_order() {
+        let m = native();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Fifo);
+        let low = c.submit(vec![1, 2], 2); // no priority ⇒ class 0
+        let hi = c.submit_request(Request::new(0, vec![3, 4], 2).with_priority(5));
+        let mid = c.submit_request(Request::new(0, vec![5, 6], 2).with_priority(1));
+        assert_eq!(started_order(&mut c), vec![hi, mid, low]);
+    }
+
+    #[test]
+    fn equal_priority_admission_is_unchanged_fifo() {
+        // The regression half of the priority satellite: with no (or all
+        // equal) priorities set, admission is exactly the old FIFO pop.
+        for prio in [None, Some(3u8)] {
+            let m = native();
+            let mut c =
+                Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+            let ids: Vec<RequestId> = (0..4)
+                .map(|i| {
+                    let mut req = Request::new(0, vec![10 + i, 20 + i], 2);
+                    req.priority = prio;
+                    c.submit_request(req)
+                })
+                .collect();
+            assert_eq!(started_order(&mut c), ids, "priority {prio:?}");
+        }
+    }
+
+    #[test]
+    fn batched_round_emits_one_token_per_session_in_admission_order() {
+        // Each decode tick is one fused decode_batch call, but the event
+        // stream must look exactly like the old per-session loop: one
+        // Token per active request per round, in admission order.
+        let m = native();
+        let prompts = long_running_prompts(&m, 2, 4);
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        let a = c.submit(prompts[0].clone(), 4);
+        let b = c.submit(prompts[1].clone(), 4);
+        // Two admission ticks.
+        assert!(c.step().unwrap());
+        assert!(c.step().unwrap());
+        c.drain_events();
+        assert_eq!(c.active_count(), 2);
+        // One decode tick: exactly one token for a then one for b.
+        assert!(c.step().unwrap());
+        let toks: Vec<RequestId> = c
+            .drain_events()
+            .into_iter()
+            .filter_map(|e| match e {
+                EngineEvent::Token { id, .. } => Some(id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(toks, vec![a, b]);
     }
 
     #[test]

@@ -10,6 +10,13 @@
 //! out = sx·sw·(Σ xq·wq) + sx·bw·Σxq + bx·sw·Σwq + l·bx·bw
 //! (padding contributes zero codes to Σ xq·wq and the corrections use true
 //! row sums and true l, so padding is value-neutral).
+//!
+//! **Row independence**: activations are quantized per row, the integer
+//! accumulator is exact, and the affine correction of output (r, c) reads
+//! only row r's params — so an m-row forward equals m single-row forwards
+//! exactly, whatever e_p the activation panel packs to. Fused batched
+//! decode (`model::native::decode_batch`) rides on this invariant to run
+//! all sessions through one weight pass with bit-identical results.
 
 use crate::quant::asym::WeightBits;
 use crate::reorder::pack::{pack_activations, pack_weights, PackedActivations, PackedWeights};
@@ -243,6 +250,35 @@ mod tests {
             lin.forward(&x, e, &mut out);
             let want = qlinear_reference(&qm, &x, e, None);
             close(&out, &want, 1e-5)
+        });
+    }
+
+    #[test]
+    fn batched_rows_match_single_row_forwards_exactly() {
+        // The row-independence invariant fused batched decode relies on:
+        // an m-row forward equals m 1-row forwards, value for value, for
+        // both weight widths (per-row dynamic quantization + exact integer
+        // accumulation + per-row affine corrections).
+        prop_check(40, |rng: &mut Rng| {
+            let e = rng.range(2, 9);
+            let l = rng.range(1, 20) * 2;
+            let h = rng.range(1, 32);
+            for bits in [WeightBits::Int8, WeightBits::Int4] {
+                let wf = rng.normal_vec(h * l);
+                let x = rng.normal_vec(e * l);
+                let qm = QuantizedMatrix::from_f32(&wf, h, l, bits);
+                let lin = QLinear::new(&qm, TILE, None);
+                let mut batched = vec![0f32; e * h];
+                lin.forward(&x, e, &mut batched);
+                for r in 0..e {
+                    let mut single = vec![0f32; h];
+                    lin.forward(&x[r * l..(r + 1) * l], 1, &mut single);
+                    if batched[r * h..(r + 1) * h] != single[..] {
+                        return Err(format!("{bits:?}: row {r} of {e} diverged"));
+                    }
+                }
+            }
+            Ok(())
         });
     }
 

@@ -13,6 +13,11 @@
 //! as prefixes are spilled or sessions end. The record format and the
 //! `append`/`key_dot`/`accum_value`/`serialize_token` semantics are
 //! unchanged from the flat layout — paging is pure memory management.
+//!
+//! Appends are **session-local**: encoding a record reads nothing but the
+//! appended k/v values (per-token key params, fp8 values), so interleaving
+//! many sessions' appends — as the fused batched decode round does inside
+//! a single layer walk — cannot change any session's stored bytes.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -410,6 +415,35 @@ mod tests {
         kv.append(&k, &v);
         for (t, rec) in before.iter().enumerate() {
             assert_eq!(&kv.serialize_token(t), rec);
+        }
+    }
+
+    #[test]
+    fn interleaved_appends_are_session_local() {
+        // The fused decode round appends to many sessions' layers inside
+        // one layer walk; the stored records must be independent of the
+        // interleaving (append reads no cross-layer state beyond the pool).
+        let pool = Arc::new(KvPool::unbounded());
+        let mut rng = Rng::new(7);
+        let toks: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..6).map(|_| (rng.normal_vec(16), rng.normal_vec(16))).collect();
+        let mut a1 = KvLayer::with_pool(2, 8, pool.clone());
+        let mut b1 = KvLayer::with_pool(2, 8, pool.clone());
+        for t in &toks[..3] {
+            a1.append(&t.0, &t.1);
+        }
+        for t in &toks[3..] {
+            b1.append(&t.0, &t.1);
+        }
+        let mut a2 = KvLayer::with_pool(2, 8, pool.clone());
+        let mut b2 = KvLayer::with_pool(2, 8, pool);
+        for i in 0..3 {
+            a2.append(&toks[i].0, &toks[i].1);
+            b2.append(&toks[3 + i].0, &toks[3 + i].1);
+        }
+        for t in 0..3 {
+            assert_eq!(a1.serialize_token(t), a2.serialize_token(t), "a tok {t}");
+            assert_eq!(b1.serialize_token(t), b2.serialize_token(t), "b tok {t}");
         }
     }
 

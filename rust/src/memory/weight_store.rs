@@ -354,6 +354,15 @@ pub struct WeightResidencyMetrics {
     pub prefetch_depth: usize,
     /// Modeled flash seconds spent reading layer blobs (demand + prefetch).
     pub flash_read_s: f64,
+    /// Decode tokens generated against this store (the model notes one per
+    /// decode row). Denominator of
+    /// [`fetches_per_token`](Self::fetches_per_token) — the batched-decode
+    /// amortization gauge.
+    pub tokens_generated: u64,
+    /// Flash blob fetches attributed to decode layer walks only (the model
+    /// snapshots the fetch counters around each decode pass), so the gauge
+    /// is not polluted by load warm-up or prefill traffic.
+    pub decode_fetches: u64,
 }
 
 impl WeightResidencyMetrics {
@@ -361,6 +370,26 @@ impl WeightResidencyMetrics {
     /// any post-load flash traffic or eviction.
     pub fn under_pressure(&self) -> bool {
         self.demand_fetches > 0 || self.evictions > 0 || self.prefetch_issued > 0
+    }
+
+    /// All blob reads that hit flash: demand misses plus issued prefetches
+    /// (a layer is read exactly once per fetch, whichever path pays).
+    pub fn total_fetches(&self) -> u64 {
+        self.demand_fetches + self.prefetch_issued
+    }
+
+    /// Decode-phase flash blob fetches per generated decode token — the
+    /// quantity fused batched decode drives down: a sequential round over
+    /// B sessions pays ≈ layers fetches per token under a tight budget,
+    /// one fused round pays ≈ layers / B. Load warm-up and prefill fetches
+    /// are excluded (see `decode_fetches`). 0.0 until any decode token was
+    /// generated.
+    pub fn fetches_per_token(&self) -> f64 {
+        if self.tokens_generated == 0 {
+            0.0
+        } else {
+            self.decode_fetches as f64 / self.tokens_generated as f64
+        }
     }
 }
 
@@ -394,6 +423,8 @@ struct State {
     prefetch_stalls: u64,
     prefetch_depth: usize,
     flash_read_s: f64,
+    tokens_generated: u64,
+    decode_fetches: u64,
 }
 
 struct Shared {
@@ -644,7 +675,20 @@ impl WeightStore {
             prefetch_stalls: st.prefetch_stalls,
             prefetch_depth: st.prefetch_depth,
             flash_read_s: st.flash_read_s,
+            tokens_generated: st.tokens_generated,
+            decode_fetches: st.decode_fetches,
         }
+    }
+
+    /// Record one decode layer walk: `tokens` generated rows and the
+    /// fetch-counter delta the walk produced (the model snapshots
+    /// [`total_fetches`](WeightResidencyMetrics::total_fetches) around the
+    /// walk). Feeds the decode-only fetches-per-token gauge that makes
+    /// batched-decode weight amortization observable.
+    pub fn note_decode_pass(&self, tokens: u64, fetches: u64) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.tokens_generated += tokens;
+        st.decode_fetches += fetches;
     }
 
     /// Arena-accounted resident bytes (snapshot).
@@ -964,6 +1008,43 @@ mod tests {
         let tiny = store_with(6, per_layer);
         assert_eq!(tiny.prefetch_ahead(&worker, 1), 0);
         assert_eq!(tiny.metrics().prefetch_issued, 0);
+    }
+
+    #[test]
+    fn fetches_per_token_tracks_decode_reads_over_generated_tokens() {
+        let unlimited = store_with(4, usize::MAX);
+        let per_layer = unlimited.total_packed_bytes() / 4;
+        let store = store_with(4, per_layer); // pure demand paging
+        assert_eq!(store.metrics().fetches_per_token(), 0.0, "no tokens yet");
+        // A "prefill" walk before any decode: its fetches must NOT land in
+        // the decode gauge (the model only notes decode passes).
+        store.layer(0).unwrap();
+        assert_eq!(store.metrics().decode_fetches, 0);
+        // One "decode token" walking all 4 layers: 4 demand fetches
+        // (nothing resident survives the rotation at a one-layer budget).
+        let before = store.metrics().total_fetches();
+        for li in 0..4 {
+            store.layer(li).unwrap();
+        }
+        store.note_decode_pass(1, store.metrics().total_fetches() - before);
+        let m1 = store.metrics();
+        assert_eq!(m1.tokens_generated, 1);
+        assert!(m1.decode_fetches >= 3, "{m1:?}");
+        assert!(m1.total_fetches() > m1.decode_fetches, "prefill excluded");
+        assert_eq!(m1.fetches_per_token(), m1.decode_fetches as f64);
+        // A fused 4-row walk: same reads, 4 tokens — per-token cost ÷ 4.
+        let mid = store.metrics().total_fetches();
+        for li in 0..4 {
+            store.layer(li).unwrap();
+        }
+        store.note_decode_pass(4, store.metrics().total_fetches() - mid);
+        let m2 = store.metrics();
+        let round2 = m2.decode_fetches - m1.decode_fetches;
+        assert!(
+            (m2.fetches_per_token() - m2.decode_fetches as f64 / 5.0).abs() < 1e-12,
+            "{m2:?}"
+        );
+        assert!(round2 as f64 / 4.0 < m1.decode_fetches as f64, "amortized");
     }
 
     #[test]

@@ -194,8 +194,15 @@ pub struct NativeModel {
     kv_pool: Arc<KvPool>,
     /// Live sessions (spill-store reclamation is only safe at zero).
     live_sessions: Arc<AtomicUsize>,
-    /// Rope tables are computed on the fly (θ^(-2i/d)).
+    /// θ^(-2i/d) — kept for positions past `max_len` (rare overrun guard).
     inv_freq: Vec<f32>,
+    /// Precomputed RoPE tables, `[max_len, head_dim/2]` row-major: paid
+    /// once at load instead of a `powf`-derived `sin_cos` per element per
+    /// token in the decode hot loop. Entries are computed exactly as the
+    /// on-the-fly path did (`sin_cos(pos · inv_freq[i])`), so the lookup
+    /// is bit-identical to recomputation.
+    rope_sin: Vec<f32>,
+    rope_cos: Vec<f32>,
 }
 
 fn invalid(msg: &str) -> std::io::Error {
@@ -325,9 +332,18 @@ impl NativeModel {
         };
         let kv_pool = Arc::new(KvPool::new(options.kv_pool_bytes));
         let half = cfg.head_dim() / 2;
-        let inv_freq = (0..half)
+        let inv_freq: Vec<f32> = (0..half)
             .map(|i| (1.0 / cfg.rope_theta.powf(i as f64 / half as f64)) as f32)
             .collect();
+        let mut rope_sin = vec![0f32; cfg.max_len * half];
+        let mut rope_cos = vec![0f32; cfg.max_len * half];
+        for pos in 0..cfg.max_len {
+            for (i, &f) in inv_freq.iter().enumerate() {
+                let (s, c) = (pos as f32 * f).sin_cos();
+                rope_sin[pos * half + i] = s;
+                rope_cos[pos * half + i] = c;
+            }
+        }
         Ok(NativeModel {
             config: cfg,
             options,
@@ -342,6 +358,8 @@ impl NativeModel {
             kv_pool,
             live_sessions: Arc::new(AtomicUsize::new(0)),
             inv_freq,
+            rope_sin,
+            rope_cos,
         })
     }
 
@@ -472,15 +490,28 @@ impl NativeModel {
     }
 
     /// Rotate-half RoPE at position `pos` on one head vector in place.
+    /// Sin/cos come from the load-time tables; positions past `max_len`
+    /// (only reachable by driving the model outside the engine's context
+    /// cap) fall back to direct computation, bit-identically.
     fn rope(&self, x: &mut [f32], pos: usize) {
         let half = x.len() / 2;
-        for i in 0..half {
-            let ang = pos as f32 * self.inv_freq[i];
-            let (s, c) = ang.sin_cos();
-            let a = x[i];
-            let b = x[i + half];
-            x[i] = a * c - b * s;
-            x[i + half] = b * c + a * s;
+        if pos < self.config.max_len {
+            let sin = &self.rope_sin[pos * half..(pos + 1) * half];
+            let cos = &self.rope_cos[pos * half..(pos + 1) * half];
+            for i in 0..half {
+                let a = x[i];
+                let b = x[i + half];
+                x[i] = a * cos[i] - b * sin[i];
+                x[i + half] = b * cos[i] + a * sin[i];
+            }
+        } else {
+            for i in 0..half {
+                let (s, c) = (pos as f32 * self.inv_freq[i]).sin_cos();
+                let a = x[i];
+                let b = x[i + half];
+                x[i] = a * c - b * s;
+                x[i + half] = b * c + a * s;
+            }
         }
     }
 
@@ -531,8 +562,9 @@ impl NativeModel {
         let cfg = self.config.clone();
         let (h, hd, heads, kvh) = (cfg.hidden, cfg.head_dim(), cfg.heads, cfg.kv_heads);
         let kv_dim = cfg.kv_dim();
-        let task = sess.lora_task.clone();
-        let task = task.as_deref();
+        // Borrow, don't clone: `lora_task` and the fields mutated below
+        // (`kv`, `pos`) are disjoint, so no per-call String allocation.
+        let task = sess.lora_task.as_deref();
         let mut x = vec![0f32; s * h];
         self.embed(ids, &mut x);
         let base_pos = sess.pos;
@@ -598,68 +630,138 @@ impl NativeModel {
     }
 
     /// One decode step for `id` at the session's position; returns logits.
+    /// A batch-of-one [`decode_batch`](Self::decode_batch): single-session
+    /// and fused decode share one code path, which is what makes the
+    /// batched round bit-identical to sequential decode by construction.
     pub fn decode(&self, sess: &mut NativeSession, id: usize) -> Vec<f32> {
+        self.decode_batch(&mut [sess], &[id]).pop().expect("one row")
+    }
+
+    /// One fused decode step for every session in the batch: a **single
+    /// layer walk** serves all rows — one `weight_store` fetch (+ lookahead
+    /// prefetch) per layer per call instead of one per layer per session,
+    /// which is the §4.1 decode-bandwidth amortization continuous batching
+    /// buys on this backend. Row r consumes `ids[r]` at `sessions[r]`'s own
+    /// position and gets `sessions[r]`'s logits in the returned row r.
+    ///
+    /// Value-neutrality: rows are computed independently and row-major —
+    /// per-row dynamic activation quantization, exact integer GEMM
+    /// accumulation and per-row affine corrections (`cpu::gemm_q`), per-row
+    /// RoPE at each session's own position, per-session KV append +
+    /// online-softmax attention over that session's (possibly spilled)
+    /// cache, and per-row LoRA deltas keyed by each session's task. The
+    /// batch therefore produces **bit-identical** logits to decoding the
+    /// sessions one at a time, in any batch composition — the invariant
+    /// the engine's batched rounds and the parity tests rely on.
+    pub fn decode_batch(&self, sessions: &mut [&mut NativeSession], ids: &[usize]) -> Vec<Vec<f32>> {
+        let m = sessions.len();
+        assert_eq!(m, ids.len(), "one token per session");
+        if m == 0 {
+            return Vec::new();
+        }
         let cfg = self.config.clone();
         let (h, hd, heads, kvh) = (cfg.hidden, cfg.head_dim(), cfg.heads, cfg.kv_heads);
         let kv_dim = cfg.kv_dim();
-        let pos = sess.pos;
-        let task = sess.lora_task.clone();
-        let task = task.as_deref();
-        let mut x = vec![0f32; h];
-        self.embed(&[id], &mut x);
-        let mut norm = vec![0f32; h];
-        let mut q = vec![0f32; h];
-        let mut k = vec![0f32; kv_dim];
-        let mut v = vec![0f32; kv_dim];
-        let mut attn = vec![0f32; h];
-        let mut attn_out = vec![0f32; h];
-        let mut gate = vec![0f32; cfg.inter];
-        let mut up = vec![0f32; cfg.inter];
-        let mut act = vec![0f32; cfg.inter];
-        let mut mlp = vec![0f32; h];
+        // Attribute this walk's flash fetches to the decode gauge only —
+        // load warm-up and prefill traffic must not pollute fetch/token.
+        let fetches_before = self.weights.metrics().total_fetches();
+        let mut x = vec![0f32; m * h];
+        self.embed(ids, &mut x);
+        let mut norm = vec![0f32; m * h];
+        let mut q = vec![0f32; m * h];
+        let mut k = vec![0f32; m * kv_dim];
+        let mut v = vec![0f32; m * kv_dim];
+        let mut attn = vec![0f32; m * h];
+        let mut attn_out = vec![0f32; m * h];
+        let mut gate = vec![0f32; m * cfg.inter];
+        let mut up = vec![0f32; m * cfg.inter];
+        let mut act = vec![0f32; m * cfg.inter];
+        let mut mlp = vec![0f32; m * h];
         for li in 0..cfg.layers {
-            // Budget-aware lookahead prefetch, same contract as in prefill.
+            // Budget-aware lookahead prefetch, same contract as in prefill
+            // — issued once per layer per *batch*, not per session.
             self.weights.prefetch_ahead(&self.prefetcher, li + 1);
             let layer = self.weights.layer(li).expect("weight residency");
-            rmsnorm(&x, &layer.ln1, &mut norm, 1, cfg.rms_eps);
-            self.linear(&layer.wq, &norm, 1, &mut q);
-            self.linear(&layer.wk, &norm, 1, &mut k);
-            self.linear(&layer.wv, &norm, 1, &mut v);
-            self.lora_apply(task, li, "wq", &norm, 1, &mut q);
-            self.lora_apply(task, li, "wk", &norm, 1, &mut k);
-            self.lora_apply(task, li, "wv", &norm, 1, &mut v);
-            for hh in 0..heads {
-                self.rope(&mut q[hh * hd..(hh + 1) * hd], pos);
+            rmsnorm(&x, &layer.ln1, &mut norm, m, cfg.rms_eps);
+            // m-row packed GEMMs: the same batched path prefill rows use.
+            self.linear(&layer.wq, &norm, m, &mut q);
+            self.linear(&layer.wk, &norm, m, &mut k);
+            self.linear(&layer.wv, &norm, m, &mut v);
+            // Per-row LoRA bypass, keyed by each session's own task.
+            for (r, sess) in sessions.iter().enumerate() {
+                let task = sess.lora_task.as_deref();
+                if task.is_some() {
+                    self.lora_apply(task, li, "wq", &norm[r * h..(r + 1) * h], 1,
+                                    &mut q[r * h..(r + 1) * h]);
+                    self.lora_apply(task, li, "wk", &norm[r * h..(r + 1) * h], 1,
+                                    &mut k[r * kv_dim..(r + 1) * kv_dim]);
+                    self.lora_apply(task, li, "wv", &norm[r * h..(r + 1) * h], 1,
+                                    &mut v[r * kv_dim..(r + 1) * kv_dim]);
+                }
             }
-            for hh in 0..kvh {
-                self.rope(&mut k[hh * hd..(hh + 1) * hd], pos);
+            // Per-row RoPE at each session's own position, then that
+            // session's KV append + online-softmax attention that streams
+            // any spilled prefix from flash in bounded chunks (§4.1): DRAM
+            // stays O(resident + chunk) at any context length. With nothing
+            // spilled it reduces to a pure in-DRAM pass over the resident
+            // pages — one code path, so spilling (token budget, pool
+            // pressure, preemption) is *bit-exact* value-neutral, not
+            // merely numerically close.
+            for (r, sess) in sessions.iter_mut().enumerate() {
+                let pos = sess.pos;
+                let qr = &mut q[r * h..(r + 1) * h];
+                for hh in 0..heads {
+                    self.rope(&mut qr[hh * hd..(hh + 1) * hd], pos);
+                }
+                let kr = &mut k[r * kv_dim..(r + 1) * kv_dim];
+                for hh in 0..kvh {
+                    self.rope(&mut kr[hh * hd..(hh + 1) * hd], pos);
+                }
+                sess.kv[li]
+                    .append(&k[r * kv_dim..(r + 1) * kv_dim], &v[r * kv_dim..(r + 1) * kv_dim])
+                    .expect("kv append");
+                sess.kv[li]
+                    .decode_attention_streaming(
+                        &q[r * h..(r + 1) * h],
+                        heads,
+                        &mut attn[r * h..(r + 1) * h],
+                        KV_STREAM_CHUNK,
+                    )
+                    .expect("kv stream");
             }
-            sess.kv[li].append(&k, &v).expect("kv append");
-            // Online-softmax attention that streams any spilled prefix from
-            // flash in bounded chunks (§4.1): DRAM stays O(resident + chunk)
-            // at any context length. With nothing spilled it reduces to a
-            // pure in-DRAM pass over the resident pages — one code path, so
-            // spilling (token budget, pool pressure, preemption) is
-            // *bit-exact* value-neutral, not merely numerically close.
-            sess.kv[li]
-                .decode_attention_streaming(&q, heads, &mut attn, KV_STREAM_CHUNK)
-                .expect("kv stream");
-            self.linear(&layer.wo, &attn, 1, &mut attn_out);
-            self.lora_apply(task, li, "wo", &attn, 1, &mut attn_out);
+            self.linear(&layer.wo, &attn, m, &mut attn_out);
+            for (r, sess) in sessions.iter().enumerate() {
+                let task = sess.lora_task.as_deref();
+                if task.is_some() {
+                    self.lora_apply(task, li, "wo", &attn[r * h..(r + 1) * h], 1,
+                                    &mut attn_out[r * h..(r + 1) * h]);
+                }
+            }
             add_inplace(&mut x, &attn_out);
-            rmsnorm(&x, &layer.ln2, &mut norm, 1, cfg.rms_eps);
-            self.linear(&layer.gate, &norm, 1, &mut gate);
-            self.linear(&layer.up, &norm, 1, &mut up);
+            rmsnorm(&x, &layer.ln2, &mut norm, m, cfg.rms_eps);
+            self.linear(&layer.gate, &norm, m, &mut gate);
+            self.linear(&layer.up, &norm, m, &mut up);
             swiglu(&gate, &up, &mut act);
-            self.linear(&layer.down, &act, 1, &mut mlp);
+            self.linear(&layer.down, &act, m, &mut mlp);
             add_inplace(&mut x, &mlp);
         }
-        sess.pos = pos + 1;
-        let mut fin = vec![0f32; h];
-        rmsnorm(&x, &self.fnorm, &mut fin, 1, cfg.rms_eps);
-        let mut logits = vec![0f32; cfg.vocab];
-        self.linear(&self.lm_head, &fin, 1, &mut logits);
-        logits
+        for sess in sessions.iter_mut() {
+            sess.pos += 1;
+        }
+        // One decode token per row, plus this walk's fetch delta, against
+        // the store's amortization gauge.
+        let fetches = self.weights.metrics().total_fetches() - fetches_before;
+        self.weights.note_decode_pass(m as u64, fetches);
+        let mut fin = vec![0f32; m * h];
+        rmsnorm(&x, &self.fnorm, &mut fin, m, cfg.rms_eps);
+        let mut logits = vec![0f32; m * cfg.vocab];
+        self.linear(&self.lm_head, &fin, m, &mut logits);
+        if m == 1 {
+            // Batch of one (the `decode` wrapper): the buffer is exactly
+            // the single row — hand it back without a vocab-sized copy.
+            return vec![logits];
+        }
+        logits.chunks_exact(cfg.vocab).map(|row| row.to_vec()).collect()
     }
 
     /// Greedy generation convenience: prefill + n decode steps on `sess`.
@@ -753,6 +855,46 @@ mod tests {
             "prefill top-1 {top_full} not in decode top-3 {:?}",
             &order[..3]
         );
+    }
+
+    #[test]
+    fn decode_batch_rows_match_sequential_decode_bitwise() {
+        // The fused-round invariant at model level: one decode_batch call
+        // produces, row for row, exactly the logits sequential decode
+        // produces — across batch sizes, on fresh models from one fixture.
+        let (fx, seq) = load();
+        let bat = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+        let prompts: [&[usize]; 3] = [&[5, 6, 7], &[100, 101], &[42, 43, 44, 45]];
+        for take in 1..=prompts.len() {
+            let mut seq_sessions: Vec<NativeSession> = Vec::new();
+            let mut bat_sessions: Vec<NativeSession> = Vec::new();
+            let mut toks = Vec::new();
+            for p in &prompts[..take] {
+                let mut s1 = seq.new_session();
+                let l1 = seq.prefill(&mut s1, p);
+                let mut s2 = bat.new_session();
+                let l2 = bat.prefill(&mut s2, p);
+                assert_eq!(l1, l2, "prefill parity");
+                toks.push(crate::model::sampler::argmax(&l1));
+                seq_sessions.push(s1);
+                bat_sessions.push(s2);
+            }
+            for step in 0..4 {
+                let batched = {
+                    let mut refs: Vec<&mut NativeSession> =
+                        bat_sessions.iter_mut().collect();
+                    bat.decode_batch(&mut refs, &toks)
+                };
+                for (r, sess) in seq_sessions.iter_mut().enumerate() {
+                    let single = seq.decode(sess, toks[r]);
+                    assert_eq!(
+                        single, batched[r],
+                        "batch {take} step {step} row {r} diverged"
+                    );
+                    toks[r] = crate::model::sampler::argmax(&single);
+                }
+            }
+        }
     }
 
     #[test]

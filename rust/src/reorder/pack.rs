@@ -221,6 +221,41 @@ mod tests {
     }
 
     #[test]
+    fn row_quantization_is_batch_size_invariant() {
+        // Dynamic activation quantization is strictly per-row: packing a
+        // row inside an m-row block yields the same codes, params and row
+        // sum as packing it alone — the precondition for fused batched
+        // decode's bit-identity to sequential decode.
+        prop_check(60, |rng| {
+            let e = rng.range(2, 10);
+            let l = rng.range(1, 40);
+            let x = rng.normal_vec(e * l);
+            let full = pack_activations(&x, e, l, TILE);
+            for r in 0..e {
+                let one = pack_activations(&x[r * l..(r + 1) * l], 1, l, TILE);
+                if one.params[0] != full.params[r] {
+                    return Err(format!("row {r}: params diverge"));
+                }
+                if one.row_sums[0] != full.row_sums[r] {
+                    return Err(format!("row {r}: row sums diverge"));
+                }
+                // And the packed codes themselves.
+                let tiles_l = full.l_pad / TILE.l_p;
+                for c in 0..l {
+                    let (bi, ii) = (r / TILE.e_p, r % TILE.e_p);
+                    let (bj, jj) = (c / TILE.l_p, c % TILE.l_p);
+                    let idx = ((bi * tiles_l + bj) * TILE.e_p + ii) * TILE.l_p + jj;
+                    let one_idx = (c / TILE.l_p) * TILE.e_p * TILE.l_p + c % TILE.l_p;
+                    if full.data[idx] != one.data[one_idx] {
+                        return Err(format!("row {r} col {c}: codes diverge"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn padding_regions_are_zero() {
         let x = vec![1.0f32; 3 * 5];
         let p = pack_activations(&x, 3, 5, TILE);

@@ -12,10 +12,10 @@
 
 use std::path::PathBuf;
 
-use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
-use mnn_llm::coordinator::SchedulePolicy;
+use mnn_llm::coordinator::scheduler::{Backend, Coordinator, Engine};
+use mnn_llm::coordinator::{InferenceBackend, Request, SchedulePolicy};
 use mnn_llm::model::fixtures;
-use mnn_llm::model::native::{EngineOptions, NativeModel};
+use mnn_llm::model::native::{EngineOptions, NativeModel, NativeSession};
 use mnn_llm::model::sampler::argmax;
 use mnn_llm::runtime::PjrtRuntime;
 
@@ -137,6 +137,83 @@ fn run_all_matches_step_drain_native() {
             assert_eq!(a.tokens, b.tokens, "{policy:?}: run_all vs step drain diverged");
             assert_eq!(a.finish_reason, b.finish_reason);
         }
+    }
+}
+
+/// A backend that delegates everything to the native model but keeps the
+/// trait's **default** `decode_batch` (the loop-over-`decode` fallback) —
+/// the shape a backend without a fused path (e.g. PJRT) presents to the
+/// engine.
+struct FallbackBackend(NativeModel);
+
+impl InferenceBackend for FallbackBackend {
+    type Session = NativeSession;
+
+    fn max_len(&self) -> usize {
+        InferenceBackend::max_len(&self.0)
+    }
+
+    fn new_session(&self, req: &Request) -> anyhow::Result<NativeSession> {
+        InferenceBackend::new_session(&self.0, req)
+    }
+
+    fn prefill(&self, sess: &mut NativeSession, ids: &[usize]) -> anyhow::Result<Vec<f32>> {
+        InferenceBackend::prefill(&self.0, sess, ids)
+    }
+
+    fn decode(&self, sess: &mut NativeSession, tok: usize) -> anyhow::Result<Vec<f32>> {
+        InferenceBackend::decode(&self.0, sess, tok)
+    }
+
+    // decode_batch deliberately NOT overridden: trait default fallback.
+
+    fn session_pos(&self, sess: &NativeSession) -> usize {
+        InferenceBackend::session_pos(&self.0, sess)
+    }
+
+    fn release(&self, sess: &mut NativeSession) {
+        InferenceBackend::release(&self.0, sess)
+    }
+
+    fn reclaim(&self) {
+        InferenceBackend::reclaim(&self.0)
+    }
+}
+
+#[test]
+fn trait_default_decode_batch_matches_fused_rounds() {
+    // Cross-backend parity for the batched-decode contract: an engine
+    // driving the trait's default loop fallback must produce bit-identical
+    // responses to one driving the native fused path, under interleaved
+    // (batched) rounds.
+    let fx = fixtures::write_fixture(7).unwrap();
+    let requests = || {
+        vec![
+            Request::new(0, vec![5, 6, 7], 5),
+            Request::new(0, vec![100, 101], 4),
+            Request::new(0, vec![42; 9], 6),
+        ]
+    };
+
+    let m = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let mut fused = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+    for r in requests() {
+        fused.submit_request(r);
+    }
+    let want = fused.run_all().unwrap();
+
+    let m = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let mut looped = Engine::new(FallbackBackend(m), SchedulePolicy::Interleaved);
+    for r in requests() {
+        looped.submit_request(r);
+    }
+    let got = looped.run_all().unwrap();
+
+    assert_eq!(want.len(), got.len());
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "default fallback diverged from fused rounds");
+        assert_eq!(a.finish_reason, b.finish_reason);
     }
 }
 

@@ -242,6 +242,65 @@ fn every_id_yields_exactly_one_terminal_event() {
 }
 
 #[test]
+fn batched_rounds_match_solo_generation_under_midflight_churn() {
+    // Batched-decode bit-identity under lifecycle churn: random mid-flight
+    // submissions and cancellations change the fused batch's composition
+    // every round, yet every completed request's greedy tokens must equal
+    // its solo generation — row independence means batch-mates can never
+    // leak into a row.
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let solo = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let vocab = fixtures::fixture_config().vocab;
+    prop_check(4, |rng| {
+        let m =
+            NativeModel::load(fx.dir(), EngineOptions::default()).map_err(|e| e.to_string())?;
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        let mut prompts: HashMap<u64, Vec<usize>> = HashMap::new();
+        let submit = |c: &mut Coordinator,
+                      rng: &mut mnn_llm::util::rng::Rng,
+                      prompts: &mut HashMap<u64, Vec<usize>>| {
+            let plen = rng.range(1, 10);
+            let p: Vec<usize> = (0..plen).map(|_| rng.below(vocab)).collect();
+            let id = c.submit(p.clone(), rng.range(2, 7));
+            prompts.insert(id, p);
+        };
+        for _ in 0..rng.range(2, 5) {
+            submit(&mut c, rng, &mut prompts);
+        }
+        let mut ticks = 0usize;
+        loop {
+            let more = c.step().map_err(|e| e.to_string())?;
+            ticks += 1;
+            if ticks < 15 && rng.below(3) == 0 {
+                submit(&mut c, rng, &mut prompts);
+            }
+            if ticks < 15 && rng.below(5) == 0 && !prompts.is_empty() {
+                let ids: Vec<u64> = prompts.keys().copied().collect();
+                c.cancel(ids[rng.below(ids.len())]); // queued, active or done
+            }
+            if !more && !c.has_work() {
+                break;
+            }
+            if ticks > 300 {
+                return Err("engine failed to drain".into());
+            }
+        }
+        // (If churn happened to cancel everything this round, the other
+        // prop iterations still verify survivors.)
+        for r in &c.take_finished() {
+            let want = solo.generate_once(&prompts[&r.id], r.tokens.len());
+            if r.tokens != want {
+                return Err(format!(
+                    "request {}: batched rounds diverged from solo generation",
+                    r.id
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn cancel_mid_decode_frees_pool_pages_and_flash_records() {
     // Force flash spill with a tiny per-layer token budget, then cancel
     // mid-decode: the pages AND the spill records must be released.
