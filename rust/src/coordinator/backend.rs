@@ -5,11 +5,13 @@
 //! different shapes: the native model owns sessions (paged KV over the
 //! shared pool), the PJRT runtime threads a host-side [`KvState`] per
 //! request. [`InferenceBackend`] is the common surface: a backend knows
-//! how to open a session, prefill it, decode one token (or one fused
-//! `decode_batch` round for every active session — value-neutral by
-//! contract, defaulting to the loop), report its position, and release
-//! its resources; everything scheduling-related (admission, batched
-//! rounds, stop conditions, events, cancellation) lives once in
+//! how to open a session, prefill it — monolithically, in incremental
+//! [`RowWork::Prefill`] chunks, or fused with decode rows in one
+//! [`InferenceBackend::step_batch`] tick (all value-neutral by contract,
+//! defaulting to loops) — decode one token (or one fused `decode_batch`
+//! round for every active session), report its position, and release its
+//! resources; everything scheduling-related (admission, batched rounds,
+//! stop conditions, events, cancellation) lives once in
 //! `scheduler::Engine`.
 //!
 //! Native-only mechanisms — KV-pool admission preemption, the
@@ -23,6 +25,51 @@ use crate::coordinator::request::Request;
 use crate::memory::weight_store::WeightResidencyMetrics;
 use crate::model::native::{NativeModel, NativeSession};
 use crate::runtime::{KvState, PjrtRuntime};
+
+/// Per-tick scheduling limits a backend advertises to the engine. Both
+/// default to "unlimited", which reproduces the pre-chunking behavior
+/// exactly: whole-prompt admission, every active session in every tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TickLimits {
+    /// Most rows (sessions) one fused [`InferenceBackend::step_batch`]
+    /// call may advance; when the active set is larger the engine rotates
+    /// a window through it, bounding per-tick latency at large B.
+    pub max_rows: usize,
+    /// Longest prompt slice one tick may prefill for a single request;
+    /// `usize::MAX` disables chunking (whole-prompt admission), which is
+    /// what backends without [`InferenceBackend::prefill_chunk`] support
+    /// (PJRT) must advertise.
+    pub prefill_chunk: usize,
+}
+
+impl TickLimits {
+    pub fn unlimited() -> Self {
+        TickLimits { max_rows: usize::MAX, prefill_chunk: usize::MAX }
+    }
+}
+
+impl Default for TickLimits {
+    fn default() -> Self {
+        Self::unlimited()
+    }
+}
+
+/// One session's work item in a fused scheduler tick.
+#[derive(Clone, Copy, Debug)]
+pub enum RowWork<'a> {
+    /// Consume `ids`, the next contiguous slice of the session's prompt;
+    /// `last` marks the prompt's final chunk (logits required).
+    Prefill { ids: &'a [usize], last: bool },
+    /// One decode step consuming `tok` at the session's position.
+    Decode { tok: usize },
+}
+
+/// Per-row outcome of a fused tick: `Ok(Some(logits))` for a decode row
+/// or a final prefill chunk, `Ok(None)` for a non-final prefill chunk,
+/// `Err` when this row's session failed — the engine releases that
+/// session and emits a terminal `Failed` event without touching the
+/// batch's other rows.
+pub type RowOutcome = Result<Option<Vec<f32>>>;
 
 /// A runtime the engine can schedule requests onto. `Session` holds all
 /// per-request state; the backend itself stays shared and immutable
@@ -63,6 +110,102 @@ pub trait InferenceBackend {
             out.push(self.decode(sess, tok)?);
         }
         Ok(out)
+    }
+
+    /// Per-tick scheduling limits (row cap, prefill chunk size). The
+    /// defaults reproduce the pre-chunking engine exactly; the native
+    /// backend forwards `EngineOptions::{max_rows_per_tick,
+    /// prefill_chunk_tokens}`.
+    fn tick_limits(&self) -> TickLimits {
+        TickLimits::unlimited()
+    }
+
+    /// One incremental prefill chunk: consume `ids` — the next contiguous
+    /// slice of the session's prompt — advancing the session's position;
+    /// returns last-row logits for the final chunk (`last`), `None`
+    /// otherwise. The engine only splits prompts when
+    /// [`tick_limits`](Self::tick_limits) advertises a finite
+    /// `prefill_chunk`, so the default — whole-prompt delegation to
+    /// [`prefill`](Self::prefill) — keeps chunk-less backends (PJRT)
+    /// correct.
+    fn prefill_chunk(
+        &self,
+        sess: &mut Self::Session,
+        ids: &[usize],
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        assert!(last, "backend without chunked prefill was handed a partial chunk");
+        Ok(Some(self.prefill(sess, ids)?))
+    }
+
+    /// Fused batched prefill: row r consumes chunk `chunks[r]` (`(ids,
+    /// last)`) on `sessions[r]`. A convenience shape of
+    /// [`step_batch`](Self::step_batch) — it IS an all-`Prefill` tick, so
+    /// this delegates there and inherits whatever fusion and per-row
+    /// failure isolation the backend's `step_batch` provides (one walk on
+    /// the native backend, the row loop elsewhere). Not overridden by any
+    /// backend, so the two batched-prefill surfaces cannot diverge.
+    fn prefill_batch(
+        &self,
+        sessions: &mut [&mut Self::Session],
+        chunks: &[(&[usize], bool)],
+    ) -> Result<Vec<RowOutcome>> {
+        let works: Vec<RowWork> = chunks
+            .iter()
+            .map(|&(ids, last)| RowWork::Prefill { ids, last })
+            .collect();
+        self.step_batch(sessions, &works)
+    }
+
+    /// One fused scheduler tick: advance row r by `works[r]` — prefill
+    /// chunks and decode steps **share the call**, so a fused backend can
+    /// serve them all from one layer walk (one weight fetch + prefetch
+    /// per layer per tick on the native backend). Value-neutral by the
+    /// same contract as [`decode_batch`](Self::decode_batch). Per-row
+    /// failures are isolated as inner `Err`s; an outer `Err` means every
+    /// row's session state is suspect (the engine releases them all).
+    /// The default loops [`prefill_chunk`] / [`decode`](Self::decode).
+    fn step_batch(
+        &self,
+        sessions: &mut [&mut Self::Session],
+        works: &[RowWork<'_>],
+    ) -> Result<Vec<RowOutcome>> {
+        assert_eq!(sessions.len(), works.len(), "one work item per session");
+        let mut out = Vec::with_capacity(works.len());
+        for (sess, w) in sessions.iter_mut().zip(works) {
+            out.push(match *w {
+                RowWork::Prefill { ids, last } => self.prefill_chunk(sess, ids, last),
+                RowWork::Decode { tok } => self.decode(sess, tok).map(Some),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Page-granular KV bytes admitting a `prompt_len`-token prompt will
+    /// pin — the engine's per-tick admission loop reserves this much
+    /// headroom per admitted-but-not-yet-prefilled prompt so a burst of
+    /// admissions cannot overcommit the pool in one tick. 0 (the
+    /// default) means "no accounting" (backends without a shared pool).
+    fn prefill_reserve_bytes(&self, _prompt_len: usize) -> usize {
+        0
+    }
+
+    /// The portion of an in-flight prefill's reservation the pool-side
+    /// headroom already observes after `consumed` prompt tokens — their
+    /// appended pages. Subtracted from the full estimate when the engine
+    /// computes outstanding reservations; memory retained until prefill
+    /// completes (the native fp32 stash) must NOT be included here, since
+    /// it stays allocated and pool-invisible. 0 (the default) pairs with
+    /// the 0 default of [`prefill_reserve_bytes`](Self::prefill_reserve_bytes).
+    fn prefill_visible_bytes(&self, _consumed: usize) -> usize {
+        0
+    }
+
+    /// Unreserved KV-pool headroom (budget − resident bytes). Paired with
+    /// [`prefill_reserve_bytes`](Self::prefill_reserve_bytes); the
+    /// default is unlimited.
+    fn kv_headroom(&self) -> usize {
+        usize::MAX
     }
 
     /// Tokens the session has consumed/produced so far (== KV length).
@@ -132,6 +275,44 @@ impl InferenceBackend for NativeModel {
         toks: &[usize],
     ) -> Result<Vec<Vec<f32>>> {
         Ok(NativeModel::decode_batch(self, sessions, toks))
+    }
+
+    fn tick_limits(&self) -> TickLimits {
+        TickLimits {
+            max_rows: self.options.max_rows_per_tick,
+            prefill_chunk: self.options.prefill_chunk_tokens,
+        }
+    }
+
+    fn prefill_chunk(
+        &self,
+        sess: &mut NativeSession,
+        ids: &[usize],
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        Ok(NativeModel::prefill_chunk(self, sess, ids, last))
+    }
+
+    fn step_batch(
+        &self,
+        sessions: &mut [&mut NativeSession],
+        works: &[RowWork<'_>],
+    ) -> Result<Vec<RowOutcome>> {
+        Ok(NativeModel::forward_tick(self, sessions, works).into_iter().map(Ok).collect())
+    }
+
+    fn prefill_reserve_bytes(&self, prompt_len: usize) -> usize {
+        NativeModel::prefill_reserve_bytes(self, prompt_len)
+    }
+
+    fn prefill_visible_bytes(&self, consumed: usize) -> usize {
+        // Only the appended quantized pages become pool-visible; the fp32
+        // stash stays allocated (and charged) until the final chunk.
+        self.prefill_kv_page_bytes(consumed)
+    }
+
+    fn kv_headroom(&self) -> usize {
+        NativeModel::kv_headroom(self)
     }
 
     fn session_pos(&self, sess: &NativeSession) -> usize {
@@ -298,6 +479,71 @@ impl InferenceBackend for Backend {
                 }
                 Ok(out)
             }
+        }
+    }
+
+    fn tick_limits(&self) -> TickLimits {
+        match self {
+            Backend::Native(m) => InferenceBackend::tick_limits(m.as_ref()),
+            Backend::Pjrt(rt) => InferenceBackend::tick_limits(rt.as_ref()),
+        }
+    }
+
+    fn prefill_chunk(
+        &self,
+        sess: &mut AnySession,
+        ids: &[usize],
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        match self {
+            Backend::Native(m) => {
+                InferenceBackend::prefill_chunk(m.as_ref(), sess.native(), ids, last)
+            }
+            Backend::Pjrt(rt) => {
+                InferenceBackend::prefill_chunk(rt.as_ref(), sess.pjrt(), ids, last)
+            }
+        }
+    }
+
+    fn step_batch(
+        &self,
+        sessions: &mut [&mut AnySession],
+        works: &[RowWork<'_>],
+    ) -> Result<Vec<RowOutcome>> {
+        match self {
+            Backend::Native(m) => {
+                let mut native: Vec<&mut NativeSession> =
+                    sessions.iter_mut().map(|s| s.native()).collect();
+                InferenceBackend::step_batch(m.as_ref(), &mut native, works)
+            }
+            Backend::Pjrt(rt) => {
+                // PjrtRuntime keeps the trait's default loop — delegate to
+                // it so its per-row isolation semantics stay in one place.
+                let mut pjrt: Vec<&mut KvState> =
+                    sessions.iter_mut().map(|s| s.pjrt()).collect();
+                InferenceBackend::step_batch(rt.as_ref(), &mut pjrt, works)
+            }
+        }
+    }
+
+    fn prefill_reserve_bytes(&self, prompt_len: usize) -> usize {
+        match self {
+            Backend::Native(m) => InferenceBackend::prefill_reserve_bytes(m.as_ref(), prompt_len),
+            Backend::Pjrt(rt) => InferenceBackend::prefill_reserve_bytes(rt.as_ref(), prompt_len),
+        }
+    }
+
+    fn prefill_visible_bytes(&self, consumed: usize) -> usize {
+        match self {
+            Backend::Native(m) => InferenceBackend::prefill_visible_bytes(m.as_ref(), consumed),
+            Backend::Pjrt(rt) => InferenceBackend::prefill_visible_bytes(rt.as_ref(), consumed),
+        }
+    }
+
+    fn kv_headroom(&self) -> usize {
+        match self {
+            Backend::Native(m) => InferenceBackend::kv_headroom(m.as_ref()),
+            Backend::Pjrt(rt) => InferenceBackend::kv_headroom(rt.as_ref()),
         }
     }
 

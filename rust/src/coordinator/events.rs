@@ -2,8 +2,9 @@
 //! surface of the step()-based serving API.
 //!
 //! Every submitted request produces exactly one **terminal** event
-//! ([`EngineEvent::Finished`], [`EngineEvent::Cancelled`] or
-//! [`EngineEvent::Rejected`]); tokens are emitted in decode order as
+//! ([`EngineEvent::Finished`], [`EngineEvent::Cancelled`],
+//! [`EngineEvent::Rejected`] or [`EngineEvent::Failed`]); tokens are
+//! emitted in decode order as
 //! [`EngineEvent::Token`] the moment the scheduler produces them, not at
 //! drain time. Callers observe events globally (`Engine::next_event` /
 //! `Engine::drain_events`) or per request through a [`TokenStream`]
@@ -34,12 +35,15 @@ pub enum FinishReason {
 /// One scheduler-observable event. `Token::index` counts generated tokens
 /// from 0; `ttft_s` is set only on the first token (arrival → first token).
 ///
-/// Ordering under fused decode rounds: although a decode tick computes all
-/// active sessions' tokens in **one** `decode_batch` call, the engine
-/// emits that tick's `Token` events (and any resulting `Finished`) in
-/// admission order, one request at a time — exactly the stream the old
-/// per-session round-robin loop produced, so event consumers cannot
-/// observe the fusion.
+/// Ordering under fused ticks: a tick computes its rows in **one**
+/// `step_batch` call, then emits each row's events one request at a time
+/// in the tick's row order — admission order when every active session is
+/// served (the default), window order when `max_rows_per_tick` rotates a
+/// subset, with a request's `Started` + first `Token` landing among the
+/// tick's other rows' events once its final prefill chunk completes.
+/// Per-request streams are always in order (`index` is consecutive from
+/// 0); cross-request interleaving within a tick is a scheduling detail,
+/// not a contract.
 #[derive(Clone, Debug, PartialEq)]
 pub enum EngineEvent {
     /// The request was admitted and its prefill completed.
@@ -53,6 +57,11 @@ pub enum EngineEvent {
     /// Terminal: the request could not be admitted (e.g. empty prompt, or
     /// a prompt that cannot fit the context window at all).
     Rejected { id: RequestId, reason: String },
+    /// Terminal: the backend failed while serving the request (prefill or
+    /// decode error). The session's memory — KV pool pages and flash
+    /// spill — has been released; the engine keeps serving other
+    /// requests.
+    Failed { id: RequestId, reason: String },
 }
 
 impl EngineEvent {
@@ -63,7 +72,8 @@ impl EngineEvent {
             | EngineEvent::Token { id, .. }
             | EngineEvent::Finished { id, .. }
             | EngineEvent::Cancelled { id }
-            | EngineEvent::Rejected { id, .. } => *id,
+            | EngineEvent::Rejected { id, .. }
+            | EngineEvent::Failed { id, .. } => *id,
         }
     }
 
@@ -75,6 +85,7 @@ impl EngineEvent {
             EngineEvent::Finished { .. }
                 | EngineEvent::Cancelled { .. }
                 | EngineEvent::Rejected { .. }
+                | EngineEvent::Failed { .. }
         )
     }
 }
@@ -136,6 +147,7 @@ mod tests {
             EngineEvent::Finished { id: 3, reason: FinishReason::MaxTokens },
             EngineEvent::Cancelled { id: 3 },
             EngineEvent::Rejected { id: 3, reason: "no".into() },
+            EngineEvent::Failed { id: 3, reason: "backend".into() },
         ];
         for e in &evs {
             assert_eq!(e.id(), 3);
@@ -145,6 +157,7 @@ mod tests {
         assert!(evs[2].is_terminal());
         assert!(evs[3].is_terminal());
         assert!(evs[4].is_terminal());
+        assert!(evs[5].is_terminal());
     }
 
     #[test]

@@ -69,6 +69,10 @@ pub struct EngineMetrics {
     pub cancelled: u64,
     /// Requests rejected at admission (never ran).
     pub rejected: u64,
+    /// Requests terminated by a backend failure mid-flight (their
+    /// sessions' KV was released on the error path; terminal event
+    /// `Failed`).
+    pub failed: u64,
     /// KV spill/restore/preemption accounting across all requests.
     pub kv: KvPressureMetrics,
     /// Weight residency accounting (native backend): cumulative snapshot
@@ -129,6 +133,9 @@ impl EngineMetrics {
                 self.cancelled, self.rejected
             ));
         }
+        if self.failed > 0 {
+            s.push_str(&format!(" | {} failed", self.failed));
+        }
         if self.kv != KvPressureMetrics::default() {
             s.push_str(&format!(
                 " | kv spill {} rec / restore {} rec / {} preempt",
@@ -154,6 +161,15 @@ impl EngineMetrics {
                 s.push_str(&format!(
                     " / {:.2} fetch/tok",
                     self.weights.fetches_per_token()
+                ));
+            }
+            if self.weights.prefill_fetches > 0 {
+                // The fused-prefill amortization gauge: pure-prefill flash
+                // blob reads per prompt token (shared admission walks
+                // divide this by the number of co-admitted prompts).
+                s.push_str(&format!(
+                    " / {:.2} fetch/ptok",
+                    self.weights.fetches_per_prompt_token()
                 ));
             }
         }
@@ -246,8 +262,23 @@ mod tests {
         let mut e = EngineMetrics::default();
         e.push(m(8, 4, 0.1, 0.2));
         assert!(!e.summary(1.0).contains("cancelled"));
+        assert!(!e.summary(1.0).contains("failed"));
         e.cancelled = 2;
         e.rejected = 1;
         assert!(e.summary(1.0).contains("2 cancelled / 1 rejected"));
+        e.failed = 3;
+        assert!(e.summary(1.0).contains("3 failed"));
+    }
+
+    #[test]
+    fn prefill_fetch_gauge_appears_under_pressure() {
+        let mut e = EngineMetrics::default();
+        e.push(m(8, 4, 0.1, 0.2));
+        e.weights.demand_fetches = 3;
+        assert!(!e.summary(1.0).contains("fetch/ptok"));
+        e.weights.prefill_fetches = 6;
+        e.weights.prompt_tokens_prefilled = 12;
+        let s = e.summary(1.0);
+        assert!(s.contains("0.50 fetch/ptok"), "{s}");
     }
 }

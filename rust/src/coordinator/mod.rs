@@ -23,7 +23,7 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 
-pub use backend::{AnySession, Backend, InferenceBackend};
+pub use backend::{AnySession, Backend, InferenceBackend, RowOutcome, RowWork, TickLimits};
 pub use events::{EngineEvent, FinishReason, TokenStream};
 pub use metrics::{EngineMetrics, KvPressureMetrics, RequestMetrics};
 pub use request::{Request, RequestId, Response};

@@ -89,12 +89,31 @@ impl Request {
         self
     }
 
-    /// True when `tokens` (the generated stream so far) ends with one of
-    /// this request's stop sequences.
-    pub fn matches_stop_sequence(&self, tokens: &[usize]) -> bool {
-        self.stop_sequences
-            .iter()
-            .any(|seq| !seq.is_empty() && tokens.ends_with(seq))
+    /// True when the token stream — prompt followed by `generated` — ends
+    /// with one of this request's stop sequences. Matching spans the
+    /// prompt/generation boundary: a sequence whose prefix ends the
+    /// prompt fires as soon as generation completes it (the old
+    /// generated-only match could never fire for those). The match must
+    /// end at (and therefore include) the newest generated token, so a
+    /// sequence lying wholly inside the prompt never stops generation.
+    pub fn matches_stop_sequence(&self, generated: &[usize]) -> bool {
+        if generated.is_empty() {
+            return false;
+        }
+        self.stop_sequences.iter().any(|seq| {
+            if seq.is_empty() {
+                return false;
+            }
+            if generated.len() >= seq.len() {
+                generated.ends_with(seq)
+            } else {
+                // The sequence reaches back across the boundary: all of
+                // `generated` must match its tail and the prompt must end
+                // with the remainder.
+                let split = seq.len() - generated.len();
+                generated == &seq[split..] && self.prompt.ends_with(&seq[..split])
+            }
+        })
     }
 }
 
@@ -151,5 +170,26 @@ mod tests {
         // Empty stop sequences never match.
         let e = Request::new(2, vec![1], 8).with_stop_sequences(vec![vec![]]);
         assert!(!e.matches_stop_sequence(&[1, 2]));
+    }
+
+    #[test]
+    fn stop_sequence_spans_prompt_generation_boundary() {
+        // Prompt ends with the sequence's prefix; the first generated
+        // tokens complete it — the match must fire (regression: the old
+        // generated-only match never could).
+        let r = Request::new(1, vec![9, 4, 5], 8).with_stop_sequences(vec![vec![4, 5, 6, 7]]);
+        assert!(r.matches_stop_sequence(&[6, 7]), "prefix in prompt, suffix generated");
+        assert!(!r.matches_stop_sequence(&[6]), "sequence not complete yet");
+        assert!(!r.matches_stop_sequence(&[7]), "generated tail mismatches");
+        assert!(!r.matches_stop_sequence(&[6, 7, 8]), "match must end at the newest token");
+        // A sequence lying wholly inside the prompt must NOT stop
+        // generation: the match has to include a generated token.
+        let p = Request::new(2, vec![4, 5], 8).with_stop_sequences(vec![vec![4, 5]]);
+        assert!(!p.matches_stop_sequence(&[1]));
+        assert!(!p.matches_stop_sequence(&[]));
+        // Boundary match where the prompt is shorter than the sequence
+        // remainder: no panic, no match.
+        let s = Request::new(3, vec![5], 8).with_stop_sequences(vec![vec![3, 4, 5, 6]]);
+        assert!(!s.matches_stop_sequence(&[6]));
     }
 }

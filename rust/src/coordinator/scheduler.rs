@@ -1,24 +1,39 @@
 //! The engine loop: an **incremental, event-driven scheduler** over any
 //! [`InferenceBackend`].
 //!
-//! [`Engine::step`] advances one scheduler tick — admit one queued request
-//! (prefill) or run one **fused decode round**: a single
-//! `InferenceBackend::decode_batch` call advances every active session by
-//! one token (on the native backend, one layer walk and one weight fetch
-//! per layer per tick shared by all sessions, instead of one walk per
-//! session) — and emits typed [`EngineEvent`]s the moment tokens exist, so
-//! callers observe generation in decode order instead of at drain time.
+//! [`Engine::step`] advances one scheduler tick: admit ready requests,
+//! then run one **fused round** — a single
+//! `InferenceBackend::step_batch` call advances every served session by
+//! one unit of work, pending **prefill chunks and decode rows sharing
+//! the same call** (on the native backend, one layer walk and one weight
+//! fetch per layer per tick total, instead of one walk per session) —
+//! emitting typed [`EngineEvent`]s the moment tokens exist, so callers
+//! observe generation in decode order instead of at drain time.
+//!
+//! Chunked + batched prefill: long prompts are split into
+//! `tick_limits().prefill_chunk`-token chunks (one per tick), so a long
+//! prompt never monopolizes a tick and a short prompt admitted alongside
+//! gets its first token after one shared walk; several ready prompts are
+//! admitted **in one tick** (KV headroom permitting) so their prefills
+//! share a single weight pass. `tick_limits().max_rows` caps the rows of
+//! one fused call, rotating a window through a large active set so
+//! per-token event latency stays bounded. Both knobs are value-neutral:
+//! chunking is bit-identical to monolithic prefill by the backend
+//! contract, and rows are independent.
+//!
 //! Admission pops the **highest-priority** ready request
 //! (`Request::priority` class, then earliest arrival, then id; unset
 //! priorities all share class 0, where admission is exactly the old FIFO).
 //! Requests can be submitted **while the engine is stepping** (mid-flight
 //! admission goes through the same KV-pool admission control) and
 //! cancelled at any point ([`Engine::cancel`] frees the session's KV pages
-//! and flash spill immediately). [`Engine::run_all`] survives as a thin
-//! compatibility wrapper: `step()` until idle, then return completed
-//! responses in submission order — bit-identical greedy outputs to the old
-//! drain-only coordinator (batched rows are value-neutral by the backend
-//! contract).
+//! and flash spill immediately). A backend error terminates only the
+//! affected requests — their sessions are **released** (no KV leak) and a
+//! terminal [`EngineEvent::Failed`] is emitted; the engine keeps serving.
+//! [`Engine::run_all`] survives as a thin compatibility wrapper: `step()`
+//! until idle, then return completed responses in submission order —
+//! bit-identical greedy outputs to the old drain-only coordinator
+//! (batched rows are value-neutral by the backend contract).
 //!
 //! Two policies:
 //! * `Fifo` — admit a request only when none is active: each request
@@ -48,9 +63,11 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-pub use crate::coordinator::backend::{AnySession, Backend, InferenceBackend};
+pub use crate::coordinator::backend::{
+    AnySession, Backend, InferenceBackend, RowWork, TickLimits,
+};
 use crate::coordinator::events::{EngineEvent, FinishReason, StreamInner, TokenStream};
 use crate::coordinator::metrics::{EngineMetrics, RequestMetrics};
 use crate::coordinator::request::{Request, RequestId, Response};
@@ -140,7 +157,10 @@ fn deliver(
     events.push_back(ev);
 }
 
-/// One admitted request's in-flight state.
+/// One admitted request's in-flight state. `prefill_done <
+/// req.prompt.len()` means the request is still in its prefill phase
+/// (chunks pending); once the final chunk lands the first token is
+/// sampled and decode rounds take over.
 struct Active<S> {
     req: Request,
     sess: S,
@@ -149,10 +169,23 @@ struct Active<S> {
     last: usize,
     budget: usize,
     arrival: Instant,
+    /// Prompt tokens consumed by prefill chunks so far.
+    prefill_done: usize,
+    /// Accumulated wall time of the ticks that advanced this request's
+    /// prefill (a fused walk's time is attributed to each of its
+    /// prefilling rows).
     prefill_s: f64,
     ttft_s: f64,
     decode_started: Instant,
     decoded_any: bool,
+}
+
+/// What a tick asked of one selected row (the owned mirror of the
+/// [`RowWork`] handed to the backend, for post-walk processing).
+#[derive(Clone, Copy)]
+enum RowKind {
+    Prefill { consumed: usize, last: bool },
+    Decode,
 }
 
 /// The streaming engine: admission queue + step scheduler + event queue +
@@ -164,6 +197,12 @@ pub struct Engine<B: InferenceBackend> {
     queue: VecDeque<Request>,
     active: Vec<Active<B::Session>>,
     next_id: u64,
+    /// Monotone row-window cursor for ticks capped by
+    /// `tick_limits().max_rows`: uncapped ticks always serve the whole
+    /// active set in admission order; capped ticks rotate the window
+    /// start by the rows served, so every session advances within
+    /// ⌈active/max_rows⌉ ticks.
+    rotate: usize,
     pub metrics: EngineMetrics,
     events: VecDeque<EngineEvent>,
     streams: HashMap<RequestId, Arc<Mutex<StreamInner>>>,
@@ -181,6 +220,7 @@ impl<B: InferenceBackend> Engine<B> {
             queue: VecDeque::new(),
             active: Vec::new(),
             next_id: 1,
+            rotate: 0,
             metrics: EngineMetrics::default(),
             events: VecDeque::new(),
             streams: HashMap::new(),
@@ -250,24 +290,68 @@ impl<B: InferenceBackend> Engine<B> {
         std::mem::take(&mut self.finished)
     }
 
-    /// Advance one scheduler tick: admit the best queued request (prefill
-    /// and first token) when the policy allows, otherwise run one fused
-    /// decode round (one `decode_batch` call, one token per active
-    /// session). Returns false when idle — no queued or active work.
+    /// Advance one scheduler tick: admit ready requests (several under
+    /// `Interleaved`, KV headroom permitting, so their prefills share one
+    /// walk; one at a time under `Fifo`), then run one fused round — a
+    /// single `step_batch` call advancing each served session by its
+    /// pending prefill chunk or one decode token. Returns false when idle
+    /// — no queued or active work.
     pub fn step(&mut self) -> Result<bool> {
-        let may_admit = match self.policy {
-            SchedulePolicy::Fifo => self.active.is_empty(),
-            SchedulePolicy::Interleaved => true,
-        };
-        let did = if may_admit && !self.queue.is_empty() {
-            self.admit_one()?;
-            true
-        } else if !self.active.is_empty() {
-            self.decode_round()?;
-            true
-        } else {
-            false
-        };
+        let mut did = false;
+        // Admission loop. Admissions must fit the KV headroom left after
+        // charging every **outstanding** prefill reservation — the
+        // estimates of prompts admitted this tick AND of still-chunking
+        // prompts from earlier ticks, whose memory is not yet pool-
+        // visible — so a burst of long chunked prompts cannot overcommit
+        // the pool across ticks. When nothing is outstanding (the steady
+        // state, and always when chunking is off) the tick's first
+        // admission is unconditional, going through the backend's
+        // `make_room` (which may preempt running sessions) exactly like
+        // the old one-admission-per-tick path; outstanding reservations
+        // shrink every tick as chunks land, so a gated queue always
+        // unblocks — backpressure, not starvation.
+        // A second bound: admit at most `max_rows_per_tick` prompts per
+        // tick — more could not share this tick's walk anyway, so with a
+        // finite row cap a co-arrival burst smooths into the cap per tick
+        // (bounding the fused walk's transient activation memory and the
+        // wait until the burst's first tokens) while concurrency beyond
+        // the cap still builds up across ticks for rotation to serve.
+        // The default (unlimited) keeps whole-queue fused admission;
+        // `prefill_chunk_tokens` / `max_rows_per_tick` are the opt-in
+        // knobs for bounding burst ticks.
+        let admit_cap = self.backend.tick_limits().max_rows.max(1);
+        let mut admitted = 0usize;
+        let mut reserved = self.outstanding_prefill_reservation();
+        while admitted < admit_cap {
+            let may_admit = match self.policy {
+                SchedulePolicy::Fifo => self.active.is_empty(),
+                SchedulePolicy::Interleaved => true,
+            };
+            if !may_admit {
+                break;
+            }
+            // One priority scan per admission: the request whose cost is
+            // charged is, by construction, the request admitted.
+            let Some(best) = self.best_ready_index() else {
+                break;
+            };
+            if admitted > 0 || reserved > 0 {
+                let next_cost =
+                    self.backend.prefill_reserve_bytes(self.queue[best].prompt.len());
+                if reserved.saturating_add(next_cost) > self.backend.kv_headroom() {
+                    break;
+                }
+            }
+            if let Some(cost) = self.admit_at(best)? {
+                reserved = reserved.saturating_add(cost);
+                admitted += 1;
+            }
+            did = true;
+        }
+        if !self.active.is_empty() {
+            self.run_tick()?;
+            did = true;
+        }
         if self.active.is_empty() {
             // No live sessions: completed requests' flash spill is
             // reclaimable (native backend truncates the spill store).
@@ -288,20 +372,33 @@ impl<B: InferenceBackend> Engine<B> {
             return true;
         }
         if let Some(ai) = self.active.iter().position(|a| a.req.id == id) {
-            let mut act = self.active.remove(ai);
-            let (spilled, restored) = self.backend.kv_counters(&act.sess);
-            self.metrics.kv.spilled_records += spilled;
-            self.metrics.kv.restored_records += restored;
-            self.backend.release(&mut act.sess);
-            drop(act);
+            self.teardown_active(ai);
             self.metrics.cancelled += 1;
             deliver(&mut self.events, &mut self.streams, EngineEvent::Cancelled { id });
-            if self.active.is_empty() {
-                self.backend.reclaim();
-            }
             return true;
         }
         false
+    }
+
+    /// Tear down the active request at `ai`: capture its KV counters,
+    /// **release the session** (pool pages + flash spill free
+    /// immediately), and reclaim shared stores once nothing is active.
+    /// Shared by cancellation and the backend-failure path; the caller
+    /// emits the terminal event and bumps its counter.
+    fn teardown_active(&mut self, ai: usize) {
+        let mut act = self.active.remove(ai);
+        let (spilled, restored) = self.backend.kv_counters(&act.sess);
+        self.metrics.kv.spilled_records += spilled;
+        self.metrics.kv.restored_records += restored;
+        self.backend.release(&mut act.sess);
+        drop(act);
+        // Keep the weight-residency gauges current even when requests end
+        // by cancellation or failure (finalize refreshes them too) — the
+        // flash traffic those requests caused is already counted.
+        self.metrics.weights = self.backend.weight_metrics();
+        if self.active.is_empty() {
+            self.backend.reclaim();
+        }
     }
 
     /// Compatibility wrapper over [`step`](Self::step): drive the engine
@@ -311,22 +408,39 @@ impl<B: InferenceBackend> Engine<B> {
     /// discarded (attached `TokenStream`s keep theirs). Long-running
     /// step() callers should periodically `take_finished()` (and drain
     /// events) — completed responses are buffered until taken.
+    ///
+    /// Backend failures surface here as `Err` (the old coordinator
+    /// propagated them too): requests the step loop terminated with
+    /// `Failed` events would otherwise vanish silently from the batch
+    /// result. Responses completed before the failure stay buffered for
+    /// [`take_finished`](Self::take_finished); callers needing
+    /// per-request failure handling should drive `step()` and observe
+    /// events instead.
     pub fn run_all(&mut self) -> Result<Vec<Response>> {
+        let failed_before = self.metrics.failed;
         while self.step()? {}
         self.events.clear();
+        let failed = self.metrics.failed - failed_before;
+        if failed > 0 {
+            return Err(anyhow!(
+                "{failed} request(s) terminated by backend failures during the drain \
+                 (completed responses remain available via take_finished())"
+            ));
+        }
         let mut out = std::mem::take(&mut self.finished);
         out.sort_by_key(|r| r.id);
         Ok(out)
     }
 
-    /// Pop the highest-priority ready request: priority class first
-    /// (higher admitted sooner), then arrival time (earliest first — EDF
-    /// with arrival as the deadline proxy), then id. Requests that never
-    /// set a priority all share class 0, where the arrival tiebreak
-    /// reduces to exactly the old FIFO pop (regression-tested).
-    fn pop_ready(&mut self) -> Option<Request> {
-        let best = self
-            .queue
+    /// Queue index of the highest-priority ready request: priority class
+    /// first (higher admitted sooner), then arrival time (earliest first
+    /// — EDF with arrival as the deadline proxy), then id. Requests that
+    /// never set a priority all share class 0, where the arrival tiebreak
+    /// reduces to exactly the old FIFO pop (regression-tested). The
+    /// admission loop charges this request's reservation and then admits
+    /// this same index, so cost and admission cannot diverge.
+    fn best_ready_index(&self) -> Option<usize> {
+        self.queue
             .iter()
             .enumerate()
             .min_by(|(_, a), (_, b)| {
@@ -335,16 +449,39 @@ impl<B: InferenceBackend> Engine<B> {
                     .then_with(|| a.arrival.cmp(&b.arrival))
                     .then_with(|| a.id.cmp(&b.id))
             })
-            .map(|(i, _)| i)?;
-        self.queue.remove(best)
+            .map(|(i, _)| i)
     }
 
-    /// Admit the best ready request: validate, make room (admission
-    /// control may preempt running sessions), prefill, sample the first
-    /// token, and emit `Started` + the first `Token` (with TTFT).
-    fn admit_one(&mut self) -> Result<()> {
-        let Some(req) = self.pop_ready() else {
-            return Ok(());
+    /// Reservation bytes still outstanding for prompts admitted in
+    /// earlier ticks whose chunked prefill has not finished: their full
+    /// estimate minus only the **pool-visible** consumed portion
+    /// (appended pages — `prefill_visible_bytes`; retained-until-
+    /// completion memory like the native fp32 stash stays charged in
+    /// full). Zero whenever chunking is off — prompts then prefill in
+    /// their admission tick.
+    fn outstanding_prefill_reservation(&self) -> usize {
+        self.active
+            .iter()
+            .filter(|a| a.prefill_done < a.req.prompt.len())
+            .map(|a| {
+                self.backend
+                    .prefill_reserve_bytes(a.req.prompt.len())
+                    .saturating_sub(self.backend.prefill_visible_bytes(a.prefill_done))
+            })
+            .fold(0usize, usize::saturating_add)
+    }
+
+    /// Admit the queued request at `qi`: validate, make room (admission
+    /// control may preempt running sessions), open its session and queue
+    /// it for prefill — the actual prefill (chunked, fused with other
+    /// rows) happens in the tick's `step_batch` walk, and `Started` + the
+    /// first `Token` are emitted when its final chunk lands. Returns the
+    /// admitted prompt's KV reservation estimate; `None` when the request
+    /// was rejected, failed to open, or completed on the spot (zero token
+    /// budget) — every such path still emits its one terminal event.
+    fn admit_at(&mut self, qi: usize) -> Result<Option<usize>> {
+        let Some(req) = self.queue.remove(qi) else {
+            return Ok(None);
         };
         let cap = self.backend.max_len();
         if req.prompt.is_empty() || req.prompt.len() + 1 > cap {
@@ -363,63 +500,110 @@ impl<B: InferenceBackend> Engine<B> {
                 &mut self.streams,
                 EngineEvent::Rejected { id: req.id, reason },
             );
-            return Ok(());
+            return Ok(None);
         }
-        {
+        if req.max_new_tokens == 0 {
+            // Honor a zero token budget: no prefill, no KV, no sampled
+            // token — the request completes immediately with `MaxTokens`.
+            // (The old path always sampled token 0, then clamped the
+            // budget to 1.)
+            let arrival = req.arrival.unwrap_or_else(Instant::now);
+            let id = req.id;
+            let m = RequestMetrics {
+                prompt_tokens: req.prompt.len(),
+                e2e_s: arrival.elapsed().as_secs_f64(),
+                ..RequestMetrics::default()
+            };
+            self.metrics.push(m);
+            deliver(&mut self.events, &mut self.streams, EngineEvent::Started { id });
+            deliver(
+                &mut self.events,
+                &mut self.streams,
+                EngineEvent::Finished { id, reason: FinishReason::MaxTokens },
+            );
+            self.finished.push(Response {
+                id,
+                tokens: Vec::new(),
+                metrics: m,
+                finish_reason: FinishReason::MaxTokens,
+            });
+            return Ok(None);
+        }
+        // From here the request is popped, so every failure must still
+        // produce its one terminal event (the lifecycle invariant) —
+        // backend errors become `Failed`, not a lost request.
+        let room = {
             let mut running: Vec<&mut B::Session> =
                 self.active.iter_mut().map(|a| &mut a.sess).collect();
-            let preempted = self.backend.make_room(req.prompt.len(), &mut running)?;
-            self.metrics.kv.preemptions += preempted;
+            self.backend.make_room(req.prompt.len(), &mut running)
+        };
+        match room {
+            Ok(preempted) => self.metrics.kv.preemptions += preempted,
+            Err(e) => {
+                self.metrics.failed += 1;
+                deliver(
+                    &mut self.events,
+                    &mut self.streams,
+                    EngineEvent::Failed {
+                        id: req.id,
+                        reason: format!("admission make_room failed: {e}"),
+                    },
+                );
+                return Ok(None);
+            }
         }
         let arrival = req.arrival.unwrap_or_else(Instant::now);
-        let mut sess = self.backend.new_session(&req)?;
-        let t0 = Instant::now();
-        let logits = self.backend.prefill(&mut sess, &req.prompt)?;
-        let prefill_s = t0.elapsed().as_secs_f64();
-        let mut rng = request_rng(&req);
-        let tok = sampler::sample(&logits, req.sampler, &mut rng);
-        let ttft_s = arrival.elapsed().as_secs_f64();
-        let id = req.id;
-        deliver(&mut self.events, &mut self.streams, EngineEvent::Started { id });
-        deliver(
-            &mut self.events,
-            &mut self.streams,
-            EngineEvent::Token { id, tok, index: 0, ttft_s: Some(ttft_s) },
-        );
-        let budget = token_budget(&req, cap);
-        let pos = self.backend.session_pos(&sess);
-        let tokens = vec![tok];
-        let reason = stop_reason(&req, &tokens, tok, budget.max(1), pos, cap);
-        let act = Active {
-            last: tok,
-            tokens,
+        let sess = match self.backend.new_session(&req) {
+            Ok(s) => s,
+            Err(e) => {
+                self.metrics.failed += 1;
+                deliver(
+                    &mut self.events,
+                    &mut self.streams,
+                    EngineEvent::Failed {
+                        id: req.id,
+                        reason: format!("session open failed: {e}"),
+                    },
+                );
+                return Ok(None);
+            }
+        };
+        let rng = request_rng(&req);
+        // A context-cap-clamped budget of 0 keeps the pre-existing "one
+        // free token from the prefill logits" semantics via max(1); an
+        // explicit zero request was handled above.
+        let budget = token_budget(&req, cap).max(1);
+        let cost = self.backend.prefill_reserve_bytes(req.prompt.len());
+        self.active.push(Active {
+            last: 0,
+            tokens: Vec::new(),
             sess,
             rng,
-            budget: budget.max(1),
+            budget,
             arrival,
-            prefill_s,
-            ttft_s,
+            prefill_done: 0,
+            prefill_s: 0.0,
+            ttft_s: 0.0,
             decode_started: Instant::now(),
             decoded_any: false,
             req,
-        };
-        match reason {
-            Some(r) => self.finalize(act, r),
-            None => self.active.push(act),
-        }
-        Ok(())
+        });
+        Ok(Some(cost))
     }
 
-    /// One fused decode round: **one** `decode_batch` call advances every
-    /// active session by one token — on the native backend a single layer
-    /// walk (one weight fetch per layer per tick) instead of one walk per
-    /// session. Rows are value-neutral by the backend contract, and the
-    /// results are processed in the same admission order the old
-    /// per-session loop used, so events, per-request RNG draws, stop
-    /// handling, and greedy outputs are unchanged — only the weight
-    /// traffic is. Finished sessions are finalized (and their KV
-    /// released) on the spot.
-    fn decode_round(&mut self) -> Result<()> {
+    /// One fused tick round: select up to `tick_limits().max_rows` active
+    /// sessions (rotating window; uncapped ticks take everyone in
+    /// admission order), hand each its pending work — the next prefill
+    /// chunk of at most `tick_limits().prefill_chunk` prompt tokens, or
+    /// one decode token — to a **single** `step_batch` call, then process
+    /// the rows in window order: non-final chunks just advance, final
+    /// chunks sample the first token (`Started` + `Token` with TTFT),
+    /// decode rows sample the next token; stop handling, per-request RNG
+    /// draws and event order are exactly the old per-phase loops'.
+    /// Failed rows (or a failed walk) release their sessions and emit
+    /// terminal `Failed` events — the KV-leak fix — without stopping the
+    /// engine.
+    fn run_tick(&mut self) -> Result<()> {
         {
             let mut running: Vec<&mut B::Session> =
                 self.active.iter_mut().map(|a| &mut a.sess).collect();
@@ -427,48 +611,166 @@ impl<B: InferenceBackend> Engine<B> {
             self.metrics.kv.holder_sheds += shed;
         }
         let cap = self.backend.max_len();
+        let limits = self.backend.tick_limits();
+        let chunk_cap = limits.prefill_chunk.max(1);
+        let n = self.active.len();
+        let take = n.min(limits.max_rows.max(1));
+        let start = if take == n { 0 } else { self.rotate % n };
+        self.rotate = self.rotate.wrapping_add(take);
         let now = Instant::now();
-        let toks: Vec<usize> = self.active.iter().map(|a| a.last).collect();
-        for a in &mut self.active {
-            if !a.decoded_any {
-                a.decode_started = now;
-                a.decoded_any = true;
-            }
-        }
-        let rows = {
-            let mut sessions: Vec<&mut B::Session> =
-                self.active.iter_mut().map(|a| &mut a.sess).collect();
-            self.backend.decode_batch(&mut sessions, &toks)?
-        };
-        debug_assert_eq!(rows.len(), toks.len());
-        // Row r belongs to the session admitted r-th this round; finalized
-        // sessions shift later rows down by exactly the removals so far.
-        let mut i = 0;
-        for logits in rows {
-            let (id, tok, index, reason) = {
-                let a = &mut self.active[i];
-                let tok = sampler::sample(&logits, a.req.sampler, &mut a.rng);
-                a.tokens.push(tok);
-                a.last = tok;
-                let pos = self.backend.session_pos(&a.sess);
-                let reason = stop_reason(&a.req, &a.tokens, tok, a.budget, pos, cap);
-                (a.req.id, tok, a.tokens.len() - 1, reason)
-            };
-            deliver(
-                &mut self.events,
-                &mut self.streams,
-                EngineEvent::Token { id, tok, index, ttft_s: None },
-            );
-            match reason {
-                Some(r) => {
-                    let act = self.active.remove(i);
-                    self.finalize(act, r);
-                    // The next session shifted into slot i; don't skip it.
+        let mut sel: Vec<(RequestId, RowKind)> = Vec::with_capacity(take);
+        let outcomes = {
+            let mut slots: Vec<Option<&mut Active<B::Session>>> =
+                self.active.iter_mut().map(Some).collect();
+            let mut sessions: Vec<&mut B::Session> = Vec::with_capacity(take);
+            let mut works: Vec<RowWork> = Vec::with_capacity(take);
+            for i in 0..take {
+                let a = slots[(start + i) % n].take().expect("row selected twice");
+                let Active { req, sess, prefill_done, decoded_any, decode_started, last, .. } = a;
+                let plen = req.prompt.len();
+                if *prefill_done < plen {
+                    let end = (*prefill_done + chunk_cap).min(plen);
+                    sel.push((
+                        req.id,
+                        RowKind::Prefill { consumed: end - *prefill_done, last: end == plen },
+                    ));
+                    works.push(RowWork::Prefill {
+                        ids: &req.prompt[*prefill_done..end],
+                        last: end == plen,
+                    });
+                } else {
+                    if !*decoded_any {
+                        *decode_started = now;
+                        *decoded_any = true;
+                    }
+                    sel.push((req.id, RowKind::Decode));
+                    works.push(RowWork::Decode { tok: *last });
                 }
-                None => i += 1,
+                sessions.push(sess);
+            }
+            self.backend.step_batch(&mut sessions, &works)
+        };
+        let walk_s = now.elapsed().as_secs_f64();
+        let rows = match outcomes {
+            Ok(rows) => rows,
+            Err(e) => {
+                // The fused walk failed wholesale: every selected
+                // session's state is suspect. Release them (KV pages +
+                // flash spill — the leak fix) and emit terminal `Failed`s;
+                // unselected rows and the queue are untouched.
+                let msg = format!("backend tick failed: {e}");
+                for (id, _) in &sel {
+                    self.fail_active(*id, &msg);
+                }
+                return Ok(());
+            }
+        };
+        if rows.len() != sel.len() {
+            // Contract violation (outcomes ≠ rows): a silent zip would
+            // drop the unmatched rows and stall those requests forever.
+            // Treat it like a wholesale walk failure.
+            let msg = format!(
+                "backend returned {} outcomes for {} rows",
+                rows.len(),
+                sel.len()
+            );
+            for (id, _) in &sel {
+                self.fail_active(*id, &msg);
+            }
+            return Ok(());
+        }
+        for ((id, kind), outcome) in sel.into_iter().zip(rows) {
+            match outcome {
+                Err(e) => self.fail_active(id, &format!("backend row failed: {e}")),
+                Ok(logits) => self.advance_row(id, kind, logits, walk_s, cap),
             }
         }
         Ok(())
+    }
+
+    /// Apply one successful tick row to its request: bookkeeping for a
+    /// non-final prefill chunk; first-token sampling + `Started`/`Token`
+    /// (TTFT) for a final chunk; next-token sampling + `Token` for a
+    /// decode row. Stop conditions finalize (and release) on the spot.
+    fn advance_row(
+        &mut self,
+        id: RequestId,
+        kind: RowKind,
+        logits: Option<Vec<f32>>,
+        walk_s: f64,
+        cap: usize,
+    ) {
+        let Some(ai) = self.active.iter().position(|a| a.req.id == id) else {
+            return;
+        };
+        // One sample/stop/emit path for both row kinds; `first` (a final
+        // prefill chunk) additionally emits `Started` and stamps TTFT.
+        let first = match kind {
+            RowKind::Prefill { consumed, last } => {
+                {
+                    let a = &mut self.active[ai];
+                    a.prefill_done += consumed;
+                    a.prefill_s += walk_s;
+                }
+                if !last {
+                    return;
+                }
+                true
+            }
+            RowKind::Decode => false,
+        };
+        let Some(logits) = logits else {
+            self.fail_active(
+                id,
+                if first {
+                    "backend returned no logits for a final prefill chunk"
+                } else {
+                    "backend returned no logits for a decode row"
+                },
+            );
+            return;
+        };
+        let (tok, index, ttft_s, reason) = {
+            let a = &mut self.active[ai];
+            let tok = sampler::sample(&logits, a.req.sampler, &mut a.rng);
+            a.tokens.push(tok);
+            a.last = tok;
+            if first {
+                a.ttft_s = a.arrival.elapsed().as_secs_f64();
+            }
+            let pos = self.backend.session_pos(&a.sess);
+            let reason = stop_reason(&a.req, &a.tokens, tok, a.budget, pos, cap);
+            (tok, a.tokens.len() - 1, a.ttft_s, reason)
+        };
+        if first {
+            deliver(&mut self.events, &mut self.streams, EngineEvent::Started { id });
+        }
+        deliver(
+            &mut self.events,
+            &mut self.streams,
+            EngineEvent::Token { id, tok, index, ttft_s: first.then_some(ttft_s) },
+        );
+        if let Some(r) = reason {
+            let act = self.active.remove(ai);
+            self.finalize(act, r);
+        }
+    }
+
+    /// Terminal failure of an active request (backend error): tear the
+    /// session down — pool pages and flash spill records free immediately
+    /// instead of leaking until process exit — and emit a terminal
+    /// `Failed` event. The engine keeps serving.
+    fn fail_active(&mut self, id: RequestId, reason: &str) {
+        let Some(ai) = self.active.iter().position(|a| a.req.id == id) else {
+            return;
+        };
+        self.teardown_active(ai);
+        self.metrics.failed += 1;
+        deliver(
+            &mut self.events,
+            &mut self.streams,
+            EngineEvent::Failed { id, reason: reason.to_string() },
+        );
     }
 
     /// Capture metrics, release the session's KV, emit the terminal
@@ -851,6 +1153,85 @@ mod tests {
             })
             .collect();
         assert_eq!(toks, vec![a, b]);
+    }
+
+    #[test]
+    fn zero_token_budget_finishes_without_tokens() {
+        // The max_new_tokens == 0 satellite: honor the zero budget — no
+        // prefill, no sampled token, terminal `Finished(MaxTokens)`.
+        let m = native();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        let zero = c.submit(vec![1, 2, 3], 0);
+        let one = c.submit(vec![1, 2, 3], 1);
+        let mut events = Vec::new();
+        while c.step().unwrap() {
+            events.extend(c.drain_events());
+        }
+        events.extend(c.drain_events());
+        let rs = c.take_finished();
+        let rz = rs.iter().find(|r| r.id == zero).unwrap();
+        assert!(rz.tokens.is_empty(), "zero budget must not generate");
+        assert_eq!(rz.finish_reason, FinishReason::MaxTokens);
+        let ro = rs.iter().find(|r| r.id == one).unwrap();
+        assert_eq!(ro.tokens.len(), 1, "budget 1 still gets its free prefill token");
+        // No Token event for the zero-budget id; exactly one terminal.
+        assert!(events
+            .iter()
+            .all(|e| !matches!(e, EngineEvent::Token { id, .. } if *id == zero)));
+        let terminals = events.iter().filter(|e| e.is_terminal() && e.id() == zero).count();
+        assert_eq!(terminals, 1, "{events:?}");
+        // And no KV was pinned for it.
+        let m = c.backend().as_native().unwrap();
+        assert_eq!(m.kv_pool().resident_bytes(), 0);
+    }
+
+    #[test]
+    fn row_cap_rotates_and_is_value_neutral() {
+        // max_rows_per_tick bounds each tick to one row; every session
+        // still completes with exactly the tokens the uncapped engine
+        // produces, and each capped tick emits at most one Token event.
+        let capped_model = fixtures::native_model(
+            7,
+            EngineOptions { max_rows_per_tick: 1, ..EngineOptions::default() },
+        )
+        .unwrap()
+        .1;
+        let prompts: Vec<Vec<usize>> = vec![vec![5, 6, 7], vec![100, 101], vec![42; 5]];
+        let mut capped =
+            Coordinator::new(Backend::Native(Box::new(capped_model)), SchedulePolicy::Interleaved);
+        for p in &prompts {
+            capped.submit(p.clone(), 4);
+        }
+        let mut max_tokens_per_tick = 0usize;
+        while capped.step().unwrap() {
+            let toks = capped
+                .drain_events()
+                .iter()
+                .filter(|e| matches!(e, EngineEvent::Token { .. }))
+                .count();
+            max_tokens_per_tick = max_tokens_per_tick.max(toks);
+        }
+        let mut got = capped.take_finished();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 3, "rotation must reach every session");
+        assert!(
+            max_tokens_per_tick <= 1,
+            "a 1-row tick emitted {max_tokens_per_tick} tokens"
+        );
+
+        let mut plain = Coordinator::new(
+            Backend::Native(Box::new(native())),
+            SchedulePolicy::Interleaved,
+        );
+        for p in &prompts {
+            plain.submit(p.clone(), 4);
+        }
+        let want = plain.run_all().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "row cap changed outputs");
+        }
     }
 
     #[test]

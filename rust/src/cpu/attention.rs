@@ -46,6 +46,11 @@ pub fn decode_attention(q: &[f32], heads: usize, cache: &KvLayer, out: &mut [f32
 ///
 /// * `q` — [s, heads, d] roped, unscaled; `k`, `v` — [s, kv_heads, d].
 /// * `out` — [s, heads, d].
+///
+/// A chunk with an empty prefix: see [`chunked_prefill_attention`], which
+/// this delegates to so monolithic and chunked prefill share one code
+/// path (the bit-identity argument needs no "two implementations agree"
+/// step).
 pub fn prefill_attention(
     q: &[f32],
     k: &[f32],
@@ -56,13 +61,51 @@ pub fn prefill_attention(
     d: usize,
     out: &mut [f32],
 ) {
+    chunked_prefill_attention(q, &[], &[], k, v, 0, s, heads, kv_heads, d, out);
+}
+
+/// Causal attention for one prefill **chunk**: `s` fresh tokens whose
+/// sequence already holds `base` earlier prompt tokens, attending over the
+/// retained fp32 prefix K/V (`pk`/`pv` — [base, kv_heads, d]) plus the
+/// fresh chunk causally.
+///
+/// * `q` — [s, heads, d] roped, unscaled (the 1/sqrt(d) pre-scale is
+///   applied here, §5.3); `k`, `v` — [s, kv_heads, d] fresh chunk rows.
+/// * `out` — [s, heads, d].
+///
+/// Bit-identity across chunk boundaries: the fresh token at chunk-local
+/// `qi` (global position `base + qi`) scores the prefix rows first and the
+/// chunk rows `0..=qi` second — exactly the `0..=base+qi` order a
+/// monolithic [`prefill_attention`] over the whole prompt walks, with the
+/// same dot-product accumulation order, one fp32 softmax over the same
+/// contiguous score slice, and the same value-accumulation order. Given a
+/// prefix K/V that is bit-equal to the monolithic pass's rows (projection
+/// is row-independent), every output row is therefore bit-identical to
+/// the monolithic pass's row `base + qi` — the correctness argument the
+/// chunked-prefill property tests pin down.
+#[allow(clippy::too_many_arguments)]
+pub fn chunked_prefill_attention(
+    q: &[f32],
+    pk: &[f32],
+    pv: &[f32],
+    k: &[f32],
+    v: &[f32],
+    base: usize,
+    s: usize,
+    heads: usize,
+    kv_heads: usize,
+    d: usize,
+    out: &mut [f32],
+) {
     assert_eq!(q.len(), s * heads * d);
+    assert_eq!(pk.len(), base * kv_heads * d);
+    assert_eq!(pv.len(), base * kv_heads * d);
     assert_eq!(k.len(), s * kv_heads * d);
     assert_eq!(v.len(), s * kv_heads * d);
     assert_eq!(out.len(), s * heads * d);
     let group = heads / kv_heads;
     let scale = 1.0 / (d as f32).sqrt();
-    let mut scores = vec![0f32; s];
+    let mut scores = vec![0f32; base + s];
     let mut qs = vec![0f32; d];
     for h in 0..heads {
         let kvh = h / group;
@@ -71,6 +114,16 @@ pub fn prefill_attention(
             for i in 0..d {
                 qs[i] = qrow[i] * scale;
             }
+            // Prefix rows, then the causal span of the fresh chunk — the
+            // same global key order 0..=base+qi as a monolithic pass.
+            for ki in 0..base {
+                let krow = &pk[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
+                let mut acc = 0f32;
+                for i in 0..d {
+                    acc += qs[i] * krow[i];
+                }
+                scores[ki] = acc;
+            }
             let causal = qi + 1;
             for ki in 0..causal {
                 let krow = &k[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
@@ -78,13 +131,20 @@ pub fn prefill_attention(
                 for i in 0..d {
                     acc += qs[i] * krow[i];
                 }
-                scores[ki] = acc;
+                scores[base + ki] = acc;
             }
-            softmax_inplace(&mut scores[..causal]);
+            softmax_inplace(&mut scores[..base + causal]);
             let o = &mut out[(qi * heads + h) * d..(qi * heads + h) * d + d];
             o.fill(0.0);
-            for ki in 0..causal {
+            for ki in 0..base {
                 let w = scores[ki];
+                let vrow = &pv[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
+                for i in 0..d {
+                    o[i] += w * vrow[i];
+                }
+            }
+            for ki in 0..causal {
+                let w = scores[base + ki];
                 let vrow = &v[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
                 for i in 0..d {
                     o[i] += w * vrow[i];
@@ -208,6 +268,43 @@ mod tests {
         for r in 0..s - 1 {
             for i in 0..heads * d {
                 assert_eq!(out1[r * heads * d + i], out2[r * heads * d + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_monolithic() {
+        // Split a sequence at every boundary; each chunk attends over the
+        // retained prefix + itself. Outputs must equal the monolithic
+        // pass bit for bit (the chunk-boundary causal-mask invariant).
+        let mut rng = Rng::new(6);
+        let (s, heads, kv_heads, d) = (7usize, 4, 2, 8);
+        let q = rng.normal_vec(s * heads * d);
+        let k = rng.normal_vec(s * kv_heads * d);
+        let v = rng.normal_vec(s * kv_heads * d);
+        let mut want = vec![0f32; s * heads * d];
+        prefill_attention(&q, &k, &v, s, heads, kv_heads, d, &mut want);
+        for split in 1..s {
+            for (base, len) in [(0usize, split), (split, s - split)] {
+                let mut out = vec![0f32; len * heads * d];
+                chunked_prefill_attention(
+                    &q[base * heads * d..(base + len) * heads * d],
+                    &k[..base * kv_heads * d],
+                    &v[..base * kv_heads * d],
+                    &k[base * kv_heads * d..(base + len) * kv_heads * d],
+                    &v[base * kv_heads * d..(base + len) * kv_heads * d],
+                    base,
+                    len,
+                    heads,
+                    kv_heads,
+                    d,
+                    &mut out,
+                );
+                assert_eq!(
+                    out,
+                    want[base * heads * d..(base + len) * heads * d].to_vec(),
+                    "split {split} chunk at base {base} diverged"
+                );
             }
         }
     }

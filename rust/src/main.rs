@@ -113,6 +113,9 @@ fn pump_streaming(c: &mut Coordinator, tok: &ByteTokenizer) -> anyhow::Result<()
                 EngineEvent::Rejected { id, reason } => {
                     println!("  req {id}: rejected ({reason})")
                 }
+                EngineEvent::Failed { id, reason } => {
+                    println!("  req {id}: failed ({reason})")
+                }
             }
         }
         if !more {

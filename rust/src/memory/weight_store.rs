@@ -361,8 +361,18 @@ pub struct WeightResidencyMetrics {
     pub tokens_generated: u64,
     /// Flash blob fetches attributed to decode layer walks only (the model
     /// snapshots the fetch counters around each decode pass), so the gauge
-    /// is not polluted by load warm-up or prefill traffic.
+    /// is not polluted by load warm-up or prefill traffic. A mixed tick
+    /// (prefill chunks fused with decode rows) attributes its shared walk
+    /// here — decode is the steady state.
     pub decode_fetches: u64,
+    /// Prompt tokens prefilled against this store (chunked or monolithic).
+    /// Denominator of
+    /// [`fetches_per_prompt_token`](Self::fetches_per_prompt_token).
+    pub prompt_tokens_prefilled: u64,
+    /// Flash blob fetches attributed to **pure-prefill** layer walks —
+    /// the traffic fused batched prefill amortizes across concurrently
+    /// admitted prompts (mixed ticks land in `decode_fetches` instead).
+    pub prefill_fetches: u64,
 }
 
 impl WeightResidencyMetrics {
@@ -389,6 +399,19 @@ impl WeightResidencyMetrics {
             0.0
         } else {
             self.decode_fetches as f64 / self.tokens_generated as f64
+        }
+    }
+
+    /// Pure-prefill flash blob fetches per prompt token — the quantity
+    /// fused batched prefill drives down: admitting N short prompts one
+    /// walk at a time pays ≈ layers fetches per prompt under a tight
+    /// budget; one shared walk pays ≈ layers for all N. 0.0 until any
+    /// prompt token was prefilled.
+    pub fn fetches_per_prompt_token(&self) -> f64 {
+        if self.prompt_tokens_prefilled == 0 {
+            0.0
+        } else {
+            self.prefill_fetches as f64 / self.prompt_tokens_prefilled as f64
         }
     }
 }
@@ -425,6 +448,8 @@ struct State {
     flash_read_s: f64,
     tokens_generated: u64,
     decode_fetches: u64,
+    prompt_tokens_prefilled: u64,
+    prefill_fetches: u64,
 }
 
 struct Shared {
@@ -677,6 +702,8 @@ impl WeightStore {
             flash_read_s: st.flash_read_s,
             tokens_generated: st.tokens_generated,
             decode_fetches: st.decode_fetches,
+            prompt_tokens_prefilled: st.prompt_tokens_prefilled,
+            prefill_fetches: st.prefill_fetches,
         }
     }
 
@@ -689,6 +716,16 @@ impl WeightStore {
         let mut st = self.shared.state.lock().unwrap();
         st.tokens_generated += tokens;
         st.decode_fetches += fetches;
+    }
+
+    /// Record prefill work: `prompt_tokens` prefilled this walk and (for
+    /// pure-prefill walks) the fetch-counter delta the walk produced.
+    /// Feeds the fetches-per-prompt-token gauge that makes fused batched
+    /// prefill's weight amortization observable.
+    pub fn note_prefill_pass(&self, prompt_tokens: u64, fetches: u64) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.prompt_tokens_prefilled += prompt_tokens;
+        st.prefill_fetches += fetches;
     }
 
     /// Arena-accounted resident bytes (snapshot).
@@ -1045,6 +1082,38 @@ mod tests {
             "{m2:?}"
         );
         assert!(round2 as f64 / 4.0 < m1.decode_fetches as f64, "amortized");
+    }
+
+    #[test]
+    fn fetches_per_prompt_token_tracks_prefill_reads() {
+        let unlimited = store_with(4, usize::MAX);
+        let per_layer = unlimited.total_packed_bytes() / 4;
+        let store = store_with(4, per_layer); // pure demand paging
+        assert_eq!(store.metrics().fetches_per_prompt_token(), 0.0, "no prompts yet");
+        // One 6-token prompt walking all 4 layers (pure prefill walk).
+        let before = store.metrics().total_fetches();
+        for li in 0..4 {
+            store.layer(li).unwrap();
+        }
+        store.note_prefill_pass(6, store.metrics().total_fetches() - before);
+        let m1 = store.metrics();
+        assert_eq!(m1.prompt_tokens_prefilled, 6);
+        assert!(m1.prefill_fetches >= 3, "{m1:?}");
+        assert_eq!(m1.decode_fetches, 0, "prefill traffic stays off the decode gauge");
+        assert_eq!(m1.fetches_per_prompt_token(), m1.prefill_fetches as f64 / 6.0);
+        // A fused walk shared by 4 such prompts: same reads, 4× the
+        // prompt tokens — per-prompt-token cost ÷ 4.
+        let mid = store.metrics().total_fetches();
+        for li in 0..4 {
+            store.layer(li).unwrap();
+        }
+        store.note_prefill_pass(24, store.metrics().total_fetches() - mid);
+        let m2 = store.metrics();
+        let round2 = m2.prefill_fetches - m1.prefill_fetches;
+        assert!(
+            (round2 as f64 / 24.0) < m1.fetches_per_prompt_token(),
+            "fused prefill amortizes: {m2:?}"
+        );
     }
 
     #[test]

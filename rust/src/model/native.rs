@@ -29,8 +29,9 @@ use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::coordinator::backend::RowWork;
 use crate::cpu::activation::{add_inplace, rmsnorm, swiglu};
-use crate::cpu::attention::prefill_attention;
+use crate::cpu::attention::chunked_prefill_attention;
 use crate::cpu::gemm_q::QLinear;
 use crate::device::SocProfile;
 use crate::kv::{EvictionPolicy, KvPool, PAGE_TOKENS};
@@ -77,6 +78,21 @@ pub struct EngineOptions {
     /// (`LargestHolder`, see [`NativeModel::enforce_kv_budget`]). Both are
     /// bit-exact value-neutral; only who pays the flash traffic changes.
     pub eviction: EvictionPolicy,
+    /// Longest prompt slice one engine tick may prefill for a single
+    /// request. The engine splits longer prompts into chunks of this many
+    /// tokens, so one long prompt cannot monopolize a tick (bounded
+    /// per-tick latency, low TTFT for short prompts arriving alongside).
+    /// Chunking is bit-exact value-neutral (the session retains the fp32
+    /// prompt K/V until its prefill completes — see
+    /// [`NativeModel::forward_tick`]). `usize::MAX` (the default)
+    /// disables chunking.
+    pub prefill_chunk_tokens: usize,
+    /// Most rows (sessions) one fused engine tick may advance; with more
+    /// active sessions the engine rotates a window through them, bounding
+    /// per-token event latency at large B. `usize::MAX` (the default)
+    /// serves every active session each tick. Value-neutral (rows are
+    /// independent); only scheduling order changes.
+    pub max_rows_per_tick: usize,
 }
 
 impl Default for EngineOptions {
@@ -89,6 +105,8 @@ impl Default for EngineOptions {
             weight_dram_bytes: usize::MAX,
             embedding_in_flash: true,
             eviction: EvictionPolicy::ShedSelf,
+            prefill_chunk_tokens: usize::MAX,
+            max_rows_per_tick: usize::MAX,
         }
     }
 }
@@ -103,9 +121,27 @@ pub struct NativeSession {
     pub pos: usize,
     /// Select a loaded LoRA task for this session (§5.5 multitask).
     pub lora_task: Option<String>,
+    /// fp32 K/V of the prompt tokens prefilled so far, one pair of
+    /// buffers per decoder layer — present only **while the prompt is
+    /// still being consumed in chunks**. Later chunks attend over this
+    /// prefix with exactly the arithmetic a monolithic prefill uses over
+    /// its own fresh K/V, which is what makes chunked prefill
+    /// bit-identical to monolithic prefill (the quantized KV cache
+    /// cannot serve that role: decode dequantization differs from the
+    /// fresh fp32 rows). Dropped the moment the final chunk lands, so
+    /// the transient DRAM cost — `layers × prompt × kv_dim × 8` bytes —
+    /// is bounded by the prefill phase.
+    prefill_stash: Option<PrefillStash>,
     /// Decrements the model's live-session count on drop (gates flash
     /// spill-store reclamation).
     _live: SessionGuard,
+}
+
+/// The retained fp32 prompt K/V (`[layers][tokens * kv_dim]`, row-major
+/// per token) of a partially prefilled session.
+struct PrefillStash {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
 }
 
 struct SessionGuard(Arc<AtomicUsize>);
@@ -144,6 +180,15 @@ impl NativeSession {
         for l in &mut self.kv {
             l.release();
         }
+        self.prefill_stash = None;
+    }
+
+    /// DRAM bytes of the retained fp32 prompt K/V (non-zero only while a
+    /// chunked prefill is in flight).
+    pub fn prefill_stash_bytes(&self) -> usize {
+        self.prefill_stash.as_ref().map_or(0, |s| {
+            (s.k.iter().map(Vec::len).sum::<usize>() + s.v.iter().map(Vec::len).sum::<usize>()) * 4
+        })
     }
 
     /// Preempt: push every resident KV record to flash and release all
@@ -415,7 +460,35 @@ impl NativeModel {
             kv,
             pos: 0,
             lora_task: None,
+            prefill_stash: None,
             _live: SessionGuard(self.live_sessions.clone()),
+        }
+    }
+
+    /// Unreserved KV-pool headroom: budget − resident bytes (saturating).
+    /// The engine's per-tick admission loop charges each outstanding
+    /// prefill's [`prefill_reserve_bytes`](Self::prefill_reserve_bytes)
+    /// against this, so a burst of admissions cannot overcommit the pool
+    /// (the first admission of a tick still goes through
+    /// [`make_room`](Self::make_room), which may preempt).
+    pub fn kv_headroom(&self) -> usize {
+        self.kv_pool.budget_bytes().saturating_sub(self.kv_pool.resident_bytes())
+    }
+
+    /// Admission-reservation estimate for a `prompt_len`-token prefill:
+    /// the page-granular quantized-KV footprint, plus — when the prompt
+    /// is long enough that chunking will split it — the fp32
+    /// `PrefillStash` the session retains until its prefill completes
+    /// (`layers × prompt × kv_dim × 8` bytes). Charging the stash here
+    /// keeps a burst of long chunked prompts from overcommitting DRAM
+    /// through memory the pool never sees.
+    pub fn prefill_reserve_bytes(&self, prompt_len: usize) -> usize {
+        let pages = self.prefill_kv_page_bytes(prompt_len);
+        if prompt_len > self.options.prefill_chunk_tokens {
+            let stash = self.config.layers * prompt_len * self.config.kv_dim() * 8;
+            pages.saturating_add(stash)
+        } else {
+            pages
         }
     }
 
@@ -555,78 +628,31 @@ impl NativeModel {
     }
 
     /// Prefill `ids`; returns logits for the **last** token ([vocab]).
-    /// Leaves the session's KV cache filled and `pos` advanced.
+    /// Leaves the session's KV cache filled and `pos` advanced. A
+    /// single-chunk [`prefill_chunk`](Self::prefill_chunk): monolithic
+    /// and chunked prefill share one code path, so splitting a prompt is
+    /// bit-identical by construction.
     pub fn prefill(&self, sess: &mut NativeSession, ids: &[usize]) -> Vec<f32> {
-        let s = ids.len();
-        assert!(s > 0);
-        let cfg = self.config.clone();
-        let (h, hd, heads, kvh) = (cfg.hidden, cfg.head_dim(), cfg.heads, cfg.kv_heads);
-        let kv_dim = cfg.kv_dim();
-        // Borrow, don't clone: `lora_task` and the fields mutated below
-        // (`kv`, `pos`) are disjoint, so no per-call String allocation.
-        let task = sess.lora_task.as_deref();
-        let mut x = vec![0f32; s * h];
-        self.embed(ids, &mut x);
-        let base_pos = sess.pos;
-        let mut norm = vec![0f32; s * h];
-        let mut q = vec![0f32; s * h];
-        let mut k = vec![0f32; s * kv_dim];
-        let mut v = vec![0f32; s * kv_dim];
-        let mut attn = vec![0f32; s * h];
-        let mut attn_out = vec![0f32; s * h];
-        let mut gate = vec![0f32; s * cfg.inter];
-        let mut up = vec![0f32; s * cfg.inter];
-        let mut act = vec![0f32; s * cfg.inter];
-        let mut mlp = vec![0f32; s * h];
-        for li in 0..cfg.layers {
-            // Kick upcoming layers' flash fetches before touching this one
-            // so the reads overlap this layer's compute (§4.1 overlap,
-            // weights edition). Depth is budget-aware: as many layers ahead
-            // as the arena can hold next to the current one. No-op when
-            // everything is already resident.
-            self.weights.prefetch_ahead(&self.prefetcher, li + 1);
-            let layer = self.weights.layer(li).expect("weight residency");
-            rmsnorm(&x, &layer.ln1, &mut norm, s, cfg.rms_eps);
-            self.linear(&layer.wq, &norm, s, &mut q);
-            self.linear(&layer.wk, &norm, s, &mut k);
-            self.linear(&layer.wv, &norm, s, &mut v);
-            self.lora_apply(task, li, "wq", &norm, s, &mut q);
-            self.lora_apply(task, li, "wk", &norm, s, &mut k);
-            self.lora_apply(task, li, "wv", &norm, s, &mut v);
-            // RoPE per token/head ([s, heads, hd] layout == [s, h]).
-            for t in 0..s {
-                for hh in 0..heads {
-                    self.rope(&mut q[(t * heads + hh) * hd..(t * heads + hh + 1) * hd], base_pos + t);
-                }
-                for hh in 0..kvh {
-                    self.rope(&mut k[(t * kvh + hh) * hd..(t * kvh + hh + 1) * hd], base_pos + t);
-                }
-            }
-            prefill_attention(&q, &k, &v, s, heads, kvh, hd, &mut attn);
-            // Cache the fresh K/V (quantized append per token).
-            for t in 0..s {
-                sess.kv[li]
-                    .append(&k[t * kv_dim..(t + 1) * kv_dim], &v[t * kv_dim..(t + 1) * kv_dim])
-                    .expect("kv append");
-            }
-            self.linear(&layer.wo, &attn, s, &mut attn_out);
-            self.lora_apply(task, li, "wo", &attn, s, &mut attn_out);
-            add_inplace(&mut x, &attn_out);
-            rmsnorm(&x, &layer.ln2, &mut norm, s, cfg.rms_eps);
-            self.linear(&layer.gate, &norm, s, &mut gate);
-            self.linear(&layer.up, &norm, s, &mut up);
-            swiglu(&gate, &up, &mut act);
-            self.linear(&layer.down, &act, s, &mut mlp);
-            add_inplace(&mut x, &mlp);
-        }
-        sess.pos = base_pos + s;
-        // Final norm + lm_head on the last row only.
-        let last = &x[(s - 1) * h..s * h];
-        let mut fin = vec![0f32; h];
-        rmsnorm(last, &self.fnorm, &mut fin, 1, cfg.rms_eps);
-        let mut logits = vec![0f32; cfg.vocab];
-        self.linear(&self.lm_head, &fin, 1, &mut logits);
-        logits
+        assert!(!ids.is_empty());
+        self.prefill_chunk(sess, ids, true).expect("final chunk returns logits")
+    }
+
+    /// Consume the next contiguous `ids` slice of the session's prompt
+    /// (an incremental **prefill chunk**); returns last-row logits for
+    /// the final chunk (`last`), `None` otherwise. Between chunks the
+    /// session retains the prompt's fp32 K/V per layer, so every chunk's
+    /// causal attention spans the chunk boundary with exactly the
+    /// monolithic arithmetic (see [`forward_tick`](Self::forward_tick)).
+    /// A batch-of-one `forward_tick`.
+    pub fn prefill_chunk(
+        &self,
+        sess: &mut NativeSession,
+        ids: &[usize],
+        last: bool,
+    ) -> Option<Vec<f32>> {
+        self.forward_tick(&mut [sess], &[RowWork::Prefill { ids, last }])
+            .pop()
+            .expect("one row")
     }
 
     /// One decode step for `id` at the session's position; returns logits.
@@ -643,125 +669,312 @@ impl NativeModel {
     /// which is the §4.1 decode-bandwidth amortization continuous batching
     /// buys on this backend. Row r consumes `ids[r]` at `sessions[r]`'s own
     /// position and gets `sessions[r]`'s logits in the returned row r.
+    /// An all-decode [`forward_tick`](Self::forward_tick); see there for
+    /// the value-neutrality argument.
+    pub fn decode_batch(&self, sessions: &mut [&mut NativeSession], ids: &[usize]) -> Vec<Vec<f32>> {
+        assert_eq!(sessions.len(), ids.len(), "one token per session");
+        let works: Vec<RowWork> = ids.iter().map(|&tok| RowWork::Decode { tok }).collect();
+        self.forward_tick(sessions, &works)
+            .into_iter()
+            .map(|row| row.expect("decode rows return logits"))
+            .collect()
+    }
+
+    /// One fused scheduler tick: a **single layer walk** serves every row
+    /// — decode steps *and* prefill chunks — paying one `weight_store`
+    /// fetch (+ budget-aware lookahead prefetch) per layer per call
+    /// total. Row r performs `works[r]` on `sessions[r]`; the returned
+    /// row r holds that session's logits (`None` for a non-final prefill
+    /// chunk, whose logits nobody needs).
     ///
     /// Value-neutrality: rows are computed independently and row-major —
     /// per-row dynamic activation quantization, exact integer GEMM
-    /// accumulation and per-row affine corrections (`cpu::gemm_q`), per-row
-    /// RoPE at each session's own position, per-session KV append +
-    /// online-softmax attention over that session's (possibly spilled)
-    /// cache, and per-row LoRA deltas keyed by each session's task. The
-    /// batch therefore produces **bit-identical** logits to decoding the
-    /// sessions one at a time, in any batch composition — the invariant
-    /// the engine's batched rounds and the parity tests rely on.
-    pub fn decode_batch(&self, sessions: &mut [&mut NativeSession], ids: &[usize]) -> Vec<Vec<f32>> {
+    /// accumulation and per-row affine corrections (`cpu::gemm_q`),
+    /// per-row RoPE at each token's own absolute position, per-row LoRA
+    /// deltas keyed by each session's task, and per-session attention.
+    /// The batch therefore produces **bit-identical** logits to running
+    /// the rows one at a time, in any batch composition — the invariant
+    /// the engine's fused ticks and the parity tests rely on.
+    ///
+    /// Chunked-prefill correctness: a prefill chunk's causal attention
+    /// must span the chunk boundary with monolithic arithmetic. The
+    /// session retains the prompt's fresh **fp32** K/V per layer while
+    /// its prefill is in flight (`PrefillStash`); each chunk scores the
+    /// stashed prefix first and its own fresh rows second — the exact key
+    /// order, dot-product accumulation and one-softmax evaluation a
+    /// monolithic [`prefill`](Self::prefill) performs (see
+    /// [`chunked_prefill_attention`]) — then appends its K/V to both the
+    /// quantized cache (for decode) and the stash (for the next chunk).
+    /// The stash is dropped the moment the final chunk lands. Decode
+    /// rows attend over the quantized cache through the online-softmax
+    /// streaming path exactly as before (spill-neutral, §4.1).
+    pub fn forward_tick(
+        &self,
+        sessions: &mut [&mut NativeSession],
+        works: &[RowWork<'_>],
+    ) -> Vec<Option<Vec<f32>>> {
         let m = sessions.len();
-        assert_eq!(m, ids.len(), "one token per session");
+        assert_eq!(m, works.len(), "one work item per session");
         if m == 0 {
             return Vec::new();
         }
         let cfg = self.config.clone();
         let (h, hd, heads, kvh) = (cfg.hidden, cfg.head_dim(), cfg.heads, cfg.kv_heads);
         let kv_dim = cfg.kv_dim();
-        // Attribute this walk's flash fetches to the decode gauge only —
-        // load warm-up and prefill traffic must not pollute fetch/token.
+        // Attribute this walk's flash fetches to exactly one gauge — see
+        // the accounting note at the end of the walk.
         let fetches_before = self.weights.metrics().total_fetches();
-        let mut x = vec![0f32; m * h];
-        self.embed(ids, &mut x);
-        let mut norm = vec![0f32; m * h];
-        let mut q = vec![0f32; m * h];
-        let mut k = vec![0f32; m * kv_dim];
-        let mut v = vec![0f32; m * kv_dim];
-        let mut attn = vec![0f32; m * h];
-        let mut attn_out = vec![0f32; m * h];
-        let mut gate = vec![0f32; m * cfg.inter];
-        let mut up = vec![0f32; m * cfg.inter];
-        let mut act = vec![0f32; m * cfg.inter];
-        let mut mlp = vec![0f32; m * h];
+        // Row widths (decode rows are width 1), row offsets into the
+        // packed [total, h] activation batch, and each row's base
+        // position (all tokens of row r sit at `bases[r] + t`).
+        let mut widths = Vec::with_capacity(m);
+        let mut all_ids: Vec<usize> = Vec::with_capacity(m);
+        for w in works {
+            match *w {
+                RowWork::Prefill { ids, .. } => {
+                    assert!(!ids.is_empty(), "empty prefill chunk");
+                    widths.push(ids.len());
+                    all_ids.extend_from_slice(ids);
+                }
+                RowWork::Decode { tok } => {
+                    widths.push(1);
+                    all_ids.push(tok);
+                }
+            }
+        }
+        let mut offs = Vec::with_capacity(m);
+        let mut total = 0usize;
+        for &w in &widths {
+            offs.push(total);
+            total += w;
+        }
+        let bases: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
+        // First chunk of a still-unfinished prompt: set up the per-layer
+        // fp32 stash. A `last` chunk never stashes — only *later* chunks
+        // read the stash, so a single-chunk (monolithic) prefill
+        // allocates none at all, keeping the default path's memory
+        // profile unchanged.
+        for (sess, w) in sessions.iter_mut().zip(works) {
+            if let RowWork::Prefill { last: false, .. } = *w {
+                if sess.prefill_stash.is_none() {
+                    sess.prefill_stash = Some(PrefillStash {
+                        k: vec![Vec::new(); cfg.layers],
+                        v: vec![Vec::new(); cfg.layers],
+                    });
+                }
+            }
+        }
+        let mut x = vec![0f32; total * h];
+        self.embed(&all_ids, &mut x);
+        let mut norm = vec![0f32; total * h];
+        let mut q = vec![0f32; total * h];
+        let mut k = vec![0f32; total * kv_dim];
+        let mut v = vec![0f32; total * kv_dim];
+        let mut attn = vec![0f32; total * h];
+        let mut attn_out = vec![0f32; total * h];
+        let mut gate = vec![0f32; total * cfg.inter];
+        let mut up = vec![0f32; total * cfg.inter];
+        let mut act = vec![0f32; total * cfg.inter];
+        let mut mlp = vec![0f32; total * h];
         for li in 0..cfg.layers {
-            // Budget-aware lookahead prefetch, same contract as in prefill
-            // — issued once per layer per *batch*, not per session.
+            // Kick upcoming layers' flash fetches before touching this one
+            // so the reads overlap this layer's compute (§4.1 overlap,
+            // weights edition) — issued once per layer per *tick*, not per
+            // session. Depth is budget-aware; no-op when everything is
+            // already resident.
             self.weights.prefetch_ahead(&self.prefetcher, li + 1);
             let layer = self.weights.layer(li).expect("weight residency");
-            rmsnorm(&x, &layer.ln1, &mut norm, m, cfg.rms_eps);
-            // m-row packed GEMMs: the same batched path prefill rows use.
-            self.linear(&layer.wq, &norm, m, &mut q);
-            self.linear(&layer.wk, &norm, m, &mut k);
-            self.linear(&layer.wv, &norm, m, &mut v);
-            // Per-row LoRA bypass, keyed by each session's own task.
+            rmsnorm(&x, &layer.ln1, &mut norm, total, cfg.rms_eps);
+            // total-row packed GEMMs: one pass shared by every row.
+            self.linear(&layer.wq, &norm, total, &mut q);
+            self.linear(&layer.wk, &norm, total, &mut k);
+            self.linear(&layer.wv, &norm, total, &mut v);
+            // Per-row LoRA bypass over each row's own slice, keyed by each
+            // session's task (row-independent ⇒ equal to a whole-block
+            // application).
             for (r, sess) in sessions.iter().enumerate() {
                 let task = sess.lora_task.as_deref();
                 if task.is_some() {
-                    self.lora_apply(task, li, "wq", &norm[r * h..(r + 1) * h], 1,
-                                    &mut q[r * h..(r + 1) * h]);
-                    self.lora_apply(task, li, "wk", &norm[r * h..(r + 1) * h], 1,
-                                    &mut k[r * kv_dim..(r + 1) * kv_dim]);
-                    self.lora_apply(task, li, "wv", &norm[r * h..(r + 1) * h], 1,
-                                    &mut v[r * kv_dim..(r + 1) * kv_dim]);
+                    let (o, s_r) = (offs[r], widths[r]);
+                    self.lora_apply(task, li, "wq", &norm[o * h..(o + s_r) * h], s_r,
+                                    &mut q[o * h..(o + s_r) * h]);
+                    self.lora_apply(task, li, "wk", &norm[o * h..(o + s_r) * h], s_r,
+                                    &mut k[o * kv_dim..(o + s_r) * kv_dim]);
+                    self.lora_apply(task, li, "wv", &norm[o * h..(o + s_r) * h], s_r,
+                                    &mut v[o * kv_dim..(o + s_r) * kv_dim]);
                 }
             }
-            // Per-row RoPE at each session's own position, then that
-            // session's KV append + online-softmax attention that streams
-            // any spilled prefix from flash in bounded chunks (§4.1): DRAM
-            // stays O(resident + chunk) at any context length. With nothing
-            // spilled it reduces to a pure in-DRAM pass over the resident
-            // pages — one code path, so spilling (token budget, pool
-            // pressure, preemption) is *bit-exact* value-neutral, not
-            // merely numerically close.
+            // Per-row RoPE at each token's own absolute position, then the
+            // row's attention: chunked causal over the fp32 stash + fresh
+            // rows for prefill chunks, online-softmax streaming over the
+            // (possibly spilled) quantized cache for decode rows — one
+            // code path with the sequential forms, so spilling and
+            // batching stay *bit-exact* value-neutral.
             for (r, sess) in sessions.iter_mut().enumerate() {
-                let pos = sess.pos;
-                let qr = &mut q[r * h..(r + 1) * h];
-                for hh in 0..heads {
-                    self.rope(&mut qr[hh * hd..(hh + 1) * hd], pos);
+                let (o, s_r, base) = (offs[r], widths[r], bases[r]);
+                for t in 0..s_r {
+                    let qrow = &mut q[(o + t) * h..(o + t + 1) * h];
+                    for hh in 0..heads {
+                        self.rope(&mut qrow[hh * hd..(hh + 1) * hd], base + t);
+                    }
+                    let krow = &mut k[(o + t) * kv_dim..(o + t + 1) * kv_dim];
+                    for hh in 0..kvh {
+                        self.rope(&mut krow[hh * hd..(hh + 1) * hd], base + t);
+                    }
                 }
-                let kr = &mut k[r * kv_dim..(r + 1) * kv_dim];
-                for hh in 0..kvh {
-                    self.rope(&mut kr[hh * hd..(hh + 1) * hd], pos);
+                match works[r] {
+                    RowWork::Prefill { last, .. } => {
+                        {
+                            // The causal prefix is whatever this prompt's
+                            // earlier chunks stashed. (A fresh prompt — or
+                            // a legacy multi-turn `prefill` on a session
+                            // that already decoded, which never stashed —
+                            // has an empty prefix, preserving the
+                            // fresh-only attention semantics `prefill`
+                            // always had; RoPE still uses absolute
+                            // positions either way.)
+                            let empty: &[f32] = &[];
+                            let (pk, pv) = match sess.prefill_stash.as_ref() {
+                                Some(stash) => (stash.k[li].as_slice(), stash.v[li].as_slice()),
+                                None => (empty, empty),
+                            };
+                            let prefix = pk.len() / kv_dim;
+                            chunked_prefill_attention(
+                                &q[o * h..(o + s_r) * h],
+                                pk,
+                                pv,
+                                &k[o * kv_dim..(o + s_r) * kv_dim],
+                                &v[o * kv_dim..(o + s_r) * kv_dim],
+                                prefix,
+                                s_r,
+                                heads,
+                                kvh,
+                                hd,
+                                &mut attn[o * h..(o + s_r) * h],
+                            );
+                        }
+                        // Quantized append (what decode will attend over),
+                        // then — only when another chunk will follow —
+                        // extend the fp32 stash so the next chunk's causal
+                        // span stays exact (a final chunk's rows would
+                        // never be read: the stash drops at walk end).
+                        for t in 0..s_r {
+                            sess.kv[li]
+                                .append(
+                                    &k[(o + t) * kv_dim..(o + t + 1) * kv_dim],
+                                    &v[(o + t) * kv_dim..(o + t + 1) * kv_dim],
+                                )
+                                .expect("kv append");
+                        }
+                        if !last {
+                            let stash = sess.prefill_stash.as_mut().expect("stash initialized");
+                            stash.k[li].extend_from_slice(&k[o * kv_dim..(o + s_r) * kv_dim]);
+                            stash.v[li].extend_from_slice(&v[o * kv_dim..(o + s_r) * kv_dim]);
+                        }
+                    }
+                    RowWork::Decode { .. } => {
+                        sess.kv[li]
+                            .append(
+                                &k[o * kv_dim..(o + 1) * kv_dim],
+                                &v[o * kv_dim..(o + 1) * kv_dim],
+                            )
+                            .expect("kv append");
+                        sess.kv[li]
+                            .decode_attention_streaming(
+                                &q[o * h..(o + 1) * h],
+                                heads,
+                                &mut attn[o * h..(o + 1) * h],
+                                KV_STREAM_CHUNK,
+                            )
+                            .expect("kv stream");
+                    }
                 }
-                sess.kv[li]
-                    .append(&k[r * kv_dim..(r + 1) * kv_dim], &v[r * kv_dim..(r + 1) * kv_dim])
-                    .expect("kv append");
-                sess.kv[li]
-                    .decode_attention_streaming(
-                        &q[r * h..(r + 1) * h],
-                        heads,
-                        &mut attn[r * h..(r + 1) * h],
-                        KV_STREAM_CHUNK,
-                    )
-                    .expect("kv stream");
             }
-            self.linear(&layer.wo, &attn, m, &mut attn_out);
+            self.linear(&layer.wo, &attn, total, &mut attn_out);
             for (r, sess) in sessions.iter().enumerate() {
                 let task = sess.lora_task.as_deref();
                 if task.is_some() {
-                    self.lora_apply(task, li, "wo", &attn[r * h..(r + 1) * h], 1,
-                                    &mut attn_out[r * h..(r + 1) * h]);
+                    let (o, s_r) = (offs[r], widths[r]);
+                    self.lora_apply(task, li, "wo", &attn[o * h..(o + s_r) * h], s_r,
+                                    &mut attn_out[o * h..(o + s_r) * h]);
                 }
             }
             add_inplace(&mut x, &attn_out);
-            rmsnorm(&x, &layer.ln2, &mut norm, m, cfg.rms_eps);
-            self.linear(&layer.gate, &norm, m, &mut gate);
-            self.linear(&layer.up, &norm, m, &mut up);
+            rmsnorm(&x, &layer.ln2, &mut norm, total, cfg.rms_eps);
+            self.linear(&layer.gate, &norm, total, &mut gate);
+            self.linear(&layer.up, &norm, total, &mut up);
             swiglu(&gate, &up, &mut act);
-            self.linear(&layer.down, &act, m, &mut mlp);
+            self.linear(&layer.down, &act, total, &mut mlp);
             add_inplace(&mut x, &mlp);
         }
-        for sess in sessions.iter_mut() {
-            sess.pos += 1;
+        // Advance positions; a completed prompt drops its fp32 stash.
+        let mut decode_tokens = 0u64;
+        let mut prefill_tokens = 0u64;
+        for (r, sess) in sessions.iter_mut().enumerate() {
+            match works[r] {
+                RowWork::Prefill { last, .. } => {
+                    sess.pos += widths[r];
+                    prefill_tokens += widths[r] as u64;
+                    if last {
+                        sess.prefill_stash = None;
+                    }
+                }
+                RowWork::Decode { .. } => {
+                    sess.pos += 1;
+                    decode_tokens += 1;
+                }
+            }
         }
-        // One decode token per row, plus this walk's fetch delta, against
-        // the store's amortization gauge.
+        // Fetch accounting: a walk's flash reads are shared by its rows
+        // and cannot be split per phase, so the delta lands in exactly
+        // one gauge — the decode amortization gauge when the tick decoded
+        // anything (the steady state), the prefill gauge for pure-prefill
+        // ticks. Token counts always land in their own phase.
         let fetches = self.weights.metrics().total_fetches() - fetches_before;
-        self.weights.note_decode_pass(m as u64, fetches);
-        let mut fin = vec![0f32; m * h];
-        rmsnorm(&x, &self.fnorm, &mut fin, m, cfg.rms_eps);
-        let mut logits = vec![0f32; m * cfg.vocab];
-        self.linear(&self.lm_head, &fin, m, &mut logits);
-        if m == 1 {
-            // Batch of one (the `decode` wrapper): the buffer is exactly
-            // the single row — hand it back without a vocab-sized copy.
-            return vec![logits];
+        if decode_tokens > 0 {
+            self.weights.note_decode_pass(decode_tokens, fetches);
+            if prefill_tokens > 0 {
+                self.weights.note_prefill_pass(prefill_tokens, 0);
+            }
+        } else {
+            self.weights.note_prefill_pass(prefill_tokens, fetches);
         }
-        logits.chunks_exact(cfg.vocab).map(|row| row.to_vec()).collect()
+        // Logits only where someone will read them: decode rows and final
+        // prefill chunks (their last token's row), through one gathered
+        // lm_head pass — row-independent, so equal to per-row passes.
+        let out_rows: Vec<Option<usize>> = works
+            .iter()
+            .enumerate()
+            .map(|(r, w)| match *w {
+                RowWork::Prefill { last: true, .. } => Some(offs[r] + widths[r] - 1),
+                RowWork::Prefill { last: false, .. } => None,
+                RowWork::Decode { .. } => Some(offs[r]),
+            })
+            .collect();
+        let picked: Vec<usize> = out_rows.iter().filter_map(|o| *o).collect();
+        let n_out = picked.len();
+        if n_out == 0 {
+            return vec![None; m];
+        }
+        let mut lastx = vec![0f32; n_out * h];
+        for (j, &row) in picked.iter().enumerate() {
+            lastx[j * h..(j + 1) * h].copy_from_slice(&x[row * h..(row + 1) * h]);
+        }
+        let mut fin = vec![0f32; n_out * h];
+        rmsnorm(&lastx, &self.fnorm, &mut fin, n_out, cfg.rms_eps);
+        let mut logits = vec![0f32; n_out * cfg.vocab];
+        self.linear(&self.lm_head, &fin, n_out, &mut logits);
+        if n_out == 1 {
+            // Single output row (e.g. the `decode` wrapper): the buffer is
+            // exactly that row — hand it back without a vocab-sized copy.
+            let mut only = Some(logits);
+            return out_rows.iter().map(|o| o.and_then(|_| only.take())).collect();
+        }
+        let mut chunks = logits.chunks_exact(cfg.vocab);
+        out_rows
+            .iter()
+            .map(|o| o.map(|_| chunks.next().expect("one logits row per output row").to_vec()))
+            .collect()
     }
 
     /// Greedy generation convenience: prefill + n decode steps on `sess`.
@@ -895,6 +1108,56 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn mixed_prefill_and_decode_rows_share_one_walk_bit_identically() {
+        // The fused-tick invariant: one forward_tick serving a decode row
+        // AND another session's prefill chunk produces, row for row,
+        // exactly what the solo paths produce.
+        let (fx, solo) = load();
+        let fused = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+        let pa = [5usize, 6, 7];
+        let pb = [40usize, 41, 42, 43, 44, 45];
+        // Solo reference: A prefills then decodes twice; B prefills.
+        let mut sa = solo.new_session();
+        let la = solo.prefill(&mut sa, &pa);
+        let mut ta = crate::model::sampler::argmax(&la);
+        let mut a_decode = Vec::new();
+        for _ in 0..2 {
+            let l = solo.decode(&mut sa, ta);
+            ta = crate::model::sampler::argmax(&l);
+            a_decode.push(l);
+        }
+        let mut sb = solo.new_session();
+        let lb_solo = solo.prefill(&mut sb, &pb);
+        // Fused: A's two decode steps ride the same walks as B's two
+        // 3-token prefill chunks.
+        let mut fa = fused.new_session();
+        let fla = fused.prefill(&mut fa, &pa);
+        assert_eq!(fla, la, "prefill parity between loads");
+        let mut fb = fused.new_session();
+        let mut fta = crate::model::sampler::argmax(&fla);
+        let mut lb_fused = None;
+        for (i, chunk) in pb.chunks(3).enumerate() {
+            let last = i == 1;
+            let works = [RowWork::Decode { tok: fta }, RowWork::Prefill { ids: chunk, last }];
+            let rows = {
+                let mut refs = [&mut fa, &mut fb];
+                fused.forward_tick(&mut refs, &works)
+            };
+            let da = rows[0].as_ref().expect("decode row logits");
+            assert_eq!(da, &a_decode[i], "fused decode row {i} diverged");
+            fta = crate::model::sampler::argmax(da);
+            if last {
+                lb_fused = rows[1].clone();
+            } else {
+                assert!(rows[1].is_none(), "non-final chunk has no logits");
+                assert!(fb.prefill_stash_bytes() > 0, "stash held between chunks");
+            }
+        }
+        assert_eq!(lb_fused.expect("final chunk"), lb_solo, "chunked prefill row diverged");
+        assert_eq!(fb.prefill_stash_bytes(), 0, "stash dropped with the final chunk");
     }
 
     #[test]

@@ -1,0 +1,406 @@
+//! Chunked + fused batched prefill: the tentpole acceptance tests.
+//!
+//! * bit-identity — splitting a prompt into chunks (any size), and fusing
+//!   several prompts' chunks into one walk (mixed LoRA tasks included),
+//!   produces exactly the logits/tokens monolithic prefill produces;
+//! * TTFT under load — a short prompt admitted alongside a long one gets
+//!   its first token before the long prompt's prefill completes
+//!   (event-order acceptance criterion);
+//! * weight amortization — 4 concurrent short prompts under a
+//!   2-of-6-layer weight budget pay ≤ 1/2 the per-prompt flash fetches of
+//!   the sequential-admission baseline during prefill.
+//!
+//! Everything runs against the self-contained fixture model.
+
+use std::collections::HashMap;
+
+use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
+use mnn_llm::coordinator::{EngineEvent, InferenceBackend, SchedulePolicy};
+use mnn_llm::lora::LoraAdapter;
+use mnn_llm::model::fixtures;
+use mnn_llm::model::native::{EngineOptions, NativeModel, NativeSession};
+use mnn_llm::model::sampler::argmax;
+use mnn_llm::util::prop::prop_check;
+use mnn_llm::util::rng::Rng;
+
+const SEED: u64 = 19;
+
+/// Drive a prompt through `prefill_chunk` in `chunk`-token slices;
+/// returns the final-chunk logits.
+fn prefill_chunked(m: &NativeModel, sess: &mut NativeSession, prompt: &[usize], chunk: usize) -> Vec<f32> {
+    let mut done = 0;
+    let mut logits = None;
+    while done < prompt.len() {
+        let end = (done + chunk).min(prompt.len());
+        let last = end == prompt.len();
+        let out = m.prefill_chunk(sess, &prompt[done..end], last);
+        if last {
+            logits = out;
+        } else {
+            assert!(out.is_none(), "non-final chunks return no logits");
+            assert!(sess.prefill_stash_bytes() > 0, "stash retained between chunks");
+        }
+        done = end;
+    }
+    logits.expect("final chunk returns logits")
+}
+
+#[test]
+fn chunked_prefill_is_bit_identical_across_chunk_sizes() {
+    // The tentpole property: for random prompts and random chunk sizes,
+    // chunked prefill == monolithic prefill bit for bit — including the
+    // decode steps that follow (the quantized KV the chunks appended must
+    // also match).
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let mono = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let chunked = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let vocab = fixtures::fixture_config().vocab;
+    prop_check(12, |rng: &mut Rng| {
+        let plen = rng.range(1, 16);
+        let prompt: Vec<usize> = (0..plen).map(|_| rng.below(vocab)).collect();
+        let chunk = rng.range(1, plen + 1);
+        let mut ms = mono.new_session();
+        let want = mono.prefill(&mut ms, &prompt);
+        let mut cs = chunked.new_session();
+        let got = prefill_chunked(&chunked, &mut cs, &prompt, chunk);
+        if want != got {
+            return Err(format!("prefill logits diverged (plen {plen}, chunk {chunk})"));
+        }
+        if cs.prefill_stash_bytes() != 0 {
+            return Err("stash must be dropped after the final chunk".into());
+        }
+        if cs.pos != ms.pos || cs.kv_len() != ms.kv_len() {
+            return Err("position/KV length diverged".into());
+        }
+        // The caches the chunks built must decode identically too.
+        let mut tok = argmax(&want);
+        for step in 0..3 {
+            let a = mono.decode(&mut ms, tok);
+            let b = chunked.decode(&mut cs, tok);
+            if a != b {
+                return Err(format!("decode step {step} diverged (chunk {chunk})"));
+            }
+            tok = argmax(&a);
+        }
+        Ok(())
+    });
+}
+
+/// Identical adapter banks on any number of models (same RNG seed).
+fn load_adapters(m: &mut NativeModel) {
+    let h = m.config.hidden;
+    let kvd = m.config.kv_dim();
+    let mut rng = Rng::new(29);
+    for task in ["style", "law"] {
+        let mut layers = HashMap::new();
+        layers.insert("L0.wq".to_string(), LoraAdapter::random(&mut rng, h, h, 4));
+        layers.insert("L0.wk".to_string(), LoraAdapter::random(&mut rng, kvd, h, 4));
+        layers.insert("L1.wo".to_string(), LoraAdapter::random(&mut rng, h, h, 4));
+        m.lora.load_task(task, layers);
+    }
+}
+
+#[test]
+fn fused_mixed_lora_prefill_chunks_are_bit_identical() {
+    // Several prompts' chunks — different lengths, different (or no) LoRA
+    // tasks — share one `prefill_batch` walk per round (the trait's fused
+    // batched-prefill entry point, backed by forward_tick on the native
+    // model); every row must get exactly its solo monolithic prefill's
+    // logits.
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let mut solo = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let mut fused = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    load_adapters(&mut solo);
+    load_adapters(&mut fused);
+    let prompts: Vec<Vec<usize>> =
+        vec![vec![5, 6, 7, 8, 9], vec![100, 101], vec![42, 43, 44, 45, 46, 47, 48], vec![9, 8]];
+    let tasks = [Some("style"), None, Some("law"), Some("style")];
+    let chunk = 3usize;
+
+    // Solo monolithic reference.
+    let mut want = Vec::new();
+    for (p, t) in prompts.iter().zip(&tasks) {
+        let mut s = solo.new_session();
+        s.lora_task = t.map(str::to_string);
+        want.push(solo.prefill(&mut s, p));
+    }
+
+    // Fused chunked rounds: each round advances every still-prefilling
+    // row by one chunk through a single walk.
+    let mut sessions: Vec<NativeSession> = prompts
+        .iter()
+        .zip(&tasks)
+        .map(|(_, t)| {
+            let mut s = fused.new_session();
+            s.lora_task = t.map(str::to_string);
+            s
+        })
+        .collect();
+    let mut done = vec![0usize; prompts.len()];
+    let mut got: Vec<Option<Vec<f32>>> = vec![None; prompts.len()];
+    loop {
+        let pending: Vec<usize> =
+            (0..prompts.len()).filter(|&r| done[r] < prompts[r].len()).collect();
+        if pending.is_empty() {
+            break;
+        }
+        let chunks: Vec<(&[usize], bool)> = pending
+            .iter()
+            .map(|&r| {
+                let end = (done[r] + chunk).min(prompts[r].len());
+                (&prompts[r][done[r]..end], end == prompts[r].len())
+            })
+            .collect();
+        let rows = {
+            let mut refs: Vec<&mut NativeSession> = sessions
+                .iter_mut()
+                .enumerate()
+                .filter(|(r, _)| done[*r] < prompts[*r].len())
+                .map(|(_, s)| s)
+                .collect();
+            InferenceBackend::prefill_batch(&fused, &mut refs, &chunks).unwrap()
+        };
+        for (&r, out) in pending.iter().zip(rows) {
+            let out = out.expect("native rows never fail");
+            let end = (done[r] + chunk).min(prompts[r].len());
+            if end == prompts[r].len() {
+                got[r] = Some(out.expect("final chunk logits"));
+            } else {
+                assert!(out.is_none());
+            }
+            done[r] = end;
+        }
+    }
+    for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(
+            g.as_ref().expect("row completed"),
+            w,
+            "row {r} diverged from solo monolithic prefill"
+        );
+    }
+}
+
+#[test]
+fn engine_chunked_runs_match_unchunked_greedy() {
+    // End-to-end engine parity: chunk size × row cap are pure scheduling
+    // knobs — greedy responses are bit-identical to the unchunked engine.
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let submit_all = |c: &mut Coordinator| {
+        c.submit(vec![5, 6, 7, 8, 9, 10, 11], 5);
+        c.submit(vec![100, 101], 4);
+        c.submit(vec![42; 9], 5);
+    };
+    let plain = {
+        let m = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        submit_all(&mut c);
+        c.run_all().unwrap()
+    };
+    for (chunk, cap) in [(1usize, usize::MAX), (2, usize::MAX), (3, 2), (4, 1)] {
+        let m = NativeModel::load(
+            fx.dir(),
+            EngineOptions {
+                prefill_chunk_tokens: chunk,
+                max_rows_per_tick: cap,
+                ..EngineOptions::default()
+            },
+        )
+        .unwrap();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        submit_all(&mut c);
+        let got = c.run_all().unwrap();
+        assert_eq!(got.len(), plain.len());
+        for (a, b) in got.iter().zip(&plain) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "chunk {chunk} / cap {cap} changed greedy outputs"
+            );
+            assert_eq!(a.finish_reason, b.finish_reason);
+        }
+        let m = c.backend().as_native().unwrap();
+        assert_eq!(m.kv_pool().resident_bytes(), 0, "all pages returned");
+    }
+}
+
+#[test]
+fn short_prompt_first_token_precedes_long_prompt_prefill() {
+    // The TTFT acceptance criterion: a long prompt is split into chunks,
+    // so a short prompt admitted alongside gets its first token (after
+    // one shared walk) BEFORE the long prompt's prefill completes — the
+    // long prompt no longer delays the short one's TTFT by more than one
+    // chunk's walk. `Started` is emitted when a prompt's prefill
+    // completes, so event order pins this down exactly.
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let m = NativeModel::load(
+        fx.dir(),
+        EngineOptions { prefill_chunk_tokens: 4, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+    let long = c.submit(vec![7; 24], 4); // 6 chunks of 4
+    let short = c.submit(vec![5, 6, 7], 4); // 1 chunk
+    let mut events = Vec::new();
+    while c.step().unwrap() {
+        events.extend(c.drain_events());
+    }
+    events.extend(c.drain_events());
+    let short_first_tok = events
+        .iter()
+        .position(|e| matches!(e, EngineEvent::Token { id, index: 0, .. } if *id == short))
+        .expect("short prompt emitted a first token");
+    let long_started = events
+        .iter()
+        .position(|e| matches!(e, EngineEvent::Started { id } if *id == long))
+        .expect("long prompt eventually started");
+    assert!(
+        short_first_tok < long_started,
+        "short prompt's first token (event {short_first_tok}) must precede the long \
+         prompt's prefill completion (event {long_started}): {events:?}"
+    );
+    // Both still complete, with the long prompt's chunked prefill
+    // bit-identical to a monolithic run.
+    let rs = c.take_finished();
+    assert_eq!(rs.len(), 2);
+    let long_tokens = &rs.iter().find(|r| r.id == long).unwrap().tokens;
+    let mono = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    assert_eq!(long_tokens, &mono.generate_once(&[7; 24], long_tokens.len()));
+}
+
+#[test]
+fn cancel_mid_chunked_prefill_releases_kv_and_stash() {
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let m = NativeModel::load(
+        fx.dir(),
+        EngineOptions { prefill_chunk_tokens: 3, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+    let id = c.submit(vec![9; 12], 4);
+    assert!(c.step().unwrap()); // admit + first chunk only
+    {
+        let m = c.backend().as_native().unwrap();
+        assert!(m.kv_pool().resident_bytes() > 0, "first chunk appended KV");
+    }
+    assert!(c.cancel(id), "cancel mid-prefill");
+    let m = c.backend().as_native().unwrap();
+    assert_eq!(m.kv_pool().resident_bytes(), 0, "cancel frees mid-prefill KV");
+    assert!(!c.has_work());
+    let evs = c.drain_events();
+    assert!(evs.contains(&EngineEvent::Cancelled { id }), "{evs:?}");
+}
+
+#[test]
+fn outstanding_chunked_reservation_backpressures_admission() {
+    // While an earlier prompt's chunked prefill is still in flight, its
+    // outstanding reservation (pages not yet appended + the fp32 stash)
+    // counts against the pool headroom across ticks — a second long
+    // prompt must wait instead of overcommitting DRAM, then admit and
+    // complete once the first prefill lands.
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let probe = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let budget = probe.prefill_kv_page_bytes(24); // exactly one prompt's pages
+    drop(probe);
+    let m = NativeModel::load(
+        fx.dir(),
+        EngineOptions {
+            prefill_chunk_tokens: 4,
+            kv_pool_bytes: budget,
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+    let first = c.submit(vec![7; 24], 2);
+    let second = c.submit(vec![9; 24], 2);
+    // Tick 1: the first prompt is admitted (nothing outstanding — the
+    // tick's first admission is unconditional) and starts chunking; the
+    // second cannot fit next to the first's outstanding reservation.
+    assert!(c.step().unwrap());
+    assert_eq!(c.active_count(), 1, "second admission must be backpressured");
+    assert_eq!(c.pending(), 1);
+    // Mid-prefill ticks keep the gate closed.
+    assert!(c.step().unwrap());
+    assert_eq!(c.active_count(), 1);
+    assert_eq!(c.pending(), 1);
+    // Once the first prefill completes, the gate opens and both finish.
+    while c.step().unwrap() {}
+    let rs = c.take_finished();
+    assert_eq!(rs.len(), 2, "backpressure must not starve the queue");
+    assert!(rs.iter().any(|r| r.id == first));
+    assert!(rs.iter().any(|r| r.id == second));
+    let m = c.backend().as_native().unwrap();
+    assert_eq!(m.kv_pool().resident_bytes(), 0);
+}
+
+/// Cumulative pure-prefill (fetches, prompt tokens) snapshot.
+fn prefill_snapshot(m: &NativeModel) -> (u64, u64) {
+    let w = m.weight_metrics();
+    (w.prefill_fetches, w.prompt_tokens_prefilled)
+}
+
+#[test]
+fn four_fused_prefills_halve_weight_fetches_per_prompt() {
+    // The acceptance guard: 4 concurrent short prompts under a weight
+    // budget of 2 of 6 layers. Sequential admission pays one full layer
+    // walk per prompt (≈ layers fetches each); fused admission prefills
+    // all four prompts in ONE walk — fetches per prompt must drop to
+    // ≤ 1/2 of the sequential baseline.
+    const LAYERS: usize = 6;
+    const B: usize = 4;
+    let fx = fixtures::write_fixture_with_layers(SEED, LAYERS).unwrap();
+    let probe = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let per_layer = probe.weight_metrics().packed_bytes / LAYERS;
+    drop(probe);
+    let opts = EngineOptions { weight_dram_bytes: per_layer * 2, ..EngineOptions::default() };
+    let prompts: Vec<Vec<usize>> = (0..B).map(|i| vec![10 + 3 * i, 20 + i, 30 + i, 40]).collect();
+
+    // Sequential-admission baseline: one monolithic prefill walk per
+    // prompt (what the old one-admission-per-tick engine paid).
+    let seq = NativeModel::load(fx.dir(), opts.clone()).unwrap();
+    let (f0, t0) = prefill_snapshot(&seq);
+    let mut seq_sessions = Vec::new();
+    for p in &prompts {
+        let mut s = seq.new_session();
+        seq.prefill(&mut s, p);
+        seq_sessions.push(s);
+    }
+    let (f1, t1) = prefill_snapshot(&seq);
+    assert_eq!(t1 - t0, (B * 4) as u64);
+    let seq_per_prompt = (f1 - f0) as f64 / B as f64;
+    assert!(
+        seq_per_prompt > 0.0,
+        "budget must force streaming during sequential prefill"
+    );
+
+    // Fused admission: the engine admits all four ready prompts in one
+    // tick and prefills them through a single walk.
+    let bat = NativeModel::load(fx.dir(), opts).unwrap();
+    let mut c = Coordinator::new(Backend::Native(Box::new(bat)), SchedulePolicy::Interleaved);
+    let mut ids = Vec::new();
+    for p in &prompts {
+        ids.push(c.submit(p.clone(), 3));
+    }
+    let (g0, u0) = prefill_snapshot(c.backend().as_native().unwrap());
+    assert!(c.step().unwrap()); // one tick: admit all + one fused prefill walk
+    let (g1, u1) = prefill_snapshot(c.backend().as_native().unwrap());
+    assert_eq!(u1 - u0, (B * 4) as u64, "all four prompts prefilled in the first tick");
+    let started: Vec<_> = c
+        .drain_events()
+        .into_iter()
+        .filter(|e| matches!(e, EngineEvent::Started { .. }))
+        .map(|e| e.id())
+        .collect();
+    assert_eq!(started, ids, "all four admitted + prefilled in tick 1, admission order");
+    let fused_per_prompt = (g1 - g0) as f64 / B as f64;
+    assert!(
+        fused_per_prompt <= seq_per_prompt / 2.0,
+        "prefill weight fetches/prompt: fused {fused_per_prompt:.2} vs sequential \
+         {seq_per_prompt:.2} — fused admission must amortize to ≤ 1/2"
+    );
+    // Drain; outputs must match the sequential models' sessions (value
+    // neutrality under the shared walk).
+    while c.step().unwrap() {}
+    let rs = c.take_finished();
+    assert_eq!(rs.len(), B);
+}

@@ -249,6 +249,11 @@ fn native_options_never_change_numbers() {
             tile: TileConfig { e_p: 2, h_p: 8, l_p: 4 },
             ..EngineOptions::default()
         },
+        // Chunked prefill and the per-tick row cap are pure scheduling
+        // knobs (generate_once drives the model directly, but the load
+        // path and forward walks must be untouched by them).
+        EngineOptions { prefill_chunk_tokens: 2, ..EngineOptions::default() },
+        EngineOptions { max_rows_per_tick: 1, ..EngineOptions::default() },
         EngineOptions {
             tile: TileConfig { e_p: 10, h_p: 8, l_p: 8 },
             workers: WorkerConfig { rates: vec![1.0, 0.72, 0.72, 0.72] },
@@ -257,6 +262,8 @@ fn native_options_never_change_numbers() {
             weight_dram_bytes: 1 << 16,
             embedding_in_flash: true,
             eviction: EvictionPolicy::ShedSelf,
+            prefill_chunk_tokens: 3,
+            max_rows_per_tick: 2,
         },
     ];
     for (i, opt) in variants.into_iter().enumerate() {

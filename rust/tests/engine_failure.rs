@@ -1,0 +1,239 @@
+//! Engine error-path lifecycle: a backend failure must not leak session
+//! memory or wedge the engine.
+//!
+//! Regression tests for the KV-leak satellite — the old engine's
+//! `admit_one`/`decode_round` propagated backend errors with `?`,
+//! dropping in-flight sessions without `release()`, so a
+//! resource-accounting backend saw its resident bytes pinned forever and
+//! admission control tightened permanently. Now:
+//!
+//! * a per-row failure releases exactly that session, emits a terminal
+//!   `Failed` event, and the engine keeps serving the other rows;
+//! * a whole-batch failure releases every selected session;
+//! * in both cases the backend's resident accounting returns to 0 and
+//!   every submitted id still sees exactly one terminal event.
+//!
+//! Runs against a failure-injecting mock backend (the trait's default
+//! loop paths), so the error plumbing is tested without the native model.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use anyhow::{anyhow, Result};
+use mnn_llm::coordinator::scheduler::Engine;
+use mnn_llm::coordinator::{
+    EngineEvent, InferenceBackend, Request, RowOutcome, RowWork, SchedulePolicy,
+};
+
+const VOCAB: usize = 32;
+/// Prompts starting with this token fail their prefill.
+const POISON: usize = 31;
+
+struct MockSession {
+    bytes: usize,
+    pos: usize,
+    poison: bool,
+}
+
+/// Logits whose argmax walks the vocab deterministically and never hits
+/// the tokenizer's EOS (257 ≥ VOCAB).
+fn logits_for(pos: usize) -> Vec<f32> {
+    let mut l = vec![0f32; VOCAB];
+    l[pos % (VOCAB - 1)] = 1.0;
+    l
+}
+
+#[derive(Default)]
+struct MockBackend {
+    resident: AtomicUsize,
+    /// Fail the nth `step_batch` call wholesale (1-based); 0 = never.
+    fail_batch_at: u64,
+    calls: AtomicU64,
+}
+
+impl MockBackend {
+    fn resident_bytes(&self) -> usize {
+        self.resident.load(Ordering::Relaxed)
+    }
+}
+
+impl InferenceBackend for MockBackend {
+    type Session = MockSession;
+
+    fn max_len(&self) -> usize {
+        64
+    }
+
+    fn new_session(&self, req: &Request) -> Result<MockSession> {
+        let bytes = 100 + req.prompt.len();
+        self.resident.fetch_add(bytes, Ordering::Relaxed);
+        Ok(MockSession { bytes, pos: 0, poison: req.prompt.first() == Some(&POISON) })
+    }
+
+    fn prefill(&self, sess: &mut MockSession, ids: &[usize]) -> Result<Vec<f32>> {
+        if sess.poison {
+            return Err(anyhow!("injected prefill failure"));
+        }
+        sess.pos += ids.len();
+        Ok(logits_for(sess.pos))
+    }
+
+    fn decode(&self, sess: &mut MockSession, _tok: usize) -> Result<Vec<f32>> {
+        sess.pos += 1;
+        Ok(logits_for(sess.pos))
+    }
+
+    fn step_batch(
+        &self,
+        sessions: &mut [&mut MockSession],
+        works: &[RowWork<'_>],
+    ) -> Result<Vec<RowOutcome>> {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.fail_batch_at != 0 && n == self.fail_batch_at {
+            return Err(anyhow!("injected whole-batch failure"));
+        }
+        // The trait's default row loop (per-row failure isolation).
+        let mut out = Vec::with_capacity(works.len());
+        for (sess, w) in sessions.iter_mut().zip(works) {
+            out.push(match *w {
+                RowWork::Prefill { ids, last } => self.prefill_chunk(sess, ids, last),
+                RowWork::Decode { tok } => self.decode(sess, tok).map(Some),
+            });
+        }
+        Ok(out)
+    }
+
+    fn session_pos(&self, sess: &MockSession) -> usize {
+        sess.pos
+    }
+
+    fn release(&self, sess: &mut MockSession) {
+        self.resident.fetch_sub(sess.bytes, Ordering::Relaxed);
+        sess.bytes = 0; // idempotent: a second release subtracts nothing
+    }
+
+    fn reclaim(&self) {}
+}
+
+/// Drive to idle, collecting every event.
+fn drain(engine: &mut Engine<MockBackend>) -> Vec<EngineEvent> {
+    let mut events = Vec::new();
+    while engine.step().unwrap() {
+        events.extend(engine.drain_events());
+    }
+    events.extend(engine.drain_events());
+    events
+}
+
+fn terminal_count(events: &[EngineEvent], id: u64) -> usize {
+    events.iter().filter(|e| e.is_terminal() && e.id() == id).count()
+}
+
+#[test]
+fn prefill_failure_releases_session_and_spares_the_batch() {
+    let mut e = Engine::new(MockBackend::default(), SchedulePolicy::Interleaved);
+    let good = e.submit(vec![1, 2, 3], 4);
+    let bad = e.submit(vec![POISON, 2], 4);
+    let events = drain(&mut e);
+    // The poisoned row failed terminally; the good row was untouched.
+    assert!(
+        events
+            .iter()
+            .any(|ev| matches!(ev, EngineEvent::Failed { id, .. } if *id == bad)),
+        "{events:?}"
+    );
+    assert_eq!(terminal_count(&events, bad), 1);
+    assert_eq!(terminal_count(&events, good), 1);
+    let rs = e.take_finished();
+    assert_eq!(rs.len(), 1, "only the good request completes");
+    assert_eq!(rs[0].id, good);
+    assert_eq!(rs[0].tokens.len(), 4);
+    assert_eq!(e.metrics.failed, 1);
+    // The leak regression: the failed session's memory was released.
+    assert_eq!(e.backend().resident_bytes(), 0, "prefill error path must release KV");
+    assert!(e.metrics.summary(1.0).contains("1 failed"));
+}
+
+#[test]
+fn whole_batch_failure_releases_every_selected_session() {
+    // Tick 1 prefills both requests; tick 2 is their first fused decode
+    // round — fail it wholesale.
+    let backend = MockBackend { fail_batch_at: 2, ..MockBackend::default() };
+    let mut e = Engine::new(backend, SchedulePolicy::Interleaved);
+    let a = e.submit(vec![1, 2], 6);
+    let b = e.submit(vec![3, 4, 5], 6);
+    let events = drain(&mut e);
+    for id in [a, b] {
+        assert_eq!(terminal_count(&events, id), 1, "{events:?}");
+        assert!(
+            events
+                .iter()
+                .any(|ev| matches!(ev, EngineEvent::Failed { id: fid, .. } if *fid == id)),
+            "{events:?}"
+        );
+    }
+    assert_eq!(e.metrics.failed, 2);
+    assert_eq!(e.backend().resident_bytes(), 0, "decode error path must release KV");
+    assert!(e.take_finished().is_empty());
+    // The engine is not wedged: later submissions serve normally.
+    let c = e.submit(vec![7, 8], 3);
+    let events = drain(&mut e);
+    assert_eq!(terminal_count(&events, c), 1);
+    let rs = e.take_finished();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].id, c);
+    assert_eq!(rs[0].tokens.len(), 3);
+    assert_eq!(e.backend().resident_bytes(), 0);
+}
+
+#[test]
+fn run_all_surfaces_backend_failures_as_err() {
+    // The batch wrapper must not swallow a terminal Failed into a
+    // silently shorter response list: it errors (as the old coordinator
+    // did on backend failure), while completed responses stay buffered.
+    let mut e = Engine::new(MockBackend::default(), SchedulePolicy::Interleaved);
+    let good = e.submit(vec![1, 2], 3);
+    let _bad = e.submit(vec![POISON], 3);
+    let err = e.run_all().expect_err("a failed request must surface");
+    assert!(err.to_string().contains("1 request(s)"), "{err}");
+    assert_eq!(e.backend().resident_bytes(), 0, "failure still released the session");
+    let rs = e.take_finished();
+    assert_eq!(rs.len(), 1, "the good response survives the error");
+    assert_eq!(rs[0].id, good);
+    // The engine stays usable: an all-good drain succeeds again.
+    e.submit(vec![4, 5], 2);
+    assert_eq!(e.run_all().unwrap().len(), 1);
+}
+
+#[test]
+fn failure_during_midflight_churn_keeps_exactly_one_terminal_per_id() {
+    // Mix poisoned and healthy requests, submitted mid-flight: every id
+    // gets exactly one terminal event, nothing leaks, engine drains.
+    let mut e = Engine::new(MockBackend::default(), SchedulePolicy::Interleaved);
+    let mut ids = vec![
+        e.submit(vec![1, 2], 3),
+        e.submit(vec![POISON], 3),
+        e.submit(vec![4, 5, 6], 4),
+    ];
+    let mut events = Vec::new();
+    let mut ticks = 0;
+    loop {
+        let more = e.step().unwrap();
+        events.extend(e.drain_events());
+        ticks += 1;
+        if ticks == 2 {
+            ids.push(e.submit(vec![POISON, 9], 2));
+            ids.push(e.submit(vec![8, 9], 2));
+        }
+        if !more && !e.has_work() {
+            break;
+        }
+        assert!(ticks < 100, "engine failed to drain");
+    }
+    events.extend(e.drain_events());
+    for id in &ids {
+        assert_eq!(terminal_count(&events, *id), 1, "id {id}: {events:?}");
+    }
+    assert_eq!(e.metrics.failed, 2);
+    assert_eq!(e.take_finished().len() as u64 + e.metrics.failed, ids.len() as u64);
+    assert_eq!(e.backend().resident_bytes(), 0);
+}
