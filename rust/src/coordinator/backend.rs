@@ -22,6 +22,7 @@
 use anyhow::Result;
 
 use crate::coordinator::request::Request;
+use crate::kv::PrefixCacheMetrics;
 use crate::memory::weight_store::WeightResidencyMetrics;
 use crate::model::native::{NativeModel, NativeSession};
 use crate::runtime::{KvState, PjrtRuntime};
@@ -181,23 +182,27 @@ pub trait InferenceBackend {
         Ok(out)
     }
 
-    /// Page-granular KV bytes admitting a `prompt_len`-token prompt will
-    /// pin — the engine's per-tick admission loop reserves this much
-    /// headroom per admitted-but-not-yet-prefilled prompt so a burst of
-    /// admissions cannot overcommit the pool in one tick. 0 (the
+    /// KV bytes admitting `prompt` will pin — the engine's per-tick
+    /// admission loop reserves this much headroom per
+    /// admitted-but-not-yet-prefilled prompt so a burst of admissions
+    /// cannot overcommit the pool in one tick. Takes the prompt ids, not
+    /// just a length, so backends with a prefix cache can subtract the
+    /// shared-prefix pages a hit would attach (already resident). 0 (the
     /// default) means "no accounting" (backends without a shared pool).
-    fn prefill_reserve_bytes(&self, _prompt_len: usize) -> usize {
+    fn prefill_reserve_bytes(&self, _prompt: &[usize]) -> usize {
         0
     }
 
     /// The portion of an in-flight prefill's reservation the pool-side
-    /// headroom already observes after `consumed` prompt tokens — their
-    /// appended pages. Subtracted from the full estimate when the engine
-    /// computes outstanding reservations; memory retained until prefill
-    /// completes (the native fp32 stash) must NOT be included here, since
-    /// it stays allocated and pool-invisible. 0 (the default) pairs with
-    /// the 0 default of [`prefill_reserve_bytes`](Self::prefill_reserve_bytes).
-    fn prefill_visible_bytes(&self, _consumed: usize) -> usize {
+    /// headroom already observes after `consumed` tokens of `prompt` —
+    /// their appended pages (minus any shared-prefix pages, which were
+    /// resident before admission). Subtracted from the full estimate when
+    /// the engine computes outstanding reservations; memory retained
+    /// until prefill completes (the native fp32 stash) must NOT be
+    /// included here, since it stays allocated and pool-invisible. 0 (the
+    /// default) pairs with the 0 default of
+    /// [`prefill_reserve_bytes`](Self::prefill_reserve_bytes).
+    fn prefill_visible_bytes(&self, _prompt: &[usize], _consumed: usize) -> usize {
         0
     }
 
@@ -226,14 +231,29 @@ pub trait InferenceBackend {
         (0, 0)
     }
 
-    /// Admission hook: make room for a `prompt_len`-token prefill, e.g. by
+    /// Admission hook: make room for prefilling `prompt`, e.g. by
     /// preempting `running` sessions to flash. Returns sessions preempted.
     fn make_room(
         &self,
-        _prompt_len: usize,
+        _prompt: &[usize],
         _running: &mut [&mut Self::Session],
     ) -> Result<u64> {
         Ok(0)
+    }
+
+    /// Admission hook: attach the longest cached prefix of `prompt` to the
+    /// freshly opened session (shared, refcounted pages — no new KV
+    /// bytes). Returns the fork point: prompt tokens already covered, so
+    /// the engine starts prefill there. 0 (the default, and always on
+    /// backends without a prefix cache) means a cold prefill from the
+    /// prompt's first token.
+    fn prefix_attach(&self, _sess: &mut Self::Session, _prompt: &[usize]) -> usize {
+        0
+    }
+
+    /// Prefix-cache counters snapshot (native backend only).
+    fn prefix_metrics(&self) -> PrefixCacheMetrics {
+        PrefixCacheMetrics::default()
     }
 
     /// Cross-session KV budget enforcement between scheduler ticks (the
@@ -298,17 +318,18 @@ impl InferenceBackend for NativeModel {
         sessions: &mut [&mut NativeSession],
         works: &[RowWork<'_>],
     ) -> Result<Vec<RowOutcome>> {
-        Ok(NativeModel::forward_tick(self, sessions, works).into_iter().map(Ok).collect())
+        let rows = NativeModel::forward_tick(self, sessions, works)?;
+        Ok(rows.into_iter().map(|r| r.map_err(anyhow::Error::from)).collect())
     }
 
-    fn prefill_reserve_bytes(&self, prompt_len: usize) -> usize {
-        NativeModel::prefill_reserve_bytes(self, prompt_len)
+    fn prefill_reserve_bytes(&self, prompt: &[usize]) -> usize {
+        NativeModel::prefill_reserve_bytes(self, prompt)
     }
 
-    fn prefill_visible_bytes(&self, consumed: usize) -> usize {
+    fn prefill_visible_bytes(&self, prompt: &[usize], consumed: usize) -> usize {
         // Only the appended quantized pages become pool-visible; the fp32
         // stash stays allocated (and charged) until the final chunk.
-        self.prefill_kv_page_bytes(consumed)
+        NativeModel::prefill_visible_bytes(self, prompt, consumed)
     }
 
     fn kv_headroom(&self) -> usize {
@@ -333,10 +354,18 @@ impl InferenceBackend for NativeModel {
 
     fn make_room(
         &self,
-        prompt_len: usize,
+        prompt: &[usize],
         running: &mut [&mut NativeSession],
     ) -> Result<u64> {
-        Ok(NativeModel::make_room(self, prompt_len, running)?)
+        Ok(NativeModel::make_room(self, prompt, running)?)
+    }
+
+    fn prefix_attach(&self, sess: &mut NativeSession, prompt: &[usize]) -> usize {
+        NativeModel::prefix_attach(self, sess, prompt)
+    }
+
+    fn prefix_metrics(&self) -> PrefixCacheMetrics {
+        NativeModel::prefix_metrics(self)
     }
 
     fn enforce_kv_budget(&self, running: &mut [&mut NativeSession]) -> Result<u64> {
@@ -526,17 +555,21 @@ impl InferenceBackend for Backend {
         }
     }
 
-    fn prefill_reserve_bytes(&self, prompt_len: usize) -> usize {
+    fn prefill_reserve_bytes(&self, prompt: &[usize]) -> usize {
         match self {
-            Backend::Native(m) => InferenceBackend::prefill_reserve_bytes(m.as_ref(), prompt_len),
-            Backend::Pjrt(rt) => InferenceBackend::prefill_reserve_bytes(rt.as_ref(), prompt_len),
+            Backend::Native(m) => InferenceBackend::prefill_reserve_bytes(m.as_ref(), prompt),
+            Backend::Pjrt(rt) => InferenceBackend::prefill_reserve_bytes(rt.as_ref(), prompt),
         }
     }
 
-    fn prefill_visible_bytes(&self, consumed: usize) -> usize {
+    fn prefill_visible_bytes(&self, prompt: &[usize], consumed: usize) -> usize {
         match self {
-            Backend::Native(m) => InferenceBackend::prefill_visible_bytes(m.as_ref(), consumed),
-            Backend::Pjrt(rt) => InferenceBackend::prefill_visible_bytes(rt.as_ref(), consumed),
+            Backend::Native(m) => {
+                InferenceBackend::prefill_visible_bytes(m.as_ref(), prompt, consumed)
+            }
+            Backend::Pjrt(rt) => {
+                InferenceBackend::prefill_visible_bytes(rt.as_ref(), prompt, consumed)
+            }
         }
     }
 
@@ -579,16 +612,32 @@ impl InferenceBackend for Backend {
 
     fn make_room(
         &self,
-        prompt_len: usize,
+        prompt: &[usize],
         running: &mut [&mut AnySession],
     ) -> Result<u64> {
         match self {
             Backend::Native(m) => {
                 let mut native: Vec<&mut NativeSession> =
                     running.iter_mut().map(|s| s.native()).collect();
-                InferenceBackend::make_room(m.as_ref(), prompt_len, &mut native)
+                InferenceBackend::make_room(m.as_ref(), prompt, &mut native)
             }
             Backend::Pjrt(_) => Ok(0),
+        }
+    }
+
+    fn prefix_attach(&self, sess: &mut AnySession, prompt: &[usize]) -> usize {
+        match self {
+            Backend::Native(m) => {
+                InferenceBackend::prefix_attach(m.as_ref(), sess.native(), prompt)
+            }
+            Backend::Pjrt(_) => 0,
+        }
+    }
+
+    fn prefix_metrics(&self) -> PrefixCacheMetrics {
+        match self {
+            Backend::Native(m) => NativeModel::prefix_metrics(m),
+            Backend::Pjrt(_) => PrefixCacheMetrics::default(),
         }
     }
 

@@ -2,6 +2,7 @@
 //! tok/s, decode speed in tok/s) plus latency percentiles for the e2e
 //! example, KV-pressure counters, and weight-residency counters.
 
+use crate::kv::PrefixCacheMetrics;
 use crate::memory::weight_store::WeightResidencyMetrics;
 use crate::util::stats;
 
@@ -78,6 +79,11 @@ pub struct EngineMetrics {
     /// Weight residency accounting (native backend): cumulative snapshot
     /// taken from the model as requests finish.
     pub weights: WeightResidencyMetrics,
+    /// Shared-prefix KV cache accounting (native backend): hits, prompt
+    /// tokens and page bytes saved, copy-on-write privatizations, and the
+    /// cache's current footprint. Snapshot refreshed at every admission
+    /// and completion; all-zero when the cache is disabled (the default).
+    pub prefix: PrefixCacheMetrics,
 }
 
 impl EngineMetrics {
@@ -164,14 +170,24 @@ impl EngineMetrics {
                 ));
             }
             if self.weights.prefill_fetches > 0 {
-                // The fused-prefill amortization gauge: pure-prefill flash
-                // blob reads per prompt token (shared admission walks
-                // divide this by the number of co-admitted prompts).
+                // The prefill amortization gauge: prefill-phase flash blob
+                // reads per prompt token (shared admission walks divide
+                // this by the number of co-admitted prompts; mixed ticks
+                // contribute their proportional share).
                 s.push_str(&format!(
                     " / {:.2} fetch/ptok",
                     self.weights.fetches_per_prompt_token()
                 ));
             }
+        }
+        if self.prefix.lookups > 0 {
+            s.push_str(&format!(
+                " | prefix {}/{} hit / {} ptok saved / {} cow",
+                self.prefix.hits,
+                self.prefix.lookups,
+                self.prefix.prefill_tokens_saved,
+                self.prefix.cow_copies
+            ));
         }
         s
     }
@@ -268,6 +284,21 @@ mod tests {
         assert!(e.summary(1.0).contains("2 cancelled / 1 rejected"));
         e.failed = 3;
         assert!(e.summary(1.0).contains("3 failed"));
+    }
+
+    #[test]
+    fn prefix_cache_appears_in_summary_only_when_used() {
+        let mut e = EngineMetrics::default();
+        e.push(m(8, 4, 0.1, 0.2));
+        assert!(!e.summary(1.0).contains("prefix"), "disabled cache stays silent");
+        e.prefix.lookups = 4;
+        e.prefix.hits = 3;
+        e.prefix.prefill_tokens_saved = 96;
+        e.prefix.cow_copies = 2;
+        let s = e.summary(1.0);
+        assert!(s.contains("prefix 3/4 hit"), "{s}");
+        assert!(s.contains("96 ptok saved"), "{s}");
+        assert!(s.contains("2 cow"), "{s}");
     }
 
     #[test]

@@ -337,7 +337,7 @@ impl<B: InferenceBackend> Engine<B> {
             };
             if admitted > 0 || reserved > 0 {
                 let next_cost =
-                    self.backend.prefill_reserve_bytes(self.queue[best].prompt.len());
+                    self.backend.prefill_reserve_bytes(&self.queue[best].prompt);
                 if reserved.saturating_add(next_cost) > self.backend.kv_headroom() {
                     break;
                 }
@@ -392,10 +392,12 @@ impl<B: InferenceBackend> Engine<B> {
         self.metrics.kv.restored_records += restored;
         self.backend.release(&mut act.sess);
         drop(act);
-        // Keep the weight-residency gauges current even when requests end
-        // by cancellation or failure (finalize refreshes them too) — the
-        // flash traffic those requests caused is already counted.
+        // Keep the weight-residency and prefix-cache gauges current even
+        // when requests end by cancellation or failure (finalize refreshes
+        // them too) — the flash traffic those requests caused is already
+        // counted, and released shared pages change the cache's footprint.
         self.metrics.weights = self.backend.weight_metrics();
+        self.metrics.prefix = self.backend.prefix_metrics();
         if self.active.is_empty() {
             self.backend.reclaim();
         }
@@ -465,8 +467,10 @@ impl<B: InferenceBackend> Engine<B> {
             .filter(|a| a.prefill_done < a.req.prompt.len())
             .map(|a| {
                 self.backend
-                    .prefill_reserve_bytes(a.req.prompt.len())
-                    .saturating_sub(self.backend.prefill_visible_bytes(a.prefill_done))
+                    .prefill_reserve_bytes(&a.req.prompt)
+                    .saturating_sub(
+                        self.backend.prefill_visible_bytes(&a.req.prompt, a.prefill_done),
+                    )
             })
             .fold(0usize, usize::saturating_add)
     }
@@ -535,7 +539,7 @@ impl<B: InferenceBackend> Engine<B> {
         let room = {
             let mut running: Vec<&mut B::Session> =
                 self.active.iter_mut().map(|a| &mut a.sess).collect();
-            self.backend.make_room(req.prompt.len(), &mut running)
+            self.backend.make_room(&req.prompt, &mut running)
         };
         match room {
             Ok(preempted) => self.metrics.kv.preemptions += preempted,
@@ -553,7 +557,7 @@ impl<B: InferenceBackend> Engine<B> {
             }
         }
         let arrival = req.arrival.unwrap_or_else(Instant::now);
-        let sess = match self.backend.new_session(&req) {
+        let mut sess = match self.backend.new_session(&req) {
             Ok(s) => s,
             Err(e) => {
                 self.metrics.failed += 1;
@@ -568,12 +572,18 @@ impl<B: InferenceBackend> Engine<B> {
                 return Ok(None);
             }
         };
+        // Prefix-cache hit: the fresh session attaches the cached pages
+        // (shared, no new KV) and prefill starts at the fork — the
+        // cached-prefix tokens are never re-prefilled. `fork` is 0 on a
+        // miss or on cache-less backends, which is the cold path exactly.
+        let fork = self.backend.prefix_attach(&mut sess, &req.prompt);
+        self.metrics.prefix = self.backend.prefix_metrics();
         let rng = request_rng(&req);
         // A context-cap-clamped budget of 0 keeps the pre-existing "one
         // free token from the prefill logits" semantics via max(1); an
         // explicit zero request was handled above.
         let budget = token_budget(&req, cap).max(1);
-        let cost = self.backend.prefill_reserve_bytes(req.prompt.len());
+        let cost = self.backend.prefill_reserve_bytes(&req.prompt);
         self.active.push(Active {
             last: 0,
             tokens: Vec::new(),
@@ -581,7 +591,7 @@ impl<B: InferenceBackend> Engine<B> {
             rng,
             budget,
             arrival,
-            prefill_done: 0,
+            prefill_done: fork,
             prefill_s: 0.0,
             ttft_s: 0.0,
             decode_started: Instant::now(),
@@ -604,12 +614,7 @@ impl<B: InferenceBackend> Engine<B> {
     /// terminal `Failed` events — the KV-leak fix — without stopping the
     /// engine.
     fn run_tick(&mut self) -> Result<()> {
-        {
-            let mut running: Vec<&mut B::Session> =
-                self.active.iter_mut().map(|a| &mut a.sess).collect();
-            let shed = self.backend.enforce_kv_budget(&mut running)?;
-            self.metrics.kv.holder_sheds += shed;
-        }
+        self.budget_pass()?;
         let cap = self.backend.max_len();
         let limits = self.backend.tick_limits();
         let chunk_cap = limits.prefill_chunk.max(1);
@@ -662,7 +667,7 @@ impl<B: InferenceBackend> Engine<B> {
                 for (id, _) in &sel {
                     self.fail_active(*id, &msg);
                 }
-                return Ok(());
+                return self.budget_pass();
             }
         };
         if rows.len() != sel.len() {
@@ -677,7 +682,7 @@ impl<B: InferenceBackend> Engine<B> {
             for (id, _) in &sel {
                 self.fail_active(*id, &msg);
             }
-            return Ok(());
+            return self.budget_pass();
         }
         for ((id, kind), outcome) in sel.into_iter().zip(rows) {
             match outcome {
@@ -685,6 +690,22 @@ impl<B: InferenceBackend> Engine<B> {
                 Ok(logits) => self.advance_row(id, kind, logits, walk_s, cap),
             }
         }
+        // Enforce the pool budget again **after** the walk: the tick's
+        // appends (and any prefix-cache publish) may have pushed resident
+        // bytes past the budget, and a registry-exact shed here means no
+        // tick boundary ever observes an over-budget pool (satellite 3).
+        self.budget_pass()
+    }
+
+    /// The cross-session KV budget pass (`EvictionPolicy::LargestHolder`
+    /// enforcement; a no-op elsewhere), with sheds counted. Run before
+    /// **and after** every fused tick so the pool is at or under budget at
+    /// every tick boundary, not just eventually.
+    fn budget_pass(&mut self) -> Result<()> {
+        let mut running: Vec<&mut B::Session> =
+            self.active.iter_mut().map(|a| &mut a.sess).collect();
+        let shed = self.backend.enforce_kv_budget(&mut running)?;
+        self.metrics.kv.holder_sheds += shed;
         Ok(())
     }
 
@@ -797,6 +818,7 @@ impl<B: InferenceBackend> Engine<B> {
         self.metrics.kv.restored_records += restored;
         self.metrics.push(m);
         self.metrics.weights = self.backend.weight_metrics();
+        self.metrics.prefix = self.backend.prefix_metrics();
         let id = act.req.id;
         deliver(
             &mut self.events,

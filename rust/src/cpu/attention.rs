@@ -97,11 +97,44 @@ pub fn chunked_prefill_attention(
     d: usize,
     out: &mut [f32],
 ) {
-    assert_eq!(q.len(), s * heads * d);
     assert_eq!(pk.len(), base * kv_heads * d);
     assert_eq!(pv.len(), base * kv_heads * d);
-    assert_eq!(k.len(), s * kv_heads * d);
-    assert_eq!(v.len(), s * kv_heads * d);
+    segmented_prefill_attention(q, &[(pk, pv)], k, v, s, heads, kv_heads, d, out);
+}
+
+/// [`chunked_prefill_attention`] generalized to a prefix stored in
+/// several contiguous fp32 segments: a warm (prefix-cache-hit) session's
+/// chunk attends over the **shared** cached-prefix stash, then its own
+/// suffix stash, then the fresh chunk causally — without concatenating
+/// buffers. Each `prefix` element is `(k, v)`, both `[n, kv_heads, d]`.
+///
+/// Segment rows are walked in global order with the same per-row dot,
+/// one softmax over the same contiguous score slice, and the same
+/// value-accumulation order as a single concatenated prefix buffer, so
+/// outputs are bit-identical to the cold (one-segment or monolithic)
+/// pass — the property the prefix-cache bit-identity tests pin down.
+#[allow(clippy::too_many_arguments)]
+pub fn segmented_prefill_attention(
+    q: &[f32],
+    prefix: &[(&[f32], &[f32])],
+    k: &[f32],
+    v: &[f32],
+    s: usize,
+    heads: usize,
+    kv_heads: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    let row = kv_heads * d;
+    let mut base = 0usize;
+    for (pk, pv) in prefix {
+        assert_eq!(pk.len() % row, 0);
+        assert_eq!(pk.len(), pv.len());
+        base += pk.len() / row;
+    }
+    assert_eq!(q.len(), s * heads * d);
+    assert_eq!(k.len(), s * row);
+    assert_eq!(v.len(), s * row);
     assert_eq!(out.len(), s * heads * d);
     let group = heads / kv_heads;
     let scale = 1.0 / (d as f32).sqrt();
@@ -114,15 +147,20 @@ pub fn chunked_prefill_attention(
             for i in 0..d {
                 qs[i] = qrow[i] * scale;
             }
-            // Prefix rows, then the causal span of the fresh chunk — the
-            // same global key order 0..=base+qi as a monolithic pass.
-            for ki in 0..base {
-                let krow = &pk[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                let mut acc = 0f32;
-                for i in 0..d {
-                    acc += qs[i] * krow[i];
+            // Prefix rows (across segments, in order), then the causal
+            // span of the fresh chunk — the same global key order
+            // 0..=base+qi as a monolithic pass.
+            let mut gi = 0usize;
+            for (pk, _) in prefix {
+                for ki in 0..pk.len() / row {
+                    let krow = &pk[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
+                    let mut acc = 0f32;
+                    for i in 0..d {
+                        acc += qs[i] * krow[i];
+                    }
+                    scores[gi] = acc;
+                    gi += 1;
                 }
-                scores[ki] = acc;
             }
             let causal = qi + 1;
             for ki in 0..causal {
@@ -136,11 +174,15 @@ pub fn chunked_prefill_attention(
             softmax_inplace(&mut scores[..base + causal]);
             let o = &mut out[(qi * heads + h) * d..(qi * heads + h) * d + d];
             o.fill(0.0);
-            for ki in 0..base {
-                let w = scores[ki];
-                let vrow = &pv[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                for i in 0..d {
-                    o[i] += w * vrow[i];
+            let mut gi = 0usize;
+            for (_, pv) in prefix {
+                for ki in 0..pv.len() / row {
+                    let w = scores[gi];
+                    gi += 1;
+                    let vrow = &pv[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
+                    for i in 0..d {
+                        o[i] += w * vrow[i];
+                    }
                 }
             }
             for ki in 0..causal {
@@ -306,6 +348,32 @@ mod tests {
                     "split {split} chunk at base {base} diverged"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn segmented_prefix_is_bit_identical_to_concatenated() {
+        // Split the retained prefix at every boundary into two segments;
+        // the chunk's outputs must equal the single-segment pass bit for
+        // bit (the prefix-cache fork-point invariant).
+        let mut rng = Rng::new(7);
+        let (base, s, heads, kv_heads, d) = (6usize, 3usize, 4, 2, 8);
+        let q = rng.normal_vec(s * heads * d);
+        let pk = rng.normal_vec(base * kv_heads * d);
+        let pv = rng.normal_vec(base * kv_heads * d);
+        let k = rng.normal_vec(s * kv_heads * d);
+        let v = rng.normal_vec(s * kv_heads * d);
+        let mut want = vec![0f32; s * heads * d];
+        chunked_prefill_attention(&q, &pk, &pv, &k, &v, base, s, heads, kv_heads, d, &mut want);
+        let row = kv_heads * d;
+        for cut in 0..=base {
+            let segs = [
+                (&pk[..cut * row], &pv[..cut * row]),
+                (&pk[cut * row..], &pv[cut * row..]),
+            ];
+            let mut out = vec![0f32; s * heads * d];
+            segmented_prefill_attention(&q, &segs, &k, &v, s, heads, kv_heads, d, &mut out);
+            assert_eq!(out, want, "prefix cut at {cut} diverged");
         }
     }
 

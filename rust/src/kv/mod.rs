@@ -27,11 +27,20 @@ use crate::quant::fp8;
 
 pub mod paged;
 
-pub use paged::{EvictionPolicy, KvPool, PoolStats, PAGE_TOKENS};
+pub use paged::{
+    CachedStash, EvictionPolicy, HolderId, KvPool, PageHandle, PoolStats, PrefixCache,
+    PrefixCacheMetrics, PrefixMatch, PAGE_TOKENS,
+};
 
 use paged::Page;
 
 /// KV storage for one decoder layer, all kv heads, token-major, paged.
+///
+/// Pages are held through refcounted [`PageHandle`]s: a prefix-cache hit
+/// attaches shared (read-only) pages via [`KvLayer::attach_shared`], and
+/// the first divergent write into a shared page copy-on-writes it into a
+/// private page. Reads never care about sharing; writes go through
+/// [`KvLayer::writable_page`].
 #[derive(Debug)]
 pub struct KvLayer {
     pub kv_heads: usize,
@@ -44,8 +53,12 @@ pub struct KvLayer {
     front: usize,
     /// Deque so releasing a fully-dropped leading page is O(1) — spilling
     /// a long prefix releases pages one by one.
-    pages: VecDeque<Page>,
+    pages: VecDeque<PageHandle>,
     pool: Arc<KvPool>,
+    /// Holder-registry identity (the owning session): referenced page
+    /// bytes are reported against this id so `LargestHolder` eviction can
+    /// pick its victim from the pool's own books.
+    holder: Option<HolderId>,
 }
 
 impl KvLayer {
@@ -56,11 +69,59 @@ impl KvLayer {
 
     /// A layer drawing pages from a shared (budgeted) pool.
     pub fn with_pool(kv_heads: usize, head_dim: usize, pool: Arc<KvPool>) -> Self {
-        KvLayer { kv_heads, head_dim, len: 0, front: 0, pages: VecDeque::new(), pool }
+        KvLayer {
+            kv_heads,
+            head_dim,
+            len: 0,
+            front: 0,
+            pages: VecDeque::new(),
+            pool,
+            holder: None,
+        }
     }
 
     pub fn pool(&self) -> &Arc<KvPool> {
         &self.pool
+    }
+
+    /// Report this layer's referenced page bytes against a registered
+    /// holder (credits pages already held).
+    pub fn set_holder(&mut self, id: HolderId) {
+        if let Some(old) = self.holder.take() {
+            self.pool.holder_sub(old, self.resident_bytes());
+        }
+        self.pool.holder_add(id, self.resident_bytes());
+        self.holder = Some(id);
+    }
+
+    fn page_bytes(&self) -> usize {
+        KvPool::page_bytes(self.kv_heads, self.head_dim)
+    }
+
+    fn push_handle(&mut self, h: PageHandle) {
+        if let Some(id) = self.holder {
+            self.pool.holder_add(id, self.page_bytes());
+        }
+        self.pages.push_back(h);
+    }
+
+    fn release_front_handle(&mut self) -> bool {
+        let Some(h) = self.pages.pop_front() else { return false };
+        if let Some(id) = self.holder {
+            self.pool.holder_sub(id, self.page_bytes());
+        }
+        drop(h);
+        true
+    }
+
+    /// `&mut Page` for writes into page `pi`, copy-on-writing it first if
+    /// it is shared with the prefix cache or another session. Bytes and
+    /// holder accounting are unaffected: the layer swaps one referenced
+    /// page for another.
+    fn writable_page(&mut self, pi: usize) -> &mut Page {
+        let pool = self.pool.clone();
+        pool.make_exclusive(&mut self.pages[pi]);
+        Arc::get_mut(&mut self.pages[pi]).unwrap().page_mut()
     }
 
     pub fn len(&self) -> usize {
@@ -90,7 +151,9 @@ impl KvLayer {
         let a = self.front + self.len;
         let (pi, si) = (a / PAGE_TOKENS, a % PAGE_TOKENS);
         if pi == self.pages.len() {
-            self.pages.push_back(self.pool.take_page(self.kv_heads, self.head_dim));
+            let pool = self.pool.clone();
+            let h = pool.take_handle(self.kv_heads, self.head_dim);
+            self.push_handle(h);
         }
         (pi, si)
     }
@@ -104,7 +167,7 @@ impl KvLayer {
         assert_eq!(k.len(), kvh * d);
         assert_eq!(v.len(), kvh * d);
         let (pi, si) = self.tail_slot();
-        let page = &mut self.pages[pi];
+        let page = self.writable_page(pi);
         let base = si * kvh * d;
         for h in 0..kvh {
             let ks = &k[h * d..(h + 1) * d];
@@ -127,7 +190,7 @@ impl KvLayer {
         let d = self.head_dim;
         debug_assert_eq!(q.len(), d);
         let (pi, si) = self.locate(tok);
-        let page = &self.pages[pi];
+        let page = self.pages[pi].page();
         let base = (si * self.kv_heads + head) * d;
         let p = page.k_params[si * self.kv_heads + head];
         let mut acc = 0f32;
@@ -145,7 +208,7 @@ impl KvLayer {
         let d = self.head_dim;
         debug_assert_eq!(out.len(), d);
         let (pi, si) = self.locate(tok);
-        let page = &self.pages[pi];
+        let page = self.pages[pi].page();
         let base = (si * self.kv_heads + head) * d;
         for i in 0..d {
             out[i] += w * fp8::f8e4m3_to_f32(page.v_f8[base + i]);
@@ -157,7 +220,7 @@ impl KvLayer {
     pub fn serialize_token(&self, tok: usize) -> Vec<u8> {
         let d = self.head_dim;
         let (pi, si) = self.locate(tok);
-        let page = &self.pages[pi];
+        let page = self.pages[pi].page();
         let mut out = Vec::with_capacity(self.bytes_per_token());
         for h in 0..self.kv_heads {
             let base = (si * self.kv_heads + h) * d;
@@ -178,7 +241,7 @@ impl KvLayer {
         let kvh = self.kv_heads;
         assert_eq!(rec.len(), self.bytes_per_token());
         let (pi, si) = self.tail_slot();
-        let page = &mut self.pages[pi];
+        let page = self.writable_page(pi);
         let base = si * kvh * d;
         let mut off = 0;
         for h in 0..kvh {
@@ -197,48 +260,90 @@ impl KvLayer {
     }
 
     /// Remove the first `n` tokens (after they were spilled to flash).
-    /// Fully-vacated leading pages return to the pool.
+    /// Fully-vacated leading pages release their handle — the page goes
+    /// back to the pool once no other holder (prefix cache, sibling
+    /// session) references it.
     pub fn drop_prefix(&mut self, n: usize) {
         assert!(n <= self.len);
         self.len -= n;
         self.front += n;
         while self.front >= PAGE_TOKENS {
-            let Some(page) = self.pages.pop_front() else { break };
-            self.pool.put_page(self.kv_heads, self.head_dim, page);
+            if !self.release_front_handle() {
+                break;
+            }
             self.front -= PAGE_TOKENS;
         }
     }
 
-    /// Drop all tokens and return every page to the pool.
+    /// Drop all tokens and release every page handle.
     pub fn clear(&mut self) {
-        for page in self.pages.drain(..) {
-            self.pool.put_page(self.kv_heads, self.head_dim, page);
-        }
+        while self.release_front_handle() {}
         self.len = 0;
         self.front = 0;
     }
 
     /// Resident bytes (DRAM occupancy): page-granular, like the real
-    /// allocator — a partially filled tail page costs a full page.
+    /// allocator — a partially filled tail page costs a full page. Shared
+    /// pages count fully here (this is the layer's referenced footprint);
+    /// see [`KvLayer::exclusive_resident_bytes`] for what releasing the
+    /// layer would actually free.
     pub fn resident_bytes(&self) -> usize {
-        self.pages.len() * KvPool::page_bytes(self.kv_heads, self.head_dim)
+        self.pages.len() * self.page_bytes()
+    }
+
+    /// Bytes of pages this layer holds exclusively (refcount 1) — the
+    /// amount that would return to the pool right now if the layer
+    /// released everything.
+    pub fn exclusive_resident_bytes(&self) -> usize {
+        let pb = self.page_bytes();
+        self.pages.iter().filter(|h| Arc::strong_count(h) == 1).count() * pb
     }
 
     /// Pages currently held.
     pub fn page_count(&self) -> usize {
         self.pages.len()
     }
+
+    /// Pages shared with at least one other holder (prefix cache or
+    /// another session).
+    pub fn shared_page_count(&self) -> usize {
+        self.pages.iter().filter(|h| Arc::strong_count(h) > 1).count()
+    }
+
+    /// Attach shared prefix pages (a prefix-cache hit): the empty layer
+    /// starts life at `tokens` live tokens whose records live in the
+    /// given read-only pages. Refcounts were bumped by the cache lookup;
+    /// the first divergent append into the (possibly partial) tail page
+    /// copy-on-writes it.
+    pub fn attach_shared(&mut self, pages: Vec<PageHandle>, tokens: usize) {
+        assert!(self.pages.is_empty() && self.len == 0 && self.front == 0);
+        assert_eq!(pages.len(), tokens.div_ceil(PAGE_TOKENS));
+        for h in pages {
+            assert_eq!((h.kv_heads(), h.head_dim()), (self.kv_heads, self.head_dim));
+            self.push_handle(h);
+        }
+        self.len = tokens;
+    }
+
+    /// Clone handles for the pages covering the first `tokens` live
+    /// tokens (publishing to the prefix cache). The clones share
+    /// refcounts — bytes stay counted once in the pool. Requires an
+    /// undropped prefix (nothing spilled).
+    pub fn share_prefix_pages(&self, tokens: usize) -> Vec<PageHandle> {
+        assert_eq!(self.front, 0, "prefix partially spilled");
+        assert!(tokens <= self.len);
+        self.pages.iter().take(tokens.div_ceil(PAGE_TOKENS)).cloned().collect()
+    }
 }
 
 impl Clone for KvLayer {
-    /// Deep copy; the clone draws its own pages from the same pool.
+    /// Deep copy; the clone draws its own (exclusive) pages from the same
+    /// pool and reports to no holder.
     fn clone(&self) -> Self {
         let mut out = KvLayer::with_pool(self.kv_heads, self.head_dim, self.pool.clone());
         for page in &self.pages {
-            let mut np = self.pool.take_page(self.kv_heads, self.head_dim);
-            np.k_q.copy_from_slice(&page.k_q);
-            np.k_params.copy_from_slice(&page.k_params);
-            np.v_f8.copy_from_slice(&page.v_f8);
+            let mut np = self.pool.take_handle(self.kv_heads, self.head_dim);
+            Arc::get_mut(&mut np).unwrap().page_mut().copy_from(page.page());
             out.pages.push_back(np);
         }
         out.len = self.len;
@@ -535,5 +640,91 @@ mod tests {
         let v = rng.normal_vec(16);
         a.append(&k, &v);
         assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn attach_shared_reads_without_new_bytes_then_divergent_append_cows() {
+        let pool = Arc::new(KvPool::unbounded());
+        let pb = KvPool::page_bytes(2, 8);
+        let mut rng = Rng::new(8);
+        let mut donor = KvLayer::with_pool(2, 8, pool.clone());
+        for _ in 0..PAGE_TOKENS + 4 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            donor.append(&k, &v);
+        }
+        let fork = PAGE_TOKENS + 2; // mid-page fork: tail page partially covered
+        let mut warm = KvLayer::with_pool(2, 8, pool.clone());
+        warm.attach_shared(donor.share_prefix_pages(fork), fork);
+        assert_eq!(warm.len(), fork);
+        assert_eq!(pool.resident_bytes(), 2 * pb, "attach shares, no new bytes");
+        assert_eq!(warm.shared_page_count(), 2);
+        assert_eq!(warm.exclusive_resident_bytes(), 0);
+        for t in 0..fork {
+            assert_eq!(warm.serialize_token(t), donor.serialize_token(t), "token {t}");
+        }
+        let donor_before: Vec<Vec<u8>> =
+            (0..donor.len()).map(|t| donor.serialize_token(t)).collect();
+        // The first divergent append lands in the shared tail page and
+        // must copy-on-write it into a private page…
+        let k = rng.normal_vec(16);
+        let v = rng.normal_vec(16);
+        warm.append(&k, &v);
+        assert_eq!(pool.stats().cow_copies, 1);
+        assert_eq!(pool.resident_bytes(), 3 * pb, "one private copy");
+        assert_eq!(warm.shared_page_count(), 1, "full first page still shared");
+        // …leaving the donor's records bit-identical.
+        for (t, rec) in donor_before.iter().enumerate() {
+            assert_eq!(&donor.serialize_token(t), rec, "donor token {t}");
+        }
+        // Dropping the warm layer frees only its private copy plus its
+        // refs; the donor keeps everything.
+        drop(warm);
+        assert_eq!(pool.resident_bytes(), 2 * pb);
+        for (t, rec) in donor_before.iter().enumerate() {
+            assert_eq!(&donor.serialize_token(t), rec, "donor token {t} after drop");
+        }
+    }
+
+    #[test]
+    fn page_aligned_attach_appends_fresh_without_cow() {
+        let pool = Arc::new(KvPool::unbounded());
+        let mut rng = Rng::new(9);
+        let mut donor = KvLayer::with_pool(2, 8, pool.clone());
+        for _ in 0..PAGE_TOKENS {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            donor.append(&k, &v);
+        }
+        let mut warm = KvLayer::with_pool(2, 8, pool.clone());
+        warm.attach_shared(donor.share_prefix_pages(PAGE_TOKENS), PAGE_TOKENS);
+        let k = rng.normal_vec(16);
+        let v = rng.normal_vec(16);
+        warm.append(&k, &v);
+        assert_eq!(pool.stats().cow_copies, 0, "append past a full shared page needs no copy");
+        assert_eq!(warm.page_count(), 2);
+    }
+
+    #[test]
+    fn holder_registry_follows_layer_page_flow() {
+        let pool = Arc::new(KvPool::unbounded());
+        let pb = KvPool::page_bytes(2, 8);
+        let id = pool.register_holder();
+        let mut rng = Rng::new(10);
+        let mut kv = KvLayer::with_pool(2, 8, pool.clone());
+        kv.set_holder(id);
+        for _ in 0..PAGE_TOKENS + 1 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            kv.append(&k, &v);
+        }
+        assert_eq!(pool.holder_bytes(id), 2 * pb);
+        assert_eq!(pool.largest_holder(), Some((id, 2 * pb)));
+        kv.drop_prefix(PAGE_TOKENS);
+        assert_eq!(pool.holder_bytes(id), pb);
+        kv.clear();
+        assert_eq!(pool.holder_bytes(id), 0);
+        pool.unregister_holder(id);
+        assert_eq!(pool.largest_holder(), None);
     }
 }

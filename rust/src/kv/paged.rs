@@ -7,6 +7,13 @@
 //! `drop_prefix`/`clear`/drop, so concurrent requests share one bounded
 //! DRAM arena instead of each growing unbounded `Vec`s.
 //!
+//! Pages are **refcounted** ([`PageHandle`]): the prefix cache
+//! ([`PrefixCache`]) and any number of sessions can hold the same page
+//! read-only, and the buffer returns to the free list exactly when the
+//! last handle drops. A holder's first divergent *write* into a shared
+//! page copy-on-writes it into a private page ([`KvPool::make_exclusive`]),
+//! so shared system-prompt KV is stored once and forked lazily.
+//!
 //! The pool never fails an allocation — mobile engines must degrade, not
 //! OOM — it instead *reports* pressure (`over_budget`, `would_exceed`) and
 //! the owners react: `memory::hybrid::HybridKvLayer` evicts its oldest
@@ -19,7 +26,7 @@
 //! how much a burst leaves cached.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::quant::asym::AsymParams;
 
@@ -42,14 +49,16 @@ pub enum EvictionPolicy {
     #[default]
     ShedSelf,
     /// The *engine* spills oldest records from the session holding the
-    /// most resident KV (between scheduler ticks, via
+    /// most resident KV (at the end of every fused layer walk, via
     /// `NativeModel::enforce_kv_budget`). Fairer under concurrency — the
     /// largest context pays — and value-neutral like all spilling. The
-    /// pool may transiently exceed its budget by at most one scheduler
-    /// tick's appends; only meaningful when requests are driven through
-    /// the `Engine` (direct `NativeModel::generate` calls have a single
-    /// session, where largest-holder and shed-self coincide, but nothing
-    /// restores the budget between their decode steps).
+    /// pool-level holder registry makes victim selection exact, and
+    /// running the enforcement inside the tick (not just before the next
+    /// one) closes the transient over-budget window between ticks. Only
+    /// meaningful when requests are driven through the `Engine` (direct
+    /// `NativeModel::generate` calls have a single session, where
+    /// largest-holder and shed-self coincide, but nothing restores the
+    /// budget between their decode steps).
     LargestHolder,
 }
 
@@ -77,7 +86,64 @@ impl Page {
             v_f8: vec![0; kd],
         }
     }
+
+    fn empty() -> Self {
+        Page { k_q: Vec::new(), k_params: Vec::new(), v_f8: Vec::new() }
+    }
+
+    pub(crate) fn copy_from(&mut self, src: &Page) {
+        self.k_q.copy_from_slice(&src.k_q);
+        self.k_params.copy_from_slice(&src.k_params);
+        self.v_f8.copy_from_slice(&src.v_f8);
+    }
 }
+
+/// A refcounted, pool-accounted page. Clone the handle (`Arc`) to share
+/// the page read-only — bytes stay counted **once** in the pool, and the
+/// buffer goes back to the free list exactly when the last handle drops
+/// (refcount 0). Writers must go through [`KvPool::make_exclusive`],
+/// which copy-on-writes a shared page into a private one.
+#[derive(Debug)]
+pub struct PooledPage {
+    kv_heads: usize,
+    head_dim: usize,
+    page: Page,
+    pool: Arc<KvPool>,
+}
+
+/// Shared ownership of one [`PooledPage`].
+pub type PageHandle = Arc<PooledPage>;
+
+impl PooledPage {
+    pub(crate) fn page(&self) -> &Page {
+        &self.page
+    }
+
+    pub(crate) fn page_mut(&mut self) -> &mut Page {
+        &mut self.page
+    }
+
+    pub fn kv_heads(&self) -> usize {
+        self.kv_heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+}
+
+impl Drop for PooledPage {
+    fn drop(&mut self) {
+        let page = std::mem::replace(&mut self.page, Page::empty());
+        self.pool.put_page(self.kv_heads, self.head_dim, page);
+    }
+}
+
+/// Identity of one pool client (a session) in the holder registry —
+/// lets `EvictionPolicy::LargestHolder` pick its victim from the pool's
+/// own books instead of trusting a possibly-stale scheduler snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct HolderId(u64);
 
 /// Allocation counters (observability; `coordinator::metrics` snapshots
 /// the byte figures).
@@ -87,16 +153,34 @@ pub struct PoolStats {
     pub allocated: u64,
     /// Pages served from a free list.
     pub reused: u64,
-    /// Pages returned by their owners.
+    /// Pages returned by their owners (refcount reached 0).
     pub returned: u64,
-    /// High-water mark of in-use bytes.
+    /// Shared pages privatized by a divergent write (copy-on-write).
+    pub cow_copies: u64,
+    /// High-water mark of tracked bytes (live pages + live prefill
+    /// stashes).
     pub peak_bytes: usize,
 }
 
 struct PoolInner {
     in_use_bytes: usize,
+    /// fp32 `PrefillStash` / cached-prefix-stash bytes alive right now —
+    /// tracked at runtime (not just charged at admission) so mid-prefill
+    /// pressure checks see the true DRAM footprint.
+    stash_bytes: usize,
     free: HashMap<(usize, usize), Vec<Page>>,
+    holders: HashMap<HolderId, usize>,
+    next_holder: u64,
     stats: PoolStats,
+}
+
+impl PoolInner {
+    fn bump_peak(&mut self) {
+        let tracked = self.in_use_bytes + self.stash_bytes;
+        if tracked > self.stats.peak_bytes {
+            self.stats.peak_bytes = tracked;
+        }
+    }
 }
 
 /// Shared page arena with a byte budget. Cheap to share: wrap in an `Arc`
@@ -112,7 +196,10 @@ impl KvPool {
             budget_bytes,
             inner: Mutex::new(PoolInner {
                 in_use_bytes: 0,
+                stash_bytes: 0,
                 free: HashMap::new(),
+                holders: HashMap::new(),
+                next_holder: 0,
                 stats: PoolStats::default(),
             }),
         }
@@ -136,9 +223,7 @@ impl KvPool {
         let bytes = Self::page_bytes(kv_heads, head_dim);
         let mut g = self.inner.lock().unwrap();
         g.in_use_bytes += bytes;
-        if g.in_use_bytes > g.stats.peak_bytes {
-            g.stats.peak_bytes = g.in_use_bytes;
-        }
+        g.bump_peak();
         let recycled = g.free.get_mut(&(kv_heads, head_dim)).and_then(|v| v.pop());
         match recycled {
             Some(p) => {
@@ -165,15 +250,125 @@ impl KvPool {
         }
     }
 
+    /// Take a page wrapped in a refcounted [`PageHandle`]. Cloning the
+    /// handle shares the page without re-counting its bytes; the page
+    /// returns to the free list when the last handle drops.
+    pub fn take_handle(self: &Arc<Self>, kv_heads: usize, head_dim: usize) -> PageHandle {
+        let page = self.take_page(kv_heads, head_dim);
+        Arc::new(PooledPage { kv_heads, head_dim, page, pool: self.clone() })
+    }
+
+    /// Copy-on-write: if `handle` is shared (refcount > 1), replace it
+    /// with a private copy of its contents drawn fresh from the pool and
+    /// drop this holder's reference to the shared original. No-op (and
+    /// `false`) when the handle is already exclusive.
+    pub fn make_exclusive(self: &Arc<Self>, handle: &mut PageHandle) -> bool {
+        if Arc::get_mut(handle).is_some() {
+            return false;
+        }
+        let mut fresh = self.take_page(handle.kv_heads, handle.head_dim);
+        fresh.copy_from(handle.page());
+        *handle = Arc::new(PooledPage {
+            kv_heads: handle.kv_heads,
+            head_dim: handle.head_dim,
+            page: fresh,
+            pool: self.clone(),
+        });
+        self.inner.lock().unwrap().stats.cow_copies += 1;
+        true
+    }
+
+    /// Register one pool client (a session) with the holder registry.
+    /// The client's `KvLayer`s report referenced page bytes against this
+    /// id, making [`KvPool::largest_holder`] exact.
+    pub fn register_holder(&self) -> HolderId {
+        let mut g = self.inner.lock().unwrap();
+        let id = HolderId(g.next_holder);
+        g.next_holder += 1;
+        g.holders.insert(id, 0);
+        id
+    }
+
+    /// Remove a client from the registry (its layers should already have
+    /// released their pages).
+    pub fn unregister_holder(&self, id: HolderId) {
+        self.inner.lock().unwrap().holders.remove(&id);
+    }
+
+    pub(crate) fn holder_add(&self, id: HolderId, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        *g.holders.entry(id).or_insert(0) += bytes;
+    }
+
+    pub(crate) fn holder_sub(&self, id: HolderId, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(b) = g.holders.get_mut(&id) {
+            *b = b.saturating_sub(bytes);
+        }
+    }
+
+    /// Bytes of pages a registered holder currently references. Shared
+    /// pages count toward **every** referencing holder here (the registry
+    /// answers "who would free the most by shedding"), so the sum over
+    /// holders can exceed [`KvPool::resident_bytes`].
+    pub fn holder_bytes(&self, id: HolderId) -> usize {
+        self.inner.lock().unwrap().holders.get(&id).copied().unwrap_or(0)
+    }
+
+    /// The registered holder referencing the most page bytes (ties break
+    /// toward the oldest registration, for determinism).
+    pub fn largest_holder(&self) -> Option<(HolderId, usize)> {
+        let g = self.inner.lock().unwrap();
+        let mut best: Option<(HolderId, usize)> = None;
+        for (&id, &bytes) in &g.holders {
+            match best {
+                Some((bid, bb)) if bytes > bb || (bytes == bb && id < bid) => {
+                    best = Some((id, bytes));
+                }
+                None => best = Some((id, bytes)),
+                _ => {}
+            }
+        }
+        best
+    }
+
+    /// Charge live fp32 prefill-stash bytes (chunked-prefill scratch or a
+    /// cached prefix's retained stash) against the pool's footprint.
+    pub fn add_stash(&self, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.stash_bytes += bytes;
+        g.bump_peak();
+    }
+
+    pub fn sub_stash(&self, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.stash_bytes = g.stash_bytes.saturating_sub(bytes);
+    }
+
+    /// Live fp32 stash bytes currently charged.
+    pub fn stash_bytes(&self) -> usize {
+        self.inner.lock().unwrap().stash_bytes
+    }
+
     /// Byte budget this pool was created with.
     pub fn budget_bytes(&self) -> usize {
         self.budget_bytes
     }
 
     /// Bytes currently held by live pages (free-listed pages excluded:
-    /// they are reclaimable immediately and carry no KV state).
+    /// they are reclaimable immediately and carry no KV state). Shared
+    /// pages are counted once, no matter how many handles reference them.
     pub fn resident_bytes(&self) -> usize {
         self.inner.lock().unwrap().in_use_bytes
+    }
+
+    /// Full tracked DRAM footprint: live pages **plus** live fp32 prefill
+    /// stashes. Admission headroom checks use this; the spill loops use
+    /// [`KvPool::over_budget`] (pages only), because spilling KV records
+    /// cannot shrink a stash.
+    pub fn footprint_bytes(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.in_use_bytes + g.stash_bytes
     }
 
     /// True when live pages exceed the budget — owners should evict.
@@ -182,14 +377,16 @@ impl KvPool {
     }
 
     /// Would taking `extra` more bytes exceed the budget? (Admission
-    /// control asks this before prefilling a new session.)
+    /// control asks this before prefilling a new session.) Counts the
+    /// full footprint — pages and live stashes.
     pub fn would_exceed(&self, extra: usize) -> bool {
-        self.resident_bytes().saturating_add(extra) > self.budget_bytes
+        self.footprint_bytes().saturating_add(extra) > self.budget_bytes
     }
 
-    /// Bytes left under the budget.
+    /// Bytes left under the budget (footprint-based, like
+    /// [`KvPool::would_exceed`]).
     pub fn available_bytes(&self) -> usize {
-        self.budget_bytes.saturating_sub(self.resident_bytes())
+        self.budget_bytes.saturating_sub(self.footprint_bytes())
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -202,6 +399,318 @@ impl std::fmt::Debug for KvPool {
         f.debug_struct("KvPool")
             .field("budget_bytes", &self.budget_bytes)
             .field("resident_bytes", &self.resident_bytes())
+            .finish()
+    }
+}
+
+/// Full-precision K/V for a cached prompt prefix — the publishing
+/// session's `PrefillStash` retained alongside the quantized pages, so a
+/// warm session can finish its chunked prefill attending over the exact
+/// fp32 history a cold prefill would have built (bit-identity). One
+/// buffer per layer: `[tokens * kv_heads * head_dim]`, keys already
+/// roped. Bytes are charged to the pool's stash gauge for as long as the
+/// stash lives.
+#[derive(Debug)]
+pub struct CachedStash {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub tokens: usize,
+    bytes: usize,
+    pool: Arc<KvPool>,
+}
+
+impl CachedStash {
+    /// Wrap a finished stash, charging its bytes to `pool`'s stash gauge
+    /// until dropped.
+    pub fn charge(
+        k: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+        tokens: usize,
+        pool: Arc<KvPool>,
+    ) -> Arc<Self> {
+        let elems: usize =
+            k.iter().map(Vec::len).sum::<usize>() + v.iter().map(Vec::len).sum::<usize>();
+        let bytes = elems * std::mem::size_of::<f32>();
+        pool.add_stash(bytes);
+        Arc::new(CachedStash { k, v, tokens, bytes, pool })
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for CachedStash {
+    fn drop(&mut self) {
+        self.pool.sub_stash(self.bytes);
+    }
+}
+
+/// Result of a prefix-cache lookup: shared pages (refcounts bumped) plus
+/// the fp32 stash to attend over while prefilling the remaining suffix.
+pub struct PrefixMatch {
+    /// Prompt tokens covered by the attached pages — the session resumes
+    /// prefill here. Capped at `prompt.len() - 1` so every admission
+    /// prefills at least the final prompt token (whose forward pass
+    /// produces the first logit).
+    pub fork: usize,
+    /// Prompt tokens the cache actually holds (uncapped). When this
+    /// covers the whole prompt, the admitting session need not publish.
+    pub covered: usize,
+    /// Per-layer shared page handles: `ceil(fork / PAGE_TOKENS)` pages
+    /// each. A partially-covered tail page is attached too — the
+    /// session's first append into it copy-on-writes.
+    pub pages: Vec<Vec<PageHandle>>,
+    pub stash: Arc<CachedStash>,
+}
+
+/// Prefix-cache observability, surfaced through `EngineMetrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixCacheMetrics {
+    pub lookups: u64,
+    pub hits: u64,
+    /// Prompt tokens admissions skipped prefilling (Σ fork).
+    pub prefill_tokens_saved: u64,
+    /// KV page bytes hits attached instead of re-storing (Σ over hits).
+    pub bytes_saved: u64,
+    pub inserts: u64,
+    /// Entries dropped: LRU budget eviction, pool-pressure reclaim, or
+    /// superseded by a longer prefix.
+    pub evictions: u64,
+    /// Entries resident right now.
+    pub entries: usize,
+    /// Quantized page bytes the cache currently holds handles to.
+    pub shared_page_bytes: usize,
+    /// fp32 stash bytes the cache currently retains.
+    pub stash_bytes: usize,
+    /// Shared pages privatized by divergent writes (pool-wide snapshot,
+    /// filled in by the owning model).
+    pub cow_copies: u64,
+}
+
+struct PrefixEntry {
+    ids: Vec<usize>,
+    /// `[layers][pages]` — holding these keeps the pages alive even while
+    /// no session references them.
+    pages: Vec<Vec<PageHandle>>,
+    stash: Arc<CachedStash>,
+    page_bytes: usize,
+    last_use: u64,
+}
+
+impl PrefixEntry {
+    fn bytes(&self) -> usize {
+        self.page_bytes + self.stash.bytes()
+    }
+}
+
+struct PrefixInner {
+    entries: Vec<PrefixEntry>,
+    clock: u64,
+    lookups: u64,
+    hits: u64,
+    tokens_saved: u64,
+    bytes_saved: u64,
+    inserts: u64,
+    evictions: u64,
+}
+
+/// Shared-prefix KV cache: token ids of a published prompt →
+/// refcounted quantized pages + the fp32 prefill stash. Admission looks
+/// up the longest cached prefix of an incoming prompt, attaches the
+/// session to those pages read-only, and starts prefill at the fork
+/// point. Entry granularity (not per-block hashing) keeps the attached
+/// stash contiguous; lookups are linear scans over the handful of live
+/// entries, with token-level (partial-page) matching so a fork can land
+/// mid-page.
+pub struct PrefixCache {
+    budget_bytes: usize,
+    inner: Mutex<PrefixInner>,
+}
+
+fn lcp(a: &[usize], b: &[usize]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl PrefixCache {
+    /// `budget_bytes == 0` disables the cache entirely (every lookup
+    /// misses, inserts are dropped) — the engine-default until a caller
+    /// opts in.
+    pub fn new(budget_bytes: usize) -> Self {
+        PrefixCache {
+            budget_bytes,
+            inner: Mutex::new(PrefixInner {
+                entries: Vec::new(),
+                clock: 0,
+                lookups: 0,
+                hits: 0,
+                tokens_saved: 0,
+                bytes_saved: 0,
+                inserts: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget_bytes > 0
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// The fork point a lookup of `prompt` would return, without touching
+    /// LRU state or metrics. Admission cost estimates use this so the
+    /// reservation math and the eventual attach agree.
+    pub fn peek_fork(&self, prompt: &[usize]) -> usize {
+        if !self.enabled() || prompt.is_empty() {
+            return 0;
+        }
+        let g = self.inner.lock().unwrap();
+        let best = g.entries.iter().map(|e| lcp(&e.ids, prompt)).max().unwrap_or(0);
+        best.min(prompt.len() - 1)
+    }
+
+    /// Longest-cached-prefix lookup. Bumps the matched entry's LRU clock
+    /// and the hit metrics; clones page handles (refcount++) for the
+    /// covered region.
+    pub fn lookup(&self, prompt: &[usize]) -> Option<PrefixMatch> {
+        if !self.enabled() || prompt.is_empty() {
+            return None;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.lookups += 1;
+        let (idx, covered) = g
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (i, lcp(&e.ids, prompt)))
+            .max_by_key(|&(i, n)| (n, std::cmp::Reverse(i)))?;
+        let fork = covered.min(prompt.len() - 1);
+        if fork == 0 {
+            return None;
+        }
+        g.clock += 1;
+        let clock = g.clock;
+        let e = &mut g.entries[idx];
+        e.last_use = clock;
+        let per_page = e.pages.first().map_or(0, |l| {
+            l.first().map_or(0, |h| KvPool::page_bytes(h.kv_heads(), h.head_dim()))
+        });
+        let npages = fork.div_ceil(PAGE_TOKENS);
+        let pages: Vec<Vec<PageHandle>> =
+            e.pages.iter().map(|l| l[..npages].to_vec()).collect();
+        g.hits += 1;
+        g.tokens_saved += fork as u64;
+        g.bytes_saved += (pages.len() * npages * per_page) as u64;
+        let e = &g.entries[idx];
+        Some(PrefixMatch { fork, covered, pages, stash: e.stash.clone() })
+    }
+
+    /// Publish a finished prefill: `ids` is the full prompt, `pages` the
+    /// per-layer handles covering it (cloned from the session — refcounts
+    /// bumped, bytes still counted once), `stash` its fp32 K/V. Returns
+    /// false (dropping the handles) when disabled or an existing entry
+    /// already covers `ids`; entries that `ids` strictly extends are
+    /// superseded. Evicts LRU entries until the cache is back under its
+    /// byte budget.
+    pub fn insert(
+        &self,
+        ids: Vec<usize>,
+        pages: Vec<Vec<PageHandle>>,
+        stash: Arc<CachedStash>,
+    ) -> bool {
+        if !self.enabled() || ids.is_empty() {
+            return false;
+        }
+        let per_page = pages.first().map_or(0, |l| {
+            l.first().map_or(0, |h| KvPool::page_bytes(h.kv_heads(), h.head_dim()))
+        });
+        let page_bytes = pages.iter().map(|l| l.len() * per_page).sum();
+        let mut g = self.inner.lock().unwrap();
+        if g.entries.iter().any(|e| e.ids.len() >= ids.len() && e.ids[..ids.len()] == ids[..]) {
+            return false;
+        }
+        let before = g.entries.len();
+        g.entries.retain(|e| !(ids.len() > e.ids.len() && ids[..e.ids.len()] == e.ids[..]));
+        g.evictions += (before - g.entries.len()) as u64;
+        g.clock += 1;
+        let clock = g.clock;
+        g.entries.push(PrefixEntry { ids, pages, stash, page_bytes, last_use: clock });
+        g.inserts += 1;
+        self.evict_over_budget(&mut g);
+        true
+    }
+
+    fn evict_over_budget(&self, g: &mut PrefixInner) {
+        while g.entries.iter().map(PrefixEntry::bytes).sum::<usize>() > self.budget_bytes {
+            let Some(idx) = g
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            g.entries.remove(idx);
+            g.evictions += 1;
+        }
+    }
+
+    /// Drop the least-recently-used entry (pool-pressure reclaim: frees
+    /// any of its pages no session still references; pages shared with
+    /// live sessions survive until those sessions release them). Returns
+    /// false when the cache is empty.
+    pub fn reclaim_lru(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let Some(idx) =
+            g.entries.iter().enumerate().min_by_key(|(_, e)| e.last_use).map(|(i, _)| i)
+        else {
+            return false;
+        };
+        g.entries.remove(idx);
+        g.evictions += 1;
+        true
+    }
+
+    /// Drop every entry.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.entries.len() as u64;
+        g.entries.clear();
+        g.evictions += n;
+    }
+
+    /// Bytes the cache currently pins (pages + stashes).
+    pub fn bytes(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.entries.iter().map(PrefixEntry::bytes).sum()
+    }
+
+    pub fn metrics(&self) -> PrefixCacheMetrics {
+        let g = self.inner.lock().unwrap();
+        PrefixCacheMetrics {
+            lookups: g.lookups,
+            hits: g.hits,
+            prefill_tokens_saved: g.tokens_saved,
+            bytes_saved: g.bytes_saved,
+            inserts: g.inserts,
+            evictions: g.evictions,
+            entries: g.entries.len(),
+            shared_page_bytes: g.entries.iter().map(|e| e.page_bytes).sum(),
+            stash_bytes: g.entries.iter().map(|e| e.stash.bytes()).sum(),
+            cow_copies: 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for PrefixCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixCache")
+            .field("budget_bytes", &self.budget_bytes)
+            .field("bytes", &self.bytes())
             .finish()
     }
 }
@@ -275,5 +784,216 @@ mod tests {
         let _p = pool.take_page(2, 8);
         assert!(!pool.over_budget());
         assert!(!pool.would_exceed(usize::MAX), "saturating math, no overflow");
+    }
+
+    #[test]
+    fn handles_refcount_bytes_once_and_free_at_zero() {
+        let pool = Arc::new(KvPool::unbounded());
+        let pb = KvPool::page_bytes(2, 8);
+        let h1 = pool.take_handle(2, 8);
+        assert_eq!(pool.resident_bytes(), pb);
+        let h2 = h1.clone(); // share: no new bytes
+        assert_eq!(pool.resident_bytes(), pb);
+        assert_eq!(Arc::strong_count(&h1), 2);
+        drop(h1);
+        assert_eq!(pool.resident_bytes(), pb, "still one live holder");
+        assert_eq!(pool.stats().returned, 0);
+        drop(h2);
+        assert_eq!(pool.resident_bytes(), 0, "freed at refcount 0");
+        assert_eq!(pool.stats().returned, 1, "returned exactly once");
+    }
+
+    #[test]
+    fn make_exclusive_copies_shared_pages_only() {
+        let pool = Arc::new(KvPool::unbounded());
+        let mut h1 = pool.take_handle(2, 8);
+        // Exclusive: no copy.
+        assert!(!pool.make_exclusive(&mut h1));
+        assert_eq!(pool.stats().cow_copies, 0);
+        Arc::get_mut(&mut h1).unwrap().page_mut().k_q[0] = 42;
+        let h2 = h1.clone();
+        // Shared: divergent write must privatize.
+        assert!(pool.make_exclusive(&mut h1));
+        assert_eq!(pool.stats().cow_copies, 1);
+        assert_eq!(Arc::strong_count(&h2), 1, "old ref released");
+        assert_eq!(h1.page().k_q[0], 42, "contents copied");
+        Arc::get_mut(&mut h1).unwrap().page_mut().k_q[0] = 7;
+        assert_eq!(h2.page().k_q[0], 42, "original untouched");
+        let pb = KvPool::page_bytes(2, 8);
+        assert_eq!(pool.resident_bytes(), 2 * pb, "copy counted");
+    }
+
+    #[test]
+    fn holder_registry_tracks_referenced_bytes() {
+        let pool = Arc::new(KvPool::unbounded());
+        let a = pool.register_holder();
+        let b = pool.register_holder();
+        pool.holder_add(a, 100);
+        pool.holder_add(b, 300);
+        assert_eq!(pool.holder_bytes(a), 100);
+        assert_eq!(pool.largest_holder(), Some((b, 300)));
+        pool.holder_sub(b, 250);
+        assert_eq!(pool.largest_holder(), Some((a, 100)));
+        pool.unregister_holder(a);
+        assert_eq!(pool.holder_bytes(a), 0);
+        assert_eq!(pool.largest_holder(), Some((b, 50)));
+    }
+
+    #[test]
+    fn stash_gauge_counts_toward_footprint_not_over_budget() {
+        let pb = KvPool::page_bytes(2, 8);
+        let pool = KvPool::new(2 * pb);
+        pool.add_stash(pb);
+        assert_eq!(pool.stash_bytes(), pb);
+        assert_eq!(pool.footprint_bytes(), pb);
+        // Stashes pressure admission (would_exceed / available)…
+        assert!(pool.would_exceed(2 * pb));
+        assert_eq!(pool.available_bytes(), pb);
+        // …but not the spill loop (spilling KV can't shrink a stash).
+        assert!(!pool.over_budget());
+        pool.sub_stash(pb);
+        assert_eq!(pool.footprint_bytes(), 0);
+        assert_eq!(pool.stats().peak_bytes, pb, "stash counted in peak");
+    }
+
+    fn stash_for(pool: &Arc<KvPool>, layers: usize, tokens: usize, dim: usize) -> Arc<CachedStash> {
+        let k = vec![vec![0f32; tokens * dim]; layers];
+        let v = vec![vec![0f32; tokens * dim]; layers];
+        CachedStash::charge(k, v, tokens, pool.clone())
+    }
+
+    #[test]
+    fn cached_stash_charges_gauge_until_dropped() {
+        let pool = Arc::new(KvPool::unbounded());
+        let s = stash_for(&pool, 2, 3, 4);
+        assert_eq!(s.bytes(), 2 * 2 * 3 * 4 * 4);
+        assert_eq!(pool.stash_bytes(), s.bytes());
+        drop(s);
+        assert_eq!(pool.stash_bytes(), 0);
+    }
+
+    /// One entry: `toks` tokens, `layers` layers of geometry (2, 8).
+    fn entry_pages(pool: &Arc<KvPool>, layers: usize, toks: usize) -> Vec<Vec<PageHandle>> {
+        (0..layers)
+            .map(|_| (0..toks.div_ceil(PAGE_TOKENS)).map(|_| pool.take_handle(2, 8)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let pool = Arc::new(KvPool::unbounded());
+        let cache = PrefixCache::new(0);
+        assert!(!cache.enabled());
+        assert!(!cache.insert(
+            vec![1, 2, 3],
+            entry_pages(&pool, 1, 3),
+            stash_for(&pool, 1, 3, 16),
+        ));
+        assert!(cache.lookup(&[1, 2, 3, 4]).is_none());
+        assert_eq!(cache.peek_fork(&[1, 2, 3, 4]), 0);
+        assert_eq!(pool.resident_bytes(), 0, "rejected insert released its pages");
+        assert_eq!(pool.stash_bytes(), 0, "and its stash charge");
+    }
+
+    #[test]
+    fn lookup_matches_longest_prefix_and_caps_fork() {
+        let pool = Arc::new(KvPool::unbounded());
+        let cache = PrefixCache::new(usize::MAX);
+        let ids: Vec<usize> = (0..20).collect();
+        assert!(cache.insert(ids.clone(), entry_pages(&pool, 2, 20), stash_for(&pool, 2, 20, 16)));
+        // Prompt extends the cached prefix: fork at the full 20 tokens.
+        let prompt: Vec<usize> = (0..30).collect();
+        let m = cache.lookup(&prompt).unwrap();
+        assert_eq!(m.fork, 20);
+        assert_eq!(m.covered, 20);
+        assert_eq!(m.pages.len(), 2);
+        assert_eq!(m.pages[0].len(), 20usize.div_ceil(PAGE_TOKENS));
+        // Prompt diverges at token 10: partial (mid-page) fork.
+        let mut div = ids.clone();
+        div[10] = 999;
+        let m = cache.lookup(&div).unwrap();
+        assert_eq!(m.fork, 10);
+        assert_eq!(m.pages[0].len(), 1, "partially-covered page attached");
+        // Prompt identical to the cached ids: fork capped at len-1 so the
+        // admission still prefills (and emits a logit for) the last token.
+        let m = cache.lookup(&ids).unwrap();
+        assert_eq!(m.fork, 19);
+        assert_eq!(m.covered, 20);
+        // No overlap: miss.
+        assert!(cache.lookup(&[999, 998]).is_none());
+        let met = cache.metrics();
+        assert_eq!(met.lookups, 4);
+        assert_eq!(met.hits, 3);
+        assert_eq!(met.prefill_tokens_saved, (20 + 10 + 19) as u64);
+        assert!(met.bytes_saved > 0);
+    }
+
+    #[test]
+    fn insert_dedups_and_supersedes() {
+        let pool = Arc::new(KvPool::unbounded());
+        let cache = PrefixCache::new(usize::MAX);
+        let short: Vec<usize> = (0..5).collect();
+        let long: Vec<usize> = (0..10).collect();
+        assert!(cache.insert(short.clone(), entry_pages(&pool, 1, 5), stash_for(&pool, 1, 5, 16)));
+        // A strictly longer prefix supersedes the short entry.
+        assert!(cache.insert(long.clone(), entry_pages(&pool, 1, 10), stash_for(&pool, 1, 10, 16)));
+        let m = cache.metrics();
+        assert_eq!(m.entries, 1);
+        assert_eq!(m.evictions, 1, "short entry superseded");
+        // Re-inserting a covered prefix is a no-op.
+        assert!(!cache.insert(short, entry_pages(&pool, 1, 5), stash_for(&pool, 1, 5, 16)));
+        assert_eq!(cache.metrics().entries, 1);
+        let m = cache.lookup(&long).unwrap();
+        assert_eq!(m.covered, 10);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_reclaim_frees_pages() {
+        let pool = Arc::new(KvPool::unbounded());
+        let pb = KvPool::page_bytes(2, 8);
+        let stash_bytes = 2 * 16 * 4 * 2; // 1 layer, 16 toks, dim 16... computed below
+        let _ = stash_bytes;
+        // Budget: two entries of (1 page + stash) each, not three.
+        let one_entry = pb + 2 * (16 * 16) * 4;
+        let cache = PrefixCache::new(2 * one_entry);
+        let mk = |start: usize| -> Vec<usize> { (start..start + 16).collect() };
+        cache.insert(mk(100), entry_pages(&pool, 1, 16), stash_for(&pool, 1, 16, 16));
+        cache.insert(mk(200), entry_pages(&pool, 1, 16), stash_for(&pool, 1, 16, 16));
+        assert_eq!(cache.metrics().entries, 2);
+        // Touch the first entry so the second is LRU.
+        assert!(cache.lookup(&mk(100)).is_some());
+        cache.insert(mk(300), entry_pages(&pool, 1, 16), stash_for(&pool, 1, 16, 16));
+        let m = cache.metrics();
+        assert_eq!(m.entries, 2, "budget holds two entries");
+        assert!(cache.lookup(&mk(200)).is_none(), "LRU entry evicted");
+        assert!(cache.lookup(&mk(100)).is_some(), "recently-used entry kept");
+        // Reclaim drops entries one by one and frees their pages.
+        let before = pool.resident_bytes();
+        assert!(before > 0);
+        assert!(cache.reclaim_lru());
+        assert!(pool.resident_bytes() < before);
+        assert!(cache.reclaim_lru());
+        assert!(!cache.reclaim_lru(), "empty cache has nothing to reclaim");
+        assert_eq!(pool.resident_bytes(), 0, "all cache-held pages freed");
+        assert_eq!(pool.stash_bytes(), 0, "all cache-held stashes released");
+    }
+
+    #[test]
+    fn shared_pages_survive_cache_eviction_until_released() {
+        // "A shared page is only reclaimable at refcount 0": dropping the
+        // cache's handle must not free a page a session still references.
+        let pool = Arc::new(KvPool::unbounded());
+        let pb = KvPool::page_bytes(2, 8);
+        let cache = PrefixCache::new(usize::MAX);
+        let pages = entry_pages(&pool, 1, 16);
+        let session_ref = pages[0][0].clone();
+        cache.insert((0..16).collect(), pages, stash_for(&pool, 1, 16, 16));
+        assert_eq!(pool.resident_bytes(), pb);
+        assert!(cache.reclaim_lru());
+        assert_eq!(pool.resident_bytes(), pb, "session still holds the page");
+        assert_eq!(pool.stats().returned, 0);
+        drop(session_ref);
+        assert_eq!(pool.resident_bytes(), 0, "freed exactly once, at refcount 0");
+        assert_eq!(pool.stats().returned, 1);
     }
 }

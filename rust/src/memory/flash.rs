@@ -7,6 +7,7 @@
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use crate::device::MemTier;
@@ -36,6 +37,11 @@ pub struct FlashSim {
     /// If true, reads sleep for the modeled duration (wall-clock realism
     /// for the e2e example; off in unit tests).
     emulate_stall: bool,
+    /// Failure injection: while set, appends fail with `ErrorKind::Other`
+    /// (a full/faulted device). Lets tests prove the engine turns a KV
+    /// spill failure into one request's terminal `Failed` event instead
+    /// of a process-killing panic.
+    poison_appends: AtomicBool,
 }
 
 impl FlashSim {
@@ -51,7 +57,26 @@ impl FlashSim {
             tier,
             inner: Mutex::new(Inner { file, len: 0, stats: FlashStats::default() }),
             emulate_stall,
+            poison_appends: AtomicBool::new(false),
         })
+    }
+
+    /// Failure injection: make every subsequent `append`/`append_reader`
+    /// fail (and `false` to heal). Reads are unaffected — already-spilled
+    /// records stay loadable, like a device that went read-only.
+    pub fn poison_appends(&self, poisoned: bool) {
+        self.poison_appends.store(poisoned, Ordering::SeqCst);
+    }
+
+    fn check_poison(&self) -> std::io::Result<()> {
+        if self.poison_appends.load(Ordering::SeqCst) {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "injected flash append failure",
+            ))
+        } else {
+            Ok(())
+        }
     }
 
     /// A tmpfile-backed device (tests, benches). The path is unique even
@@ -69,6 +94,7 @@ impl FlashSim {
 
     /// Append a record; returns its offset.
     pub fn append(&self, data: &[u8]) -> std::io::Result<u64> {
+        self.check_poison()?;
         let mut g = self.inner.lock().unwrap();
         let off = g.len;
         g.file.seek(SeekFrom::Start(off))?;
@@ -90,6 +116,7 @@ impl FlashSim {
     /// the record; the device length only advances once all bytes landed,
     /// so a short read leaves the store consistent. Returns the offset.
     pub fn append_reader(&self, r: &mut dyn Read, len: usize) -> std::io::Result<u64> {
+        self.check_poison()?;
         const CHUNK: usize = 256 << 10;
         let mut g = self.inner.lock().unwrap();
         let off = g.len;
@@ -203,6 +230,21 @@ mod tests {
         assert_eq!(f.len(), data.len() as u64, "failed append leaves length unchanged");
         let off2 = f.append(b"after").unwrap();
         assert_eq!(off2, data.len() as u64, "next append lands at the same offset");
+    }
+
+    #[test]
+    fn poisoned_appends_fail_but_reads_survive() {
+        let f = FlashSim::temp(ufs()).unwrap();
+        let off = f.append(b"before").unwrap();
+        f.poison_appends(true);
+        assert!(f.append(b"nope").is_err());
+        assert!(f.append_reader(&mut &b"nope"[..], 4).is_err());
+        assert_eq!(f.len(), 6, "failed appends leave the store unchanged");
+        let mut buf = vec![0u8; 6];
+        f.read_at(off, &mut buf).unwrap();
+        assert_eq!(&buf, b"before", "reads keep working");
+        f.poison_appends(false);
+        assert!(f.append(b"healed").is_ok());
     }
 
     #[test]

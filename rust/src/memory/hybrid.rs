@@ -289,9 +289,44 @@ impl HybridKvLayer {
         self.resident.resident_bytes() + self.staging.resident_bytes()
     }
 
-    /// Pool-accounted bytes of the resident suffix only.
+    /// Pool-accounted bytes of the resident suffix only. Shared
+    /// (prefix-cache) pages count fully — this is the layer's referenced
+    /// footprint, not what releasing it would free.
     pub fn resident_kv_bytes(&self) -> usize {
         self.resident.resident_bytes()
+    }
+
+    /// Bytes of resident pages this layer holds exclusively (refcount 1):
+    /// what shedding/releasing this layer could actually return to the
+    /// pool right now.
+    pub fn exclusive_kv_bytes(&self) -> usize {
+        self.resident.exclusive_resident_bytes()
+    }
+
+    /// Resident pages shared with the prefix cache or another session.
+    pub fn shared_page_count(&self) -> usize {
+        self.resident.shared_page_count()
+    }
+
+    /// Report resident-page bytes against a holder-registry id (the
+    /// owning session), for exact `LargestHolder` victim selection.
+    pub fn set_holder(&mut self, id: crate::kv::HolderId) {
+        self.resident.set_holder(id);
+    }
+
+    /// Prefix-cache attach: start this (empty) layer at `tokens` tokens
+    /// backed by shared read-only pages. See [`KvLayer::attach_shared`].
+    pub fn attach_shared(&mut self, pages: Vec<crate::kv::PageHandle>, tokens: usize) {
+        assert!(self.is_empty(), "attach requires a fresh layer");
+        self.resident.attach_shared(pages, tokens);
+    }
+
+    /// Prefix-cache publish: clone handles covering the first `tokens`
+    /// resident tokens. Requires nothing spilled (the prefix must be
+    /// whole in DRAM).
+    pub fn share_prefix_pages(&self, tokens: usize) -> Vec<crate::kv::PageHandle> {
+        assert!(self.spilled.is_empty(), "cannot publish a spilled prefix");
+        self.resident.share_prefix_pages(tokens)
     }
 
     /// Release the staging copy (tokens remain on flash).

@@ -359,19 +359,23 @@ pub struct WeightResidencyMetrics {
     /// [`fetches_per_token`](Self::fetches_per_token) — the batched-decode
     /// amortization gauge.
     pub tokens_generated: u64,
-    /// Flash blob fetches attributed to decode layer walks only (the model
-    /// snapshots the fetch counters around each decode pass), so the gauge
-    /// is not polluted by load warm-up or prefill traffic. A mixed tick
-    /// (prefill chunks fused with decode rows) attributes its shared walk
-    /// here — decode is the steady state.
+    /// Flash blob fetches attributed to the decode phase (the model
+    /// snapshots the fetch counters around each walk), so the gauge is
+    /// not polluted by load warm-up or prefill traffic. A mixed tick
+    /// (prefill chunks fused with decode rows) splits its shared walk's
+    /// delta between here and `prefill_fetches` proportionally to the
+    /// tick's decode/prefill row counts — each row drove the same layer
+    /// walk once.
     pub decode_fetches: u64,
     /// Prompt tokens prefilled against this store (chunked or monolithic).
     /// Denominator of
     /// [`fetches_per_prompt_token`](Self::fetches_per_prompt_token).
     pub prompt_tokens_prefilled: u64,
-    /// Flash blob fetches attributed to **pure-prefill** layer walks —
-    /// the traffic fused batched prefill amortizes across concurrently
-    /// admitted prompts (mixed ticks land in `decode_fetches` instead).
+    /// Flash blob fetches attributed to the prefill phase — the traffic
+    /// fused batched prefill amortizes across concurrently admitted
+    /// prompts. Pure-prefill walks land here in full; mixed ticks
+    /// contribute their row-proportional share (the remainder of the
+    /// split charged to `decode_fetches`).
     pub prefill_fetches: u64,
 }
 
@@ -707,21 +711,23 @@ impl WeightStore {
         }
     }
 
-    /// Record one decode layer walk: `tokens` generated rows and the
-    /// fetch-counter delta the walk produced (the model snapshots
+    /// Record decode work: `tokens` generated rows and the decode share of
+    /// the walk's fetch-counter delta (the model snapshots
     /// [`total_fetches`](WeightResidencyMetrics::total_fetches) around the
-    /// walk). Feeds the decode-only fetches-per-token gauge that makes
-    /// batched-decode weight amortization observable.
+    /// walk; a mixed tick passes its row-proportional share). Feeds the
+    /// decode-only fetches-per-token gauge that makes batched-decode
+    /// weight amortization observable.
     pub fn note_decode_pass(&self, tokens: u64, fetches: u64) {
         let mut st = self.shared.state.lock().unwrap();
         st.tokens_generated += tokens;
         st.decode_fetches += fetches;
     }
 
-    /// Record prefill work: `prompt_tokens` prefilled this walk and (for
-    /// pure-prefill walks) the fetch-counter delta the walk produced.
-    /// Feeds the fetches-per-prompt-token gauge that makes fused batched
-    /// prefill's weight amortization observable.
+    /// Record prefill work: `prompt_tokens` prefilled this walk and the
+    /// prefill share of the walk's fetch-counter delta (the full delta for
+    /// pure-prefill walks; the row-proportional remainder for mixed
+    /// ticks). Feeds the fetches-per-prompt-token gauge that makes fused
+    /// batched prefill's weight amortization observable.
     pub fn note_prefill_pass(&self, prompt_tokens: u64, fetches: u64) {
         let mut st = self.shared.state.lock().unwrap();
         st.prompt_tokens_prefilled += prompt_tokens;

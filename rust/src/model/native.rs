@@ -31,10 +31,13 @@ use std::sync::Arc;
 
 use crate::coordinator::backend::RowWork;
 use crate::cpu::activation::{add_inplace, rmsnorm, swiglu};
-use crate::cpu::attention::chunked_prefill_attention;
+use crate::cpu::attention::segmented_prefill_attention;
 use crate::cpu::gemm_q::QLinear;
 use crate::device::SocProfile;
-use crate::kv::{EvictionPolicy, KvPool, PAGE_TOKENS};
+use crate::kv::{
+    CachedStash, EvictionPolicy, HolderId, KvPool, PageHandle, PrefixCache, PrefixCacheMetrics,
+    PAGE_TOKENS,
+};
 use crate::lora::LoraManager;
 use crate::memory::embedding::FlashEmbedding;
 use crate::memory::flash::FlashSim;
@@ -93,6 +96,13 @@ pub struct EngineOptions {
     /// serves every active session each tick. Value-neutral (rows are
     /// independent); only scheduling order changes.
     pub max_rows_per_tick: usize,
+    /// Byte budget of the shared-prefix KV cache: finished prefills
+    /// publish their prompt's quantized pages (refcounted, copy-on-write)
+    /// plus the fp32 prefill stash; admissions attach the longest cached
+    /// prefix read-only and prefill only the suffix. 0 (the default)
+    /// disables the cache entirely — no lookup, no publish, no retained
+    /// pages — preserving the pre-cache engine bit for bit.
+    pub prefix_cache_bytes: usize,
 }
 
 impl Default for EngineOptions {
@@ -107,6 +117,7 @@ impl Default for EngineOptions {
             eviction: EvictionPolicy::ShedSelf,
             prefill_chunk_tokens: usize::MAX,
             max_rows_per_tick: usize::MAX,
+            prefix_cache_bytes: 0,
         }
     }
 }
@@ -132,6 +143,26 @@ pub struct NativeSession {
     /// the transient DRAM cost — `layers × prompt × kv_dim × 8` bytes —
     /// is bounded by the prefill phase.
     prefill_stash: Option<PrefillStash>,
+    /// The shared-prefix fp32 K/V this session attached at admission
+    /// (`prefix_attach` hit): the first `fork` prompt tokens' exact
+    /// full-precision history, read straight from the cache so the
+    /// suffix's chunked attention is bit-identical to a cold prefill.
+    /// Dropped with the prefill stash once the final chunk lands.
+    shared_stash: Option<SharedPrefix>,
+    /// Set at admission when the prefix cache should learn this prompt
+    /// (cache enabled, prompt not already fully covered): the full prompt
+    /// ids. A publisher stashes **every** chunk — including the last — so
+    /// the finished fp32 K/V can be retained alongside the shared pages.
+    publish: Option<Vec<usize>>,
+    /// fp32 stash bytes currently charged to the pool's stash gauge —
+    /// kept in sync with `prefill_stash_bytes()` (satellite 2: the gauge
+    /// tracks live stashes at runtime, not just admission estimates).
+    stash_charged: usize,
+    /// This session's entry in the pool's holder registry (exact
+    /// largest-holder eviction); unregistered on drop.
+    holder: HolderId,
+    /// The shared pool (stash gauge + holder registry bookkeeping).
+    pool: Arc<KvPool>,
     /// Decrements the model's live-session count on drop (gates flash
     /// spill-store reclamation).
     _live: SessionGuard,
@@ -142,6 +173,14 @@ pub struct NativeSession {
 struct PrefillStash {
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+}
+
+/// A cache hit's attached fp32 prefix: the published stash (which may
+/// cover more tokens than this session attached) plus this session's
+/// fork point — attention reads exactly `fork` tokens of it.
+struct SharedPrefix {
+    stash: Arc<CachedStash>,
+    fork: usize,
 }
 
 struct SessionGuard(Arc<AtomicUsize>);
@@ -181,6 +220,36 @@ impl NativeSession {
             l.release();
         }
         self.prefill_stash = None;
+        self.shared_stash = None;
+        self.publish = None;
+        self.sync_stash_charge();
+    }
+
+    /// This session's id in the pool's holder registry.
+    pub fn holder_id(&self) -> HolderId {
+        self.holder
+    }
+
+    /// Pages this session references that are also referenced elsewhere
+    /// (prefix-cache entries or sibling sessions).
+    pub fn shared_kv_pages(&self) -> usize {
+        self.kv.iter().map(|l| l.shared_page_count()).sum()
+    }
+
+    /// Reconcile the pool's stash gauge with this session's live fp32
+    /// prefill stash (the attached `CachedStash` charges itself). Called
+    /// after every stash mutation and on release/drop, so the gauge is
+    /// exact at every tick boundary.
+    fn sync_stash_charge(&mut self) {
+        let now = self.prefill_stash.as_ref().map_or(0, |s| {
+            (s.k.iter().map(Vec::len).sum::<usize>() + s.v.iter().map(Vec::len).sum::<usize>()) * 4
+        });
+        if now > self.stash_charged {
+            self.pool.add_stash(now - self.stash_charged);
+        } else if now < self.stash_charged {
+            self.pool.sub_stash(self.stash_charged - now);
+        }
+        self.stash_charged = now;
     }
 
     /// DRAM bytes of the retained fp32 prompt K/V (non-zero only while a
@@ -215,6 +284,16 @@ impl NativeSession {
     }
 }
 
+impl Drop for NativeSession {
+    fn drop(&mut self) {
+        // Uncharge any still-live stash and leave the holder registry —
+        // pages themselves return to the pool via their handles' drops.
+        self.pool.sub_stash(self.stash_charged);
+        self.stash_charged = 0;
+        self.pool.unregister_holder(self.holder);
+    }
+}
+
 /// A loaded model (weights, embedding, LoRA bank, shared KV pool + flash).
 /// Stateless over sessions: all forward methods take a [`NativeSession`].
 pub struct NativeModel {
@@ -237,6 +316,10 @@ pub struct NativeModel {
     flash: Arc<FlashSim>,
     /// Shared paged-KV arena all sessions draw from.
     kv_pool: Arc<KvPool>,
+    /// Shared-prefix KV cache (copy-on-write pages + fp32 stash);
+    /// disabled (budget 0) unless `EngineOptions::prefix_cache_bytes`
+    /// opts in.
+    prefix: Arc<PrefixCache>,
     /// Live sessions (spill-store reclamation is only safe at zero).
     live_sessions: Arc<AtomicUsize>,
     /// θ^(-2i/d) — kept for positions past `max_len` (rare overrun guard).
@@ -376,6 +459,7 @@ impl NativeModel {
             Some(read_bf16_table(&dir.join(&manifest.embedding_file), cfg.vocab * cfg.hidden)?)
         };
         let kv_pool = Arc::new(KvPool::new(options.kv_pool_bytes));
+        let prefix = Arc::new(PrefixCache::new(options.prefix_cache_bytes));
         let half = cfg.head_dim() / 2;
         let inv_freq: Vec<f32> = (0..half)
             .map(|i| (1.0 / cfg.rope_theta.powf(i as f64 / half as f64)) as f32)
@@ -401,6 +485,7 @@ impl NativeModel {
             lora: LoraManager::new(),
             flash,
             kv_pool,
+            prefix,
             live_sessions: Arc::new(AtomicUsize::new(0)),
             inv_freq,
             rope_sin,
@@ -411,6 +496,27 @@ impl NativeModel {
     /// The shared paged-KV arena (admission control consults its budget).
     pub fn kv_pool(&self) -> &Arc<KvPool> {
         &self.kv_pool
+    }
+
+    /// The shared-prefix cache (introspection; disabled at budget 0).
+    pub fn prefix_cache(&self) -> &Arc<PrefixCache> {
+        &self.prefix
+    }
+
+    /// Prefix-cache counters with the pool's copy-on-write count folded
+    /// in. The coordinator copies this into `EngineMetrics` alongside the
+    /// weight-residency snapshot.
+    pub fn prefix_metrics(&self) -> PrefixCacheMetrics {
+        let mut m = self.prefix.metrics();
+        m.cow_copies = self.kv_pool.stats().cow_copies;
+        m
+    }
+
+    /// Failure injection (tests): make every subsequent KV spill append
+    /// fail, as if the spill device went read-only. Already-spilled
+    /// records stay readable; `false` heals.
+    pub fn poison_kv_spill(&self, poisoned: bool) {
+        self.flash.poison_appends(poisoned);
     }
 
     /// Page-granular KV bytes a prompt of `len` tokens will pin across all
@@ -443,16 +549,19 @@ impl NativeModel {
     /// Start a new generation session drawing pages from the shared pool.
     pub fn new_session(&self) -> NativeSession {
         let cfg = &self.config;
+        let holder = self.kv_pool.register_holder();
         let kv = (0..cfg.layers)
             .map(|_| {
-                HybridKvLayer::with_pool_policy(
+                let mut l = HybridKvLayer::with_pool_policy(
                     cfg.kv_heads,
                     cfg.head_dim(),
                     self.flash.clone(),
                     self.options.kv_budget_tokens,
                     self.kv_pool.clone(),
                     self.options.eviction,
-                )
+                );
+                l.set_holder(holder);
+                l
             })
             .collect();
         self.live_sessions.fetch_add(1, Ordering::Relaxed);
@@ -461,8 +570,44 @@ impl NativeModel {
             pos: 0,
             lora_task: None,
             prefill_stash: None,
+            shared_stash: None,
+            publish: None,
+            stash_charged: 0,
+            holder,
+            pool: self.kv_pool.clone(),
             _live: SessionGuard(self.live_sessions.clone()),
         }
+    }
+
+    /// Attach the longest cached prefix of `prompt` to a **fresh** session
+    /// (read-only, refcounted pages — no new KV bytes) and mark the
+    /// session a publisher when the cache doesn't already cover the whole
+    /// prompt. Returns the fork point: prompt tokens the session may skip
+    /// prefilling (`sess.pos` is advanced there; the engine starts the
+    /// prompt's chunks at the fork). 0 on a miss, on a disabled cache, or
+    /// on a non-empty session.
+    pub fn prefix_attach(&self, sess: &mut NativeSession, prompt: &[usize]) -> usize {
+        if !self.prefix.enabled() || sess.pos != 0 || !sess.kv.iter().all(|l| l.is_empty()) {
+            return 0;
+        }
+        let hit = self.prefix.lookup(prompt);
+        let covered = hit.as_ref().map_or(0, |h| h.covered);
+        let fork = match hit {
+            Some(h) => {
+                for (l, pages) in sess.kv.iter_mut().zip(h.pages) {
+                    l.attach_shared(pages, h.fork);
+                }
+                sess.pos = h.fork;
+                let fork = h.fork;
+                sess.shared_stash = Some(SharedPrefix { stash: h.stash, fork });
+                fork
+            }
+            None => 0,
+        };
+        if covered < prompt.len() && prompt.len() >= 2 {
+            sess.publish = Some(prompt.to_vec());
+        }
+        fork
     }
 
     /// Unreserved KV-pool headroom: budget − resident bytes (saturating).
@@ -475,35 +620,62 @@ impl NativeModel {
         self.kv_pool.budget_bytes().saturating_sub(self.kv_pool.resident_bytes())
     }
 
-    /// Admission-reservation estimate for a `prompt_len`-token prefill:
-    /// the page-granular quantized-KV footprint, plus — when the prompt
-    /// is long enough that chunking will split it — the fp32
-    /// `PrefillStash` the session retains until its prefill completes
-    /// (`layers × prompt × kv_dim × 8` bytes). Charging the stash here
-    /// keeps a burst of long chunked prompts from overcommitting DRAM
-    /// through memory the pool never sees.
-    pub fn prefill_reserve_bytes(&self, prompt_len: usize) -> usize {
-        let pages = self.prefill_kv_page_bytes(prompt_len);
-        if prompt_len > self.options.prefill_chunk_tokens {
-            let stash = self.config.layers * prompt_len * self.config.kv_dim() * 8;
+    /// Page-granular KV bytes prefilling `prompt` will **newly** pin
+    /// across all layers, after subtracting pages a prefix-cache hit
+    /// would attach shared (those are already resident and counted).
+    /// The fork's partially-filled boundary page still counts in full:
+    /// the session's first append into it copy-on-writes a private page.
+    fn prefill_suffix_page_bytes(&self, prompt: &[usize]) -> usize {
+        let cfg = &self.config;
+        let fork = self.prefix.peek_fork(prompt);
+        let new_pages = prompt.len().div_ceil(PAGE_TOKENS) - fork / PAGE_TOKENS;
+        cfg.layers * new_pages * KvPool::page_bytes(cfg.kv_heads, cfg.head_dim())
+    }
+
+    /// Admission-reservation estimate for prefilling `prompt`: the
+    /// page-granular quantized-KV footprint of the **non-shared suffix**
+    /// (a prefix-cache hit's attached pages are already pool-resident),
+    /// plus — when the prompt is long enough that chunking will split it
+    /// — the fp32 `PrefillStash` the session retains until its prefill
+    /// completes (`layers × prompt × kv_dim × 8` bytes). Charging the
+    /// stash here keeps a burst of long chunked prompts from
+    /// overcommitting DRAM through memory the pool's page gauge never
+    /// sees (the stash gauge tracks it once live).
+    pub fn prefill_reserve_bytes(&self, prompt: &[usize]) -> usize {
+        let pages = self.prefill_suffix_page_bytes(prompt);
+        if prompt.len() > self.options.prefill_chunk_tokens {
+            let stash = self.config.layers * prompt.len() * self.config.kv_dim() * 8;
             pages.saturating_add(stash)
         } else {
             pages
         }
     }
 
-    /// Admission control: make room in the KV pool for a `prompt_len`-token
-    /// prefill by preempting `running` sessions (oldest first) to flash
-    /// until the prompt's page-granular KV estimate fits the budget. When
-    /// the prompt could never fit even an empty pool, fleet-wide preemption
-    /// is pointless and skipped — the new session degrades by spilling its
-    /// own KV as it appends. Returns sessions preempted.
+    /// Pool-visible portion of an in-flight prefill's reservation after
+    /// `consumed` tokens of `prompt` landed: the quantized pages the
+    /// session appended, minus pages a prefix-cache hit attached shared
+    /// (those were resident before admission and never part of the
+    /// reservation). The fp32 stash is deliberately excluded — it stays
+    /// allocated (and gauge-charged) until the final chunk.
+    pub fn prefill_visible_bytes(&self, prompt: &[usize], consumed: usize) -> usize {
+        let cfg = &self.config;
+        let fork = self.prefix.peek_fork(prompt).min(consumed);
+        let pages = consumed.div_ceil(PAGE_TOKENS) - fork / PAGE_TOKENS;
+        cfg.layers * pages * KvPool::page_bytes(cfg.kv_heads, cfg.head_dim())
+    }
+
+    /// Admission control: make room in the KV pool for prefilling
+    /// `prompt` by preempting `running` sessions (oldest first) to flash
+    /// until the prompt's page-granular suffix estimate fits the budget.
+    /// When the prompt could never fit even an empty pool, fleet-wide
+    /// preemption is pointless and skipped — the new session degrades by
+    /// spilling its own KV as it appends. Returns sessions preempted.
     pub fn make_room(
         &self,
-        prompt_len: usize,
+        prompt: &[usize],
         running: &mut [&mut NativeSession],
     ) -> std::io::Result<u64> {
-        let need = self.prefill_kv_page_bytes(prompt_len);
+        let need = self.prefill_suffix_page_bytes(prompt);
         let mut preempted = 0;
         if self.kv_pool.would_exceed(need) && need <= self.kv_pool.budget_bytes() {
             for s in running.iter_mut() {
@@ -523,11 +695,17 @@ impl NativeModel {
 
     /// The `EvictionPolicy::LargestHolder` enforcement pass: while the KV
     /// pool is over budget, spill one page-worth of oldest records per
-    /// layer from the session holding the most resident KV. The engine
-    /// calls this between scheduler ticks (after admissions and before
-    /// each decode round), so under `LargestHolder` the pool exceeds its
-    /// budget by at most one tick's appends. A no-op under `ShedSelf`
-    /// (appends restore the budget themselves). Returns records shed.
+    /// layer from the session referencing the most page bytes — chosen by
+    /// the pool's **holder registry** (exact, shared pages included),
+    /// not a per-session gauge. Refcount-aware: shedding a page a
+    /// prefix-cache entry still references frees nothing pool-visible,
+    /// so when a pass makes no byte progress the cache's LRU entries are
+    /// reclaimed before trying again, and the loop stops once neither
+    /// sessions nor the cache can shrink the pool further. The engine
+    /// calls this before **and after** each fused tick, so the pool is
+    /// back under budget at every tick boundary. A no-op under
+    /// `ShedSelf` (appends restore the budget themselves). Returns
+    /// records shed.
     pub fn enforce_kv_budget(
         &self,
         running: &mut [&mut NativeSession],
@@ -536,17 +714,33 @@ impl NativeModel {
             return Ok(0);
         }
         let mut shed = 0u64;
+        let mut last = usize::MAX;
         while self.kv_pool.over_budget() {
+            let now = self.kv_pool.resident_bytes();
+            if now >= last {
+                // The previous shed freed nothing pool-visible (shared
+                // pages survive at refcount > 0): drop cache entries —
+                // a reclaimed entry's unshared pages free immediately —
+                // and re-measure; stop when the cache is dry too.
+                if !self.prefix.reclaim_lru() {
+                    break;
+                }
+                last = usize::MAX;
+                continue;
+            }
+            last = now;
             let victim = running
                 .iter_mut()
                 .filter(|s| s.resident_kv_bytes() > 0)
-                .max_by_key(|s| s.resident_kv_bytes());
-            let Some(victim) = victim else { break };
-            let n = victim.shed_oldest(PAGE_TOKENS)?;
-            if n == 0 {
-                break; // nothing sheddable left anywhere
+                .max_by_key(|s| self.kv_pool.holder_bytes(s.holder_id()));
+            match victim {
+                Some(v) => shed += v.shed_oldest(PAGE_TOKENS)? as u64,
+                None => {
+                    if !self.prefix.reclaim_lru() {
+                        break;
+                    }
+                }
             }
-            shed += n as u64;
         }
         Ok(shed)
     }
@@ -637,6 +831,22 @@ impl NativeModel {
         self.prefill_chunk(sess, ids, true).expect("final chunk returns logits")
     }
 
+    /// Errors from the walk or its one row surfaced as panics — the
+    /// convenience wrappers keep the old infallible signatures; callers
+    /// needing per-row failure handling use
+    /// [`forward_tick`](Self::forward_tick) directly (the engine does).
+    fn one_row(
+        &self,
+        sess: &mut NativeSession,
+        work: RowWork<'_>,
+    ) -> Option<Vec<f32>> {
+        self.forward_tick(&mut [sess], &[work])
+            .expect("forward walk")
+            .pop()
+            .expect("one row")
+            .expect("kv append")
+    }
+
     /// Consume the next contiguous `ids` slice of the session's prompt
     /// (an incremental **prefill chunk**); returns last-row logits for
     /// the final chunk (`last`), `None` otherwise. Between chunks the
@@ -650,9 +860,7 @@ impl NativeModel {
         ids: &[usize],
         last: bool,
     ) -> Option<Vec<f32>> {
-        self.forward_tick(&mut [sess], &[RowWork::Prefill { ids, last }])
-            .pop()
-            .expect("one row")
+        self.one_row(sess, RowWork::Prefill { ids, last })
     }
 
     /// One decode step for `id` at the session's position; returns logits.
@@ -675,8 +883,9 @@ impl NativeModel {
         assert_eq!(sessions.len(), ids.len(), "one token per session");
         let works: Vec<RowWork> = ids.iter().map(|&tok| RowWork::Decode { tok }).collect();
         self.forward_tick(sessions, &works)
+            .expect("forward walk")
             .into_iter()
-            .map(|row| row.expect("decode rows return logits"))
+            .map(|row| row.expect("kv append").expect("decode rows return logits"))
             .collect()
     }
 
@@ -708,15 +917,30 @@ impl NativeModel {
     /// The stash is dropped the moment the final chunk lands. Decode
     /// rows attend over the quantized cache through the online-softmax
     /// streaming path exactly as before (spill-neutral, §4.1).
+    ///
+    /// Shared-prefix sessions (`prefix_attach` hit) extend the same
+    /// contract: their chunks attend over the **cached fp32 stash** for
+    /// the attached `[0, fork)` region, then their own stash, then the
+    /// fresh chunk — the same segment walk in the same global order
+    /// ([`segmented_prefill_attention`]), so a warm prefill is
+    /// bit-identical to a cold one. Publishers stash every chunk
+    /// (including the last) and hand pages + stash to the prefix cache
+    /// when their final chunk lands.
+    ///
+    /// Failure containment: errors are **per-row** `Err`s — a KV append
+    /// or decode-stream failure poisons only its own row (later layers
+    /// skip it; its session keeps `pos` un-advanced so the engine can
+    /// release it) — except a weight-residency fetch failure, which is
+    /// walk-level (outer `Err`): no row can proceed without the layer.
     pub fn forward_tick(
         &self,
         sessions: &mut [&mut NativeSession],
         works: &[RowWork<'_>],
-    ) -> Vec<Option<Vec<f32>>> {
+    ) -> std::io::Result<Vec<std::io::Result<Option<Vec<f32>>>>> {
         let m = sessions.len();
         assert_eq!(m, works.len(), "one work item per session");
         if m == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let cfg = self.config.clone();
         let (h, hd, heads, kvh) = (cfg.hidden, cfg.head_dim(), cfg.heads, cfg.kv_heads);
@@ -750,13 +974,14 @@ impl NativeModel {
         }
         let bases: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
         // First chunk of a still-unfinished prompt: set up the per-layer
-        // fp32 stash. A `last` chunk never stashes — only *later* chunks
-        // read the stash, so a single-chunk (monolithic) prefill
-        // allocates none at all, keeping the default path's memory
-        // profile unchanged.
+        // fp32 stash. A `last` chunk only stashes for **publishers**
+        // (their finished fp32 K/V is retained in the prefix cache) —
+        // otherwise only *later* chunks read the stash, so a single-chunk
+        // (monolithic) prefill allocates none at all, keeping the default
+        // path's memory profile unchanged.
         for (sess, w) in sessions.iter_mut().zip(works) {
-            if let RowWork::Prefill { last: false, .. } = *w {
-                if sess.prefill_stash.is_none() {
+            if let RowWork::Prefill { last, .. } = *w {
+                if (!last || sess.publish.is_some()) && sess.prefill_stash.is_none() {
                     sess.prefill_stash = Some(PrefillStash {
                         k: vec![Vec::new(); cfg.layers],
                         v: vec![Vec::new(); cfg.layers],
@@ -764,6 +989,11 @@ impl NativeModel {
                 }
             }
         }
+        // Per-row failure slots: a row that errors here is skipped in all
+        // later layers (rows are independent) and surfaced as its own
+        // `Err` — the engine fails that one request, not the batch.
+        let mut row_err: Vec<Option<std::io::Error>> = Vec::with_capacity(m);
+        row_err.resize_with(m, || None);
         let mut x = vec![0f32; total * h];
         self.embed(&all_ids, &mut x);
         let mut norm = vec![0f32; total * h];
@@ -783,7 +1013,8 @@ impl NativeModel {
             // session. Depth is budget-aware; no-op when everything is
             // already resident.
             self.weights.prefetch_ahead(&self.prefetcher, li + 1);
-            let layer = self.weights.layer(li).expect("weight residency");
+            // Walk-level failure: without the layer no row can proceed.
+            let layer = self.weights.layer(li)?;
             rmsnorm(&x, &layer.ln1, &mut norm, total, cfg.rms_eps);
             // total-row packed GEMMs: one pass shared by every row.
             self.linear(&layer.wq, &norm, total, &mut q);
@@ -811,6 +1042,9 @@ impl NativeModel {
             // code path with the sequential forms, so spilling and
             // batching stay *bit-exact* value-neutral.
             for (r, sess) in sessions.iter_mut().enumerate() {
+                if row_err[r].is_some() {
+                    continue; // poisoned row: skip its per-session work
+                }
                 let (o, s_r, base) = (offs[r], widths[r], bases[r]);
                 for t in 0..s_r {
                     let qrow = &mut q[(o + t) * h..(o + t + 1) * h];
@@ -825,27 +1059,35 @@ impl NativeModel {
                 match works[r] {
                     RowWork::Prefill { last, .. } => {
                         {
-                            // The causal prefix is whatever this prompt's
-                            // earlier chunks stashed. (A fresh prompt — or
-                            // a legacy multi-turn `prefill` on a session
+                            // The causal prefix, in global token order:
+                            // the attached shared-prefix fp32 stash (a
+                            // prefix-cache hit; sliced to this session's
+                            // fork point — the cached entry may cover
+                            // more), then whatever this prompt's earlier
+                            // chunks stashed. (A fresh prompt — or a
+                            // legacy multi-turn `prefill` on a session
                             // that already decoded, which never stashed —
                             // has an empty prefix, preserving the
                             // fresh-only attention semantics `prefill`
                             // always had; RoPE still uses absolute
                             // positions either way.)
-                            let empty: &[f32] = &[];
-                            let (pk, pv) = match sess.prefill_stash.as_ref() {
-                                Some(stash) => (stash.k[li].as_slice(), stash.v[li].as_slice()),
-                                None => (empty, empty),
-                            };
-                            let prefix = pk.len() / kv_dim;
-                            chunked_prefill_attention(
+                            let mut prefix: Vec<(&[f32], &[f32])> = Vec::with_capacity(2);
+                            if let Some(sp) = sess.shared_stash.as_ref() {
+                                prefix.push((
+                                    &sp.stash.k[li][..sp.fork * kv_dim],
+                                    &sp.stash.v[li][..sp.fork * kv_dim],
+                                ));
+                            }
+                            if let Some(stash) = sess.prefill_stash.as_ref() {
+                                if !stash.k[li].is_empty() {
+                                    prefix.push((&stash.k[li], &stash.v[li]));
+                                }
+                            }
+                            segmented_prefill_attention(
                                 &q[o * h..(o + s_r) * h],
-                                pk,
-                                pv,
+                                &prefix,
                                 &k[o * kv_dim..(o + s_r) * kv_dim],
                                 &v[o * kv_dim..(o + s_r) * kv_dim],
-                                prefix,
                                 s_r,
                                 heads,
                                 kvh,
@@ -854,39 +1096,44 @@ impl NativeModel {
                             );
                         }
                         // Quantized append (what decode will attend over),
-                        // then — only when another chunk will follow —
-                        // extend the fp32 stash so the next chunk's causal
-                        // span stays exact (a final chunk's rows would
-                        // never be read: the stash drops at walk end).
+                        // then — when another chunk will follow, or this
+                        // session will publish — extend the fp32 stash so
+                        // the next chunk's causal span stays exact.
                         for t in 0..s_r {
-                            sess.kv[li]
-                                .append(
-                                    &k[(o + t) * kv_dim..(o + t + 1) * kv_dim],
-                                    &v[(o + t) * kv_dim..(o + t + 1) * kv_dim],
-                                )
-                                .expect("kv append");
+                            if let Err(e) = sess.kv[li].append(
+                                &k[(o + t) * kv_dim..(o + t + 1) * kv_dim],
+                                &v[(o + t) * kv_dim..(o + t + 1) * kv_dim],
+                            ) {
+                                row_err[r] = Some(e);
+                                break;
+                            }
                         }
-                        if !last {
+                        if row_err[r].is_some() {
+                            continue;
+                        }
+                        if !last || sess.publish.is_some() {
                             let stash = sess.prefill_stash.as_mut().expect("stash initialized");
                             stash.k[li].extend_from_slice(&k[o * kv_dim..(o + s_r) * kv_dim]);
                             stash.v[li].extend_from_slice(&v[o * kv_dim..(o + s_r) * kv_dim]);
                         }
                     }
                     RowWork::Decode { .. } => {
-                        sess.kv[li]
-                            .append(
-                                &k[o * kv_dim..(o + 1) * kv_dim],
-                                &v[o * kv_dim..(o + 1) * kv_dim],
-                            )
-                            .expect("kv append");
-                        sess.kv[li]
-                            .decode_attention_streaming(
-                                &q[o * h..(o + 1) * h],
-                                heads,
-                                &mut attn[o * h..(o + 1) * h],
-                                KV_STREAM_CHUNK,
-                            )
-                            .expect("kv stream");
+                        if let Err(e) = sess.kv[li].append(
+                            &k[o * kv_dim..(o + 1) * kv_dim],
+                            &v[o * kv_dim..(o + 1) * kv_dim],
+                        ) {
+                            row_err[r] = Some(e);
+                            continue;
+                        }
+                        if let Err(e) = sess.kv[li].decode_attention_streaming(
+                            &q[o * h..(o + 1) * h],
+                            heads,
+                            &mut attn[o * h..(o + 1) * h],
+                            KV_STREAM_CHUNK,
+                        ) {
+                            row_err[r] = Some(e);
+                            continue;
+                        }
                     }
                 }
             }
@@ -907,54 +1154,82 @@ impl NativeModel {
             self.linear(&layer.down, &act, total, &mut mlp);
             add_inplace(&mut x, &mlp);
         }
-        // Advance positions; a completed prompt drops its fp32 stash.
+        // Advance positions (failed rows stay put — their sessions are
+        // about to be released by the engine); a completed prompt
+        // publishes to the prefix cache if it's a publisher, then drops
+        // its fp32 stashes. The pool's stash gauge tracks every stash
+        // mutation, so `stash_bytes()` is exact at tick boundaries.
         let mut decode_tokens = 0u64;
         let mut prefill_tokens = 0u64;
+        let mut decode_rows = 0u64;
+        let mut prefill_rows = 0u64;
         for (r, sess) in sessions.iter_mut().enumerate() {
             match works[r] {
                 RowWork::Prefill { last, .. } => {
+                    prefill_rows += 1;
+                    if row_err[r].is_some() {
+                        continue;
+                    }
                     sess.pos += widths[r];
                     prefill_tokens += widths[r] as u64;
                     if last {
-                        sess.prefill_stash = None;
+                        self.finish_prefill(sess);
                     }
+                    sess.sync_stash_charge();
                 }
                 RowWork::Decode { .. } => {
+                    decode_rows += 1;
+                    if row_err[r].is_some() {
+                        continue;
+                    }
                     sess.pos += 1;
                     decode_tokens += 1;
                 }
             }
         }
         // Fetch accounting: a walk's flash reads are shared by its rows
-        // and cannot be split per phase, so the delta lands in exactly
-        // one gauge — the decode amortization gauge when the tick decoded
-        // anything (the steady state), the prefill gauge for pure-prefill
-        // ticks. Token counts always land in their own phase.
+        // and cannot be attributed exactly per phase, so a mixed tick
+        // splits the delta **proportionally to its row counts** — each
+        // row drove the same shared layer walk once. Pure ticks land
+        // wholly in their own gauge; token counts always do.
         let fetches = self.weights.metrics().total_fetches() - fetches_before;
-        if decode_tokens > 0 {
+        if decode_rows > 0 && prefill_rows > 0 {
+            let decode_share = fetches * decode_rows / (decode_rows + prefill_rows);
+            self.weights.note_decode_pass(decode_tokens, decode_share);
+            self.weights.note_prefill_pass(prefill_tokens, fetches - decode_share);
+        } else if decode_rows > 0 {
             self.weights.note_decode_pass(decode_tokens, fetches);
-            if prefill_tokens > 0 {
-                self.weights.note_prefill_pass(prefill_tokens, 0);
-            }
         } else {
             self.weights.note_prefill_pass(prefill_tokens, fetches);
         }
-        // Logits only where someone will read them: decode rows and final
-        // prefill chunks (their last token's row), through one gathered
-        // lm_head pass — row-independent, so equal to per-row passes.
+        // Logits only where someone will read them: successful decode
+        // rows and final prefill chunks (their last token's row), through
+        // one gathered lm_head pass — row-independent, so equal to
+        // per-row passes. Failed rows yield their error instead.
         let out_rows: Vec<Option<usize>> = works
             .iter()
             .enumerate()
-            .map(|(r, w)| match *w {
-                RowWork::Prefill { last: true, .. } => Some(offs[r] + widths[r] - 1),
-                RowWork::Prefill { last: false, .. } => None,
-                RowWork::Decode { .. } => Some(offs[r]),
+            .map(|(r, w)| {
+                if row_err[r].is_some() {
+                    return None;
+                }
+                match *w {
+                    RowWork::Prefill { last: true, .. } => Some(offs[r] + widths[r] - 1),
+                    RowWork::Prefill { last: false, .. } => None,
+                    RowWork::Decode { .. } => Some(offs[r]),
+                }
             })
             .collect();
         let picked: Vec<usize> = out_rows.iter().filter_map(|o| *o).collect();
         let n_out = picked.len();
         if n_out == 0 {
-            return vec![None; m];
+            return Ok(row_err
+                .into_iter()
+                .map(|e| match e {
+                    Some(e) => Err(e),
+                    None => Ok(None),
+                })
+                .collect());
         }
         let mut lastx = vec![0f32; n_out * h];
         for (j, &row) in picked.iter().enumerate() {
@@ -968,13 +1243,78 @@ impl NativeModel {
             // Single output row (e.g. the `decode` wrapper): the buffer is
             // exactly that row — hand it back without a vocab-sized copy.
             let mut only = Some(logits);
-            return out_rows.iter().map(|o| o.and_then(|_| only.take())).collect();
+            return Ok(row_err
+                .into_iter()
+                .zip(&out_rows)
+                .map(|(e, o)| match e {
+                    Some(e) => Err(e),
+                    None => Ok(o.and_then(|_| only.take())),
+                })
+                .collect());
         }
         let mut chunks = logits.chunks_exact(cfg.vocab);
-        out_rows
-            .iter()
-            .map(|o| o.map(|_| chunks.next().expect("one logits row per output row").to_vec()))
-            .collect()
+        Ok(row_err
+            .into_iter()
+            .zip(&out_rows)
+            .map(|(e, o)| match e {
+                Some(e) => Err(e),
+                None => Ok(o.map(|_| {
+                    chunks.next().expect("one logits row per output row").to_vec()
+                })),
+            })
+            .collect())
+    }
+
+    /// A prompt's final chunk landed: if the session was marked a
+    /// publisher at admission, hand its quantized pages (handles cloned —
+    /// refcount++, bytes counted once) and full fp32 stash to the prefix
+    /// cache; then drop the transient stashes either way. Publishing is
+    /// skipped — silently, it's an optimization — when any layer spilled
+    /// during prefill (the resident pages no longer cover the prompt) or
+    /// the stash doesn't span the whole prompt (legacy multi-turn
+    /// prefill).
+    fn finish_prefill(&self, sess: &mut NativeSession) {
+        if let Some(ids) = sess.publish.take() {
+            let kv_dim = self.config.kv_dim();
+            let complete = self.prefix.enabled()
+                && sess.pos == ids.len()
+                && sess
+                    .kv
+                    .iter()
+                    .all(|l| l.spilled_tokens() == 0 && l.len() == ids.len());
+            if complete {
+                let mut k = Vec::with_capacity(self.config.layers);
+                let mut v = Vec::with_capacity(self.config.layers);
+                let mut ok = true;
+                for li in 0..self.config.layers {
+                    let mut kl: Vec<f32> = Vec::with_capacity(ids.len() * kv_dim);
+                    let mut vl: Vec<f32> = Vec::with_capacity(ids.len() * kv_dim);
+                    if let Some(sp) = sess.shared_stash.as_ref() {
+                        kl.extend_from_slice(&sp.stash.k[li][..sp.fork * kv_dim]);
+                        vl.extend_from_slice(&sp.stash.v[li][..sp.fork * kv_dim]);
+                    }
+                    if let Some(st) = sess.prefill_stash.as_ref() {
+                        kl.extend_from_slice(&st.k[li]);
+                        vl.extend_from_slice(&st.v[li]);
+                    }
+                    if kl.len() != ids.len() * kv_dim {
+                        ok = false;
+                        break;
+                    }
+                    k.push(kl);
+                    v.push(vl);
+                }
+                if ok {
+                    let pages: Vec<Vec<PageHandle>> =
+                        sess.kv.iter().map(|l| l.share_prefix_pages(ids.len())).collect();
+                    let tokens = ids.len();
+                    let stash = CachedStash::charge(k, v, tokens, self.kv_pool.clone());
+                    self.prefix.insert(ids, pages, stash);
+                }
+            }
+        }
+        sess.prefill_stash = None;
+        sess.shared_stash = None;
     }
 
     /// Greedy generation convenience: prefill + n decode steps on `sess`.
@@ -1144,15 +1484,19 @@ mod tests {
             let works = [RowWork::Decode { tok: fta }, RowWork::Prefill { ids: chunk, last }];
             let rows = {
                 let mut refs = [&mut fa, &mut fb];
-                fused.forward_tick(&mut refs, &works)
+                fused.forward_tick(&mut refs, &works).expect("weight walk")
             };
-            let da = rows[0].as_ref().expect("decode row logits");
+            let da =
+                rows[0].as_ref().expect("row ok").as_ref().expect("decode row logits");
             assert_eq!(da, &a_decode[i], "fused decode row {i} diverged");
             fta = crate::model::sampler::argmax(da);
             if last {
-                lb_fused = rows[1].clone();
+                lb_fused = rows[1].as_ref().expect("row ok").clone();
             } else {
-                assert!(rows[1].is_none(), "non-final chunk has no logits");
+                assert!(
+                    rows[1].as_ref().expect("row ok").is_none(),
+                    "non-final chunk has no logits"
+                );
                 assert!(fb.prefill_stash_bytes() > 0, "stash held between chunks");
             }
         }

@@ -1,0 +1,484 @@
+//! Shared-prefix copy-on-write KV cache: the tentpole acceptance tests,
+//! plus the bugfix-sweep satellites.
+//!
+//! * share-once — N sessions with a common long system prompt prefill
+//!   the shared region exactly once (token accounting pins it down) and
+//!   produce outputs bit-identical to cold sessions;
+//! * copy-on-write — the first divergent append into a shared page
+//!   privatizes it; divergence stays bit-identical under spill/restore
+//!   and cancel, and refcounts balance (gauges return to zero);
+//! * failure containment — a poisoned KV spill device fails exactly one
+//!   request (terminal `Failed`, pages released) while the engine keeps
+//!   serving its siblings and new arrivals;
+//! * gauge exactness — the pool's stash gauge equals the live fp32
+//!   stashes at every chunk boundary, and `footprint = pages + stashes`;
+//! * budget exactness — under `LargestHolder` the pool is at or under
+//!   its byte budget at every tick boundary, cache entries included.
+//!
+//! Everything runs against the self-contained fixture model.
+
+use mnn_llm::coordinator::backend::RowWork;
+use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
+use mnn_llm::coordinator::{EngineEvent, SchedulePolicy};
+use mnn_llm::kv::{EvictionPolicy, PrefixCacheMetrics};
+use mnn_llm::model::fixtures;
+use mnn_llm::model::native::{EngineOptions, NativeModel, NativeSession};
+use mnn_llm::model::sampler::argmax;
+use mnn_llm::util::prop::prop_check;
+use mnn_llm::util::rng::Rng;
+
+const SEED: u64 = 23;
+
+/// A deterministic "system prompt" of `len` tokens (vocab 512 fixture).
+fn sys_prompt(len: usize) -> Vec<usize> {
+    (0..len).map(|i| 3 + (7 * i) % 400).collect()
+}
+
+#[test]
+fn warm_sessions_prefill_shared_prefix_once_bit_identically() {
+    // The acceptance guard: 4 requests sharing a 30-token system prompt
+    // (mid-page fork: 30 is not a page multiple) under a 2-of-6-layer
+    // weight budget and a tight KV pool. Warm, the shared region is
+    // prefilled exactly once — by the first request, which publishes it —
+    // and the other three prefill only their 4-token suffixes; outputs
+    // are bit-identical to the cache-disabled engine.
+    const LAYERS: usize = 6;
+    let fx = fixtures::write_fixture_with_layers(SEED, LAYERS).unwrap();
+    let probe = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let per_layer = probe.weight_metrics().packed_bytes / LAYERS;
+    let kv_budget = probe.prefill_kv_page_bytes(34) * 4;
+    drop(probe);
+    let sys = sys_prompt(30);
+    let prompts: Vec<Vec<usize>> = (0..4)
+        .map(|i| {
+            let mut p = sys.clone();
+            p.extend([400 + i, 431 - i, 77, 80 + i]);
+            p
+        })
+        .collect();
+    let run = |cache_bytes: usize| {
+        let m = NativeModel::load(
+            fx.dir(),
+            EngineOptions {
+                weight_dram_bytes: per_layer * 2,
+                kv_pool_bytes: kv_budget,
+                prefill_chunk_tokens: 8,
+                prefix_cache_bytes: cache_bytes,
+                ..EngineOptions::default()
+            },
+        )
+        .unwrap();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        // The first prompt runs alone (warm, it publishes the prefix);
+        // the other three are then submitted together.
+        c.submit(prompts[0].clone(), 4);
+        let mut rs = c.run_all().unwrap();
+        for p in &prompts[1..] {
+            c.submit(p.clone(), 4);
+        }
+        rs.extend(c.run_all().unwrap());
+        assert_eq!(rs.len(), 4);
+        rs.sort_by_key(|r| r.id);
+        let toks: Vec<Vec<usize>> = rs.iter().map(|r| r.tokens.clone()).collect();
+        let w = c.backend().as_native().unwrap().weight_metrics();
+        (toks, c.metrics.prefix, w.prefill_fetches, w.prompt_tokens_prefilled)
+    };
+
+    let (cold_toks, cold_prefix, cold_fetches, cold_ptok) = run(0);
+    let (warm_toks, warm_prefix, warm_fetches, warm_ptok) = run(1 << 20);
+
+    // Bit-identity: warm outputs == cold outputs, request for request.
+    assert_eq!(warm_toks, cold_toks, "warm sessions must match cold sessions bit for bit");
+    // The disabled cache stays completely silent.
+    assert_eq!(cold_prefix, PrefixCacheMetrics::default());
+    // Every later admission hit the published prefix at the 30-token fork.
+    assert_eq!(warm_prefix.lookups, 4);
+    assert_eq!(warm_prefix.hits, 3);
+    assert_eq!(warm_prefix.prefill_tokens_saved, 90, "3 warm admissions × 30-token fork");
+    assert_eq!(warm_prefix.inserts, 4, "every prompt extends the cache");
+    assert!(
+        warm_prefix.cow_copies > 0,
+        "suffix appends land mid-page and must copy-on-write the boundary page"
+    );
+    // Share-once, pinned by token accounting: the shared 30 tokens were
+    // prefilled once (request 0); the other three paid only their
+    // suffixes. Cold, every request paid its full prompt.
+    assert_eq!(warm_ptok, (34 + 3 * 4) as u64);
+    assert_eq!(cold_ptok, (4 * 34) as u64);
+    // Fewer prefill walks under the same weight budget → less flash
+    // traffic attributed to prefill.
+    assert!(cold_fetches > 0, "the weight budget must force streaming");
+    assert!(
+        warm_fetches < cold_fetches,
+        "warm prefill fetches {warm_fetches} must undercut cold {cold_fetches}"
+    );
+}
+
+#[test]
+fn cow_divergence_is_bit_identical_and_refcounts_balance() {
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let warm = NativeModel::load(
+        fx.dir(),
+        EngineOptions { prefix_cache_bytes: 1 << 20, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let cold = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let sys = sys_prompt(26); // fork lands mid-page (26 = 16 + 10)
+    let a: Vec<usize> = sys.iter().copied().chain([100, 101, 102]).collect();
+    let b: Vec<usize> = sys.iter().copied().chain([200, 201]).collect();
+
+    // Publisher: a cold-path prefill that hands pages + stash to the cache.
+    let mut sa = warm.new_session();
+    assert_eq!(warm.prefix_attach(&mut sa, &a), 0, "first prompt misses");
+    let la = warm.prefill(&mut sa, &a);
+    {
+        let mut ca = cold.new_session();
+        assert_eq!(la, cold.prefill(&mut ca, &a), "publishing must not change the prefill");
+    }
+    assert_eq!(warm.prefix_cache().metrics().entries, 1);
+
+    // Warm attach: skip the shared 26 tokens, prefill only the suffix.
+    // The suffix's first append lands in the shared boundary page → COW.
+    let mut sb = warm.new_session();
+    let fork = warm.prefix_attach(&mut sb, &b);
+    assert_eq!(fork, sys.len(), "fork at the token-level divergence point");
+    assert_eq!(sb.pos, fork);
+    let lb = warm.prefill(&mut sb, &b[fork..]);
+    assert!(warm.prefix_metrics().cow_copies > 0, "divergent append must copy-on-write");
+    let mut cb = cold.new_session();
+    let wb = cold.prefill(&mut cb, &b);
+    assert_eq!(lb, wb, "warm suffix prefill == cold full prefill, bit for bit");
+    let mut tok = argmax(&lb);
+    for step in 0..3 {
+        let x = warm.decode(&mut sb, tok);
+        let y = cold.decode(&mut cb, tok);
+        assert_eq!(x, y, "decode step {step} diverged after COW");
+        tok = argmax(&x);
+    }
+
+    // Spill/restore across shared pages: a warm session preempted to
+    // flash mid-life still decodes bit-identically (sb published an entry
+    // for the full prompt b above, so this hit forks at len − 1).
+    let mut sc = warm.new_session();
+    let fork_c = warm.prefix_attach(&mut sc, &b);
+    assert_eq!(fork_c, b.len() - 1, "a full-prompt hit is capped at len − 1");
+    let lc = warm.prefill(&mut sc, &b[fork_c..]);
+    assert_eq!(lc, wb);
+    assert!(sc.preempt_to_flash().unwrap() > 0, "preemption must spill the attached history");
+    let mut cc = cold.new_session();
+    cold.prefill(&mut cc, &b);
+    let mut tok = argmax(&lc);
+    for step in 0..3 {
+        let x = warm.decode(&mut sc, tok);
+        let y = cold.decode(&mut cc, tok);
+        assert_eq!(x, y, "decode step {step} diverged after preempt-to-flash");
+        tok = argmax(&x);
+    }
+
+    // Balanced refcounts: dropping every session and clearing the cache
+    // frees each page exactly once — all gauges return to zero.
+    let pool = warm.kv_pool().clone();
+    assert_eq!(pool.footprint_bytes(), pool.resident_bytes() + pool.stash_bytes());
+    drop((sa, sb, sc));
+    assert!(pool.resident_bytes() > 0, "cache entries keep their pages after sessions drop");
+    warm.prefix_cache().clear();
+    assert_eq!(pool.resident_bytes(), 0, "clearing the cache frees the last references");
+    assert_eq!(pool.stash_bytes(), 0);
+    assert_eq!(pool.footprint_bytes(), 0);
+}
+
+#[test]
+fn cancel_mid_warm_prefill_frees_session_but_keeps_cache() {
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let m = NativeModel::load(
+        fx.dir(),
+        EngineOptions {
+            prefix_cache_bytes: 1 << 20,
+            prefill_chunk_tokens: 4,
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+    let sys = sys_prompt(26);
+    let mk = |tail: [usize; 6]| -> Vec<usize> { sys.iter().copied().chain(tail).collect() };
+    let p0 = mk([300, 301, 302, 303, 304, 305]);
+    let p1 = mk([310, 311, 312, 313, 314, 315]);
+    let p2 = mk([320, 321, 322, 323, 324, 325]);
+    c.submit(p0, 4);
+    c.run_all().unwrap();
+    let (cache_pages, cache_stash) = {
+        let m = c.backend().as_native().unwrap();
+        assert_eq!(m.prefix_cache().metrics().entries, 1);
+        (m.kv_pool().resident_bytes(), m.kv_pool().stash_bytes())
+    };
+    assert!(cache_pages > 0 && cache_stash > 0, "the entry pins pages and an fp32 stash");
+
+    // A warm admission forks at 26 and starts chunking its 6-token
+    // suffix; cancel it after the first chunk, mid-prefill.
+    let id = c.submit(p1, 4);
+    assert!(c.step().unwrap());
+    {
+        let m = c.backend().as_native().unwrap();
+        assert!(m.kv_pool().resident_bytes() > cache_pages, "first suffix chunk appended KV");
+    }
+    assert!(c.cancel(id), "cancel mid-warm-prefill");
+    assert!(c.drain_events().contains(&EngineEvent::Cancelled { id }));
+    {
+        let m = c.backend().as_native().unwrap();
+        assert_eq!(
+            m.kv_pool().resident_bytes(),
+            cache_pages,
+            "cancel frees the session's private pages; the cache entry survives"
+        );
+        assert_eq!(
+            m.kv_pool().stash_bytes(),
+            cache_stash,
+            "the cancelled publisher's stash charge is released"
+        );
+        assert_eq!(m.prefix_cache().metrics().entries, 1);
+    }
+
+    // The cache still serves: a third warm prompt completes and matches
+    // the cold model bit for bit.
+    c.submit(p2.clone(), 4);
+    let rs = c.run_all().unwrap();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(c.metrics.prefix.hits, 2, "both warm admissions hit");
+    let cold = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    assert_eq!(rs[0].tokens, cold.generate_once(&p2, rs[0].tokens.len()));
+}
+
+#[test]
+fn kv_append_failure_fails_one_request_while_engine_serves() {
+    // Satellite 1 (the panic sweep): a KV spill append error must fail
+    // exactly one request — terminal `Failed`, its pages released — not
+    // panic the walk; sibling rows in the same tick and later arrivals
+    // keep being served.
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let m = NativeModel::load(
+        fx.dir(),
+        EngineOptions { kv_budget_tokens: 8, ..EngineOptions::default() },
+    )
+    .unwrap();
+    m.poison_kv_spill(true);
+    let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+    let long = c.submit(vec![7; 24], 4); // must spill past 8 records/layer → poisoned
+    let short = c.submit(vec![5, 6, 7], 2); // stays under the per-layer budget
+    let mut events = Vec::new();
+    while c.step().unwrap() {
+        events.extend(c.drain_events());
+    }
+    events.extend(c.drain_events());
+    let failed: Vec<&EngineEvent> =
+        events.iter().filter(|e| matches!(e, EngineEvent::Failed { .. })).collect();
+    assert_eq!(failed.len(), 1, "exactly one request fails: {events:?}");
+    assert_eq!(failed[0].id(), long);
+    assert_eq!(c.metrics.failed, 1);
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e, EngineEvent::Finished { id, .. } if *id == short)),
+        "the short request must complete despite the sibling failure: {events:?}"
+    );
+    {
+        let m = c.backend().as_native().unwrap();
+        assert_eq!(m.kv_pool().resident_bytes(), 0, "failed + finished sessions release all pages");
+        assert_eq!(m.kv_pool().stash_bytes(), 0);
+    }
+    let rs = c.take_finished();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].id, short);
+
+    // Still serving — the spill device is still poisoned, but prompts
+    // that fit DRAM proceed untouched.
+    let again = c.submit(vec![9, 10, 11, 12], 2);
+    let rs = c.run_all().unwrap();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].id, again);
+    assert_eq!(c.backend().as_native().unwrap().kv_pool().resident_bytes(), 0);
+}
+
+#[test]
+fn stash_gauge_tracks_live_stashes_during_chunked_prefill() {
+    // Satellite 2: the pool's stash gauge is reconciled against the live
+    // fp32 stash after every chunk — not just estimated at admission —
+    // and the pool footprint is exactly pages + stashes throughout.
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let m = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let vocab = fixtures::fixture_config().vocab;
+    let pool = m.kv_pool().clone();
+    prop_check(12, |rng: &mut Rng| {
+        let plen = rng.range(2, 24);
+        let prompt: Vec<usize> = (0..plen).map(|_| rng.below(vocab)).collect();
+        let chunk = rng.range(1, plen); // < plen → at least two chunks
+        let mut s = m.new_session();
+        let mut done = 0;
+        while done < plen {
+            let end = (done + chunk).min(plen);
+            let _ = m.prefill_chunk(&mut s, &prompt[done..end], end == plen);
+            if pool.stash_bytes() != s.prefill_stash_bytes() {
+                return Err(format!(
+                    "stash gauge {} != live stash {} after {end} of {plen} tokens",
+                    pool.stash_bytes(),
+                    s.prefill_stash_bytes()
+                ));
+            }
+            if pool.footprint_bytes() != pool.resident_bytes() + pool.stash_bytes() {
+                return Err("footprint must equal resident pages + live stashes".into());
+            }
+            done = end;
+        }
+        if pool.stash_bytes() != 0 {
+            return Err("stash gauge must return to 0 after the final chunk".into());
+        }
+        drop(s);
+        if pool.resident_bytes() != 0 || pool.footprint_bytes() != 0 {
+            return Err("all pages must return to the pool".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn publisher_handoff_moves_stash_charge_to_the_cache() {
+    // A publisher retains its stash through the final chunk, then hands
+    // it to the cache: the session's gauge charge is released the moment
+    // the (self-charging) `CachedStash` takes over — charged once, never
+    // twice, and released when the cache entry goes.
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let m = NativeModel::load(
+        fx.dir(),
+        EngineOptions { prefix_cache_bytes: 1 << 20, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let pool = m.kv_pool().clone();
+    let prompt = sys_prompt(12);
+    let mut s = m.new_session();
+    assert_eq!(m.prefix_attach(&mut s, &prompt), 0, "cold cache misses");
+    let mut done = 0;
+    while done < prompt.len() {
+        let end = (done + 5).min(prompt.len());
+        let _ = m.prefill_chunk(&mut s, &prompt[done..end], end == prompt.len());
+        done = end;
+        assert_eq!(pool.footprint_bytes(), pool.resident_bytes() + pool.stash_bytes());
+        if done < prompt.len() {
+            assert_eq!(pool.stash_bytes(), s.prefill_stash_bytes());
+            assert!(pool.stash_bytes() > 0, "publisher stash charged while prefill is in flight");
+        }
+    }
+    assert_eq!(s.prefill_stash_bytes(), 0, "the final chunk publishes and drops the stash");
+    let cache = m.prefix_metrics();
+    assert_eq!(cache.entries, 1);
+    assert!(cache.stash_bytes > 0);
+    assert_eq!(pool.stash_bytes(), cache.stash_bytes, "only the cache's copy stays charged");
+    drop(s);
+    assert_eq!(pool.stash_bytes(), cache.stash_bytes, "session drop releases no cache bytes");
+    m.prefix_cache().clear();
+    assert_eq!(pool.footprint_bytes(), 0, "clearing the cache releases pages and stash alike");
+}
+
+#[test]
+fn largest_holder_keeps_pool_under_budget_at_every_tick_boundary() {
+    // Satellite 3: the holder-registry eviction pass runs before and
+    // after every tick, so the pool is at or under its byte budget at
+    // every step() boundary — no transient over-budget window — with and
+    // without cache entries pinning shared pages (the cache's LRU is
+    // reclaimed when sessions alone cannot shrink the pool).
+    let fx = fixtures::write_fixture(SEED).unwrap();
+    let probe = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let budget = probe.prefill_kv_page_bytes(16);
+    drop(probe);
+    let shared = sys_prompt(10);
+    for cache_bytes in [0usize, 1 << 20] {
+        let m = NativeModel::load(
+            fx.dir(),
+            EngineOptions {
+                kv_pool_bytes: budget,
+                eviction: EvictionPolicy::LargestHolder,
+                prefix_cache_bytes: cache_bytes,
+                ..EngineOptions::default()
+            },
+        )
+        .unwrap();
+        let mut c = Coordinator::new(Backend::Native(Box::new(m)), SchedulePolicy::Interleaved);
+        for i in 0..3usize {
+            let mut p = shared.clone();
+            p.extend([60 + 10 * i, 61 + 10 * i, 62, 63, 64, 65]);
+            c.submit(p, 4);
+        }
+        let mut steps = 0;
+        loop {
+            let more = c.step().unwrap();
+            let m = c.backend().as_native().unwrap();
+            assert!(
+                m.kv_pool().resident_bytes() <= m.kv_pool().budget_bytes(),
+                "pool over budget at a tick boundary (cache {cache_bytes}, step {steps}): \
+                 {} > {}",
+                m.kv_pool().resident_bytes(),
+                m.kv_pool().budget_bytes()
+            );
+            if !more {
+                break;
+            }
+            steps += 1;
+        }
+        let rs = c.take_finished();
+        assert_eq!(rs.len(), 3, "budget enforcement must not starve requests (cache {cache_bytes})");
+        if cache_bytes == 0 {
+            assert!(c.metrics.kv.holder_sheds > 0, "pressure must trigger the holder pass");
+        } else {
+            assert!(
+                c.metrics.kv.holder_sheds > 0 || c.metrics.prefix.evictions > 0,
+                "pressure must shed sessions or reclaim cache entries"
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_tick_fetch_split_lands_on_both_gauges() {
+    // Satellite 4: a tick serving decode rows and prefill rows in one
+    // walk splits its weight-fetch delta proportionally to row counts —
+    // one decode row + one prefill row → an even split (±1 for the
+    // remainder), with the tick's whole delta accounted and the token
+    // counters advancing per phase.
+    const LAYERS: usize = 6;
+    let fx = fixtures::write_fixture_with_layers(SEED, LAYERS).unwrap();
+    let probe = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+    let per_layer = probe.weight_metrics().packed_bytes / LAYERS;
+    drop(probe);
+    let m = NativeModel::load(
+        fx.dir(),
+        EngineOptions { weight_dram_bytes: per_layer * 2, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let mut a = m.new_session();
+    let la = m.prefill(&mut a, &[5, 6, 7]);
+    let w0 = m.weight_metrics();
+    assert!(w0.prefill_fetches > 0, "the weight budget must force streaming");
+    assert_eq!(w0.decode_fetches, 0);
+
+    let mut b = m.new_session();
+    let tok = argmax(&la);
+    let works = [
+        RowWork::Decode { tok },
+        RowWork::Prefill { ids: &[40, 41, 42, 43], last: true },
+    ];
+    let mut sessions: Vec<&mut NativeSession> = vec![&mut a, &mut b];
+    let rows = m.forward_tick(&mut sessions, &works).expect("weight walk");
+    assert_eq!(rows.len(), 2);
+    assert!(rows.iter().all(|r| r.as_ref().expect("row ok").is_some()));
+
+    let w1 = m.weight_metrics();
+    let decode_delta = w1.decode_fetches - w0.decode_fetches;
+    let prefill_delta = w1.prefill_fetches - w0.prefill_fetches;
+    assert!(decode_delta > 0, "the decode row owes its share of the walk");
+    assert!(prefill_delta > 0, "the prefill row owes its share of the walk");
+    assert!(
+        decode_delta.abs_diff(prefill_delta) <= 1,
+        "1 decode row vs 1 prefill row must split evenly: {decode_delta} vs {prefill_delta}"
+    );
+    assert_eq!(w1.tokens_generated - w0.tokens_generated, 1);
+    assert_eq!(w1.prompt_tokens_prefilled - w0.prompt_tokens_prefilled, 4);
+}
