@@ -21,6 +21,7 @@ use mnn_llm::device::SocProfile;
 use mnn_llm::model::config::ModelConfig;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::reorder::solver::TileConfig;
+use mnn_llm::util::json::Json;
 use mnn_llm::util::rng::Rng;
 
 const PROMPTS: [usize; 3] = [64, 256, 1024];
@@ -110,7 +111,7 @@ fn ratio_summary(soc: &SocProfile) {
 /// Part 2: real ablations on the native engine. Prefers real AOT
 /// artifacts; falls back to the self-contained fixture model so the
 /// measurement always runs.
-fn ablations() {
+fn ablations() -> Json {
     let aot = std::path::PathBuf::from("artifacts");
     let (_fx, dir, model_name) = if aot.join("manifest.json").exists() {
         (None, aot, "tiny-qwen2 (AOT artifacts)")
@@ -124,6 +125,8 @@ fn ablations() {
     let mut rng = Rng::new(11);
     let prompt: Vec<usize> = (0..64).map(|_| rng.below(vocab)).collect();
     let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let mut live_backend = String::new();
     let mut baseline_prefill = 0.0;
     let mut baseline_decode = 0.0;
     for (name, opts) in [
@@ -164,6 +167,7 @@ fn ablations() {
         if rows.is_empty() {
             baseline_prefill = prefill_s;
             baseline_decode = decode_s;
+            live_backend = m.backend_name().to_string();
         }
         rows.push(vec![
             name.to_string(),
@@ -172,11 +176,21 @@ fn ablations() {
             format!("{:.2}×", prefill_s / baseline_prefill),
             format!("{:.2}×", decode_s / baseline_decode),
         ]);
+        json_rows.push(Json::obj(vec![
+            ("config", Json::Str(name.into())),
+            ("prefill_tok_s", Json::Num(prompt.len() as f64 / prefill_s)),
+            ("decode_tok_s", Json::Num(1.0 / decode_s)),
+        ]));
     }
     bh::table(
         &["config", "prefill tok/s", "decode tok/s", "prefill cost", "decode cost"],
         &rows,
     );
+    Json::obj(vec![
+        ("model", Json::Str(model_name.into())),
+        ("live_backend", Json::Str(live_backend)),
+        ("rows", Json::Arr(json_rows)),
+    ])
 }
 
 /// §5.4's "≈3%" claim: long-tail rearrangement ops with and without region
@@ -254,7 +268,7 @@ fn streaming_ttft() {
 /// so flash weight fetches per generated token fall ≈ 1/B while the
 /// sequential baseline stays ≈ layers/token — the §4.1 decode-bandwidth
 /// lever continuous batching buys on the native backend.
-fn batched_decode_amortization() {
+fn batched_decode_amortization() -> Json {
     bh::section(
         "Fused batched decode — weight-fetch amortization vs batch size \
          (fixture-6l, DRAM budget = 2 of 6 layers)",
@@ -268,6 +282,7 @@ fn batched_decode_amortization() {
     };
     let opts = EngineOptions { weight_dram_bytes: per_layer * 2, ..EngineOptions::default() };
     let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
     let mut seq_fpt_at_1 = 0.0;
     for b in [1usize, 2, 4, 8] {
         let m = NativeModel::load(fx.dir(), opts.clone()).unwrap();
@@ -309,6 +324,13 @@ fn batched_decode_amortization() {
             format!("{:.2}×", if fpt > 0.0 { seq_fpt_at_1 / fpt } else { f64::INFINITY }),
             format!("{:.1}", tokens / wall),
         ]);
+        json_rows.push(Json::obj(vec![
+            ("batch", Json::Num(b as f64)),
+            ("weight_fetches", Json::Num(fetches)),
+            ("tokens", Json::Num(tokens)),
+            ("fetches_per_token", Json::Num(fpt)),
+            ("decode_tok_s", Json::Num(tokens / wall)),
+        ]));
     }
     bh::table(
         &["batch", "weight fetches", "tokens", "fetch/tok", "amortization", "decode tok/s"],
@@ -317,6 +339,7 @@ fn batched_decode_amortization() {
     println!("\n(One fused layer walk per tick shared by all B sessions: fetch/tok ≈ layers/B");
     println!(" under a streaming budget, vs ≈ layers for sequential decode — the guarded 1/3");
     println!(" bound at B=4 lives in tests/batched_decode.rs.)");
+    Json::Arr(json_rows)
 }
 
 /// Chunked + fused batched prefill under a tight weight budget: the TTFT
@@ -325,7 +348,7 @@ fn batched_decode_amortization() {
 /// table reports TTFT p50/p95 and pure-prefill weight fetches per prompt
 /// (fused admission shares one layer walk across every prompt admitted in
 /// a tick; chunking keeps a long prompt from monopolizing the tick).
-fn chunked_prefill_sweep() {
+fn chunked_prefill_sweep() -> Json {
     bh::section(
         "Chunked+fused prefill — chunk size × max_rows_per_tick \
          (fixture-6l, DRAM budget = 2 of 6 layers, 4 short + 2 long prompts)",
@@ -343,6 +366,7 @@ fn chunked_prefill_sweep() {
     prompts.extend((0..2).map(|_| (0..48).map(|_| rng.below(vocab)).collect::<Vec<_>>()));
     let fmt_lim = |v: usize| if v == usize::MAX { "∞".to_string() } else { v.to_string() };
     let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
     for (chunk, cap) in [
         (usize::MAX, usize::MAX), // PR 4 behavior: monolithic, uncapped
         (16, usize::MAX),
@@ -377,6 +401,14 @@ fn chunked_prefill_sweep() {
             format!("{:.2}", w.prefill_fetches as f64 / prompts.len() as f64),
             format!("{:.2}", w.fetches_per_prompt_token()),
         ]);
+        json_rows.push(Json::obj(vec![
+            ("chunk", Json::Str(fmt_lim(chunk))),
+            ("rows_per_tick", Json::Str(fmt_lim(cap))),
+            ("ttft_p50_s", Json::Num(mnn_llm::util::stats::median(&ttfts))),
+            ("ttft_p95_s", Json::Num(mnn_llm::util::stats::percentile(&ttfts, 95.0))),
+            ("prefill_fetches_per_prompt", Json::Num(w.prefill_fetches as f64 / prompts.len() as f64)),
+            ("fetches_per_prompt_token", Json::Num(w.fetches_per_prompt_token())),
+        ]));
     }
     bh::table(
         &[
@@ -393,6 +425,7 @@ fn chunked_prefill_sweep() {
     println!(" chunking bounds a long prompt's share of each tick, so short prompts' TTFT");
     println!(" stops scaling with the long prompts ahead of them; the guarded ≤1/2");
     println!(" fetches-per-prompt bound lives in tests/chunked_prefill.rs.)");
+    Json::Arr(json_rows)
 }
 
 fn main() {
@@ -400,9 +433,16 @@ fn main() {
     figure(&soc, Device::Cpu4Threads, "CPU, 4 threads");
     figure(&soc, Device::Gpu, "GPU (OpenCL model)");
     ratio_summary(&soc);
-    ablations();
+    let ablation_json = ablations();
     geometry_ablation();
     streaming_ttft();
-    batched_decode_amortization();
-    chunked_prefill_sweep();
+    let batched_json = batched_decode_amortization();
+    let chunked_json = chunked_prefill_sweep();
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("fig5_e2e".into())),
+        ("ablations", ablation_json),
+        ("batched_decode", batched_json),
+        ("chunked_prefill", chunked_json),
+    ]);
+    bh::write_json("BENCH_fig5.json", &artifact);
 }

@@ -5,15 +5,66 @@
 //! Run: `cargo bench --bench table2_tiles`
 
 use mnn_llm::bench as bh;
+use mnn_llm::cpu::backend::{select, BackendChoice, ComputeBackend, ScalarBackend};
 use mnn_llm::cpu::gemm_q::QLinear;
 use mnn_llm::quant::asym::{QuantizedMatrix, WeightBits};
-use mnn_llm::reorder::solver::{self, TileConfig};
 use mnn_llm::reorder::isa;
+use mnn_llm::reorder::solver::{self, TileConfig};
+use mnn_llm::util::json::Json;
 use mnn_llm::util::rng::Rng;
+
+/// Scalar vs SIMD backend on the int8-GEMM decode shape (one activation
+/// row against a [h, l] W8A8 matrix — the lm_head/attention-projection
+/// decode hot loop). Returns the JSON rows + the measured speedup.
+fn backend_decode_comparison() -> (Vec<Json>, f64) {
+    bh::section("Compute backends — int8-GEMM decode row, scalar vs SIMD (bit-identical)");
+    let mut rng = Rng::new(7);
+    let (l, h) = (1024usize, 1024usize);
+    let wf = rng.normal_vec(h * l);
+    let x = rng.normal_vec(l);
+    let qm = QuantizedMatrix::from_f32(&wf, h, l, WeightBits::Int8);
+    let tile = solver::solve_tiles(&isa::detect_host());
+    let lin = QLinear::new(&qm, tile, None);
+    let scalar: &dyn ComputeBackend = &ScalarBackend;
+    let simd = select(BackendChoice::Simd);
+    let mut out = vec![0f32; h];
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let mut times = Vec::new();
+    for (name, be) in [("scalar", scalar), (simd.name(), simd.as_ref())] {
+        let m = bh::bench(&format!("{name:<10} decode GEMM {h}x{l} W8A8"), || {
+            lin.forward_with(be, &x, 1, &mut out);
+            std::hint::black_box(&out);
+        });
+        let rows_per_s = 1.0 / m.mean_s;
+        times.push(m.mean_s);
+        json_rows.push(Json::obj(vec![
+            ("backend", Json::Str(name.into())),
+            ("mean_s", Json::Num(m.mean_s)),
+            ("rows_per_s", Json::Num(rows_per_s)),
+        ]));
+        rows.push(vec![name.to_string(), format!("{rows_per_s:.0}")]);
+    }
+    // Bit-identity spot check right here in the bench: same bits or bust.
+    let mut a = vec![0f32; h];
+    let mut b = vec![0f32; h];
+    lin.forward_with(scalar, &x, 1, &mut a);
+    lin.forward_with(simd.as_ref(), &x, 1, &mut b);
+    assert_eq!(
+        a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "backends diverged — the seam's contract is broken"
+    );
+    let speedup = times[0] / times[1];
+    bh::table(&["backend", "decode rows/s"], &rows);
+    println!("  SIMD speedup over scalar: {speedup:.2}× (outputs verified bit-identical)");
+    (json_rows, speedup)
+}
 
 fn main() {
     bh::section("Table 2 — tile sizes per CPU architecture (Eq. 2–4 solver)");
     let paper = [(12, 8, 4), (10, 8, 8), (4, 8, 4), (4, 64, 4)];
+    let mut solver_json = Vec::new();
     let rows: Vec<Vec<String>> = isa::table2_isas()
         .iter()
         .zip(paper)
@@ -21,6 +72,14 @@ fn main() {
             let t = solver::solve_tiles(i);
             let traffic = solver::memory_accesses(1024.0, 1024.0, 1024.0, t.e_p as f64, t.h_p as f64);
             let naive = solver::naive_accesses(1024.0, 1024.0, 1024.0);
+            solver_json.push(Json::obj(vec![
+                ("isa", Json::Str(i.name.into())),
+                ("e_p", Json::Num(t.e_p as f64)),
+                ("h_p", Json::Num(t.h_p as f64)),
+                ("l_p", Json::Num(t.l_p as f64)),
+                ("matches_paper", Json::Bool((t.e_p, t.h_p, t.l_p) == p)),
+                ("traffic_reduction", Json::Num(naive / traffic)),
+            ]));
             vec![
                 i.name.to_string(),
                 format!("({}, {}, {})", p.0, p.1, p.2),
@@ -54,4 +113,15 @@ fn main() {
     }
     println!("\n(Absolute times are x86 scalar/autovec; the paper's win comes from the");
     println!(" same locality effect on ARM registers — see DESIGN.md §Substitutions.)");
+
+    let (backend_rows, speedup) = backend_decode_comparison();
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("table2_tiles".into())),
+        ("host_isa", Json::Str(isa::detect_host().name.into())),
+        ("live_backend", Json::Str(select(BackendChoice::Auto).name().into())),
+        ("solver", Json::Arr(solver_json)),
+        ("decode_gemm", Json::Arr(backend_rows)),
+        ("simd_speedup", Json::Num(speedup)),
+    ]);
+    bh::write_json("BENCH_table2.json", &artifact);
 }

@@ -64,6 +64,18 @@ pub fn table(headers: &[&str], rows: &[Vec<String>]) {
     }
 }
 
+/// Write a machine-readable bench artifact (`BENCH_*.json`): one JSON
+/// document + trailing newline, and say where it landed. Values are
+/// assembled with [`crate::util::json::Json`] (its `render` emits what its
+/// own parser accepts).
+pub fn write_json(path: &str, value: &crate::util::json::Json) {
+    let body = format!("{}\n", value.render());
+    match std::fs::write(path, body) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 /// Format a float with engineering precision.
 pub fn fmt(v: f64) -> String {
     if v == 0.0 {
@@ -101,5 +113,21 @@ mod tests {
     #[test]
     fn table_prints() {
         table(&["a", "bb"], &[vec!["1".into(), "2".into()]]);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_artifact() {
+        use crate::util::json::Json;
+        let path = crate::util::tmpname::unique_temp_path("bench-json", ".json");
+        let v = Json::obj(vec![
+            ("name", Json::Str("table2".into())),
+            ("speedup", Json::Num(2.5)),
+        ]);
+        write_json(path.to_str().unwrap(), &v);
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.ends_with('\n'));
+        let parsed = Json::parse(body.trim_end()).unwrap();
+        assert_eq!(parsed.path(&["speedup"]).unwrap().as_f64(), Some(2.5));
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -22,6 +22,7 @@
 use anyhow::Result;
 
 use crate::coordinator::request::Request;
+use crate::cpu::backend::ComputeBackendMetrics;
 use crate::kv::PrefixCacheMetrics;
 use crate::memory::weight_store::WeightResidencyMetrics;
 use crate::model::native::{NativeModel, NativeSession};
@@ -266,6 +267,12 @@ pub trait InferenceBackend {
     fn weight_metrics(&self) -> WeightResidencyMetrics {
         WeightResidencyMetrics::default()
     }
+
+    /// Compute-backend snapshot: which kernel set is live plus per-op
+    /// invocation counts (native backend only).
+    fn compute_metrics(&self) -> ComputeBackendMetrics {
+        ComputeBackendMetrics::default()
+    }
 }
 
 impl InferenceBackend for NativeModel {
@@ -374,6 +381,10 @@ impl InferenceBackend for NativeModel {
 
     fn weight_metrics(&self) -> WeightResidencyMetrics {
         NativeModel::weight_metrics(self)
+    }
+
+    fn compute_metrics(&self) -> ComputeBackendMetrics {
+        NativeModel::compute_metrics(self)
     }
 }
 
@@ -656,6 +667,13 @@ impl InferenceBackend for Backend {
         match self {
             Backend::Native(m) => NativeModel::weight_metrics(m),
             Backend::Pjrt(_) => WeightResidencyMetrics::default(),
+        }
+    }
+
+    fn compute_metrics(&self) -> ComputeBackendMetrics {
+        match self {
+            Backend::Native(m) => NativeModel::compute_metrics(m),
+            Backend::Pjrt(_) => ComputeBackendMetrics::default(),
         }
     }
 }

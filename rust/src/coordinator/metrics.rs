@@ -2,6 +2,7 @@
 //! tok/s, decode speed in tok/s) plus latency percentiles for the e2e
 //! example, KV-pressure counters, and weight-residency counters.
 
+use crate::cpu::backend::ComputeBackendMetrics;
 use crate::kv::PrefixCacheMetrics;
 use crate::memory::weight_store::WeightResidencyMetrics;
 use crate::util::stats;
@@ -84,6 +85,10 @@ pub struct EngineMetrics {
     /// cache's current footprint. Snapshot refreshed at every admission
     /// and completion; all-zero when the cache is disabled (the default).
     pub prefix: PrefixCacheMetrics,
+    /// Compute-backend snapshot (native backend): which kernel set is
+    /// live (`scalar` / `simd-avx2` / `simd-neon`) and per-op invocation
+    /// counts. Default (empty name) on backends without the seam.
+    pub compute: ComputeBackendMetrics,
 }
 
 impl EngineMetrics {
@@ -187,6 +192,12 @@ impl EngineMetrics {
                 self.prefix.lookups,
                 self.prefix.prefill_tokens_saved,
                 self.prefix.cow_copies
+            ));
+        }
+        if !self.compute.backend.is_empty() && self.compute.gemm_calls > 0 {
+            s.push_str(&format!(
+                " | compute {} / {} gemm ({} tiles)",
+                self.compute.backend, self.compute.gemm_calls, self.compute.gemm_tiles
             ));
         }
         s
@@ -299,6 +310,19 @@ mod tests {
         assert!(s.contains("prefix 3/4 hit"), "{s}");
         assert!(s.contains("96 ptok saved"), "{s}");
         assert!(s.contains("2 cow"), "{s}");
+    }
+
+    #[test]
+    fn compute_backend_appears_in_summary_once_it_ran() {
+        let mut e = EngineMetrics::default();
+        e.push(m(8, 4, 0.1, 0.2));
+        assert!(!e.summary(1.0).contains("compute"), "no backend yet");
+        e.compute.backend = "simd-avx2";
+        assert!(!e.summary(1.0).contains("compute"), "no gemm calls yet");
+        e.compute.gemm_calls = 9;
+        e.compute.gemm_tiles = 72;
+        let s = e.summary(1.0);
+        assert!(s.contains("compute simd-avx2 / 9 gemm (72 tiles)"), "{s}");
     }
 
     #[test]

@@ -398,6 +398,7 @@ impl<B: InferenceBackend> Engine<B> {
         // counted, and released shared pages change the cache's footprint.
         self.metrics.weights = self.backend.weight_metrics();
         self.metrics.prefix = self.backend.prefix_metrics();
+        self.metrics.compute = self.backend.compute_metrics();
         if self.active.is_empty() {
             self.backend.reclaim();
         }
@@ -819,6 +820,7 @@ impl<B: InferenceBackend> Engine<B> {
         self.metrics.push(m);
         self.metrics.weights = self.backend.weight_metrics();
         self.metrics.prefix = self.backend.prefix_metrics();
+        self.metrics.compute = self.backend.compute_metrics();
         let id = act.req.id;
         deliver(
             &mut self.events,

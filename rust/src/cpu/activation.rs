@@ -26,10 +26,18 @@ pub fn add_inplace(a: &mut [f32], b: &[f32]) {
 }
 
 /// RMSNorm in fp32: x * rsqrt(mean(x²)+eps) * w, row-wise over [rows, h].
+///
+/// Degenerate shapes are explicit no-ops: with `h == 0` (or `rows == 0`)
+/// there is nothing to normalize and nothing is written — both compute
+/// backends share this entry point, so a `0/0` NaN here would poison
+/// every path at once.
 pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32], rows: usize, eps: f32) {
     let h = w.len();
     assert_eq!(x.len(), rows * h);
     assert_eq!(out.len(), rows * h);
+    if h == 0 {
+        return;
+    }
     for r in 0..rows {
         let row = &x[r * h..(r + 1) * h];
         let ms = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
@@ -108,6 +116,35 @@ mod tests {
             let rms = (row.iter().map(|v| v * v).sum::<f32>() / 64.0).sqrt();
             assert!((rms - 1.0).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn empty_slices_are_no_ops() {
+        // Shared backend entry points must tolerate degenerate shapes:
+        // an empty softmax has no max (fold yields -inf) and must not
+        // fill-or-divide; h == 0 rmsnorm must not compute 0/0; empty
+        // swiglu/add must simply do nothing.
+        let mut xs: Vec<f32> = vec![];
+        softmax_inplace(&mut xs);
+        assert!(xs.is_empty());
+
+        let mut out: Vec<f32> = vec![];
+        rmsnorm(&[], &[], &mut out, 3, 1e-6); // rows > 0, h == 0
+        rmsnorm(&[], &[1.0], &mut out[..0], 0, 1e-6); // rows == 0, h > 0
+        assert!(out.is_empty());
+
+        swiglu(&[], &[], &mut []);
+        add_inplace(&mut [], &[]);
+    }
+
+    #[test]
+    fn rmsnorm_zero_h_leaves_no_nans_anywhere() {
+        // Regression: before the h == 0 early return, the mean-square was
+        // 0/0 = NaN; it never reached `out`, but the guard makes the
+        // no-op explicit rather than accidental.
+        let mut out: Vec<f32> = vec![];
+        rmsnorm(&[], &[], &mut out, 17, 0.0);
+        assert!(out.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -3,16 +3,30 @@
 //! QK^T (so accumulations stay in range even on fp16-class hardware) and
 //! softmax runs in fp32.
 
-use crate::cpu::activation::softmax_inplace;
+use crate::cpu::backend::{ComputeBackend, ScalarBackend};
 use crate::kv::KvLayer;
 
-/// GQA decode attention for one token.
+/// GQA decode attention for one token (scalar reference backend).
 ///
 /// * `q` — [heads * d], already projected + roped, NOT yet scaled (this
 ///   function applies the 1/sqrt(d) pre-scale to q, per §5.3).
 /// * `cache` — the layer's quantized KV (len = tokens to attend over).
 /// * `out` — [heads * d].
 pub fn decode_attention(q: &[f32], heads: usize, cache: &KvLayer, out: &mut [f32]) {
+    decode_attention_with(&ScalarBackend, q, heads, cache, out);
+}
+
+/// [`decode_attention`] on an explicit compute backend. The KV dot and
+/// value accumulate live in `KvLayer` (they dequantize inline); the
+/// softmax goes through the backend — whose float ops keep the scalar
+/// reduction order, so all backends are bit-identical here.
+pub fn decode_attention_with(
+    be: &dyn ComputeBackend,
+    q: &[f32],
+    heads: usize,
+    cache: &KvLayer,
+    out: &mut [f32],
+) {
     let d = cache.head_dim;
     assert_eq!(q.len(), heads * d);
     assert_eq!(out.len(), heads * d);
@@ -33,7 +47,7 @@ pub fn decode_attention(q: &[f32], heads: usize, cache: &KvLayer, out: &mut [f32
         for tok in 0..t {
             scores[tok] = cache.key_dot(kvh, tok, &qs);
         }
-        softmax_inplace(&mut scores);
+        be.softmax_inplace(&mut scores);
         let o = &mut out[h * d..(h + 1) * d];
         o.fill(0.0);
         for tok in 0..t {
@@ -61,7 +75,23 @@ pub fn prefill_attention(
     d: usize,
     out: &mut [f32],
 ) {
-    chunked_prefill_attention(q, &[], &[], k, v, 0, s, heads, kv_heads, d, out);
+    prefill_attention_with(&ScalarBackend, q, k, v, s, heads, kv_heads, d, out);
+}
+
+/// [`prefill_attention`] on an explicit compute backend.
+#[allow(clippy::too_many_arguments)]
+pub fn prefill_attention_with(
+    be: &dyn ComputeBackend,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    s: usize,
+    heads: usize,
+    kv_heads: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    chunked_prefill_attention_with(be, q, &[], &[], k, v, 0, s, heads, kv_heads, d, out);
 }
 
 /// Causal attention for one prefill **chunk**: `s` fresh tokens whose
@@ -97,9 +127,41 @@ pub fn chunked_prefill_attention(
     d: usize,
     out: &mut [f32],
 ) {
+    chunked_prefill_attention_with(
+        &ScalarBackend,
+        q,
+        pk,
+        pv,
+        k,
+        v,
+        base,
+        s,
+        heads,
+        kv_heads,
+        d,
+        out,
+    );
+}
+
+/// [`chunked_prefill_attention`] on an explicit compute backend.
+#[allow(clippy::too_many_arguments)]
+pub fn chunked_prefill_attention_with(
+    be: &dyn ComputeBackend,
+    q: &[f32],
+    pk: &[f32],
+    pv: &[f32],
+    k: &[f32],
+    v: &[f32],
+    base: usize,
+    s: usize,
+    heads: usize,
+    kv_heads: usize,
+    d: usize,
+    out: &mut [f32],
+) {
     assert_eq!(pk.len(), base * kv_heads * d);
     assert_eq!(pv.len(), base * kv_heads * d);
-    segmented_prefill_attention(q, &[(pk, pv)], k, v, s, heads, kv_heads, d, out);
+    segmented_prefill_attention_with(be, q, &[(pk, pv)], k, v, s, heads, kv_heads, d, out);
 }
 
 /// [`chunked_prefill_attention`] generalized to a prefix stored in
@@ -115,6 +177,26 @@ pub fn chunked_prefill_attention(
 /// pass — the property the prefix-cache bit-identity tests pin down.
 #[allow(clippy::too_many_arguments)]
 pub fn segmented_prefill_attention(
+    q: &[f32],
+    prefix: &[(&[f32], &[f32])],
+    k: &[f32],
+    v: &[f32],
+    s: usize,
+    heads: usize,
+    kv_heads: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    segmented_prefill_attention_with(&ScalarBackend, q, prefix, k, v, s, heads, kv_heads, d, out);
+}
+
+/// [`segmented_prefill_attention`] on an explicit compute backend: the
+/// score dots, softmax and value accumulates go through the backend's
+/// `dot`/`softmax_inplace`/`axpy` primitives, all of which preserve the
+/// scalar reduction order (the bit-identity contract).
+#[allow(clippy::too_many_arguments)]
+pub fn segmented_prefill_attention_with(
+    be: &dyn ComputeBackend,
     q: &[f32],
     prefix: &[(&[f32], &[f32])],
     k: &[f32],
@@ -154,24 +236,16 @@ pub fn segmented_prefill_attention(
             for (pk, _) in prefix {
                 for ki in 0..pk.len() / row {
                     let krow = &pk[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                    let mut acc = 0f32;
-                    for i in 0..d {
-                        acc += qs[i] * krow[i];
-                    }
-                    scores[gi] = acc;
+                    scores[gi] = be.dot(&qs, krow);
                     gi += 1;
                 }
             }
             let causal = qi + 1;
             for ki in 0..causal {
                 let krow = &k[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                let mut acc = 0f32;
-                for i in 0..d {
-                    acc += qs[i] * krow[i];
-                }
-                scores[base + ki] = acc;
+                scores[base + ki] = be.dot(&qs, krow);
             }
-            softmax_inplace(&mut scores[..base + causal]);
+            be.softmax_inplace(&mut scores[..base + causal]);
             let o = &mut out[(qi * heads + h) * d..(qi * heads + h) * d + d];
             o.fill(0.0);
             let mut gi = 0usize;
@@ -180,17 +254,13 @@ pub fn segmented_prefill_attention(
                     let w = scores[gi];
                     gi += 1;
                     let vrow = &pv[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                    for i in 0..d {
-                        o[i] += w * vrow[i];
-                    }
+                    be.axpy(w, vrow, o);
                 }
             }
             for ki in 0..causal {
                 let w = scores[base + ki];
                 let vrow = &v[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                for i in 0..d {
-                    o[i] += w * vrow[i];
-                }
+                be.axpy(w, vrow, o);
             }
         }
     }
@@ -199,6 +269,7 @@ pub fn segmented_prefill_attention(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cpu::activation::softmax_inplace;
     use crate::util::rng::Rng;
 
     /// Oracle: fp32 attention over explicitly dequantized cache tensors.
@@ -375,6 +446,34 @@ mod tests {
             segmented_prefill_attention(&q, &segs, &k, &v, s, heads, kv_heads, d, &mut out);
             assert_eq!(out, want, "prefix cut at {cut} diverged");
         }
+    }
+
+    #[test]
+    fn simd_backend_attention_is_bit_identical_to_scalar() {
+        // The SIMD backend inherits the scalar float primitives, so
+        // attention must agree byte for byte — the contract native.rs's
+        // fused walk relies on when the backend handle is threaded in.
+        let Some(simd) = crate::cpu::backend::SimdBackend::try_new() else {
+            return;
+        };
+        let mut rng = Rng::new(9);
+        let (base, s, heads, kv_heads, d) = (5usize, 4usize, 4, 2, 8);
+        let q = rng.normal_vec(s * heads * d);
+        let pk = rng.normal_vec(base * kv_heads * d);
+        let pv = rng.normal_vec(base * kv_heads * d);
+        let k = rng.normal_vec(s * kv_heads * d);
+        let v = rng.normal_vec(s * kv_heads * d);
+        let segs = [(&pk[..], &pv[..])];
+        let mut want = vec![0f32; s * heads * d];
+        segmented_prefill_attention(&q, &segs, &k, &v, s, heads, kv_heads, d, &mut want);
+        let mut got = vec![0f32; s * heads * d];
+        segmented_prefill_attention_with(
+            &simd, &q, &segs, &k, &v, s, heads, kv_heads, d, &mut got,
+        );
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -1,0 +1,707 @@
+//! The pluggable compute-backend seam (ROADMAP direction 3): every
+//! per-tile hot op the forward pass runs — the packed int8 GEMM inner
+//! loop, the dequant/affine correction, rmsnorm, softmax, swiglu, RoPE,
+//! and the attention dot/accumulate primitives — goes through one
+//! [`ComputeBackend`] trait object selected at model load.
+//!
+//! Two implementations ship today:
+//!
+//! * [`ScalarBackend`] — the reference. Every trait method's default body
+//!   is the scalar loop the engine ran before this seam existed; the
+//!   scalar backend overrides nothing.
+//! * [`SimdBackend`] — AVX2 (runtime-detected via
+//!   `is_x86_feature_detected!`) on x86-64, NEON on aarch64. It overrides
+//!   **only the integer GEMM block ops**. Integer accumulation is exact
+//!   and order-independent, so vector i8×i8→i32 MACs produce the same
+//!   i32 accumulators as the scalar triple loop; every float op (affine
+//!   correction, norms, softmax, RoPE, attention reductions) keeps the
+//!   scalar implementation and therefore the scalar reduction order.
+//!   That is the whole bit-identity argument: SIMD and scalar outputs
+//!   are equal byte for byte, which `tests/backend_parity.rs` and the
+//!   engine-level cross-backend suite pin down.
+//!
+//! Backend selection: [`select`] honors the `MNN_BACKEND` env var
+//! (`scalar` | `simd` | `auto`) over the [`BackendChoice`] in
+//! `EngineOptions`; `Auto` consults `reorder::isa::detect_host`. Forcing
+//! `Simd` on a host without vector int8 support degrades gracefully to
+//! scalar (this is how CI's SIMD leg skips on old runners without
+//! failing).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::cpu::activation;
+use crate::reorder::pack::{PackedActivations, PackedWeights};
+
+// ---------------------------------------------------------------------------
+// Selection.
+
+/// Which compute backend `NativeModel::load` should instantiate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Use SIMD when `reorder::isa::detect_host` reports vector int8
+    /// support on this host, scalar otherwise.
+    #[default]
+    Auto,
+    /// Always the scalar reference backend.
+    Scalar,
+    /// Request the SIMD backend; falls back to scalar when the host has
+    /// no supported vector ISA (never an error).
+    Simd,
+}
+
+/// `MNN_BACKEND` env override (`scalar` | `simd` | `auto`); unknown
+/// values are ignored so a typo cannot silently change numerics — both
+/// backends are bit-identical, but perf reports should name the backend
+/// that actually ran.
+pub fn env_choice() -> Option<BackendChoice> {
+    match std::env::var("MNN_BACKEND") {
+        Ok(v) => match v.to_ascii_lowercase().as_str() {
+            "scalar" => Some(BackendChoice::Scalar),
+            "simd" => Some(BackendChoice::Simd),
+            "auto" => Some(BackendChoice::Auto),
+            _ => None,
+        },
+        Err(_) => None,
+    }
+}
+
+/// Instantiate the backend for `choice`, after applying the env
+/// override. This is the one constructor the model loader calls.
+pub fn select(choice: BackendChoice) -> Arc<dyn ComputeBackend> {
+    match env_choice().unwrap_or(choice) {
+        BackendChoice::Scalar => Arc::new(ScalarBackend),
+        BackendChoice::Simd | BackendChoice::Auto => match SimdBackend::try_new() {
+            Some(s) => Arc::new(s),
+            None => Arc::new(ScalarBackend),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trait.
+
+/// The per-tile hot ops of the forward pass. Default method bodies are
+/// the scalar reference; an accelerated backend overrides only what its
+/// ISA can do **bit-identically** (integer ops are fair game anywhere;
+/// float ops may only be overridden preserving the scalar reduction
+/// order).
+pub trait ComputeBackend: Send + Sync {
+    /// Short stable name for metrics/logs ("scalar", "simd-avx2", ...).
+    fn name(&self) -> &'static str;
+
+    /// One output tile's full reduction, int8 weights:
+    /// `acc[e_p, h_p] += Σ_bl a[bl, e_p, l_p] · w[bl, h_p, l_p]ᵀ` with
+    /// exact i8×i8→i32 accumulation. `w` bytes are i8 bit patterns.
+    fn gemm_i8_block(
+        &self,
+        a: &[i8],
+        w: &[u8],
+        acc: &mut [i32],
+        tiles_l: usize,
+        e_p: usize,
+        h_p: usize,
+        l_p: usize,
+    ) {
+        gemm_i8_block_scalar(a, w, acc, tiles_l, e_p, h_p, l_p);
+    }
+
+    /// Int4 variant: each `w` byte packs two unsigned nibble codes along
+    /// l_p (low nibble = even index). Same exact i32 accumulation.
+    fn gemm_i4_block(
+        &self,
+        a: &[i8],
+        w: &[u8],
+        acc: &mut [i32],
+        tiles_l: usize,
+        e_p: usize,
+        h_p: usize,
+        l_p: usize,
+    ) {
+        gemm_i4_block_scalar(a, w, acc, tiles_l, e_p, h_p, l_p);
+    }
+
+    /// Dequantize one output tile: apply the asymmetric-quantization
+    /// affine corrections (gemm_q's Eq. above the kernel) to the i32
+    /// accumulators and write true rows/cols of `out`. Float — any
+    /// override must keep this exact expression order.
+    fn affine_correct(
+        &self,
+        acc: &[i32],
+        pa: &PackedActivations,
+        w: &PackedWeights,
+        bias: Option<&[f32]>,
+        bi: usize,
+        bj: usize,
+        out: &mut [f32],
+    ) {
+        affine_correct_scalar(acc, pa, w, bias, bi, bj, out);
+    }
+
+    /// Row-wise RMS norm (delegates to `cpu::activation::rmsnorm`).
+    fn rmsnorm(&self, x: &[f32], w: &[f32], out: &mut [f32], rows: usize, eps: f32) {
+        activation::rmsnorm(x, w, out, rows, eps);
+    }
+
+    /// In-place fp32 softmax (delegates to `cpu::activation`).
+    fn softmax_inplace(&self, xs: &mut [f32]) {
+        activation::softmax_inplace(xs);
+    }
+
+    /// SwiGLU gate (delegates to `cpu::activation::swiglu`).
+    fn swiglu(&self, gate: &[f32], up: &[f32], out: &mut [f32]) {
+        activation::swiglu(gate, up, out);
+    }
+
+    /// Rotate one head in place: `head` is `[2 * half]`, `cos`/`sin` are
+    /// the `[half]` table rows for this position.
+    fn rope_apply(&self, head: &mut [f32], cos: &[f32], sin: &[f32]) {
+        rope_apply_scalar(head, cos, sin);
+    }
+
+    /// Attention score dot product, in index order (the fixed reduction
+    /// order the bit-identity contract depends on).
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0f32;
+        for i in 0..a.len() {
+            acc += a[i] * b[i];
+        }
+        acc
+    }
+
+    /// Attention value accumulate: `y[i] += w * x[i]`, in index order.
+    fn axpy(&self, w: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for i in 0..x.len() {
+            y[i] += w * x[i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference bodies (shared by trait defaults and SIMD fallbacks).
+
+pub(crate) fn gemm_i8_block_scalar(
+    a: &[i8],
+    w: &[u8],
+    acc: &mut [i32],
+    tiles_l: usize,
+    e_p: usize,
+    h_p: usize,
+    l_p: usize,
+) {
+    for bl in 0..tiles_l {
+        let a_panel = &a[bl * e_p * l_p..(bl + 1) * e_p * l_p];
+        let w_panel = &w[bl * h_p * l_p..(bl + 1) * h_p * l_p];
+        for ii in 0..e_p {
+            let arow = &a_panel[ii * l_p..(ii + 1) * l_p];
+            let accrow = &mut acc[ii * h_p..(ii + 1) * h_p];
+            for jj in 0..h_p {
+                let wrow = &w_panel[jj * l_p..(jj + 1) * l_p];
+                let mut s = 0i32;
+                for ll in 0..l_p {
+                    s += arow[ll] as i32 * (wrow[ll] as i8) as i32;
+                }
+                accrow[jj] += s;
+            }
+        }
+    }
+}
+
+pub(crate) fn gemm_i4_block_scalar(
+    a: &[i8],
+    w: &[u8],
+    acc: &mut [i32],
+    tiles_l: usize,
+    e_p: usize,
+    h_p: usize,
+    l_p: usize,
+) {
+    let lp2 = l_p / 2;
+    for bl in 0..tiles_l {
+        let a_panel = &a[bl * e_p * l_p..(bl + 1) * e_p * l_p];
+        let w_panel = &w[bl * h_p * lp2..(bl + 1) * h_p * lp2];
+        for ii in 0..e_p {
+            let arow = &a_panel[ii * l_p..(ii + 1) * l_p];
+            let accrow = &mut acc[ii * h_p..(ii + 1) * h_p];
+            for jj in 0..h_p {
+                let wrow = &w_panel[jj * lp2..(jj + 1) * lp2];
+                let mut s = 0i32;
+                for b in 0..lp2 {
+                    let byte = wrow[b];
+                    s += arow[2 * b] as i32 * (byte & 0xF) as i32;
+                    s += arow[2 * b + 1] as i32 * (byte >> 4) as i32;
+                }
+                accrow[jj] += s;
+            }
+        }
+    }
+}
+
+pub(crate) fn affine_correct_scalar(
+    acc: &[i32],
+    pa: &PackedActivations,
+    w: &PackedWeights,
+    bias: Option<&[f32]>,
+    bi: usize,
+    bj: usize,
+    out: &mut [f32],
+) {
+    let e_p = pa.tile.e_p;
+    let h_p = w.tile.h_p;
+    let l_true = w.l as f32;
+    for ii in 0..e_p {
+        let r = bi * e_p + ii;
+        if r >= pa.e {
+            break;
+        }
+        let sx = pa.params[r].scale;
+        let bx = pa.params[r].bias;
+        let xsum = pa.row_sums[r] as f32;
+        for jj in 0..h_p {
+            let c = bj * h_p + jj;
+            if c >= w.h {
+                break;
+            }
+            let sw = w.params[c].scale;
+            let bw = w.params[c].bias;
+            let wsum = w.row_sums[c] as f32;
+            let a = acc[ii * h_p + jj] as f32;
+            let mut v = sx * sw * a + sx * bw * xsum + bx * sw * wsum + l_true * bx * bw;
+            if let Some(b) = bias {
+                v += b[c];
+            }
+            out[r * w.h + c] = v;
+        }
+    }
+}
+
+pub(crate) fn rope_apply_scalar(head: &mut [f32], cos: &[f32], sin: &[f32]) {
+    let half = cos.len();
+    debug_assert_eq!(sin.len(), half);
+    debug_assert_eq!(head.len(), 2 * half);
+    for i in 0..half {
+        let a = head[i];
+        let b = head[i + half];
+        head[i] = a * cos[i] - b * sin[i];
+        head[i + half] = b * cos[i] + a * sin[i];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The backends.
+
+/// The scalar reference backend: every method keeps its default body.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarBackend;
+
+impl ComputeBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+const SIMD_NAME: &str = "simd-neon";
+#[cfg(not(target_arch = "aarch64"))]
+const SIMD_NAME: &str = "simd-avx2";
+
+/// Vector int8 GEMM backend. Overrides only the integer block ops (see
+/// module docs for why that is exactly the bit-identity-preserving
+/// subset); tile shapes the vector kernels do not cover (l_p ≠ 8, odd
+/// h_p) fall back to the scalar bodies inside the same backend, so
+/// numerics never depend on shape.
+#[derive(Clone, Copy, Debug)]
+pub struct SimdBackend;
+
+impl SimdBackend {
+    /// `Some` only when this host can actually run the vector kernels:
+    /// x86-64 with AVX2 (checked at runtime — `reorder::isa::detect_host`
+    /// must agree and `is_x86_feature_detected!` must confirm), or any
+    /// aarch64 (NEON is baseline). Everything else gets `None` and the
+    /// caller degrades to [`ScalarBackend`].
+    pub fn try_new() -> Option<SimdBackend> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let isa = crate::reorder::isa::detect_host();
+            if isa.name == crate::reorder::isa::X86_AVX2.name
+                && is_x86_feature_detected!("avx2")
+            {
+                return Some(SimdBackend);
+            }
+            None
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            Some(SimdBackend)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            None
+        }
+    }
+}
+
+impl ComputeBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        SIMD_NAME
+    }
+
+    fn gemm_i8_block(
+        &self,
+        a: &[i8],
+        w: &[u8],
+        acc: &mut [i32],
+        tiles_l: usize,
+        e_p: usize,
+        h_p: usize,
+        l_p: usize,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if l_p == 8 && h_p % 2 == 0 {
+            // Constructed only after the AVX2 runtime check passed.
+            unsafe { simd_x86::gemm_i8_block(a, w, acc, tiles_l, e_p, h_p) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if l_p == 8 {
+            unsafe { simd_neon::gemm_i8_block(a, w, acc, tiles_l, e_p, h_p) };
+            return;
+        }
+        gemm_i8_block_scalar(a, w, acc, tiles_l, e_p, h_p, l_p);
+    }
+
+    fn gemm_i4_block(
+        &self,
+        a: &[i8],
+        w: &[u8],
+        acc: &mut [i32],
+        tiles_l: usize,
+        e_p: usize,
+        h_p: usize,
+        l_p: usize,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if l_p == 8 && h_p % 2 == 0 {
+            unsafe { simd_x86::gemm_i4_block(a, w, acc, tiles_l, e_p, h_p) };
+            return;
+        }
+        gemm_i4_block_scalar(a, w, acc, tiles_l, e_p, h_p, l_p);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernels. Exactness note: we deliberately avoid the classic
+// pmaddubsw trick (sign-transfer via _mm256_sign_epi8 wraps the weight
+// code -128), and instead widen both operands to i16 and use madd_epi16:
+// i8×i8 products fit i16×i16→i32 pairwise sums with no saturation for
+// the whole code range, so the vector accumulators hold exactly the
+// scalar triple loop's integers.
+
+#[cfg(target_arch = "x86_64")]
+mod simd_x86 {
+    use std::arch::x86_64::*;
+
+    /// Sum the four i32 lanes of an SSE register.
+    #[inline]
+    unsafe fn hsum4(v: __m128i) -> i32 {
+        let s = _mm_add_epi32(v, _mm_unpackhi_epi64(v, v));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// Int8 block kernel, l_p == 8, even h_p. Per (row, weight-row-pair):
+    /// broadcast the 8 activation codes to both 128-bit lanes, widen a
+    /// 16-byte load covering two weight rows, madd, and keep the 8-lane
+    /// i32 accumulator live across the whole bl walk; lanes 0–3 reduce to
+    /// weight row jj, lanes 4–7 to row jj+1.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_i8_block(
+        a: &[i8],
+        w: &[u8],
+        acc: &mut [i32],
+        tiles_l: usize,
+        e_p: usize,
+        h_p: usize,
+    ) {
+        const L_P: usize = 8;
+        let ap = a.as_ptr();
+        let wp = w.as_ptr();
+        for ii in 0..e_p {
+            for jp in 0..h_p / 2 {
+                let mut vacc = _mm256_setzero_si256();
+                for bl in 0..tiles_l {
+                    let arow = ap.add((bl * e_p + ii) * L_P);
+                    let wrow = wp.add((bl * h_p + 2 * jp) * L_P);
+                    let a8 = _mm_loadl_epi64(arow as *const __m128i);
+                    let a16 = _mm256_cvtepi8_epi16(_mm_unpacklo_epi64(a8, a8));
+                    let w16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(wrow as *const __m128i));
+                    vacc = _mm256_add_epi32(vacc, _mm256_madd_epi16(a16, w16));
+                }
+                let jj = 2 * jp;
+                acc[ii * h_p + jj] += hsum4(_mm256_castsi256_si128(vacc));
+                acc[ii * h_p + jj + 1] += hsum4(_mm256_extracti128_si256(vacc, 1));
+            }
+        }
+    }
+
+    /// Int4 block kernel, l_p == 8, even h_p. Two packed weight rows are
+    /// 8 bytes; split nibbles and interleave (`unpacklo(lo, hi)`) to
+    /// recover element order (low nibble = even l index), then run the
+    /// same widen+madd pipeline. Nibbles are 0..15, so the i8→i16
+    /// sign-extension equals the scalar zero-extension.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_i4_block(
+        a: &[i8],
+        w: &[u8],
+        acc: &mut [i32],
+        tiles_l: usize,
+        e_p: usize,
+        h_p: usize,
+    ) {
+        const L_P: usize = 8;
+        const LP2: usize = 4;
+        let ap = a.as_ptr();
+        let wp = w.as_ptr();
+        let nib = _mm_set1_epi8(0x0F);
+        for ii in 0..e_p {
+            for jp in 0..h_p / 2 {
+                let mut vacc = _mm256_setzero_si256();
+                for bl in 0..tiles_l {
+                    let arow = ap.add((bl * e_p + ii) * L_P);
+                    let wrow = wp.add((bl * h_p + 2 * jp) * LP2);
+                    let a8 = _mm_loadl_epi64(arow as *const __m128i);
+                    let a16 = _mm256_cvtepi8_epi16(_mm_unpacklo_epi64(a8, a8));
+                    let packed = _mm_loadl_epi64(wrow as *const __m128i);
+                    let lo = _mm_and_si128(packed, nib);
+                    let hi = _mm_and_si128(_mm_srli_epi16(packed, 4), nib);
+                    let w16 = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(lo, hi));
+                    vacc = _mm256_add_epi32(vacc, _mm256_madd_epi16(a16, w16));
+                }
+                let jj = 2 * jp;
+                acc[ii * h_p + jj] += hsum4(_mm256_castsi256_si128(vacc));
+                acc[ii * h_p + jj + 1] += hsum4(_mm256_extracti128_si256(vacc, 1));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON kernel (aarch64): widening multiply (`vmull_s8`) + widening
+// horizontal add — exact for the whole i8 range, like the AVX2 path.
+// Int4 stays scalar on NEON for now (still bit-identical by the same
+// shared-accumulator argument).
+
+#[cfg(target_arch = "aarch64")]
+mod simd_neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_i8_block(
+        a: &[i8],
+        w: &[u8],
+        acc: &mut [i32],
+        tiles_l: usize,
+        e_p: usize,
+        h_p: usize,
+    ) {
+        const L_P: usize = 8;
+        let ap = a.as_ptr();
+        let wp = w.as_ptr() as *const i8;
+        for ii in 0..e_p {
+            for jj in 0..h_p {
+                let mut s = 0i32;
+                for bl in 0..tiles_l {
+                    let av = vld1_s8(ap.add((bl * e_p + ii) * L_P));
+                    let wv = vld1_s8(wp.add((bl * h_p + jj) * L_P));
+                    s += vaddlvq_s16(vmull_s8(av, wv));
+                }
+                acc[ii * h_p + jj] += s;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-backend op counters, surfaced through `EngineMetrics`.
+
+/// Snapshot of the live backend + its op counts (coordinator metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ComputeBackendMetrics {
+    /// `ComputeBackend::name()` of the live backend; empty when no
+    /// compute-backend-aware model is attached (e.g. the PJRT runtime).
+    pub backend: &'static str,
+    /// Packed GEMM forwards dispatched (one per linear-layer call).
+    pub gemm_calls: u64,
+    /// Output tiles those forwards covered (the balancer's work items).
+    pub gemm_tiles: u64,
+    /// Attention rows computed (decode tokens + prefill chunk rows).
+    pub attention_rows: u64,
+    /// RMS-norm rows.
+    pub norm_rows: u64,
+    /// SwiGLU rows.
+    pub activation_rows: u64,
+    /// Heads rotated by RoPE.
+    pub rope_heads: u64,
+}
+
+/// Lock-free counters the model increments at its backend call sites.
+#[derive(Debug, Default)]
+pub struct OpCounters {
+    pub gemm_calls: AtomicU64,
+    pub gemm_tiles: AtomicU64,
+    pub attention_rows: AtomicU64,
+    pub norm_rows: AtomicU64,
+    pub activation_rows: AtomicU64,
+    pub rope_heads: AtomicU64,
+}
+
+impl OpCounters {
+    pub fn snapshot(&self, backend: &'static str) -> ComputeBackendMetrics {
+        ComputeBackendMetrics {
+            backend,
+            gemm_calls: self.gemm_calls.load(Ordering::Relaxed),
+            gemm_tiles: self.gemm_tiles.load(Ordering::Relaxed),
+            attention_rows: self.attention_rows.load(Ordering::Relaxed),
+            norm_rows: self.norm_rows.load(Ordering::Relaxed),
+            activation_rows: self.activation_rows.load(Ordering::Relaxed),
+            rope_heads: self.rope_heads.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_codes(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(256) as i32 - 128) as i8).collect()
+    }
+
+    /// Raw-block parity: the SIMD integer kernels must reproduce the
+    /// scalar accumulators exactly, including the weight code -128 (the
+    /// value the pmaddubsw sign trick would corrupt).
+    #[test]
+    fn simd_gemm_i8_block_matches_scalar_exactly() {
+        let Some(simd) = SimdBackend::try_new() else {
+            return; // host without vector int8 — nothing to compare
+        };
+        let mut rng = Rng::new(11);
+        for &(tiles_l, e_p, h_p) in &[(1usize, 1usize, 2usize), (3, 4, 8), (7, 8, 8), (2, 5, 6)] {
+            let l_p = 8usize;
+            let a = rand_codes(&mut rng, tiles_l * e_p * l_p);
+            let mut w: Vec<u8> =
+                (0..tiles_l * h_p * l_p).map(|_| rng.below(256) as u8).collect();
+            // Force some -128 weight codes into every row pair.
+            for i in (0..w.len()).step_by(5) {
+                w[i] = 0x80;
+            }
+            let mut want = vec![7i32; e_p * h_p]; // nonzero: += semantics
+            let mut got = want.clone();
+            gemm_i8_block_scalar(&a, &w, &mut want, tiles_l, e_p, h_p, l_p);
+            simd.gemm_i8_block(&a, &w, &mut got, tiles_l, e_p, h_p, l_p);
+            assert_eq!(want, got, "shape ({tiles_l},{e_p},{h_p})");
+        }
+    }
+
+    #[test]
+    fn simd_gemm_i4_block_matches_scalar_exactly() {
+        let Some(simd) = SimdBackend::try_new() else {
+            return;
+        };
+        let mut rng = Rng::new(12);
+        for &(tiles_l, e_p, h_p) in &[(1usize, 1usize, 2usize), (4, 3, 8), (6, 8, 4)] {
+            let l_p = 8usize;
+            let a = rand_codes(&mut rng, tiles_l * e_p * l_p);
+            let w: Vec<u8> =
+                (0..tiles_l * h_p * l_p / 2).map(|_| rng.below(256) as u8).collect();
+            let mut want = vec![-3i32; e_p * h_p];
+            let mut got = want.clone();
+            gemm_i4_block_scalar(&a, &w, &mut want, tiles_l, e_p, h_p, l_p);
+            simd.gemm_i4_block(&a, &w, &mut got, tiles_l, e_p, h_p, l_p);
+            assert_eq!(want, got, "shape ({tiles_l},{e_p},{h_p})");
+        }
+    }
+
+    /// Shapes outside the vector kernels' fast path (l_p ≠ 8, odd h_p)
+    /// must still be exact — they take the in-backend scalar fallback.
+    #[test]
+    fn simd_fallback_shapes_match_scalar_exactly() {
+        let Some(simd) = SimdBackend::try_new() else {
+            return;
+        };
+        let mut rng = Rng::new(13);
+        for &(tiles_l, e_p, h_p, l_p) in &[(2usize, 3usize, 5usize, 8usize), (3, 4, 8, 4), (2, 2, 7, 16)] {
+            let a = rand_codes(&mut rng, tiles_l * e_p * l_p);
+            let w: Vec<u8> =
+                (0..tiles_l * h_p * l_p).map(|_| rng.below(256) as u8).collect();
+            let mut want = vec![0i32; e_p * h_p];
+            let mut got = vec![0i32; e_p * h_p];
+            gemm_i8_block_scalar(&a, &w, &mut want, tiles_l, e_p, h_p, l_p);
+            simd.gemm_i8_block(&a, &w, &mut got, tiles_l, e_p, h_p, l_p);
+            assert_eq!(want, got, "shape ({tiles_l},{e_p},{h_p},{l_p})");
+        }
+    }
+
+    #[test]
+    fn forced_scalar_choice_always_selects_scalar() {
+        // The override every CI leg and parity test depends on: Scalar
+        // must win regardless of what the host supports. (An MNN_BACKEND
+        // env var outranks the choice by design — skip under one.)
+        if std::env::var("MNN_BACKEND").is_ok() {
+            return;
+        }
+        assert_eq!(select(BackendChoice::Scalar).name(), "scalar");
+    }
+
+    #[test]
+    fn forced_simd_degrades_gracefully_without_vector_isa() {
+        if std::env::var("MNN_BACKEND").is_ok() {
+            return;
+        }
+        let b = select(BackendChoice::Simd);
+        match SimdBackend::try_new() {
+            Some(s) => assert_eq!(b.name(), s.name()),
+            None => assert_eq!(b.name(), "scalar"),
+        }
+    }
+
+    #[test]
+    fn env_override_outranks_the_engine_choice() {
+        // Mutating the process env would race the parallel test harness;
+        // instead pin the resolution rule itself: when MNN_BACKEND is set
+        // (the CI legs), every choice resolves to the env's backend.
+        match env_choice() {
+            Some(BackendChoice::Scalar) => {
+                for c in [BackendChoice::Auto, BackendChoice::Simd, BackendChoice::Scalar] {
+                    assert_eq!(select(c).name(), "scalar");
+                }
+            }
+            Some(BackendChoice::Simd) | Some(BackendChoice::Auto) => {
+                let want = match SimdBackend::try_new() {
+                    Some(s) => s.name(),
+                    None => "scalar",
+                };
+                assert_eq!(select(BackendChoice::Scalar).name(), want);
+            }
+            None => {
+                // No env var: choices resolve independently.
+                assert_eq!(select(BackendChoice::Scalar).name(), "scalar");
+            }
+        }
+    }
+
+    #[test]
+    fn op_counters_snapshot_carries_backend_name() {
+        let c = OpCounters::default();
+        c.gemm_calls.fetch_add(3, Ordering::Relaxed);
+        c.rope_heads.fetch_add(8, Ordering::Relaxed);
+        let m = c.snapshot("scalar");
+        assert_eq!(m.backend, "scalar");
+        assert_eq!(m.gemm_calls, 3);
+        assert_eq!(m.rope_heads, 8);
+        assert_eq!(m.attention_rows, 0);
+    }
+}

@@ -18,6 +18,7 @@
 //! decode (`model::native::decode_batch`) rides on this invariant to run
 //! all sessions through one weight pass with bit-identical results.
 
+use crate::cpu::backend::{ComputeBackend, ScalarBackend};
 use crate::quant::asym::WeightBits;
 use crate::reorder::pack::{pack_activations, pack_weights, PackedActivations, PackedWeights};
 use crate::reorder::solver::TileConfig;
@@ -56,16 +57,42 @@ impl QLinear {
     }
 
     /// y[e, h] = x[e, l] · Wᵀ (+ bias). Quantizes + packs the activations,
-    /// runs all h-tiles.
+    /// runs all h-tiles on the scalar reference backend.
     pub fn forward(&self, x: &[f32], e: usize, out: &mut [f32]) {
+        self.forward_with(&ScalarBackend, x, e, out);
+    }
+
+    /// [`forward`](Self::forward) on an explicit compute backend.
+    pub fn forward_with(&self, be: &dyn ComputeBackend, x: &[f32], e: usize, out: &mut [f32]) {
         let pa = pack_activations(x, e, self.packed.l, self.activation_tile(e));
-        self.forward_packed(&pa, out, 0, self.packed.h_pad / self.packed.tile.h_p);
+        self.forward_packed_with(be, &pa, out, 0, self.packed.h_pad / self.packed.tile.h_p);
     }
 
     /// Run a contiguous range of h tiles [tile_lo, tile_hi) — the unit the
-    /// multicore balancer distributes (paper §5.2 parallelizes over h/h_p).
+    /// multicore balancer distributes (paper §5.2 parallelizes over h/h_p)
+    /// — on the scalar reference backend.
     pub fn forward_packed(
         &self,
+        pa: &PackedActivations,
+        out: &mut [f32],
+        tile_lo: usize,
+        tile_hi: usize,
+    ) {
+        self.forward_packed_with(&ScalarBackend, pa, out, tile_lo, tile_hi);
+    }
+
+    /// [`forward_packed`](Self::forward_packed) on an explicit compute
+    /// backend. For each output tile (bi, bj) the activation block across
+    /// the whole reduce dimension is contiguous (`[tiles_l, e_p, l_p]`),
+    /// and so is the weight block (`[tiles_l, h_p, l_p]` rows or nibble
+    /// pairs) — the backend's block op owns the full bl walk so a vector
+    /// kernel can keep its accumulators in registers and reduce once.
+    /// Integer accumulation is exact, so every backend produces the same
+    /// i32 accumulators; the affine correction stays in scalar expression
+    /// order, so outputs are bit-identical across backends.
+    pub fn forward_packed_with(
+        &self,
+        be: &dyn ComputeBackend,
         pa: &PackedActivations,
         out: &mut [f32],
         tile_lo: usize,
@@ -80,82 +107,27 @@ impl QLinear {
         let (e_p, h_p, l_p) = (t.e_p, t.h_p, t.l_p);
         let tiles_l = pa.l_pad / l_p;
         let tiles_e = pa.e_pad / e_p;
-        let l_true = w.l as f32;
         let mut acc = vec![0i32; e_p * h_p];
         for bj in tile_lo..tile_hi {
             for bi in 0..tiles_e {
                 acc.fill(0);
+                let a_base = bi * tiles_l * e_p * l_p;
+                let a_block = &pa.data[a_base..a_base + tiles_l * e_p * l_p];
                 match w.bits {
                     WeightBits::Int8 => {
-                        for bl in 0..tiles_l {
-                            let a_base = ((bi * tiles_l + bl) * e_p) * l_p;
-                            let w_base = ((bj * tiles_l + bl) * h_p) * l_p;
-                            let a_panel = &pa.data[a_base..a_base + e_p * l_p];
-                            let w_panel = &w.data[w_base..w_base + h_p * l_p];
-                            for ii in 0..e_p {
-                                let arow = &a_panel[ii * l_p..(ii + 1) * l_p];
-                                let accrow = &mut acc[ii * h_p..(ii + 1) * h_p];
-                                for jj in 0..h_p {
-                                    let wrow = &w_panel[jj * l_p..(jj + 1) * l_p];
-                                    let mut s = 0i32;
-                                    for ll in 0..l_p {
-                                        s += arow[ll] as i32 * (wrow[ll] as i8) as i32;
-                                    }
-                                    accrow[jj] += s;
-                                }
-                            }
-                        }
+                        let w_base = bj * tiles_l * h_p * l_p;
+                        let w_block = &w.data[w_base..w_base + tiles_l * h_p * l_p];
+                        be.gemm_i8_block(a_block, w_block, &mut acc, tiles_l, e_p, h_p, l_p);
                     }
                     WeightBits::Int4 => {
                         let lp2 = l_p / 2;
-                        for bl in 0..tiles_l {
-                            let a_base = ((bi * tiles_l + bl) * e_p) * l_p;
-                            let w_base = ((bj * tiles_l + bl) * h_p) * lp2;
-                            let a_panel = &pa.data[a_base..a_base + e_p * l_p];
-                            let w_panel = &w.data[w_base..w_base + h_p * lp2];
-                            for ii in 0..e_p {
-                                let arow = &a_panel[ii * l_p..(ii + 1) * l_p];
-                                let accrow = &mut acc[ii * h_p..(ii + 1) * h_p];
-                                for jj in 0..h_p {
-                                    let wrow = &w_panel[jj * lp2..(jj + 1) * lp2];
-                                    let mut s = 0i32;
-                                    for b in 0..lp2 {
-                                        let byte = wrow[b];
-                                        s += arow[2 * b] as i32 * (byte & 0xF) as i32;
-                                        s += arow[2 * b + 1] as i32 * (byte >> 4) as i32;
-                                    }
-                                    accrow[jj] += s;
-                                }
-                            }
-                        }
+                        let w_base = bj * tiles_l * h_p * lp2;
+                        let w_block = &w.data[w_base..w_base + tiles_l * h_p * lp2];
+                        be.gemm_i4_block(a_block, w_block, &mut acc, tiles_l, e_p, h_p, l_p);
                     }
                 }
                 // Affine corrections + write-back (true rows/cols only).
-                for ii in 0..e_p {
-                    let r = bi * e_p + ii;
-                    if r >= pa.e {
-                        break;
-                    }
-                    let sx = pa.params[r].scale;
-                    let bx = pa.params[r].bias;
-                    let xsum = pa.row_sums[r] as f32;
-                    for jj in 0..h_p {
-                        let c = bj * h_p + jj;
-                        if c >= w.h {
-                            break;
-                        }
-                        let sw = w.params[c].scale;
-                        let bw = w.params[c].bias;
-                        let wsum = w.row_sums[c] as f32;
-                        let a = acc[ii * h_p + jj] as f32;
-                        let mut v =
-                            sx * sw * a + sx * bw * xsum + bx * sw * wsum + l_true * bx * bw;
-                        if let Some(bias) = &self.bias {
-                            v += bias[c];
-                        }
-                        out[r * w.h + c] = v;
-                    }
-                }
+                be.affine_correct(&acc, pa, w, self.bias.as_deref(), bi, bj, out);
             }
         }
     }

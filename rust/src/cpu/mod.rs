@@ -6,7 +6,9 @@
 
 pub mod activation;
 pub mod attention;
+pub mod backend;
 pub mod gemm;
 pub mod gemm_q;
 
+pub use backend::{BackendChoice, ComputeBackend, ScalarBackend, SimdBackend};
 pub use gemm_q::QLinear;

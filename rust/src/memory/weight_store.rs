@@ -38,6 +38,7 @@ use crate::memory::flash::FlashSim;
 use crate::model::weights::{stream_entries, Tensor};
 use crate::parallel::pool::BackgroundWorker;
 use crate::quant::asym::{AsymParams, WeightBits};
+use crate::reorder::gpu_layout::GpuWeightImage;
 use crate::reorder::pack::PackedWeights;
 use crate::reorder::solver::TileConfig;
 
@@ -140,6 +141,15 @@ pub struct LayerWeights {
 const BITS_INT8: u8 = 0;
 const BITS_INT4: u8 = 1;
 
+/// Blob layout keys: every serialized weight record leads with the layout
+/// it was packed for, so a blob is self-describing about which compute
+/// backend can consume it — CPU-tiled records feed the `cpu::backend`
+/// GEMM kernels, GPU-image records feed the (modeled) OpenCL image path.
+/// A reader that dequantizes for the wrong backend fails loudly instead
+/// of misinterpreting tile order.
+const LAYOUT_CPU_TILE: u8 = 0;
+const LAYOUT_GPU_IMAGE: u8 = 1;
+
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
@@ -157,6 +167,7 @@ fn put_f32_slice(out: &mut Vec<u8>, xs: &[f32]) {
 
 fn put_qlinear(out: &mut Vec<u8>, q: &QLinear) {
     let p = &q.packed;
+    out.push(LAYOUT_CPU_TILE);
     put_u32(out, p.h as u32);
     put_u32(out, p.l as u32);
     put_u32(out, p.h_pad as u32);
@@ -235,6 +246,13 @@ impl<'a> Cursor<'a> {
 }
 
 fn get_qlinear(c: &mut Cursor) -> std::io::Result<QLinear> {
+    match c.u8()? {
+        LAYOUT_CPU_TILE => {}
+        LAYOUT_GPU_IMAGE => {
+            return Err(corrupt("GPU-image record where a CPU-tiled record was expected"))
+        }
+        other => return Err(corrupt(&format!("unknown layout key {other}"))),
+    }
     let h = c.u32()? as usize;
     let l = c.u32()? as usize;
     let h_pad = c.u32()? as usize;
@@ -282,6 +300,52 @@ fn get_qlinear(c: &mut Cursor) -> std::io::Result<QLinear> {
         },
         bias,
     })
+}
+
+/// Serialize a GPU-layout weight image ([l/32, h, 32] packed nibbles —
+/// see `reorder::gpu_layout`) to a relocatable, layout-keyed blob. Same
+/// container discipline as the CPU records, so GPU tensors can ride the
+/// same flash device and residency arena.
+pub fn gpu_image_to_blob(img: &GpuWeightImage) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 12 + 8 + img.data.len());
+    out.push(LAYOUT_GPU_IMAGE);
+    put_u32(&mut out, img.h as u32);
+    put_u32(&mut out, img.l as u32);
+    put_u32(&mut out, img.l_pad as u32);
+    put_u64(&mut out, img.data.len() as u64);
+    out.extend_from_slice(&img.data);
+    out
+}
+
+/// Inverse of [`gpu_image_to_blob`]; bit-exact, and rejects CPU-tiled
+/// records (the layout key is the backend contract).
+pub fn gpu_image_from_blob(buf: &[u8]) -> std::io::Result<GpuWeightImage> {
+    let mut c = Cursor { buf, off: 0 };
+    match c.u8()? {
+        LAYOUT_GPU_IMAGE => {}
+        LAYOUT_CPU_TILE => {
+            return Err(corrupt("CPU-tiled record where a GPU-image record was expected"))
+        }
+        other => return Err(corrupt(&format!("unknown layout key {other}"))),
+    }
+    let h = c.u32()? as usize;
+    let l = c.u32()? as usize;
+    let l_pad = c.u32()? as usize;
+    let dlen = c.len_prefix()?;
+    let data = c.take(dlen)?.to_vec();
+    if c.off != buf.len() {
+        return Err(corrupt("trailing bytes"));
+    }
+    let expect = l_pad
+        .checked_div(crate::reorder::gpu_layout::GPU_LP)
+        .unwrap_or(0)
+        .saturating_mul(h)
+        .saturating_mul(crate::reorder::gpu_layout::GPU_LP)
+        / 2;
+    if l_pad % crate::reorder::gpu_layout::GPU_LP != 0 || data.len() != expect {
+        return Err(corrupt("GPU image dimensions inconsistent with payload"));
+    }
+    Ok(GpuWeightImage { h, l, l_pad, data })
 }
 
 impl LayerWeights {
@@ -508,6 +572,12 @@ fn insert_resident(
 pub struct WeightStore {
     flash: Arc<FlashSim>,
     slots: Arc<Vec<Slot>>,
+    /// GPU-layout tensors (name → blob slot), stored on the same flash
+    /// device with the GPU layout key. Served on demand, uncached: a real
+    /// GPU backend uploads each image once at kernel-graph build, so the
+    /// DRAM arena (sized for the per-tick CPU layer walk) never holds
+    /// them.
+    gpu: Arc<Vec<(String, Slot)>>,
     budget: usize,
     shared: Arc<Shared>,
 }
@@ -756,6 +826,31 @@ impl WeightStore {
     pub fn num_layers(&self) -> usize {
         self.slots.len()
     }
+
+    /// Fetch a GPU-layout tensor by name from flash (bit-exact; modeled
+    /// read time lands in `flash_read_s` like any other blob fetch).
+    pub fn gpu_image(&self, name: &str) -> std::io::Result<GpuWeightImage> {
+        let slot = self
+            .gpu
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    ErrorKind::NotFound,
+                    format!("no GPU-layout tensor named {name:?}"),
+                )
+            })?;
+        let mut buf = vec![0u8; slot.len];
+        let t = self.flash.read_at(slot.off, &mut buf)?;
+        self.shared.state.lock().unwrap().flash_read_s += t;
+        gpu_image_from_blob(&buf)
+    }
+
+    /// Names of the GPU-layout tensors this store can serve.
+    pub fn gpu_image_names(&self) -> Vec<String> {
+        self.gpu.iter().map(|(n, _)| n.clone()).collect()
+    }
 }
 
 /// Builds a [`WeightStore`] one layer at a time, spilling the oldest seeded
@@ -764,6 +859,7 @@ pub struct WeightStoreBuilder {
     flash: Arc<FlashSim>,
     budget: usize,
     slots: Vec<Slot>,
+    gpu: Vec<(String, Slot)>,
     seed: VecDeque<(usize, Arc<LayerWeights>)>,
     seed_bytes: usize,
 }
@@ -774,6 +870,7 @@ impl WeightStoreBuilder {
             flash,
             budget: budget_bytes,
             slots: Vec::new(),
+            gpu: Vec::new(),
             seed: VecDeque::new(),
             seed_bytes: 0,
         }
@@ -795,6 +892,20 @@ impl WeightStoreBuilder {
         Ok(li)
     }
 
+    /// Serialize a GPU-layout tensor to flash under `name` (layout-keyed
+    /// blob; see [`gpu_image_to_blob`]). GPU tensors never occupy the
+    /// DRAM seed budget — they are served straight from flash on demand.
+    pub fn push_gpu_image(
+        &mut self,
+        name: &str,
+        img: &GpuWeightImage,
+    ) -> std::io::Result<()> {
+        let blob = gpu_image_to_blob(img);
+        let off = self.flash.append(&blob)?;
+        self.gpu.push((name.to_string(), Slot { off, len: blob.len() }));
+        Ok(())
+    }
+
     pub fn finish(self) -> WeightStore {
         let mut state = State::default();
         for (i, lw) in self.seed {
@@ -808,6 +919,7 @@ impl WeightStoreBuilder {
         WeightStore {
             flash: self.flash,
             slots: Arc::new(self.slots),
+            gpu: Arc::new(self.gpu),
             budget: self.budget,
             shared: Arc::new(Shared { state: Mutex::new(state), cv: Condvar::new() }),
         }
@@ -912,6 +1024,63 @@ mod tests {
         let mut trailing = blob.clone();
         trailing.push(0);
         assert!(LayerWeights::from_blob(&trailing).is_err());
+    }
+
+    fn gpu_image(seed: u64, h: usize, l: usize) -> crate::reorder::gpu_layout::GpuWeightImage {
+        let mut rng = Rng::new(seed);
+        let w4: Vec<u8> = (0..h * l).map(|_| rng.below(16) as u8).collect();
+        crate::reorder::gpu_layout::pack_gpu_image(&w4, h, l)
+    }
+
+    #[test]
+    fn gpu_image_blob_roundtrip_is_bit_exact() {
+        for (h, l) in [(8usize, 32usize), (17, 40), (4, 96)] {
+            let img = gpu_image(h as u64 * 31 + l as u64, h, l);
+            let blob = gpu_image_to_blob(&img);
+            let back = gpu_image_from_blob(&blob).unwrap();
+            assert_eq!(back.h, img.h);
+            assert_eq!(back.l, img.l);
+            assert_eq!(back.l_pad, img.l_pad);
+            assert_eq!(back.data, img.data, "{h}x{l}");
+        }
+    }
+
+    #[test]
+    fn layout_keys_keep_backends_from_misreading_blobs() {
+        // A GPU-image record fed to the CPU-tile reader (and vice versa)
+        // is a loud InvalidData error, never a silently misinterpreted
+        // tile order.
+        let gpu_blob = gpu_image_to_blob(&gpu_image(5, 8, 32));
+        assert!(LayerWeights::from_blob(&gpu_blob).is_err());
+        let cpu_blob = layer(6).to_blob();
+        assert!(gpu_image_from_blob(&cpu_blob).is_err());
+        // Unknown future layout keys are rejected too.
+        let mut bad = gpu_blob.clone();
+        bad[0] = 7;
+        assert!(gpu_image_from_blob(&bad).is_err());
+    }
+
+    #[test]
+    fn arena_serves_gpu_images_alongside_cpu_layers() {
+        let mut b = WeightStoreBuilder::new(flash(), usize::MAX);
+        b.push_layer(layer(200)).unwrap();
+        let img = gpu_image(9, 16, 64);
+        b.push_gpu_image("L0.gate.gpu", &img).unwrap();
+        b.push_layer(layer(201)).unwrap();
+        let store = b.finish();
+        // CPU layers are untouched by the GPU side table.
+        assert_eq!(store.num_layers(), 2);
+        store.layer(1).unwrap();
+        // The GPU tensor comes back bit-exact, with its layout properties
+        // intact (what the modeled OpenCL path needs).
+        let got = store.gpu_image("L0.gate.gpu").unwrap();
+        assert_eq!(got.data, img.data);
+        assert!(got.loads_are_128bit_aligned());
+        assert!(got.work_items_coalesce());
+        assert_eq!(store.gpu_image_names(), vec!["L0.gate.gpu".to_string()]);
+        assert!(store.gpu_image("nope").is_err());
+        // GPU fetches pay modeled flash time like any other blob read.
+        assert!(store.metrics().flash_read_s > 0.0);
     }
 
     fn store_with(layers: u64, budget: usize) -> WeightStore {

@@ -30,8 +30,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::backend::RowWork;
-use crate::cpu::activation::{add_inplace, rmsnorm, swiglu};
-use crate::cpu::attention::segmented_prefill_attention;
+use crate::cpu::activation::add_inplace;
+use crate::cpu::attention::segmented_prefill_attention_with;
+use crate::cpu::backend::{ComputeBackend, ComputeBackendMetrics, OpCounters};
 use crate::cpu::gemm_q::QLinear;
 use crate::device::SocProfile;
 use crate::kv::{
@@ -103,6 +104,15 @@ pub struct EngineOptions {
     /// disables the cache entirely — no lookup, no publish, no retained
     /// pages — preserving the pre-cache engine bit for bit.
     pub prefix_cache_bytes: usize,
+    /// Which compute backend executes the per-tile hot ops (int8 GEMM
+    /// inner loops, norms, softmax, RoPE). `Auto` (the default) picks the
+    /// best kernels the host can execute — SIMD when the runtime feature
+    /// check passes, scalar otherwise. The `MNN_BACKEND` environment
+    /// variable (`scalar` / `simd` / `auto`) outranks this field so CI can
+    /// force both legs without touching call sites. Every backend is
+    /// bit-identical: integer accumulation is exact and the float
+    /// epilogues keep the scalar reduction order.
+    pub backend: crate::cpu::backend::BackendChoice,
 }
 
 impl Default for EngineOptions {
@@ -118,6 +128,7 @@ impl Default for EngineOptions {
             prefill_chunk_tokens: usize::MAX,
             max_rows_per_tick: usize::MAX,
             prefix_cache_bytes: 0,
+            backend: crate::cpu::backend::BackendChoice::Auto,
         }
     }
 }
@@ -331,6 +342,14 @@ pub struct NativeModel {
     /// is bit-identical to recomputation.
     rope_sin: Vec<f32>,
     rope_cos: Vec<f32>,
+    /// The compute backend every per-tile hot op routes through, selected
+    /// once at load (`EngineOptions::backend`, overridable via
+    /// `MNN_BACKEND`). All backends are bit-identical; only throughput
+    /// differs.
+    backend: Arc<dyn ComputeBackend>,
+    /// Per-op invocation counters for the live backend (metrics only —
+    /// never consulted by compute).
+    ops: OpCounters,
 }
 
 fn invalid(msg: &str) -> std::io::Error {
@@ -414,6 +433,7 @@ impl NativeModel {
         let manifest = Manifest::load(dir)?;
         let cfg = manifest.model.clone();
         let tile = options.tile;
+        let backend_choice = options.backend;
         let soc = SocProfile::snapdragon_8gen3();
         // Raw tensors are staged on their own device, dropped after
         // packing; only the packed blobs live on the long-lived weight
@@ -490,6 +510,8 @@ impl NativeModel {
             inv_freq,
             rope_sin,
             rope_cos,
+            backend: crate::cpu::backend::select(backend_choice),
+            ops: OpCounters::default(),
         })
     }
 
@@ -762,23 +784,20 @@ impl NativeModel {
     /// cap) fall back to direct computation, bit-identically.
     fn rope(&self, x: &mut [f32], pos: usize) {
         let half = x.len() / 2;
+        self.ops.rope_heads.fetch_add(1, Ordering::Relaxed);
         if pos < self.config.max_len {
             let sin = &self.rope_sin[pos * half..(pos + 1) * half];
             let cos = &self.rope_cos[pos * half..(pos + 1) * half];
-            for i in 0..half {
-                let a = x[i];
-                let b = x[i + half];
-                x[i] = a * cos[i] - b * sin[i];
-                x[i + half] = b * cos[i] + a * sin[i];
-            }
+            self.backend.rope_apply(x, cos, sin);
         } else {
+            let mut sin = vec![0f32; half];
+            let mut cos = vec![0f32; half];
             for i in 0..half {
                 let (s, c) = (pos as f32 * self.inv_freq[i]).sin_cos();
-                let a = x[i];
-                let b = x[i + half];
-                x[i] = a * c - b * s;
-                x[i + half] = b * c + a * s;
+                sin[i] = s;
+                cos[i] = c;
             }
+            self.backend.rope_apply(x, &cos, &sin);
         }
     }
 
@@ -789,9 +808,12 @@ impl NativeModel {
         let pa =
             crate::reorder::pack::pack_activations(x, e, lin.in_features(), lin.activation_tile(e));
         let tiles = lin.h_tiles();
+        self.ops.gemm_calls.fetch_add(1, Ordering::Relaxed);
+        self.ops.gemm_tiles.fetch_add(tiles as u64, Ordering::Relaxed);
         let workers = &self.options.workers;
+        let be = self.backend.as_ref();
         if workers.threads() <= 1 || tiles < 2 * workers.threads() {
-            lin.forward_packed(&pa, out, 0, tiles);
+            lin.forward_packed_with(be, &pa, out, 0, tiles);
             return;
         }
         // SAFETY: each h-tile range writes a disjoint set of output columns
@@ -803,7 +825,7 @@ impl NativeModel {
         let ptr = &ptr; // capture the Sync wrapper, not the raw field
         run_balanced(workers, tiles, move |_, lo, hi| {
             let out = unsafe { std::slice::from_raw_parts_mut(ptr.0, ptr.1) };
-            lin.forward_packed(&pa, out, lo, hi);
+            lin.forward_packed_with(be, &pa, out, lo, hi);
         });
     }
 
@@ -922,7 +944,7 @@ impl NativeModel {
     /// contract: their chunks attend over the **cached fp32 stash** for
     /// the attached `[0, fork)` region, then their own stash, then the
     /// fresh chunk — the same segment walk in the same global order
-    /// ([`segmented_prefill_attention`]), so a warm prefill is
+    /// ([`segmented_prefill_attention_with`]), so a warm prefill is
     /// bit-identical to a cold one. Publishers stash every chunk
     /// (including the last) and hand pages + stash to the prefix cache
     /// when their final chunk lands.
@@ -1015,7 +1037,8 @@ impl NativeModel {
             self.weights.prefetch_ahead(&self.prefetcher, li + 1);
             // Walk-level failure: without the layer no row can proceed.
             let layer = self.weights.layer(li)?;
-            rmsnorm(&x, &layer.ln1, &mut norm, total, cfg.rms_eps);
+            self.ops.norm_rows.fetch_add(total as u64, Ordering::Relaxed);
+            self.backend.rmsnorm(&x, &layer.ln1, &mut norm, total, cfg.rms_eps);
             // total-row packed GEMMs: one pass shared by every row.
             self.linear(&layer.wq, &norm, total, &mut q);
             self.linear(&layer.wk, &norm, total, &mut k);
@@ -1083,7 +1106,11 @@ impl NativeModel {
                                     prefix.push((&stash.k[li], &stash.v[li]));
                                 }
                             }
-                            segmented_prefill_attention(
+                            self.ops
+                                .attention_rows
+                                .fetch_add(s_r as u64, Ordering::Relaxed);
+                            segmented_prefill_attention_with(
+                                self.backend.as_ref(),
                                 &q[o * h..(o + s_r) * h],
                                 &prefix,
                                 &k[o * kv_dim..(o + s_r) * kv_dim],
@@ -1125,6 +1152,7 @@ impl NativeModel {
                             row_err[r] = Some(e);
                             continue;
                         }
+                        self.ops.attention_rows.fetch_add(1, Ordering::Relaxed);
                         if let Err(e) = sess.kv[li].decode_attention_streaming(
                             &q[o * h..(o + 1) * h],
                             heads,
@@ -1147,10 +1175,12 @@ impl NativeModel {
                 }
             }
             add_inplace(&mut x, &attn_out);
-            rmsnorm(&x, &layer.ln2, &mut norm, total, cfg.rms_eps);
+            self.ops.norm_rows.fetch_add(total as u64, Ordering::Relaxed);
+            self.backend.rmsnorm(&x, &layer.ln2, &mut norm, total, cfg.rms_eps);
             self.linear(&layer.gate, &norm, total, &mut gate);
             self.linear(&layer.up, &norm, total, &mut up);
-            swiglu(&gate, &up, &mut act);
+            self.ops.activation_rows.fetch_add(total as u64, Ordering::Relaxed);
+            self.backend.swiglu(&gate, &up, &mut act);
             self.linear(&layer.down, &act, total, &mut mlp);
             add_inplace(&mut x, &mlp);
         }
@@ -1236,7 +1266,8 @@ impl NativeModel {
             lastx[j * h..(j + 1) * h].copy_from_slice(&x[row * h..(row + 1) * h]);
         }
         let mut fin = vec![0f32; n_out * h];
-        rmsnorm(&lastx, &self.fnorm, &mut fin, n_out, cfg.rms_eps);
+        self.ops.norm_rows.fetch_add(n_out as u64, Ordering::Relaxed);
+        self.backend.rmsnorm(&lastx, &self.fnorm, &mut fin, n_out, cfg.rms_eps);
         let mut logits = vec![0f32; n_out * cfg.vocab];
         self.linear(&self.lm_head, &fin, n_out, &mut logits);
         if n_out == 1 {
@@ -1353,6 +1384,19 @@ impl NativeModel {
     /// coordinator copies this into `EngineMetrics` after each drain.
     pub fn weight_metrics(&self) -> WeightResidencyMetrics {
         self.weights.metrics()
+    }
+
+    /// Live compute-backend snapshot: which backend is executing the hot
+    /// ops, plus per-op invocation counts since load. The coordinator
+    /// copies this into `EngineMetrics` alongside the residency snapshot.
+    pub fn compute_metrics(&self) -> ComputeBackendMetrics {
+        self.ops.snapshot(self.backend.name())
+    }
+
+    /// Name of the selected compute backend (`"scalar"`, `"simd-avx2"`,
+    /// `"simd-neon"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 }
 

@@ -95,20 +95,46 @@ pub const X86_AVX2: IsaProfile = IsaProfile {
     int8_throughput: 1.2,
 };
 
+/// x86-64 without AVX2 (SSE2 baseline): 16 xmm registers, 4-wide int8
+/// MAC sequences. Returned by [`detect_host`] when the runtime feature
+/// check fails — the SIMD compute backend then degrades to scalar.
+pub const X86_BASELINE: IsaProfile = IsaProfile {
+    name: "x86-sse2",
+    registers: 16,
+    reg_bytes: 16,
+    instruction_width: 4,
+    e_step: 4,
+    h_step: 8,
+    acc_slots: None,
+    int8_throughput: 0.6,
+};
+
 /// The rows of Table 2, in paper order.
 pub fn table2_isas() -> Vec<IsaProfile> {
     vec![ARM_SDOT, ARM_I8MM, ARM_V7_NEON, ARM_SME]
 }
 
-/// Best profile for the host this binary runs on.
+/// Best profile for the host this binary runs on. On x86-64 this is a
+/// **runtime** decision (`is_x86_feature_detected!`), not a compile-time
+/// one: a binary built on an AVX2 machine and copied to an older box
+/// must still solve tiles (and pick compute kernels) for what that box
+/// can actually execute.
 pub fn detect_host() -> IsaProfile {
     #[cfg(target_arch = "aarch64")]
     {
         ARM_I8MM
     }
-    #[cfg(not(target_arch = "aarch64"))]
+    #[cfg(target_arch = "x86_64")]
     {
-        X86_AVX2
+        if is_x86_feature_detected!("avx2") {
+            X86_AVX2
+        } else {
+            X86_BASELINE
+        }
+    }
+    #[cfg(not(any(target_arch = "aarch64", target_arch = "x86_64")))]
+    {
+        X86_BASELINE
     }
 }
 
@@ -132,5 +158,32 @@ mod tests {
     #[test]
     fn table2_has_four_rows() {
         assert_eq!(table2_isas().len(), 4);
+    }
+
+    #[test]
+    fn x86_detection_is_runtime_accurate() {
+        // On x86-64 the profile must mirror the actual CPUID answer, not
+        // the compile-time target; elsewhere this test is vacuous.
+        #[cfg(target_arch = "x86_64")]
+        {
+            let isa = detect_host();
+            if is_x86_feature_detected!("avx2") {
+                assert_eq!(isa.name, X86_AVX2.name);
+            } else {
+                assert_eq!(isa.name, X86_BASELINE.name);
+            }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_backend_ignores_detection() {
+        // The override contract (satellite of the backend seam): whatever
+        // detect_host says, an explicit Scalar choice must win. This is
+        // what lets CI force both legs deterministically.
+        use crate::cpu::backend::{select, BackendChoice};
+        if std::env::var("MNN_BACKEND").is_ok() {
+            return; // an env override outranks the choice by design
+        }
+        assert_eq!(select(BackendChoice::Scalar).name(), "scalar");
     }
 }

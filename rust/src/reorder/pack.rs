@@ -138,6 +138,11 @@ pub fn pack_weights(w: &QuantizedMatrix, tile: TileConfig) -> PackedWeights {
 impl PackedWeights {
     /// Read back row `r` in dense k order (tests / fallback paths).
     pub fn unpack_row(&self, r: usize) -> Vec<i32> {
+        assert!(
+            r < self.h,
+            "unpack_row: row {r} out of bounds for {} true rows",
+            self.h
+        );
         let tiles_l = self.l_pad / self.tile.l_p;
         let (bi, ii) = (r / self.tile.h_p, r % self.tile.h_p);
         let mut out = vec![0i32; self.l];
@@ -269,6 +274,32 @@ mod tests {
                 assert_eq!(p.data[idx], 0);
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "unpack_row")]
+    fn unpack_row_out_of_bounds_panics_with_message() {
+        // Regression: an out-of-range row used to fail deep inside the
+        // index math (or silently return padding zeros for r < h_pad);
+        // both compute backends unpack through here, so the contract
+        // must be a named assert on true rows.
+        let mut rng = crate::util::rng::Rng::new(3);
+        let w = rng.normal_vec(3 * 8);
+        let q = QuantizedMatrix::from_f32(&w, 3, 8, WeightBits::Int8);
+        let p = pack_weights(&q, TILE);
+        let _ = p.unpack_row(3); // rows are 0..3; 3 is padding
+    }
+
+    #[test]
+    fn zero_row_activation_pack_is_an_empty_no_op() {
+        // e == 0 packs to an empty panel (e_pad == 0) rather than
+        // panicking — the fused tick can momentarily have no rows.
+        let p = pack_activations(&[], 0, 8, TILE);
+        assert_eq!(p.e, 0);
+        assert_eq!(p.e_pad, 0);
+        assert!(p.data.is_empty());
+        assert!(p.params.is_empty());
+        assert!(p.row_sums.is_empty());
     }
 
     #[test]

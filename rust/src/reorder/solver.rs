@@ -148,6 +148,27 @@ mod tests {
     }
 
     #[test]
+    fn x86_avx2_solves_to_the_simd_kernel_tile() {
+        // The AVX2 compute backend's fast path is written for exactly
+        // this shape: l_p = 8 (the madd lane width) and even h_p (two
+        // weight rows per 256-bit accumulator). Feasible set under the
+        // 16-register budget is {(4,8), (8,8), (4,16)}; the Eq. 2
+        // objective picks (8,8).
+        let t = solve_tiles(&isa::X86_AVX2);
+        assert_eq!(t, TileConfig { e_p: 8, h_p: 8, l_p: 8 });
+    }
+
+    #[test]
+    fn x86_baseline_is_solvable_without_avx2() {
+        // detect_host falls back to this profile on AVX2-less hosts; the
+        // solver must still admit a tile (the scalar backend runs it).
+        let t = solve_tiles(&isa::X86_BASELINE);
+        let cost = register_cost(&isa::X86_BASELINE, t.e_p as u32, t.h_p as u32).unwrap();
+        assert!(cost <= isa::X86_BASELINE.registers);
+        assert_eq!(t.l_p, 4);
+    }
+
+    #[test]
     fn host_isa_solvable() {
         let t = solve_tiles(&isa::detect_host());
         assert!(t.e_p >= 4 && t.h_p >= 8);

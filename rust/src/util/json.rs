@@ -90,6 +90,75 @@ impl Json {
         }
         Some(cur)
     }
+
+    /// Build an object from `(key, value)` pairs (keys end up sorted —
+    /// `Obj` is a BTreeMap — which keeps rendered artifacts diffable).
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    // -- rendering (the writer half: benches emit BENCH_*.json with it) --
+
+    /// Serialize to compact JSON text this parser accepts back. Non-finite
+    /// numbers become `null` (JSON has no NaN/Inf).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -306,6 +375,22 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn render_round_trips_through_parse() {
+        let v = Json::obj(vec![
+            ("name", Json::Str("table2".into())),
+            ("ok", Json::Bool(true)),
+            ("speedup", Json::Num(2.5)),
+            ("rows", Json::Arr(vec![Json::Num(1.0), Json::Num(-3.0), Json::Null])),
+            ("weird", Json::Str("a\"b\\c\nd\u{1}".into())),
+        ]);
+        let back = Json::parse(&v.render()).expect("own output parses");
+        assert_eq!(back, v);
+        // Non-finite numbers degrade to null rather than invalid JSON.
+        let nan = Json::Arr(vec![Json::Num(f64::NAN), Json::Num(f64::INFINITY)]);
+        assert_eq!(nan.render(), "[null,null]");
     }
 
     #[test]

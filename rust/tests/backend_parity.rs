@@ -1,0 +1,195 @@
+//! Scalar ↔ SIMD backend parity: the seam's contract is that every
+//! backend produces **byte-identical** outputs — exact integer GEMM
+//! accumulation plus scalar-order float epilogues (see DESIGN.md
+//! §Compute backends). These properties fuzz that contract across
+//! random tile configs, ragged shapes, both weight widths, split
+//! h-tile ranges, and a mixed-LoRA fused engine tick.
+//!
+//! Backends are compared as *values* (`ScalarBackend` vs
+//! `SimdBackend::try_new()`), never through the `MNN_BACKEND` env
+//! override, so these tests mean the same thing on every CI leg. On a
+//! host without vector kernels (x86 sans AVX2) they skip.
+
+use mnn_llm::coordinator::backend::RowWork;
+use mnn_llm::cpu::backend::{BackendChoice, ScalarBackend, SimdBackend};
+use mnn_llm::cpu::gemm_q::QLinear;
+use mnn_llm::model::native::{EngineOptions, NativeModel};
+use mnn_llm::model::sampler::argmax;
+use mnn_llm::quant::asym::{QuantizedMatrix, WeightBits};
+use mnn_llm::reorder::pack::pack_activations;
+use mnn_llm::reorder::solver::TileConfig;
+use mnn_llm::util::prop::prop_check;
+use mnn_llm::util::rng::Rng;
+
+fn simd_or_skip() -> Option<SimdBackend> {
+    let be = SimdBackend::try_new();
+    if be.is_none() {
+        eprintln!("skipping: host has no vector kernels (x86 without AVX2)");
+    }
+    be
+}
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full forward: random ragged (e, h, l), random tile, both weight
+/// widths, optional bias — scalar and SIMD outputs must be byte-equal,
+/// and both must match the plain `forward` entry point.
+#[test]
+fn forward_is_bit_identical_across_backends() {
+    let Some(simd) = simd_or_skip() else { return };
+    prop_check(40, |rng| {
+        let e = rng.range(1, 13);
+        let h = rng.range(1, 80);
+        let l = 2 * rng.range(1, 48); // even so Int4 rows pack cleanly
+        let tile = TileConfig {
+            e_p: [1, 2, 4, 8, 10, 12][rng.below(6)],
+            h_p: [1, 2, 4, 8][rng.below(4)],
+            l_p: [2, 4, 8, 16][rng.below(4)], // even: Int4 nibble pairs
+        };
+        let bits = if rng.bool() { WeightBits::Int8 } else { WeightBits::Int4 };
+        let wf = rng.normal_vec(h * l);
+        let x = rng.normal_vec(e * l);
+        let qm = QuantizedMatrix::from_f32(&wf, h, l, bits);
+        let bias = if rng.bool() { Some(rng.normal_vec(h)) } else { None };
+        let lin = QLinear::new(&qm, tile, bias);
+        let mut plain = vec![0f32; e * h];
+        let mut scalar = vec![0f32; e * h];
+        let mut vector = vec![0f32; e * h];
+        lin.forward(&x, e, &mut plain);
+        lin.forward_with(&ScalarBackend, &x, e, &mut scalar);
+        lin.forward_with(&simd, &x, e, &mut vector);
+        if bits_of(&scalar) != bits_of(&vector) {
+            return Err(format!(
+                "scalar vs simd diverged at e={e} h={h} l={l} tile={tile:?} bits={bits:?}"
+            ));
+        }
+        if bits_of(&plain) != bits_of(&scalar) {
+            return Err("forward() must be the scalar path".into());
+        }
+        Ok(())
+    });
+}
+
+/// Split h-tile ranges (the unit the multicore balancer hands out):
+/// running [0, cut) on one backend and [cut, n) on the other must
+/// reassemble into exactly the full scalar output — tile ranges are
+/// independent, so backends can even be mixed within one matmul.
+#[test]
+fn split_tile_ranges_are_bit_identical_and_composable() {
+    let Some(simd) = simd_or_skip() else { return };
+    prop_check(40, |rng| {
+        let e = rng.range(1, 8);
+        let h = rng.range(1, 64);
+        let l = 2 * rng.range(1, 32);
+        let tile = TileConfig {
+            e_p: [1, 2, 4][rng.below(3)],
+            h_p: [2, 4, 8][rng.below(3)],
+            l_p: [2, 4, 8][rng.below(3)],
+        };
+        let bits = if rng.bool() { WeightBits::Int8 } else { WeightBits::Int4 };
+        let wf = rng.normal_vec(h * l);
+        let x = rng.normal_vec(e * l);
+        let qm = QuantizedMatrix::from_f32(&wf, h, l, bits);
+        let lin = QLinear::new(&qm, tile, None);
+        let n_tiles = lin.h_tiles();
+        let cut = rng.below(n_tiles + 1);
+        let pa = pack_activations(&x, e, l, lin.activation_tile(e));
+        let mut whole = vec![0f32; e * h];
+        lin.forward_packed_with(&ScalarBackend, &pa, &mut whole, 0, n_tiles);
+        let mut mixed = vec![0f32; e * h];
+        lin.forward_packed_with(&simd, &pa, &mut mixed, 0, cut);
+        lin.forward_packed_with(&ScalarBackend, &pa, &mut mixed, cut, n_tiles);
+        if bits_of(&whole) != bits_of(&mixed) {
+            return Err(format!(
+                "mixed-backend split at cut={cut}/{n_tiles} diverged (e={e} h={h} l={l} tile={tile:?} bits={bits:?})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Engine-level parity: two models over the same fixture, one forced
+/// scalar and one forced SIMD, each serving a fused tick that mixes
+/// decode rows, prefill rows, and LoRA-task sessions. Every row's
+/// logits must be byte-equal. Skips when `MNN_BACKEND` is set (the
+/// env override pins both models to one backend, making the
+/// comparison vacuous) — the tile-level properties above still run.
+#[test]
+fn mixed_lora_fused_tick_matches_across_backends() {
+    if simd_or_skip().is_none() {
+        return;
+    }
+    if std::env::var("MNN_BACKEND").is_ok() {
+        eprintln!("skipping: MNN_BACKEND override would pin both models to one backend");
+        return;
+    }
+    let fx = mnn_llm::model::fixtures::write_fixture(77).expect("fixture");
+    let run = |choice: BackendChoice| -> (String, Vec<Vec<u32>>) {
+        let mut m = NativeModel::load(
+            fx.dir(),
+            EngineOptions { backend: choice, ..EngineOptions::default() },
+        )
+        .expect("load");
+        // Identical adapters on both models: same seed, same keys.
+        let h = m.config.hidden;
+        let mut rng = Rng::new(9);
+        let mut layers = std::collections::HashMap::new();
+        layers.insert("L0.wq".to_string(), mnn_llm::lora::LoraAdapter::random(&mut rng, h, h, 4));
+        layers.insert("L1.wo".to_string(), mnn_llm::lora::LoraAdapter::random(&mut rng, h, h, 4));
+        m.lora.load_task("style", layers);
+        // Row 0: plain decode continuing a prefilled session.
+        let mut s0 = m.new_session();
+        let t0 = argmax(&m.prefill(&mut s0, &[5, 6, 7, 8]));
+        // Row 1: plain prefill. Row 2: LoRA-task prefill.
+        let mut s1 = m.new_session();
+        let mut s2 = m.new_session();
+        s2.lora_task = Some("style".into());
+        // Row 3: LoRA-task decode continuing a LoRA prefill.
+        let mut s3 = m.new_session();
+        s3.lora_task = Some("style".into());
+        let t3 = argmax(&m.prefill(&mut s3, &[9, 10, 11]));
+        let works = [
+            RowWork::Decode { tok: t0 },
+            RowWork::Prefill { ids: &[1, 2, 3, 4, 5], last: true },
+            RowWork::Prefill { ids: &[40, 41], last: true },
+            RowWork::Decode { tok: t3 },
+        ];
+        let mut refs = vec![&mut s0, &mut s1, &mut s2, &mut s3];
+        let rows = m.forward_tick(&mut refs, &works).expect("tick");
+        let logits = rows
+            .into_iter()
+            .map(|r| bits_of(&r.expect("row").expect("logits")))
+            .collect();
+        (m.backend_name().to_string(), logits)
+    };
+    let (name_a, a) = run(BackendChoice::Scalar);
+    let (name_b, b) = run(BackendChoice::Simd);
+    assert_eq!(name_a, "scalar");
+    assert_ne!(name_b, "scalar", "Simd choice should select a vector backend here");
+    assert_eq!(a, b, "fused mixed-LoRA tick diverged between {name_a} and {name_b}");
+}
+
+/// Single-session generation end to end: forced-scalar and forced-SIMD
+/// models must emit the same token ids (argmax over byte-equal logits).
+#[test]
+fn generation_tokens_match_across_backends() {
+    if simd_or_skip().is_none() {
+        return;
+    }
+    if std::env::var("MNN_BACKEND").is_ok() {
+        eprintln!("skipping: MNN_BACKEND override would pin both models to one backend");
+        return;
+    }
+    let fx = mnn_llm::model::fixtures::write_fixture(78).expect("fixture");
+    let gen = |choice: BackendChoice| -> Vec<usize> {
+        let m = NativeModel::load(
+            fx.dir(),
+            EngineOptions { backend: choice, ..EngineOptions::default() },
+        )
+        .expect("load");
+        m.generate_once(&[3, 1, 4, 1, 5], 12)
+    };
+    assert_eq!(gen(BackendChoice::Scalar), gen(BackendChoice::Simd));
+}

@@ -227,6 +227,7 @@ fn native_options_never_change_numbers() {
     let base = NativeModel::load(fx.dir(), EngineOptions::default())
         .unwrap()
         .generate_once(&prompt, n);
+    use mnn_llm::cpu::backend::BackendChoice;
     use mnn_llm::kv::{EvictionPolicy, KvPool};
     use mnn_llm::parallel::pool::WorkerConfig;
     use mnn_llm::reorder::solver::TileConfig;
@@ -254,6 +255,12 @@ fn native_options_never_change_numbers() {
         // path and forward walks must be untouched by them).
         EngineOptions { prefill_chunk_tokens: 2, ..EngineOptions::default() },
         EngineOptions { max_rows_per_tick: 1, ..EngineOptions::default() },
+        // Explicit compute-backend choices: bit-identity is the seam's
+        // contract, so forcing either side must reproduce `base` exactly.
+        // (When the host lacks AVX2, `Simd` degrades to scalar — still
+        // bit-identical, trivially.)
+        EngineOptions { backend: BackendChoice::Scalar, ..EngineOptions::default() },
+        EngineOptions { backend: BackendChoice::Simd, ..EngineOptions::default() },
         EngineOptions {
             tile: TileConfig { e_p: 10, h_p: 8, l_p: 8 },
             workers: WorkerConfig { rates: vec![1.0, 0.72, 0.72, 0.72] },
@@ -264,6 +271,17 @@ fn native_options_never_change_numbers() {
             eviction: EvictionPolicy::ShedSelf,
             prefill_chunk_tokens: 3,
             max_rows_per_tick: 2,
+            prefix_cache_bytes: 1 << 20,
+            backend: BackendChoice::Auto,
+        },
+        // The SIMD backend under the AVX2 kernel's own solved tile and a
+        // threaded worker pool — the hottest combination the engine
+        // actually runs.
+        EngineOptions {
+            tile: TileConfig { e_p: 8, h_p: 8, l_p: 8 },
+            workers: WorkerConfig { rates: vec![1.0, 1.0] },
+            backend: BackendChoice::Simd,
+            ..EngineOptions::default()
         },
     ];
     for (i, opt) in variants.into_iter().enumerate() {
