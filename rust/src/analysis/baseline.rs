@@ -1,0 +1,169 @@
+//! The ratchet baseline: committed per-(rule, file) counts for `Ratchet`
+//! severity rules. `--check` fails when any count grows; `--write-baseline`
+//! records the current counts (intentional ratchet updates go through code
+//! review like any other diff).
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+use super::rules::{severity_of, Finding, Severity, RULES};
+
+/// `(rule, path) -> count`, ordered for deterministic serialization.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Baseline {
+    pub counts: BTreeMap<(String, String), usize>,
+}
+
+/// One ratchet regression: a (rule, file) pair whose count grew.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub rule: String,
+    pub path: String,
+    pub was: usize,
+    pub now: usize,
+}
+
+impl Baseline {
+    /// Count the `Ratchet`-severity findings in `findings`.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for f in findings {
+            if f.severity == Severity::Ratchet {
+                *counts.entry((f.rule.to_string(), f.path.clone())).or_insert(0) += 1;
+            }
+        }
+        Baseline { counts }
+    }
+
+    /// Parse the committed baseline file. A missing file is an empty
+    /// baseline (every ratchet site then reads as a regression, which is
+    /// the safe failure mode for a gate).
+    pub fn load(path: &Path) -> io::Result<Baseline> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(Baseline::default()),
+            Err(e) => return Err(e),
+        };
+        Self::parse(&text).map_err(|msg| io::Error::new(io::ErrorKind::InvalidData, msg))
+    }
+
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut counts = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (rule, count, path) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(r), Some(c), Some(p), None) => (r, c, p),
+                _ => return Err(format!("baseline line {}: expected `<rule> <count> <path>`", ln + 1)),
+            };
+            if !RULES.contains(&rule) {
+                return Err(format!("baseline line {}: unknown rule `{rule}`", ln + 1));
+            }
+            if severity_of(rule) != Severity::Ratchet {
+                return Err(format!(
+                    "baseline line {}: `{rule}` is a deny rule and cannot be baselined",
+                    ln + 1
+                ));
+            }
+            let n: usize = count
+                .parse()
+                .map_err(|_| format!("baseline line {}: bad count `{count}`", ln + 1))?;
+            counts.insert((rule.to_string(), path.to_string()), n);
+        }
+        Ok(Baseline { counts })
+    }
+
+    pub fn serialize(&self) -> String {
+        let mut out = String::from(
+            "# pallas-lint ratchet baseline: `<rule> <count> <path>` per line.\n\
+             # Counts may only decrease. Regenerate intentionally with:\n\
+             #   cargo run --bin pallas-lint -- --write-baseline\n",
+        );
+        for ((rule, path), n) in &self.counts {
+            out.push_str(&format!("{rule} {n} {path}\n"));
+        }
+        out
+    }
+
+    /// Ratchet comparison: every (rule, file) whose current count exceeds
+    /// the baselined count (absent entries baseline at 0).
+    pub fn regressions(&self, current: &Baseline) -> Vec<Regression> {
+        let mut out = Vec::new();
+        for ((rule, path), &now) in &current.counts {
+            let was = self.counts.get(&(rule.clone(), path.clone())).copied().unwrap_or(0);
+            if now > was {
+                out.push(Regression { rule: rule.clone(), path: path.clone(), was, now });
+            }
+        }
+        out
+    }
+
+    /// Entries whose counts dropped (or whose files went clean) — candidates
+    /// for a `--write-baseline` tightening pass.
+    pub fn improvements(&self, current: &Baseline) -> Vec<(String, String, usize, usize)> {
+        let mut out = Vec::new();
+        for ((rule, path), &was) in &self.counts {
+            let now = current.counts.get(&(rule.clone(), path.clone())).copied().unwrap_or(0);
+            if now < was {
+                out.push((rule.clone(), path.clone(), was, now));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, path: &str) -> Finding {
+        Finding { rule, severity: severity_of(rule), path: path.to_string(), line: 1, msg: String::new() }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let fs = vec![
+            finding("unwrap-ratchet", "a.rs"),
+            finding("unwrap-ratchet", "a.rs"),
+            finding("narrow-cast", "b.rs"),
+            finding("hot-panic", "c.rs"), // deny: not baselined
+        ];
+        let b = Baseline::from_findings(&fs);
+        assert_eq!(b.counts.len(), 2);
+        let text = b.serialize();
+        let b2 = Baseline::parse(&text).expect("parse back");
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn ratchet_detects_growth_only() {
+        let old = Baseline::parse("unwrap-ratchet 2 a.rs\nnarrow-cast 3 b.rs\n").expect("old");
+        // a.rs grew 2 -> 3; b.rs shrank 3 -> 1; c.rs is new.
+        let cur = Baseline::parse("unwrap-ratchet 3 a.rs\nnarrow-cast 1 b.rs\nunwrap-ratchet 1 c.rs\n")
+            .expect("cur");
+        let regs = old.regressions(&cur);
+        let keys: Vec<(&str, &str, usize, usize)> =
+            regs.iter().map(|r| (r.rule.as_str(), r.path.as_str(), r.was, r.now)).collect();
+        assert_eq!(keys, [("unwrap-ratchet", "a.rs", 2, 3), ("unwrap-ratchet", "c.rs", 0, 1)]);
+        let imps = old.improvements(&cur);
+        assert_eq!(imps.len(), 1);
+        assert_eq!(imps[0].3, 1);
+    }
+
+    #[test]
+    fn deny_rules_rejected_in_baseline() {
+        assert!(Baseline::parse("hot-panic 1 a.rs\n").is_err());
+        assert!(Baseline::parse("no-such-rule 1 a.rs\n").is_err());
+        assert!(Baseline::parse("unwrap-ratchet nope a.rs\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let b = Baseline::parse("# header\n\nunwrap-ratchet 4 x.rs\n").expect("parse");
+        assert_eq!(b.counts.get(&("unwrap-ratchet".into(), "x.rs".into())), Some(&4));
+    }
+}

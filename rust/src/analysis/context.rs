@@ -1,0 +1,316 @@
+//! Structural context over the flat token stream: which tokens live inside
+//! `#[cfg(test)]`/`#[test]` code, and which lines are covered by inline
+//! `// lint: allow(<rules>): <reason>` waivers.
+//!
+//! Both are computed with a single brace-tracking pass — no parser. The
+//! tracking is deliberately conservative in the directions that matter for a
+//! gate: unknown attribute shapes never *exempt* code, and malformed waivers
+//! are themselves diagnostics (`bad-waiver`) rather than silent no-ops.
+
+use super::lexer::{Tok, TokKind};
+
+/// A parsed `// lint: allow(rule-a, rule-b): reason` waiver and the line
+/// range it suppresses.
+///
+/// * A **trailing** waiver (comment after code on the same line) covers
+///   exactly that line.
+/// * An **own-line** waiver covers from its line through the end of the next
+///   braced block that opens after it (a whole `fn`, `impl`, loop, ...), or
+///   through the next `;` at the same depth if one comes first (a single
+///   statement). This mirrors how `#[allow]` attaches to the next item.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rules: Vec<String>,
+    pub reason: String,
+    pub start_line: u32,
+    pub end_line: u32,
+}
+
+impl Waiver {
+    pub fn covers(&self, rule: &str, line: u32) -> bool {
+        line >= self.start_line
+            && line <= self.end_line
+            && self.rules.iter().any(|r| r == rule)
+    }
+}
+
+/// Context for one file: per-token test flags plus the waiver table.
+pub struct FileContext {
+    /// Parallel to the token stream: `true` when the token is inside a
+    /// `#[cfg(test)]` / `#[test]` region.
+    pub in_test: Vec<bool>,
+    pub waivers: Vec<Waiver>,
+    /// Malformed waivers: `(line, message)`. Reported as `bad-waiver`.
+    pub bad_waivers: Vec<(u32, String)>,
+}
+
+struct Scope {
+    test: bool,
+    /// Indices into `waivers` that close when this scope's `}` closes.
+    waiver_ids: Vec<usize>,
+}
+
+/// `// lint: allow(rule-a, rule-b): reason` → rules + reason.
+/// Returns `Err(message)` on anything that *looks* like a waiver (starts
+/// with `lint:`) but doesn't parse — those become `bad-waiver` findings so a
+/// typo can't silently disable a rule.
+fn parse_waiver(comment: &str, known_rules: &[&str]) -> Option<Result<(Vec<String>, String), String>> {
+    let body = comment.trim_start_matches('/').trim();
+    let rest = body.strip_prefix("lint:")?.trim();
+    let inner = match rest.strip_prefix("allow") {
+        Some(r) => r.trim(),
+        None => return Some(Err(format!("expected `allow(...)` after `lint:`, got `{rest}`"))),
+    };
+    let Some(open) = inner.strip_prefix('(') else {
+        return Some(Err("expected `(` after `allow`".into()));
+    };
+    let Some(close) = open.find(')') else {
+        return Some(Err("unclosed `allow(`".into()));
+    };
+    let rules: Vec<String> =
+        open[..close].split(',').map(|r| r.trim().to_string()).filter(|r| !r.is_empty()).collect();
+    if rules.is_empty() {
+        return Some(Err("empty rule list in `allow()`".into()));
+    }
+    for r in &rules {
+        if !known_rules.contains(&r.as_str()) {
+            return Some(Err(format!("unknown rule `{r}` in waiver")));
+        }
+    }
+    let after = open[close + 1..].trim();
+    let Some(reason) = after.strip_prefix(':') else {
+        return Some(Err("waiver must carry a reason: `allow(rule): why this is sound`".into()));
+    };
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return Some(Err("waiver reason is empty".into()));
+    }
+    Some(Ok((rules, reason.to_string())))
+}
+
+/// One pass over the token stream computing test regions and waiver spans.
+pub fn analyze(tokens: &[Tok], known_rules: &[&str]) -> FileContext {
+    let mut in_test = vec![false; tokens.len()];
+    let mut waivers: Vec<Waiver> = Vec::new();
+    let mut bad_waivers: Vec<(u32, String)> = Vec::new();
+
+    let mut stack: Vec<Scope> = Vec::new();
+    let mut cur_test = false;
+    // `#[cfg(test)]` seen, waiting for the `{` (or `;`) it attaches to.
+    let mut pending_test = false;
+    // Own-line waivers waiting for their first `{` or `;`.
+    let mut pending_waivers: Vec<usize> = Vec::new();
+    let mut last_code_line = 0u32;
+
+    let mut i = 0usize;
+    while i < tokens.len() {
+        let t = &tokens[i];
+        if t.kind == TokKind::Comment {
+            if let Some(parsed) = parse_waiver(&t.text, known_rules) {
+                match parsed {
+                    Ok((rules, reason)) => {
+                        let trailing = t.line == last_code_line;
+                        let w = Waiver {
+                            rules,
+                            reason,
+                            start_line: t.line,
+                            // Trailing waivers cover their own line only.
+                            // Own-line spans are extended when the block they
+                            // attach to closes; EOF leaves them open-ended.
+                            end_line: if trailing { t.line } else { u32::MAX },
+                        };
+                        waivers.push(w);
+                        if !trailing {
+                            pending_waivers.push(waivers.len() - 1);
+                        }
+                    }
+                    Err(msg) => bad_waivers.push((t.line, msg)),
+                }
+            }
+            // Comments inherit the current region for uniformity.
+            in_test[i] = cur_test;
+            i += 1;
+            continue;
+        }
+
+        in_test[i] = cur_test;
+        last_code_line = t.line;
+
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "#") => {
+                // Attribute: `#[...]` or `#![...]`. Scan the bracket group
+                // without brace tracking (attrs may contain arbitrary
+                // tokens) and look for a `test` ident, which covers both
+                // `#[cfg(test)]` and `#[test]`. `not` anywhere in the group
+                // (`#[cfg(not(test))]`) keeps the region non-test — the
+                // conservative direction for a lint gate.
+                let mut j = i + 1;
+                if j < tokens.len() && tokens[j].is(TokKind::Punct, "!") {
+                    j += 1;
+                }
+                if j < tokens.len() && tokens[j].is(TokKind::Punct, "[") {
+                    let mut depth = 0i32;
+                    let mut has_test = false;
+                    let mut has_not = false;
+                    while j < tokens.len() {
+                        let a = &tokens[j];
+                        in_test[j] = cur_test;
+                        match (a.kind, a.text.as_str()) {
+                            (TokKind::Punct, "[") => depth += 1,
+                            (TokKind::Punct, "]") => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            (TokKind::Ident, "test") => has_test = true,
+                            (TokKind::Ident, "not") => has_not = true,
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    if has_test && !has_not {
+                        pending_test = true;
+                    }
+                    i = j + 1;
+                    continue;
+                }
+            }
+            (TokKind::Punct, "{") => {
+                stack.push(Scope {
+                    test: cur_test,
+                    waiver_ids: std::mem::take(&mut pending_waivers),
+                });
+                cur_test = cur_test || pending_test;
+                pending_test = false;
+            }
+            (TokKind::Punct, "}") => {
+                if let Some(sc) = stack.pop() {
+                    cur_test = sc.test;
+                    for id in sc.waiver_ids {
+                        if let Some(w) = waivers.get_mut(id) {
+                            w.end_line = t.line;
+                        }
+                    }
+                }
+            }
+            (TokKind::Punct, ";") => {
+                // An item ended without a body: `#[cfg(test)] use x;` etc.
+                pending_test = false;
+                for id in pending_waivers.drain(..) {
+                    if let Some(w) = waivers.get_mut(id) {
+                        w.end_line = t.line;
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+
+    FileContext { in_test, waivers, bad_waivers }
+}
+
+impl FileContext {
+    pub fn is_waived(&self, rule: &str, line: u32) -> bool {
+        self.waivers.iter().any(|w| w.covers(rule, line))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    const RULES: &[&str] = &["hot-panic", "hot-index", "nan-cmp"];
+
+    fn ctx(src: &str) -> (Vec<crate::analysis::lexer::Tok>, FileContext) {
+        let ts = lex(src);
+        let c = analyze(&ts, RULES);
+        (ts, c)
+    }
+
+    fn test_flag_of(src: &str, ident: &str) -> bool {
+        let (ts, c) = ctx(src);
+        let idx = ts
+            .iter()
+            .position(|t| t.text == ident)
+            .unwrap_or_else(|| panic!("ident {ident} not found"));
+        c.in_test[idx]
+    }
+
+    #[test]
+    fn cfg_test_module_is_test() {
+        let src = "fn live() { a(); }\n#[cfg(test)]\nmod tests { fn t() { b(); } }\nfn live2() { c(); }";
+        assert!(!test_flag_of(src, "a"));
+        assert!(test_flag_of(src, "b"));
+        assert!(!test_flag_of(src, "c"));
+    }
+
+    #[test]
+    fn test_attr_fn_is_test_and_nested_braces_stay_test() {
+        let src = "#[test]\nfn t() { if x { y(); } }\nfn live() { z(); }";
+        assert!(test_flag_of(src, "y"));
+        assert!(!test_flag_of(src, "z"));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_test() {
+        let src = "#[cfg(not(test))]\nfn live() { a(); }";
+        assert!(!test_flag_of(src, "a"));
+    }
+
+    #[test]
+    fn attr_use_semicolon_does_not_leak() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() { a(); }";
+        assert!(!test_flag_of(src, "a"));
+    }
+
+    #[test]
+    fn trailing_waiver_covers_its_line_only() {
+        let src = "fn f() {\n  x(); // lint: allow(hot-panic): startup only\n  y();\n}";
+        let (_, c) = ctx(src);
+        assert!(c.is_waived("hot-panic", 2));
+        assert!(!c.is_waived("hot-panic", 3));
+        assert!(!c.is_waived("hot-index", 2), "only the named rule is waived");
+    }
+
+    #[test]
+    fn own_line_waiver_covers_next_block() {
+        let src = "// lint: allow(hot-index): bounds documented below\nfn kernel() {\n  a[i];\n}\nfn next() { b[i]; }";
+        let (_, c) = ctx(src);
+        assert!(c.is_waived("hot-index", 3));
+        assert!(!c.is_waived("hot-index", 5), "waiver ends at the fn's closing brace");
+    }
+
+    #[test]
+    fn own_line_waiver_before_statement_ends_at_semicolon() {
+        let src = "fn f() {\n  // lint: allow(hot-panic): const table\n  let x = t.unwrap();\n  let y = u.unwrap();\n}";
+        let (_, c) = ctx(src);
+        assert!(c.is_waived("hot-panic", 3));
+        assert!(!c.is_waived("hot-panic", 4));
+    }
+
+    #[test]
+    fn bad_waivers_are_reported() {
+        for (src, needle) in [
+            ("// lint: allow(hot-panic)\nfn f() {}", "reason"),
+            ("// lint: allow(no-such-rule): x\nfn f() {}", "unknown rule"),
+            ("// lint: allow(): x\nfn f() {}", "empty rule list"),
+            ("// lint: deny(hot-panic): x\nfn f() {}", "expected `allow"),
+        ] {
+            let (_, c) = ctx(src);
+            assert_eq!(c.bad_waivers.len(), 1, "src: {src}");
+            assert!(c.bad_waivers[0].1.contains(needle), "{} !~ {}", c.bad_waivers[0].1, needle);
+            assert!(!c.is_waived("hot-panic", 1) && !c.is_waived("hot-panic", 2));
+        }
+    }
+
+    #[test]
+    fn multi_rule_waiver() {
+        let src = "fn f() {\n  a[i].unwrap(); // lint: allow(hot-panic, hot-index): fixture setup\n}";
+        let (_, c) = ctx(src);
+        assert!(c.is_waived("hot-panic", 2));
+        assert!(c.is_waived("hot-index", 2));
+    }
+}

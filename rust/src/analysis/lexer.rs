@@ -1,0 +1,355 @@
+//! A minimal hand-rolled Rust lexer for `pallas-lint`.
+//!
+//! The offline toolchain has no `syn`/`proc-macro2`, so the lint works on a
+//! flat token stream produced here. The lexer understands exactly as much
+//! Rust as the rules need to be sound on this crate:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments,
+//!   preserved as trivia tokens (the SAFETY and waiver rules read them);
+//! * string/char/byte literals, including raw strings `r#"..."#` with any
+//!   number of `#`s (so `unwrap` inside a string never looks like a call);
+//! * char-literal vs lifetime disambiguation (`'a'` vs `'a`);
+//! * numbers with suffixes (`1.0f32`, `0xFF_u8`) without eating `..`.
+//!
+//! Everything else is an `Ident` or a single-char `Punct`. That is enough:
+//! the rules match short token patterns (`.` `unwrap` `(`) rather than a
+//! grammar.
+
+/// Token classification. `Comment` tokens are trivia but are kept in the
+/// stream because two rules (SAFETY adjacency, waivers) are *about* comments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Literal,
+    Lifetime,
+    Comment,
+}
+
+/// One token. `line` is 1-based and points at the token's first character.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c >= 0x80
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_' || c >= 0x80
+}
+
+/// Lex `src` into a token stream. Never fails: malformed input (unterminated
+/// string, stray byte) degrades to best-effort tokens — the lint runs on a
+/// tree that `rustc` already accepted, so this only matters for fixtures.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Vec<Tok>,
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self, off: usize) -> u8 {
+        *self.b.get(self.i + off).unwrap_or(&0)
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, line: u32) {
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.out.push(Tok { kind, text, line });
+    }
+
+    /// Advance one byte, counting newlines. Used inside multi-line tokens.
+    fn bump(&mut self) {
+        if self.peek(0) == b'\n' {
+            self.line += 1;
+        }
+        self.i += 1;
+    }
+
+    fn run(mut self) -> Vec<Tok> {
+        while self.i < self.b.len() {
+            let c = self.peek(0);
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.peek(1) == b'/' => self.line_comment(),
+                b'/' if self.peek(1) == b'*' => self.block_comment(),
+                b'"' => self.string(),
+                b'\'' => self.char_or_lifetime(),
+                b'0'..=b'9' => self.number(),
+                _ if is_ident_start(c) => self.ident_or_prefixed_literal(),
+                _ => {
+                    let (start, line) = (self.i, self.line);
+                    self.i += 1;
+                    self.push(TokKind::Punct, start, line);
+                }
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self) {
+        let (start, line) = (self.i, self.line);
+        while self.i < self.b.len() && self.peek(0) != b'\n' {
+            self.i += 1;
+        }
+        self.push(TokKind::Comment, start, line);
+    }
+
+    fn block_comment(&mut self) {
+        let (start, line) = (self.i, self.line);
+        self.i += 2;
+        let mut depth = 1u32;
+        while self.i < self.b.len() && depth > 0 {
+            if self.peek(0) == b'/' && self.peek(1) == b'*' {
+                depth += 1;
+                self.i += 2;
+            } else if self.peek(0) == b'*' && self.peek(1) == b'/' {
+                depth -= 1;
+                self.i += 2;
+            } else {
+                self.bump();
+            }
+        }
+        self.push(TokKind::Comment, start, line);
+    }
+
+    /// Normal (non-raw) string body, cursor on the opening `"`.
+    fn string(&mut self) {
+        let (start, line) = (self.i, self.line);
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.peek(0) {
+                b'\\' => {
+                    self.i += 1;
+                    self.bump(); // escaped char (may be a newline continuation)
+                }
+                b'"' => {
+                    self.i += 1;
+                    break;
+                }
+                _ => self.bump(),
+            }
+        }
+        self.push(TokKind::Literal, start, line);
+    }
+
+    /// Raw string body, cursor on the first `#` or `"` after the prefix.
+    fn raw_string(&mut self, start: usize, line: u32) {
+        let mut hashes = 0usize;
+        while self.peek(0) == b'#' {
+            hashes += 1;
+            self.i += 1;
+        }
+        self.i += 1; // opening quote
+        loop {
+            if self.i >= self.b.len() {
+                break;
+            }
+            if self.peek(0) == b'"' {
+                let mut ok = true;
+                for k in 0..hashes {
+                    if self.peek(1 + k) != b'#' {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    self.i += 1 + hashes;
+                    break;
+                }
+            }
+            self.bump();
+        }
+        self.push(TokKind::Literal, start, line);
+    }
+
+    /// `'a'` vs `'a` vs `'\n'`: a lifetime is `'` + ident not closed by `'`.
+    fn char_or_lifetime(&mut self) {
+        let (start, line) = (self.i, self.line);
+        let c1 = self.peek(1);
+        if is_ident_start(c1) && self.peek(2) != b'\'' {
+            // lifetime: consume '<ident>
+            self.i += 2;
+            while is_ident_continue(self.peek(0)) {
+                self.i += 1;
+            }
+            self.push(TokKind::Lifetime, start, line);
+            return;
+        }
+        // char literal (possibly escaped)
+        self.i += 1;
+        if self.peek(0) == b'\\' {
+            self.i += 2; // backslash + escape head ('\u{..}' closed below)
+        } else {
+            self.i += 1;
+        }
+        while self.i < self.b.len() && self.peek(0) != b'\'' {
+            self.bump();
+        }
+        self.i += 1; // closing quote
+        self.push(TokKind::Literal, start, line);
+    }
+
+    fn number(&mut self) {
+        let (start, line) = (self.i, self.line);
+        // integer part: digits, `_`, radix letters, type suffixes
+        while is_ident_continue(self.peek(0)) {
+            self.i += 1;
+        }
+        // fraction: only if `.` is followed by a digit (so `0..n` stays `..`)
+        if self.peek(0) == b'.' && self.peek(1).is_ascii_digit() {
+            self.i += 1;
+            while is_ident_continue(self.peek(0)) {
+                self.i += 1;
+            }
+        }
+        self.push(TokKind::Literal, start, line);
+    }
+
+    /// An identifier — unless it is a raw/byte string prefix (`r"`, `r#"`,
+    /// `b"`, `br#"`, `c"`) or a byte char (`b'x'`).
+    fn ident_or_prefixed_literal(&mut self) {
+        let (start, line) = (self.i, self.line);
+        let c = self.peek(0);
+        if c == b'r' || c == b'b' || c == b'c' {
+            // scan the full prefix run (at most 2 chars: r, b, c, br, cr)
+            let mut p = 1usize;
+            if (c == b'b' || c == b'c') && self.peek(1) == b'r' {
+                p = 2;
+            }
+            let after = self.peek(p);
+            if after == b'"' && p == 1 && (c == b'b' || c == b'c') {
+                // b"..." / c"...": normal-style body with escapes
+                self.i += 1;
+                self.string();
+                // string() pushed with start at the quote; fix span start
+                if let Some(t) = self.out.last_mut() {
+                    t.text.insert(0, c as char);
+                    t.line = line;
+                }
+                return;
+            }
+            if after == b'"' || after == b'#' {
+                // raw string: r"..", r#".."#, br#".."#, cr".."
+                self.i += p;
+                self.raw_string(start, line);
+                return;
+            }
+            if c == b'b' && self.peek(1) == b'\'' {
+                // byte char b'x'
+                self.i += 1;
+                self.char_or_lifetime();
+                if let Some(t) = self.out.last_mut() {
+                    t.text.insert(0, 'b');
+                    t.line = line;
+                }
+                return;
+            }
+        }
+        while is_ident_continue(self.peek(0)) {
+            self.i += 1;
+        }
+        self.push(TokKind::Ident, start, line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let ts = kinds("let x = a.b(3) + 0x1F_u8;");
+        let texts: Vec<&str> = ts.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(texts, ["let", "x", "=", "a", ".", "b", "(", "3", ")", "+", "0x1F_u8", ";"]);
+        assert_eq!(ts[7].0, TokKind::Literal);
+        assert_eq!(ts[10].0, TokKind::Literal);
+    }
+
+    #[test]
+    fn float_does_not_eat_range() {
+        let texts: Vec<String> = lex("for i in 0..n { a = 1.5e3; }").into_iter().map(|t| t.text).collect();
+        assert!(texts.contains(&"0".to_string()));
+        assert!(texts.contains(&"1.5e3".to_string()));
+        assert_eq!(texts.iter().filter(|t| *t == ".").count(), 2, "0..n keeps two dot puncts");
+    }
+
+    #[test]
+    fn raw_string_hides_tokens() {
+        let ts = kinds(r###"let s = r#"a.unwrap() "quoted" "#; done"###);
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Literal && s.contains("unwrap")));
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Ident && s == "done"));
+        assert!(!ts.iter().any(|(k, s)| *k == TokKind::Ident && s == "unwrap"));
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let ts = kinds("a /* outer /* inner */ still comment */ b");
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[1].0, TokKind::Comment);
+        assert!(ts[1].1.contains("inner"));
+        assert_eq!(ts[2].1, "b");
+    }
+
+    #[test]
+    fn line_comment_and_line_numbers() {
+        let ts = lex("a // one\nb /* two\nlines */ c");
+        let c: Vec<(&str, u32)> = ts.iter().map(|t| (t.text.as_str(), t.line)).collect();
+        assert_eq!(c[0], ("a", 1));
+        assert_eq!(c[1], ("// one", 1));
+        assert_eq!(c[2], ("b", 2));
+        assert_eq!(c[4].1, 3, "token after multi-line comment lands on line 3");
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let ts = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; let s: &'static str = \"\"; }");
+        let lifetimes: Vec<&str> =
+            ts.iter().filter(|(k, _)| *k == TokKind::Lifetime).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(lifetimes, ["'a", "'a", "'static"]);
+        let chars: Vec<&str> = ts
+            .iter()
+            .filter(|(k, s)| *k == TokKind::Literal && s.starts_with('\''))
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(chars, ["'x'", "'\\n'"]);
+    }
+
+    #[test]
+    fn byte_literals() {
+        let ts = kinds(r##"let a = b"raw"; let c = b'\n'; let d = br#"x.unwrap()"#;"##);
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Literal && s.starts_with("b\"")));
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Literal && s.starts_with("b'")));
+        assert!(!ts.iter().any(|(k, s)| *k == TokKind::Ident && s == "unwrap"));
+    }
+
+    #[test]
+    fn string_with_escapes_and_newlines() {
+        let ts = lex("let s = \"a \\\" b\nc\"; z");
+        let z = ts.iter().find(|t| t.text == "z").expect("z survives");
+        assert_eq!(z.line, 2);
+        assert!(ts.iter().any(|t| t.kind == TokKind::Literal && t.text.contains("a \\\" b")));
+    }
+}

@@ -1,0 +1,62 @@
+//! `pallas-lint`: a dependency-free static-analysis pass over this crate's
+//! own source tree, run as a ratcheted CI gate (`cargo run --bin pallas-lint
+//! -- --check`).
+//!
+//! The engine's headline robustness guarantees — no-panic hot paths,
+//! SAFETY-documented `unsafe`, NaN-safe comparisons, overflow-checked byte
+//! accounting — were each earned by fixing a real bug once. This subsystem
+//! keeps those bug classes from reappearing: a hand-rolled lexer
+//! ([`lexer`]), structural context ([`context`]: `#[cfg(test)]` regions and
+//! `// lint: allow(rule): reason` waivers), the rule catalog ([`rules`]),
+//! and a ratcheting baseline ([`baseline`]) so pre-existing `unwrap` debt
+//! shrinks monotonically instead of blocking the gate. See DESIGN.md
+//! ("Static analysis") for the rule catalog and waiver semantics.
+
+pub mod baseline;
+pub mod context;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use baseline::{Baseline, Regression};
+pub use rules::{check_file, Finding, LintConfig, Severity, RULES};
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Recursively collect `.rs` files under `root`, sorted for determinism.
+pub fn rust_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root`. Paths in findings are relative to
+/// `root`, `/`-normalized (so hot-module suffix matching and baseline keys
+/// are OS-independent).
+pub fn run(root: &Path, cfg: &LintConfig) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for path in rust_files(root)? {
+        let rel = path.strip_prefix(root).unwrap_or(&path);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        let src = std::fs::read_to_string(&path)?;
+        findings.extend(check_file(&rel, &src, cfg));
+    }
+    Ok(findings)
+}
+
+/// Split findings into (deny, ratchet) tiers.
+pub fn partition(findings: Vec<Finding>) -> (Vec<Finding>, Vec<Finding>) {
+    findings.into_iter().partition(|f| f.severity == Severity::Deny)
+}

@@ -1,0 +1,75 @@
+//! Diagnostic formatting for `pallas-lint`: stable `file:line: rule: msg`
+//! lines (sorted, deterministic) plus a per-rule summary table.
+
+use std::collections::BTreeMap;
+
+use super::baseline::Regression;
+use super::rules::{Finding, Severity};
+
+/// `src/kv/mod.rs:124: hot-panic: ...` — one line per finding, sorted by
+/// (path, line, rule) so output is diff-stable.
+pub fn format_findings(findings: &[Finding]) -> String {
+    let mut fs: Vec<&Finding> = findings.iter().collect();
+    fs.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    let mut out = String::new();
+    for f in fs {
+        out.push_str(&format!("{}:{}: {}: {}\n", f.path, f.line, f.rule, f.msg));
+    }
+    out
+}
+
+pub fn format_regressions(regs: &[Regression]) -> String {
+    let mut out = String::new();
+    for r in regs {
+        out.push_str(&format!(
+            "{}: {}: ratchet regression: {} -> {} sites (baseline allows {})\n",
+            r.path, r.rule, r.was, r.now, r.was
+        ));
+    }
+    out
+}
+
+/// Per-rule counts, deny rules first.
+pub fn summary(findings: &[Finding]) -> String {
+    let mut by_rule: BTreeMap<(bool, &'static str), usize> = BTreeMap::new();
+    for f in findings {
+        *by_rule.entry((f.severity == Severity::Ratchet, f.rule)).or_insert(0) += 1;
+    }
+    let mut out = String::new();
+    for ((ratchet, rule), n) in by_rule {
+        let tier = if ratchet { "ratchet" } else { "deny" };
+        out.push_str(&format!("  {rule:<16} {tier:<8} {n}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::rules::severity_of;
+    use super::*;
+
+    #[test]
+    fn findings_are_sorted_and_formatted() {
+        let fs = vec![
+            Finding {
+                rule: "hot-panic",
+                severity: severity_of("hot-panic"),
+                path: "b.rs".into(),
+                line: 2,
+                msg: "m1".into(),
+            },
+            Finding {
+                rule: "nan-cmp",
+                severity: severity_of("nan-cmp"),
+                path: "a.rs".into(),
+                line: 9,
+                msg: "m2".into(),
+            },
+        ];
+        let text = format_findings(&fs);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a.rs:9: nan-cmp: m2");
+        assert_eq!(lines[1], "b.rs:2: hot-panic: m1");
+        assert!(summary(&fs).contains("hot-panic"));
+    }
+}

@@ -1,0 +1,503 @@
+//! The repo-specific rule catalog.
+//!
+//! Two tiers:
+//!
+//! * **Deny** rules must be at zero (after explicit waivers) for the tree to
+//!   pass: `hot-panic`, `hot-index`, `safety-comment`, `nan-cmp`,
+//!   `bad-waiver`.
+//! * **Ratchet** rules (`unwrap-ratchet`, `narrow-cast`) are counted against
+//!   the committed baseline: counts may only decrease. New code can't add
+//!   sites, old code doesn't block landing.
+//!
+//! Rules are token-pattern matchers over the lexer stream — no type info.
+//! Where that forces a judgment call the rule takes the conservative
+//! direction for a gate (flag it; a waiver with a written reason is the
+//! escape hatch).
+
+use super::context::{analyze, FileContext};
+use super::lexer::{lex, Tok, TokKind};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Must be zero (modulo waivers) — the build gate fails on any hit.
+    Deny,
+    /// Counted per (rule, file) against the ratchet baseline.
+    Ratchet,
+}
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// All rule names, for waiver validation and baseline sanity checks.
+pub const RULES: &[&str] = &[
+    "hot-panic",
+    "hot-index",
+    "safety-comment",
+    "nan-cmp",
+    "narrow-cast",
+    "unwrap-ratchet",
+    "bad-waiver",
+];
+
+pub fn severity_of(rule: &str) -> Severity {
+    match rule {
+        "unwrap-ratchet" | "narrow-cast" => Severity::Ratchet,
+        _ => Severity::Deny,
+    }
+}
+
+/// Which files get which rules. Paths are matched as `/`-normalized
+/// suffixes, so the same config works for the real tree (`kv/mod.rs`
+/// relative to `src/`) and for fixture trees that mirror the layout.
+pub struct LintConfig {
+    /// No-panic hot paths: scheduler tick loop, native forward pass,
+    /// compute kernels, KV append/spill paths.
+    pub hot_modules: Vec<&'static str>,
+    /// Byte-accounting / serialization modules where a silently narrowing
+    /// `as` cast re-introduces the PR 2 header-overflow bug class.
+    pub accounting_modules: Vec<&'static str>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        LintConfig {
+            hot_modules: vec![
+                "coordinator/scheduler.rs",
+                "model/native.rs",
+                "cpu/attention.rs",
+                "cpu/gemm_q.rs",
+                "cpu/backend.rs",
+                "kv/mod.rs",
+                "kv/paged.rs",
+                "memory/hybrid.rs",
+            ],
+            accounting_modules: vec!["model/weights.rs", "memory/weight_store.rs", "kv/paged.rs"],
+        }
+    }
+}
+
+fn suffix_match(path: &str, suffixes: &[&str]) -> bool {
+    suffixes.iter().any(|s| path == *s || path.ends_with(&format!("/{s}")))
+}
+
+impl LintConfig {
+    pub fn is_hot(&self, path: &str) -> bool {
+        suffix_match(path, &self.hot_modules)
+    }
+    pub fn is_accounting(&self, path: &str) -> bool {
+        suffix_match(path, &self.accounting_modules)
+    }
+}
+
+/// Idents that can legally precede `[` without it being an index expression.
+const PRE_BRACKET_KEYWORDS: &[&str] = &[
+    "mut", "ref", "in", "as", "return", "else", "match", "if", "while", "for", "loop", "move",
+    "dyn", "impl", "where", "break", "continue", "unsafe", "let", "const", "static", "box",
+];
+
+/// Modifier idents allowed between a `// SAFETY:` comment and the `unsafe`
+/// keyword it documents (`pub const unsafe fn`, `pub(crate) unsafe`, ...).
+const UNSAFE_MODIFIERS: &[&str] = &["pub", "crate", "super", "self", "in", "const", "extern"];
+
+/// Lint one file's source. `path` is the `/`-normalized path used both for
+/// module matching and in diagnostics.
+pub fn check_file(path: &str, src: &str, cfg: &LintConfig) -> Vec<Finding> {
+    let tokens = lex(src);
+    let ctx = analyze(&tokens, RULES);
+    let hot = cfg.is_hot(path);
+    let accounting = cfg.is_accounting(path);
+
+    let mut out: Vec<Finding> = Vec::new();
+    let mut push = |rule: &'static str, line: u32, msg: String| {
+        out.push(Finding { rule, severity: severity_of(rule), path: path.to_string(), line, msg });
+    };
+
+    for (line, msg) in &ctx.bad_waivers {
+        push("bad-waiver", *line, msg.clone());
+    }
+
+    // Code-token view: indices into `tokens` with comments stripped, so the
+    // pattern matchers can look at real neighbors.
+    let code: Vec<usize> = (0..tokens.len()).filter(|&i| tokens[i].kind != TokKind::Comment).collect();
+    let tok = |ci: usize| -> &Tok { &tokens[code[ci]] };
+    let in_test = |ci: usize| -> bool { ctx.in_test[code[ci]] };
+
+    for ci in 0..code.len() {
+        let t = tok(ci);
+
+        // --- panic-family calls: `.unwrap(` / `.expect(` --------------------
+        if t.kind == TokKind::Ident && (t.text == "unwrap" || t.text == "expect") {
+            let dotted = ci > 0 && tok(ci - 1).is(TokKind::Punct, ".");
+            let called = ci + 1 < code.len() && tok(ci + 1).is(TokKind::Punct, "(");
+            if dotted && called {
+                // `partial_cmp(..).unwrap()` is its own (stricter) rule:
+                // NaN panics, and it bites test code too.
+                let nan = preceding_call_is(&tokens, &code, ci - 1, "partial_cmp");
+                if nan {
+                    push(
+                        "nan-cmp",
+                        t.line,
+                        format!("`partial_cmp(..).{}()` panics on NaN; use `total_cmp`", t.text),
+                    );
+                } else if !in_test(ci) {
+                    if hot {
+                        push(
+                            "hot-panic",
+                            t.line,
+                            format!(
+                                "`.{}()` in a no-panic hot path; propagate an error or fall back",
+                                t.text
+                            ),
+                        );
+                    } else {
+                        push("unwrap-ratchet", t.line, format!("`.{}()` outside tests", t.text));
+                    }
+                }
+            }
+        }
+
+        // --- panic-family macros -------------------------------------------
+        if hot
+            && !in_test(ci)
+            && t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+            && ci + 1 < code.len()
+            && tok(ci + 1).is(TokKind::Punct, "!")
+        {
+            push(
+                "hot-panic",
+                t.line,
+                format!("`{}!` in a no-panic hot path; use `debug_assert!` + graceful fallback", t.text),
+            );
+        }
+
+        // --- direct slice indexing in hot paths ----------------------------
+        if hot && !in_test(ci) && t.is(TokKind::Punct, "[") && ci > 0 {
+            let p = tok(ci - 1);
+            let indexes_expr = match p.kind {
+                TokKind::Ident => !PRE_BRACKET_KEYWORDS.contains(&p.text.as_str()),
+                TokKind::Punct => p.text == ")" || p.text == "]" || p.text == "?",
+                _ => false,
+            };
+            if indexes_expr && !bracket_contains_range(&tokens, &code, ci) {
+                push(
+                    "hot-index",
+                    t.line,
+                    "direct indexing in a no-panic hot path; use `.get()`/iterators or waive with \
+                     documented bounds"
+                        .to_string(),
+                );
+            }
+        }
+
+        // --- SAFETY comments on unsafe -------------------------------------
+        if t.is(TokKind::Ident, "unsafe") && !has_safety_comment(&tokens, code[ci]) {
+            push(
+                "safety-comment",
+                t.line,
+                "`unsafe` must be immediately preceded by a `// SAFETY:` comment stating its \
+                 preconditions"
+                    .to_string(),
+            );
+        }
+
+        // --- narrowing `as` casts in accounting modules --------------------
+        if accounting && !in_test(ci) && t.is(TokKind::Ident, "as") && ci + 1 < code.len() {
+            let target = tok(ci + 1);
+            if target.kind == TokKind::Ident
+                && matches!(target.text.as_str(), "u8" | "u16" | "u32" | "i8" | "i16" | "i32")
+            {
+                push(
+                    "narrow-cast",
+                    t.line,
+                    format!("narrowing `as {}` in an accounting module; use `try_from`", target.text),
+                );
+            }
+        }
+    }
+
+    // Apply waivers (bad-waiver itself cannot be waived).
+    out.retain(|f| f.rule == "bad-waiver" || !ctx.is_waived(f.rule, f.line));
+    out
+}
+
+/// Walking back from the `.` before `unwrap`, was the receiver a
+/// `partial_cmp(...)` call? Handles the common shapes
+/// `a.partial_cmp(b).unwrap()` and `partial_cmp(&x).unwrap()`.
+fn preceding_call_is(tokens: &[Tok], code: &[usize], dot_ci: usize, callee: &str) -> bool {
+    // Expect `)` right before the dot, then match backwards to its `(`, then
+    // the callee ident.
+    if dot_ci == 0 {
+        return false;
+    }
+    let mut ci = dot_ci - 1;
+    if !tokens[code[ci]].is(TokKind::Punct, ")") {
+        return false;
+    }
+    let mut depth = 0i32;
+    loop {
+        let t = &tokens[code[ci]];
+        if t.is(TokKind::Punct, ")") {
+            depth += 1;
+        } else if t.is(TokKind::Punct, "(") {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        if ci == 0 {
+            return false;
+        }
+        ci -= 1;
+    }
+    ci > 0 && tokens[code[ci - 1]].is(TokKind::Ident, callee)
+}
+
+/// Does the bracket group opening at code index `open_ci` contain a `..`
+/// (two adjacent `.` puncts) at depth 1? Range slicing (`buf[a..b]`) panics
+/// too, but it is how every kernel expresses tile windows — the hot-index
+/// rule targets scalar element access, where `.get()` is a drop-in.
+fn bracket_contains_range(tokens: &[Tok], code: &[usize], open_ci: usize) -> bool {
+    let mut depth = 0i32;
+    let mut ci = open_ci;
+    while ci < code.len() {
+        let t = &tokens[code[ci]];
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "[") | (TokKind::Punct, "(") => depth += 1,
+            (TokKind::Punct, "]") | (TokKind::Punct, ")") => {
+                depth -= 1;
+                if depth == 0 {
+                    return false;
+                }
+            }
+            (TokKind::Punct, ".") if depth == 1 => {
+                if ci + 1 < code.len() && tokens[code[ci + 1]].is(TokKind::Punct, ".") {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+        ci += 1;
+    }
+    false
+}
+
+/// Is the `unsafe` token at absolute index `ti` immediately preceded by a
+/// `// SAFETY:` (or `/* SAFETY: */`) comment? Attributes
+/// (`#[target_feature(...)]`) and visibility/linkage modifiers may sit
+/// between the comment and the keyword, and — matching clippy's
+/// `undocumented_unsafe_blocks` — so may the rest of the `unsafe` token's
+/// own line (`let y = unsafe { .. }` documents above the `let`).
+fn has_safety_comment(tokens: &[Tok], ti: usize) -> bool {
+    let uline = tokens.get(ti).map_or(0, |t| t.line);
+    let mut i = ti;
+    while i > 0 {
+        i -= 1;
+        let t = &tokens[i];
+        match t.kind {
+            TokKind::Comment => {
+                if t.text.contains("SAFETY:") {
+                    return true;
+                }
+                // A non-SAFETY comment between: keep looking upward — doc
+                // comments often sit above the SAFETY line.
+                continue;
+            }
+            // A statement boundary ends the search even mid-line: the second
+            // `unsafe` in `unsafe { a() } unsafe { b() }` documents itself.
+            TokKind::Punct if t.text == ";" || t.text == "}" => return false,
+            _ if t.line == uline => continue,
+            TokKind::Ident if UNSAFE_MODIFIERS.contains(&t.text.as_str()) => continue,
+            TokKind::Punct if t.text == ")" || t.text == "(" => continue, // pub(crate)
+            TokKind::Punct if t.text == "]" => {
+                // Skip a whole attribute group `#[...]` backwards.
+                let mut depth = 0i32;
+                loop {
+                    let a = &tokens[i];
+                    if a.is(TokKind::Punct, "]") {
+                        depth += 1;
+                    } else if a.is(TokKind::Punct, "[") {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    if i == 0 {
+                        return false;
+                    }
+                    i -= 1;
+                }
+                // Optional `!` then `#`.
+                if i > 0 && tokens[i - 1].is(TokKind::Punct, "!") {
+                    i -= 1;
+                }
+                if i > 0 && tokens[i - 1].is(TokKind::Punct, "#") {
+                    i -= 1;
+                    continue;
+                }
+                return false;
+            }
+            TokKind::Literal if t.text.starts_with('"') => continue, // extern "C"
+            _ => return false,
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_hot(src: &str) -> Vec<Finding> {
+        check_file("kv/mod.rs", src, &LintConfig::default())
+    }
+    fn run_cold(src: &str) -> Vec<Finding> {
+        check_file("util/stats.rs", src, &LintConfig::default())
+    }
+    fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unwrap_in_hot_path_denied() {
+        let fs = run_hot("fn f() { x.unwrap(); y.expect(\"m\"); }");
+        assert_eq!(rules_of(&fs), ["hot-panic", "hot-panic"]);
+        assert_eq!(fs[0].severity, Severity::Deny);
+    }
+
+    #[test]
+    fn unwrap_in_cold_path_is_ratcheted() {
+        let fs = run_cold("fn f() { x.unwrap(); }");
+        assert_eq!(rules_of(&fs), ["unwrap-ratchet"]);
+        assert_eq!(fs[0].severity, Severity::Ratchet);
+    }
+
+    #[test]
+    fn unwrap_in_tests_exempt() {
+        let src = "#[cfg(test)]\nmod tests { fn t() { x.unwrap(); a[i]; panic!(); } }";
+        assert!(run_hot(src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_variants_not_flagged() {
+        let src = "fn f() { x.unwrap_or(0); y.unwrap_or_else(|| 0); z.unwrap_or_default(); }";
+        assert!(run_hot(src).is_empty());
+    }
+
+    #[test]
+    fn panic_macros_denied_assert_allowed() {
+        let fs = run_hot("fn f() { assert!(x); debug_assert!(y); unreachable!(); todo!(); }");
+        assert_eq!(rules_of(&fs), ["hot-panic", "hot-panic"]);
+    }
+
+    #[test]
+    fn scalar_index_denied_ranges_allowed() {
+        let fs = run_hot("fn f(a: &[f32]) { let x = a[i]; let s = &a[b..e]; let t = &a[..n]; }");
+        assert_eq!(rules_of(&fs), ["hot-index"]);
+        assert_eq!(fs[0].line, 1);
+    }
+
+    #[test]
+    fn non_index_brackets_not_flagged() {
+        let src = "fn f() -> [f32; 4] { let v: Vec<[u8; 2]> = vec![[0; 2]; 3]; let a = [1, 2]; \
+                   let b: &mut [f32] = c; #[allow(dead_code)] struct S; a }";
+        let fs = run_hot(src);
+        assert!(fs.is_empty(), "got: {fs:?}");
+    }
+
+    #[test]
+    fn chained_and_nested_index() {
+        let fs = run_hot("fn f() { m[i][j]; g(h[k]); }");
+        assert_eq!(rules_of(&fs), ["hot-index", "hot-index", "hot-index"]);
+    }
+
+    #[test]
+    fn nan_cmp_denied_everywhere_even_tests() {
+        let fs = run_cold("fn f() { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }");
+        assert_eq!(rules_of(&fs), ["nan-cmp"]);
+        let fs = run_cold("#[cfg(test)]\nmod t { fn f() { a.partial_cmp(&b).unwrap(); } }");
+        assert_eq!(rules_of(&fs), ["nan-cmp"]);
+    }
+
+    #[test]
+    fn nan_cmp_not_confused_by_other_calls() {
+        let fs = run_cold("fn f() { total_cmp(a).unwrap(); x.partial_cmp(b); }");
+        assert_eq!(rules_of(&fs), ["unwrap-ratchet"]);
+    }
+
+    #[test]
+    fn safety_comment_required_and_satisfied() {
+        let bad = run_cold("fn f() { unsafe { g(); } }");
+        assert_eq!(rules_of(&bad), ["safety-comment"]);
+        let good = run_cold("fn f() { // SAFETY: g is sound because reasons\n unsafe { g(); } }");
+        assert!(good.is_empty());
+    }
+
+    #[test]
+    fn safety_comment_skips_attrs_and_modifiers() {
+        let src = "// SAFETY: caller guarantees AVX2\n#[target_feature(enable = \"avx2\")]\n\
+                   pub unsafe fn gemm() {}";
+        assert!(run_cold(src).is_empty());
+        let src2 = "/// docs\n// SAFETY: single writer\n pub(crate) unsafe fn g() {}";
+        assert!(run_cold(src2).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_covers_same_line_binding() {
+        // clippy-style: the comment sits above the statement, not above the
+        // keyword itself.
+        let src = "fn f() { // SAFETY: disjoint columns\n let o = unsafe { s(p, n) }; }";
+        assert!(run_cold(src).is_empty());
+        // ...but it must not leak across a statement boundary on one line.
+        let src2 = "fn f() { // SAFETY: a\n unsafe { g(); } unsafe { h(); } }";
+        assert_eq!(rules_of(&run_cold(src2)), ["safety-comment"]);
+    }
+
+    #[test]
+    fn second_unsafe_needs_its_own_comment() {
+        let src = "fn f() { // SAFETY: a\n unsafe { g(); } unsafe { h(); } }";
+        let fs = run_cold(src);
+        assert_eq!(rules_of(&fs), ["safety-comment"]);
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn narrow_cast_in_accounting_only() {
+        let cfg = LintConfig::default();
+        let src = "fn f() { let a = x as u32; let b = y as usize; let c = z as f32; }";
+        let fs = check_file("model/weights.rs", src, &cfg);
+        assert_eq!(rules_of(&fs), ["narrow-cast"]);
+        assert!(check_file("util/stats.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn waiver_suppresses_and_bad_waiver_reports() {
+        let src = "fn f() { x.unwrap(); // lint: allow(hot-panic): poisoning handled upstream\n }";
+        assert!(run_hot(src).is_empty());
+        let src2 = "fn f() { x.unwrap(); // lint: allow(hot-panic)\n }";
+        let fs = run_hot(src2);
+        assert_eq!(rules_of(&fs), ["bad-waiver", "hot-panic"]);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_fire() {
+        let src = "fn f() { let s = \"x.unwrap()\"; let r = r#\"a[i] panic!\"#; }\n\
+                   // doc note: partial_cmp(..).unwrap() would be bad";
+        assert!(run_hot(src).is_empty());
+    }
+
+    #[test]
+    fn hot_module_matching_is_suffix_based() {
+        let cfg = LintConfig::default();
+        assert!(cfg.is_hot("kv/mod.rs"));
+        assert!(cfg.is_hot("fixtures/bad/kv/mod.rs"));
+        assert!(!cfg.is_hot("util/stats.rs"));
+        assert!(!cfg.is_hot("archive/mod.rs"), "suffix must match at a path boundary");
+    }
+}

@@ -1,0 +1,148 @@
+//! `pallas-lint` — the repo's own static-analysis gate.
+//!
+//! ```text
+//! cargo run --bin pallas-lint -- --check            # CI mode (default)
+//! cargo run --bin pallas-lint -- --write-baseline   # record current ratchet counts
+//! cargo run --bin pallas-lint -- --root src --baseline lint-baseline.txt
+//! ```
+//!
+//! Exit codes: `0` clean, `1` violations (deny findings or ratchet
+//! regressions), `2` usage or I/O error. Diagnostics are `file:line: rule:
+//! message`, sorted and diff-stable.
+//!
+//! Run from `rust/` (CI does); `--root` defaults to `src`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use mnn_llm::analysis::{self, baseline::Baseline, report, LintConfig};
+
+struct Opts {
+    root: PathBuf,
+    baseline: PathBuf,
+    write_baseline: bool,
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: PathBuf::from("src"),
+        baseline: PathBuf::from("lint-baseline.txt"),
+        write_baseline: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--check" => opts.write_baseline = false,
+            "--write-baseline" => opts.write_baseline = true,
+            "--root" => {
+                opts.root = PathBuf::from(args.next().ok_or("--root needs a directory")?);
+            }
+            "--baseline" => {
+                opts.baseline = PathBuf::from(args.next().ok_or("--baseline needs a file")?);
+            }
+            "--help" | "-h" => {
+                return Err(String::new()); // usage, exit 2 without an error line
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(opts)
+}
+
+const USAGE: &str = "usage: pallas-lint [--check | --write-baseline] [--root DIR] [--baseline FILE]";
+
+fn main() -> ExitCode {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(msg) => {
+            if !msg.is_empty() {
+                eprintln!("pallas-lint: {msg}");
+            }
+            eprintln!("{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let cfg = LintConfig::default();
+    let findings = match analysis::run(&opts.root, &cfg) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("pallas-lint: failed to lint {}: {e}", opts.root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let (deny, ratchet) = analysis::partition(findings);
+    let current = Baseline::from_findings(&ratchet);
+
+    if opts.write_baseline {
+        // Deny findings are never baselined — fail loudly even here.
+        if !deny.is_empty() {
+            print!("{}", report::format_findings(&deny));
+            eprintln!("pallas-lint: {} deny finding(s); fix or waive before baselining", deny.len());
+            return ExitCode::from(1);
+        }
+        if let Err(e) = std::fs::write(&opts.baseline, current.serialize()) {
+            eprintln!("pallas-lint: cannot write {}: {e}", opts.baseline.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "pallas-lint: wrote {} ({} ratchet entries, {} sites)",
+            opts.baseline.display(),
+            current.counts.len(),
+            current.counts.values().sum::<usize>()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let committed = match Baseline::load(&opts.baseline) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("pallas-lint: bad baseline {}: {e}", opts.baseline.display());
+            return ExitCode::from(2);
+        }
+    };
+    let regressions = committed.regressions(&current);
+
+    let mut failed = false;
+    if !deny.is_empty() {
+        print!("{}", report::format_findings(&deny));
+        failed = true;
+    }
+    if !regressions.is_empty() {
+        // Point at the concrete new sites, not just the counts: list the
+        // ratchet findings for every regressed (rule, file) pair.
+        let detail: Vec<_> = ratchet
+            .iter()
+            .filter(|f| regressions.iter().any(|r| r.rule == f.rule && r.path == f.path))
+            .cloned()
+            .collect();
+        print!("{}", report::format_findings(&detail));
+        print!("{}", report::format_regressions(&regressions));
+        failed = true;
+    }
+
+    if failed {
+        eprintln!(
+            "pallas-lint: FAILED — {} deny finding(s), {} ratchet regression(s)",
+            deny.len(),
+            regressions.len()
+        );
+        return ExitCode::from(1);
+    }
+
+    let improvements = committed.improvements(&current);
+    if !improvements.is_empty() {
+        println!(
+            "pallas-lint: {} ratchet entr(ies) improved — consider `--write-baseline` to lock in:",
+            improvements.len()
+        );
+        for (rule, path, was, now) in improvements {
+            println!("  {path}: {rule}: {was} -> {now}");
+        }
+    }
+    println!(
+        "pallas-lint: OK — 0 deny findings, {} ratchet sites at/below baseline",
+        current.counts.values().sum::<usize>()
+    );
+    ExitCode::SUCCESS
+}

@@ -16,6 +16,7 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::request::RequestId;
+use crate::util::sync::lock_tolerant;
 
 /// Why a request finished normally.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -116,21 +117,23 @@ impl TokenStream {
         self.id
     }
 
-    /// Next undelivered event for this request, if any.
+    /// Next undelivered event for this request, if any. Poison-tolerant:
+    /// event queues hold plain data, so a panic elsewhere never wedges the
+    /// consumer side of a stream.
     pub fn try_next(&self) -> Option<EngineEvent> {
-        self.inner.lock().unwrap().events.pop_front()
+        lock_tolerant(&self.inner).events.pop_front()
     }
 
     /// True once the terminal event has been queued (there may still be
     /// undrained events before it).
     pub fn finished(&self) -> bool {
-        self.inner.lock().unwrap().terminal_seen
+        lock_tolerant(&self.inner).terminal_seen
     }
 
     /// True when the terminal event has been queued *and* every event has
     /// been drained.
     pub fn drained(&self) -> bool {
-        let g = self.inner.lock().unwrap();
+        let g = lock_tolerant(&self.inner);
         g.terminal_seen && g.events.is_empty()
     }
 }
@@ -180,6 +183,26 @@ mod tests {
         assert_eq!(s.try_next(), Some(EngineEvent::Started { id: 9 }));
         assert!(matches!(s.try_next(), Some(EngineEvent::Token { index: 0, .. })));
         assert!(matches!(s.try_next(), Some(EngineEvent::Finished { .. })));
+        assert!(s.drained());
+    }
+
+    #[test]
+    fn poisoned_stream_lock_keeps_delivering() {
+        // Regression: try_next()/finished()/drained() used lock().unwrap(),
+        // so one panicking producer thread bricked the consumer side.
+        let inner = Arc::new(Mutex::new(StreamInner::default()));
+        let s = TokenStream::new(4, inner.clone());
+        let i2 = inner.clone();
+        let _ = std::thread::spawn(move || {
+            let mut g = i2.lock().unwrap();
+            g.events.push_back(EngineEvent::Started { id: 4 });
+            g.terminal_seen = true;
+            panic!("poison while holding the stream lock");
+        })
+        .join();
+        assert!(inner.is_poisoned());
+        assert!(s.finished());
+        assert_eq!(s.try_next(), Some(EngineEvent::Started { id: 4 }));
         assert!(s.drained());
     }
 }

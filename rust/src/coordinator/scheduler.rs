@@ -74,6 +74,7 @@ use crate::coordinator::request::{Request, RequestId, Response};
 use crate::model::sampler;
 use crate::model::tokenizer::EOS;
 use crate::util::rng::Rng;
+use crate::util::sync::lock_tolerant;
 
 /// Scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -143,7 +144,9 @@ fn deliver(
     let terminal = ev.is_terminal();
     if let Some(inner) = streams.get(&id) {
         {
-            let mut g = inner.lock().unwrap();
+            // Poison-tolerant: a consumer thread that panicked mid-drain
+            // must not wedge event delivery for the whole engine.
+            let mut g = lock_tolerant(inner);
             g.events.push_back(ev);
             if terminal {
                 g.terminal_seen = true;
@@ -336,8 +339,12 @@ impl<B: InferenceBackend> Engine<B> {
                 break;
             };
             if admitted > 0 || reserved > 0 {
-                let next_cost =
-                    self.backend.prefill_reserve_bytes(&self.queue[best].prompt);
+                // best_ready_index() returned an in-range index; stay
+                // panic-free in the tick loop anyway.
+                let Some(next) = self.queue.get(best) else {
+                    break;
+                };
+                let next_cost = self.backend.prefill_reserve_bytes(&next.prompt);
                 if reserved.saturating_add(next_cost) > self.backend.kv_headroom() {
                     break;
                 }
@@ -631,7 +638,14 @@ impl<B: InferenceBackend> Engine<B> {
             let mut sessions: Vec<&mut B::Session> = Vec::with_capacity(take);
             let mut works: Vec<RowWork> = Vec::with_capacity(take);
             for i in 0..take {
-                let a = slots[(start + i) % n].take().expect("row selected twice");
+                // The rotating window visits each slot at most once per
+                // tick (take <= n), so the slot is always still occupied;
+                // a double-select is a logic bug — skip the row rather
+                // than panic mid-tick.
+                let Some(a) = slots.get_mut((start + i) % n).and_then(Option::take) else {
+                    debug_assert!(false, "tick row selected twice");
+                    continue;
+                };
                 let Active { req, sess, prefill_done, decoded_any, decode_started, last, .. } = a;
                 let plen = req.prompt.len();
                 if *prefill_done < plen {
@@ -730,7 +744,7 @@ impl<B: InferenceBackend> Engine<B> {
         let first = match kind {
             RowKind::Prefill { consumed, last } => {
                 {
-                    let a = &mut self.active[ai];
+                    let Some(a) = self.active.get_mut(ai) else { return };
                     a.prefill_done += consumed;
                     a.prefill_s += walk_s;
                 }
@@ -753,7 +767,7 @@ impl<B: InferenceBackend> Engine<B> {
             return;
         };
         let (tok, index, ttft_s, reason) = {
-            let a = &mut self.active[ai];
+            let Some(a) = self.active.get_mut(ai) else { return };
             let tok = sampler::sample(&logits, a.req.sampler, &mut a.rng);
             a.tokens.push(tok);
             a.last = tok;

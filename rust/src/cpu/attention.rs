@@ -41,17 +41,17 @@ pub fn decode_attention_with(
         let kvh = h / group;
         // Pre-scale the query once (not each score) — same math, fewer
         // multiplies, and bounded magnitudes before accumulation (§5.3).
-        for i in 0..d {
-            qs[i] = q[h * d + i] * scale;
+        for (qv, &xv) in qs.iter_mut().zip(&q[h * d..(h + 1) * d]) {
+            *qv = xv * scale;
         }
-        for tok in 0..t {
-            scores[tok] = cache.key_dot(kvh, tok, &qs);
+        for (tok, sc) in scores.iter_mut().enumerate() {
+            *sc = cache.key_dot(kvh, tok, &qs);
         }
         be.softmax_inplace(&mut scores);
         let o = &mut out[h * d..(h + 1) * d];
         o.fill(0.0);
-        for tok in 0..t {
-            cache.accum_value(kvh, tok, scores[tok], o);
+        for (tok, &sc) in scores.iter().enumerate() {
+            cache.accum_value(kvh, tok, sc, o);
         }
     }
 }
@@ -226,41 +226,48 @@ pub fn segmented_prefill_attention_with(
         let kvh = h / group;
         for qi in 0..s {
             let qrow = &q[(qi * heads + h) * d..(qi * heads + h) * d + d];
-            for i in 0..d {
-                qs[i] = qrow[i] * scale;
+            for (qv, &xv) in qs.iter_mut().zip(qrow) {
+                *qv = xv * scale;
             }
             // Prefix rows (across segments, in order), then the causal
             // span of the fresh chunk — the same global key order
-            // 0..=base+qi as a monolithic pass.
-            let mut gi = 0usize;
+            // 0..=base+qi as a monolithic pass. One cursor over `scores`
+            // walks both spans (the prefix segments cover exactly `base`
+            // slots by the asserts above).
+            let mut score_wr = scores.iter_mut();
             for (pk, _) in prefix {
                 for ki in 0..pk.len() / row {
                     let krow = &pk[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                    scores[gi] = be.dot(&qs, krow);
-                    gi += 1;
+                    if let Some(sc) = score_wr.next() {
+                        *sc = be.dot(&qs, krow);
+                    }
                 }
             }
             let causal = qi + 1;
             for ki in 0..causal {
                 let krow = &k[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                scores[base + ki] = be.dot(&qs, krow);
+                if let Some(sc) = score_wr.next() {
+                    *sc = be.dot(&qs, krow);
+                }
             }
+            drop(score_wr);
             be.softmax_inplace(&mut scores[..base + causal]);
             let o = &mut out[(qi * heads + h) * d..(qi * heads + h) * d + d];
             o.fill(0.0);
-            let mut gi = 0usize;
+            let mut score_rd = scores.iter();
             for (_, pv) in prefix {
                 for ki in 0..pv.len() / row {
-                    let w = scores[gi];
-                    gi += 1;
                     let vrow = &pv[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                    be.axpy(w, vrow, o);
+                    if let Some(&w) = score_rd.next() {
+                        be.axpy(w, vrow, o);
+                    }
                 }
             }
             for ki in 0..causal {
-                let w = scores[base + ki];
                 let vrow = &v[(ki * kv_heads + kvh) * d..(ki * kv_heads + kvh) * d + d];
-                be.axpy(w, vrow, o);
+                if let Some(&w) = score_rd.next() {
+                    be.axpy(w, vrow, o);
+                }
             }
         }
     }

@@ -164,8 +164,8 @@ pub trait ComputeBackend: Send + Sync {
     fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
         let mut acc = 0f32;
-        for i in 0..a.len() {
-            acc += a[i] * b[i];
+        for (&x, &y) in a.iter().zip(b) {
+            acc += x * y;
         }
         acc
     }
@@ -173,8 +173,8 @@ pub trait ComputeBackend: Send + Sync {
     /// Attention value accumulate: `y[i] += w * x[i]`, in index order.
     fn axpy(&self, w: f32, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), y.len());
-        for i in 0..x.len() {
-            y[i] += w * x[i];
+        for (y, &x) in y.iter_mut().zip(x) {
+            *y += w * x;
         }
     }
 }
@@ -197,13 +197,13 @@ pub(crate) fn gemm_i8_block_scalar(
         for ii in 0..e_p {
             let arow = &a_panel[ii * l_p..(ii + 1) * l_p];
             let accrow = &mut acc[ii * h_p..(ii + 1) * h_p];
-            for jj in 0..h_p {
+            for (jj, acc_out) in accrow.iter_mut().enumerate() {
                 let wrow = &w_panel[jj * l_p..(jj + 1) * l_p];
                 let mut s = 0i32;
-                for ll in 0..l_p {
-                    s += arow[ll] as i32 * (wrow[ll] as i8) as i32;
+                for (&av, &wv) in arow.iter().zip(wrow) {
+                    s += av as i32 * (wv as i8) as i32;
                 }
-                accrow[jj] += s;
+                *acc_out += s;
             }
         }
     }
@@ -225,20 +225,21 @@ pub(crate) fn gemm_i4_block_scalar(
         for ii in 0..e_p {
             let arow = &a_panel[ii * l_p..(ii + 1) * l_p];
             let accrow = &mut acc[ii * h_p..(ii + 1) * h_p];
-            for jj in 0..h_p {
+            for (jj, acc_out) in accrow.iter_mut().enumerate() {
                 let wrow = &w_panel[jj * lp2..(jj + 1) * lp2];
                 let mut s = 0i32;
-                for b in 0..lp2 {
-                    let byte = wrow[b];
-                    s += arow[2 * b] as i32 * (byte & 0xF) as i32;
-                    s += arow[2 * b + 1] as i32 * (byte >> 4) as i32;
+                for (ap, &byte) in arow.chunks_exact(2).zip(wrow) {
+                    let &[a0, a1] = ap else { continue };
+                    s += a0 as i32 * (byte & 0xF) as i32;
+                    s += a1 as i32 * (byte >> 4) as i32;
                 }
-                accrow[jj] += s;
+                *acc_out += s;
             }
         }
     }
 }
 
+// lint: allow(hot-index): PackedActivations/PackedWeights size params and row_sums to e/h and acc to e_p*h_p by construction (reorder::pack); r/c are bounds-checked against e/h before use
 pub(crate) fn affine_correct_scalar(
     acc: &[i32],
     pa: &PackedActivations,
@@ -281,11 +282,11 @@ pub(crate) fn rope_apply_scalar(head: &mut [f32], cos: &[f32], sin: &[f32]) {
     let half = cos.len();
     debug_assert_eq!(sin.len(), half);
     debug_assert_eq!(head.len(), 2 * half);
-    for i in 0..half {
-        let a = head[i];
-        let b = head[i + half];
-        head[i] = a * cos[i] - b * sin[i];
-        head[i + half] = b * cos[i] + a * sin[i];
+    let (lo, hi) = head.split_at_mut(half.min(head.len()));
+    for (((a, b), &c), &s) in lo.iter_mut().zip(hi).zip(cos).zip(sin) {
+        let (av, bv) = (*a, *b);
+        *a = av * c - bv * s;
+        *b = bv * c + av * s;
     }
 }
 
@@ -360,12 +361,17 @@ impl ComputeBackend for SimdBackend {
     ) {
         #[cfg(target_arch = "x86_64")]
         if l_p == 8 && h_p % 2 == 0 {
-            // Constructed only after the AVX2 runtime check passed.
+            // SAFETY: SimdBackend is constructed only after the AVX2
+            // runtime check passed (`detect`), and the l_p == 8 /
+            // even-h_p guards above establish the kernel's layout
+            // preconditions.
             unsafe { simd_x86::gemm_i8_block(a, w, acc, tiles_l, e_p, h_p) };
             return;
         }
         #[cfg(target_arch = "aarch64")]
         if l_p == 8 {
+            // SAFETY: NEON is baseline on aarch64; l_p == 8 is the
+            // kernel's only layout precondition.
             unsafe { simd_neon::gemm_i8_block(a, w, acc, tiles_l, e_p, h_p) };
             return;
         }
@@ -384,6 +390,8 @@ impl ComputeBackend for SimdBackend {
     ) {
         #[cfg(target_arch = "x86_64")]
         if l_p == 8 && h_p % 2 == 0 {
+            // SAFETY: same contract as gemm_i8_block above — AVX2 verified
+            // at construction, l_p == 8 and even h_p guaranteed here.
             unsafe { simd_x86::gemm_i4_block(a, w, acc, tiles_l, e_p, h_p) };
             return;
         }
@@ -404,6 +412,8 @@ mod simd_x86 {
     use std::arch::x86_64::*;
 
     /// Sum the four i32 lanes of an SSE register.
+    // SAFETY: uses only SSE2 intrinsics, baseline on every x86_64 target;
+    // `unsafe fn` solely so it can inline into the target_feature callers.
     #[inline]
     unsafe fn hsum4(v: __m128i) -> i32 {
         let s = _mm_add_epi32(v, _mm_unpackhi_epi64(v, v));
@@ -416,6 +426,11 @@ mod simd_x86 {
     /// 16-byte load covering two weight rows, madd, and keep the 8-lane
     /// i32 accumulator live across the whole bl walk; lanes 0–3 reduce to
     /// weight row jj, lanes 4–7 to row jj+1.
+    // lint: allow(hot-index): acc is e_p*h_p by the packed-tile contract and jj+1 < h_p because h_p is even; same bounds the pointer reads rely on
+    // SAFETY: caller must have verified AVX2 at runtime and uphold the
+    // packed-tile layout — a holds tiles_l*e_p*8 i8 codes, w holds
+    // tiles_l*h_p*8 weight codes, acc holds e_p*h_p i32, h_p is even
+    // (the 16-byte weight load covers rows jj and jj+1).
     #[target_feature(enable = "avx2")]
     pub unsafe fn gemm_i8_block(
         a: &[i8],
@@ -451,6 +466,11 @@ mod simd_x86 {
     /// recover element order (low nibble = even l index), then run the
     /// same widen+madd pipeline. Nibbles are 0..15, so the i8→i16
     /// sign-extension equals the scalar zero-extension.
+    // lint: allow(hot-index): acc is e_p*h_p by the packed-tile contract and jj+1 < h_p because h_p is even; same bounds the pointer reads rely on
+    // SAFETY: caller must have verified AVX2 at runtime and uphold the
+    // packed-tile layout — a holds tiles_l*e_p*8 i8 codes, w holds
+    // tiles_l*h_p*4 packed nibble bytes, acc holds e_p*h_p i32, h_p is
+    // even (each 8-byte weight load covers packed rows jj and jj+1).
     #[target_feature(enable = "avx2")]
     pub unsafe fn gemm_i4_block(
         a: &[i8],
@@ -497,6 +517,10 @@ mod simd_x86 {
 mod simd_neon {
     use std::arch::aarch64::*;
 
+    // lint: allow(hot-index): acc is e_p*h_p by the packed-tile contract; same bounds the pointer reads rely on
+    // SAFETY: caller must uphold the packed-tile layout — a holds
+    // tiles_l*e_p*8 i8 codes, w holds tiles_l*h_p*8 weight codes, acc
+    // holds e_p*h_p i32 (NEON itself is baseline on aarch64).
     #[target_feature(enable = "neon")]
     pub unsafe fn gemm_i8_block(
         a: &[i8],

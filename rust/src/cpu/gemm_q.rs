@@ -144,6 +144,7 @@ impl QLinear {
 }
 
 /// Reference implementation over the dequantized matrix (tests only; slow).
+// lint: allow(hot-index): test-only oracle, never on the serving path; an out-of-bounds panic here is a test failure, which is the point
 pub fn qlinear_reference(w: &QuantizedMatrix, x: &[f32], e: usize, bias: Option<&[f32]>) -> Vec<f32> {
     use crate::quant::asym::quantize_activations;
     let (q, params, sums) = quantize_activations(x, e, w.k);

@@ -85,7 +85,11 @@ impl SocProfile {
     /// The 4 high-performance cores the paper benches with (1 prime + 3 perf).
     pub fn high_perf_cores(&self, n: usize) -> Vec<CoreClass> {
         let mut cores: Vec<CoreClass> = self.cores.clone();
-        cores.sort_by(|a, b| b.rel_perf.partial_cmp(&a.rel_perf).unwrap());
+        // Descending by rel_perf; a NaN rel_perf (miscalibrated profile)
+        // ranks last instead of panicking (total_cmp alone would rank +NaN
+        // *first* here, which is worse than the panic it replaces).
+        let key = |c: &CoreClass| if c.rel_perf.is_nan() { f64::NEG_INFINITY } else { c.rel_perf };
+        cores.sort_by(|a, b| key(b).total_cmp(&key(a)));
         cores.truncate(n);
         cores
     }
@@ -132,6 +136,22 @@ mod tests {
         assert_eq!(four.len(), 4);
         assert_eq!(four[0].name, "prime");
         assert!(four[1..].iter().all(|c| c.name == "performance"));
+    }
+
+    #[test]
+    fn nan_rel_perf_does_not_panic_core_selection() {
+        // Regression: high_perf_cores() used `partial_cmp().unwrap()`, so a
+        // NaN rel_perf (miscalibrated profile) panicked instead of sorting.
+        let mut soc = SocProfile::snapdragon_8gen3();
+        soc.cores.push(CoreClass {
+            name: "bogus",
+            rel_perf: f64::NAN,
+            int8_ops_per_s: 0.0,
+            f32_flops_per_s: 0.0,
+        });
+        let four = soc.high_perf_cores(4);
+        assert_eq!(four.len(), 4);
+        assert!(four.iter().all(|c| c.name != "bogus"), "NaN sorts last in descending order");
     }
 
     #[test]

@@ -118,10 +118,14 @@ impl KvLayer {
     /// it is shared with the prefix cache or another session. Bytes and
     /// holder accounting are unaffected: the layer swaps one referenced
     /// page for another.
-    fn writable_page(&mut self, pi: usize) -> &mut Page {
+    fn writable_page(&mut self, pi: usize) -> Option<&mut Page> {
         let pool = self.pool.clone();
-        pool.make_exclusive(&mut self.pages[pi]);
-        Arc::get_mut(&mut self.pages[pi]).unwrap().page_mut()
+        let h = self.pages.get_mut(pi)?;
+        pool.make_exclusive(h);
+        // make_exclusive() returned with the handle's refcount at 1, so
+        // get_mut succeeds; `?` keeps the append path panic-free if that
+        // invariant ever breaks.
+        Some(Arc::get_mut(h)?.page_mut())
     }
 
     pub fn len(&self) -> usize {
@@ -167,16 +171,20 @@ impl KvLayer {
         assert_eq!(k.len(), kvh * d);
         assert_eq!(v.len(), kvh * d);
         let (pi, si) = self.tail_slot();
-        let page = self.writable_page(pi);
+        let Some(page) = self.writable_page(pi) else {
+            debug_assert!(false, "append: tail page unavailable");
+            return;
+        };
         let base = si * kvh * d;
         for h in 0..kvh {
             let ks = &k[h * d..(h + 1) * d];
             let p = asym::params_for(ks, asym::I8_MIN, asym::I8_MAX);
-            for (i, &x) in ks.iter().enumerate() {
-                page.k_q[base + h * d + i] =
-                    asym::quantize_one(x, p, asym::I8_MIN, asym::I8_MAX) as i8;
+            for (dst, &x) in page.k_q[base + h * d..base + (h + 1) * d].iter_mut().zip(ks) {
+                *dst = asym::quantize_one(x, p, asym::I8_MIN, asym::I8_MAX) as i8;
             }
-            page.k_params[si * kvh + h] = p;
+            if let Some(slot) = page.k_params.get_mut(si * kvh + h) {
+                *slot = p;
+            }
             let vs = &v[h * d..(h + 1) * d];
             fp8::encode_slice(vs, &mut page.v_f8[base + h * d..base + (h + 1) * d]);
         }
@@ -190,14 +198,20 @@ impl KvLayer {
         let d = self.head_dim;
         debug_assert_eq!(q.len(), d);
         let (pi, si) = self.locate(tok);
-        let page = self.pages[pi].page();
+        let Some(page) = self.pages.get(pi).map(|h| h.page()) else {
+            debug_assert!(false, "key_dot: token past tail");
+            return 0.0;
+        };
         let base = (si * self.kv_heads + head) * d;
-        let p = page.k_params[si * self.kv_heads + head];
+        let Some(&p) = page.k_params.get(si * self.kv_heads + head) else {
+            debug_assert!(false, "key_dot: head out of range");
+            return 0.0;
+        };
         let mut acc = 0f32;
         let mut qsum = 0f32;
-        for i in 0..d {
-            acc += q[i] * page.k_q[base + i] as f32;
-            qsum += q[i];
+        for (&qi, &kq) in q.iter().zip(&page.k_q[base..base + d]) {
+            acc += qi * kq as f32;
+            qsum += qi;
         }
         p.scale * acc + p.bias * qsum
     }
@@ -208,10 +222,13 @@ impl KvLayer {
         let d = self.head_dim;
         debug_assert_eq!(out.len(), d);
         let (pi, si) = self.locate(tok);
-        let page = self.pages[pi].page();
+        let Some(page) = self.pages.get(pi).map(|h| h.page()) else {
+            debug_assert!(false, "accum_value: token past tail");
+            return;
+        };
         let base = (si * self.kv_heads + head) * d;
-        for i in 0..d {
-            out[i] += w * fp8::f8e4m3_to_f32(page.v_f8[base + i]);
+        for (o, &vb) in out.iter_mut().zip(&page.v_f8[base..base + d]) {
+            *o += w * fp8::f8e4m3_to_f32(vb);
         }
     }
 
@@ -220,14 +237,19 @@ impl KvLayer {
     pub fn serialize_token(&self, tok: usize) -> Vec<u8> {
         let d = self.head_dim;
         let (pi, si) = self.locate(tok);
-        let page = self.pages[pi].page();
         let mut out = Vec::with_capacity(self.bytes_per_token());
+        let Some(page) = self.pages.get(pi).map(|h| h.page()) else {
+            debug_assert!(false, "serialize_token: token past tail");
+            return out;
+        };
         for h in 0..self.kv_heads {
             let base = (si * self.kv_heads + h) * d;
-            for i in 0..d {
-                out.push(page.k_q[base + i] as u8);
-            }
-            let p = page.k_params[si * self.kv_heads + h];
+            out.extend(page.k_q[base..base + d].iter().map(|&kq| kq as u8));
+            let p = page
+                .k_params
+                .get(si * self.kv_heads + h)
+                .copied()
+                .unwrap_or(AsymParams { scale: 0.0, bias: 0.0 });
             out.extend_from_slice(&p.scale.to_le_bytes());
             out.extend_from_slice(&p.bias.to_le_bytes());
             out.extend_from_slice(&page.v_f8[base..base + d]);
@@ -241,18 +263,25 @@ impl KvLayer {
         let kvh = self.kv_heads;
         assert_eq!(rec.len(), self.bytes_per_token());
         let (pi, si) = self.tail_slot();
-        let page = self.writable_page(pi);
+        let Some(page) = self.writable_page(pi) else {
+            debug_assert!(false, "push_serialized: tail page unavailable");
+            return;
+        };
         let base = si * kvh * d;
         let mut off = 0;
         for h in 0..kvh {
-            for i in 0..d {
-                page.k_q[base + h * d + i] = rec[off + i] as i8;
+            for (dst, &b) in
+                page.k_q[base + h * d..base + (h + 1) * d].iter_mut().zip(&rec[off..off + d])
+            {
+                *dst = b as i8;
             }
             off += d;
-            let scale = f32::from_le_bytes(rec[off..off + 4].try_into().unwrap());
-            let bias = f32::from_le_bytes(rec[off + 4..off + 8].try_into().unwrap());
+            let scale = f32_le_at(rec, off);
+            let bias = f32_le_at(rec, off + 4);
             off += 8;
-            page.k_params[si * kvh + h] = AsymParams { scale, bias };
+            if let Some(slot) = page.k_params.get_mut(si * kvh + h) {
+                *slot = AsymParams { scale, bias };
+            }
             page.v_f8[base + h * d..base + (h + 1) * d].copy_from_slice(&rec[off..off + d]);
             off += d;
         }
@@ -336,6 +365,19 @@ impl KvLayer {
     }
 }
 
+/// Read a little-endian f32 at `off`, tolerating a truncated record (the
+/// flash-spill path feeds this): short reads decode as 0.0 under a
+/// `debug_assert!` instead of panicking mid-restore.
+fn f32_le_at(rec: &[u8], off: usize) -> f32 {
+    let mut b = [0u8; 4];
+    if let Some(src) = rec.get(off..off + 4) {
+        b.copy_from_slice(src);
+    } else {
+        debug_assert!(false, "f32 read past end of KV record");
+    }
+    f32::from_le_bytes(b)
+}
+
 impl Clone for KvLayer {
     /// Deep copy; the clone draws its own (exclusive) pages from the same
     /// pool and reports to no holder.
@@ -343,7 +385,11 @@ impl Clone for KvLayer {
         let mut out = KvLayer::with_pool(self.kv_heads, self.head_dim, self.pool.clone());
         for page in &self.pages {
             let mut np = self.pool.take_handle(self.kv_heads, self.head_dim);
-            Arc::get_mut(&mut np).unwrap().page_mut().copy_from(page.page());
+            // take_handle() hands back a freshly allocated Arc (refcount 1),
+            // so get_mut always succeeds; if-let keeps the path panic-free.
+            if let Some(fresh) = Arc::get_mut(&mut np) {
+                fresh.page_mut().copy_from(page.page());
+            }
             out.pages.push_back(np);
         }
         out.len = self.len;
@@ -408,6 +454,24 @@ mod tests {
             kv.append(&k, &v);
         }
         kv
+    }
+
+    #[test]
+    fn f32_le_at_reads_in_bounds() {
+        // Regression companion to the `try_into().unwrap()` removal in
+        // push_serialized: in-bounds reads must decode identically.
+        let mut rec = vec![0u8; 12];
+        rec[4..8].copy_from_slice(&1.5f32.to_le_bytes());
+        assert_eq!(f32_le_at(&rec, 4), 1.5);
+        assert_eq!(f32_le_at(&rec, 0), 0.0);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn f32_le_at_tolerates_truncated_records_in_release() {
+        // In release builds a short read decodes as 0.0 instead of
+        // panicking the spill-restore path (debug builds assert loudly).
+        assert_eq!(f32_le_at(&[1, 2], 0), 0.0);
     }
 
     /// Decode one head's (k_q, scale, bias) out of the serialized record —

@@ -29,6 +29,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::quant::asym::AsymParams;
+use crate::util::sync::lock_tolerant;
 
 /// Token records per page. 16 records keeps pages ≈ tens of KB for
 /// 7B-class geometry (4 kv heads × 128 dim ⇒ ~17 KB/page) — large enough
@@ -221,7 +222,7 @@ impl KvPool {
     /// must check [`KvPool::over_budget`] and evict (spill to flash).
     pub fn take_page(&self, kv_heads: usize, head_dim: usize) -> Page {
         let bytes = Self::page_bytes(kv_heads, head_dim);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         g.in_use_bytes += bytes;
         g.bump_peak();
         let recycled = g.free.get_mut(&(kv_heads, head_dim)).and_then(|v| v.pop());
@@ -241,7 +242,7 @@ impl KvPool {
     /// the free list is full).
     pub fn put_page(&self, kv_heads: usize, head_dim: usize, page: Page) {
         let bytes = Self::page_bytes(kv_heads, head_dim);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         g.in_use_bytes = g.in_use_bytes.saturating_sub(bytes);
         g.stats.returned += 1;
         let list = g.free.entry((kv_heads, head_dim)).or_default();
@@ -274,7 +275,7 @@ impl KvPool {
             page: fresh,
             pool: self.clone(),
         });
-        self.inner.lock().unwrap().stats.cow_copies += 1;
+        lock_tolerant(&self.inner).stats.cow_copies += 1;
         true
     }
 
@@ -282,7 +283,7 @@ impl KvPool {
     /// The client's `KvLayer`s report referenced page bytes against this
     /// id, making [`KvPool::largest_holder`] exact.
     pub fn register_holder(&self) -> HolderId {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         let id = HolderId(g.next_holder);
         g.next_holder += 1;
         g.holders.insert(id, 0);
@@ -292,16 +293,16 @@ impl KvPool {
     /// Remove a client from the registry (its layers should already have
     /// released their pages).
     pub fn unregister_holder(&self, id: HolderId) {
-        self.inner.lock().unwrap().holders.remove(&id);
+        lock_tolerant(&self.inner).holders.remove(&id);
     }
 
     pub(crate) fn holder_add(&self, id: HolderId, bytes: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         *g.holders.entry(id).or_insert(0) += bytes;
     }
 
     pub(crate) fn holder_sub(&self, id: HolderId, bytes: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         if let Some(b) = g.holders.get_mut(&id) {
             *b = b.saturating_sub(bytes);
         }
@@ -312,13 +313,13 @@ impl KvPool {
     /// answers "who would free the most by shedding"), so the sum over
     /// holders can exceed [`KvPool::resident_bytes`].
     pub fn holder_bytes(&self, id: HolderId) -> usize {
-        self.inner.lock().unwrap().holders.get(&id).copied().unwrap_or(0)
+        lock_tolerant(&self.inner).holders.get(&id).copied().unwrap_or(0)
     }
 
     /// The registered holder referencing the most page bytes (ties break
     /// toward the oldest registration, for determinism).
     pub fn largest_holder(&self) -> Option<(HolderId, usize)> {
-        let g = self.inner.lock().unwrap();
+        let g = lock_tolerant(&self.inner);
         let mut best: Option<(HolderId, usize)> = None;
         for (&id, &bytes) in &g.holders {
             match best {
@@ -335,19 +336,19 @@ impl KvPool {
     /// Charge live fp32 prefill-stash bytes (chunked-prefill scratch or a
     /// cached prefix's retained stash) against the pool's footprint.
     pub fn add_stash(&self, bytes: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         g.stash_bytes += bytes;
         g.bump_peak();
     }
 
     pub fn sub_stash(&self, bytes: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         g.stash_bytes = g.stash_bytes.saturating_sub(bytes);
     }
 
     /// Live fp32 stash bytes currently charged.
     pub fn stash_bytes(&self) -> usize {
-        self.inner.lock().unwrap().stash_bytes
+        lock_tolerant(&self.inner).stash_bytes
     }
 
     /// Byte budget this pool was created with.
@@ -359,7 +360,7 @@ impl KvPool {
     /// they are reclaimable immediately and carry no KV state). Shared
     /// pages are counted once, no matter how many handles reference them.
     pub fn resident_bytes(&self) -> usize {
-        self.inner.lock().unwrap().in_use_bytes
+        lock_tolerant(&self.inner).in_use_bytes
     }
 
     /// Full tracked DRAM footprint: live pages **plus** live fp32 prefill
@@ -367,7 +368,7 @@ impl KvPool {
     /// [`KvPool::over_budget`] (pages only), because spilling KV records
     /// cannot shrink a stash.
     pub fn footprint_bytes(&self) -> usize {
-        let g = self.inner.lock().unwrap();
+        let g = lock_tolerant(&self.inner);
         g.in_use_bytes + g.stash_bytes
     }
 
@@ -390,7 +391,7 @@ impl KvPool {
     }
 
     pub fn stats(&self) -> PoolStats {
-        self.inner.lock().unwrap().stats
+        lock_tolerant(&self.inner).stats
     }
 }
 
@@ -567,7 +568,7 @@ impl PrefixCache {
         if !self.enabled() || prompt.is_empty() {
             return 0;
         }
-        let g = self.inner.lock().unwrap();
+        let g = lock_tolerant(&self.inner);
         let best = g.entries.iter().map(|e| lcp(&e.ids, prompt)).max().unwrap_or(0);
         best.min(prompt.len() - 1)
     }
@@ -579,7 +580,7 @@ impl PrefixCache {
         if !self.enabled() || prompt.is_empty() {
             return None;
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         g.lookups += 1;
         let (idx, covered) = g
             .entries
@@ -593,7 +594,8 @@ impl PrefixCache {
         }
         g.clock += 1;
         let clock = g.clock;
-        let e = &mut g.entries[idx];
+        // `idx` came from enumerate() above, but stay panic-free anyway.
+        let e = g.entries.get_mut(idx)?;
         e.last_use = clock;
         let per_page = e.pages.first().map_or(0, |l| {
             l.first().map_or(0, |h| KvPool::page_bytes(h.kv_heads(), h.head_dim()))
@@ -601,11 +603,11 @@ impl PrefixCache {
         let npages = fork.div_ceil(PAGE_TOKENS);
         let pages: Vec<Vec<PageHandle>> =
             e.pages.iter().map(|l| l[..npages].to_vec()).collect();
+        let stash = e.stash.clone();
         g.hits += 1;
         g.tokens_saved += fork as u64;
         g.bytes_saved += (pages.len() * npages * per_page) as u64;
-        let e = &g.entries[idx];
-        Some(PrefixMatch { fork, covered, pages, stash: e.stash.clone() })
+        Some(PrefixMatch { fork, covered, pages, stash })
     }
 
     /// Publish a finished prefill: `ids` is the full prompt, `pages` the
@@ -628,7 +630,7 @@ impl PrefixCache {
             l.first().map_or(0, |h| KvPool::page_bytes(h.kv_heads(), h.head_dim()))
         });
         let page_bytes = pages.iter().map(|l| l.len() * per_page).sum();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         if g.entries.iter().any(|e| e.ids.len() >= ids.len() && e.ids[..ids.len()] == ids[..]) {
             return false;
         }
@@ -664,7 +666,7 @@ impl PrefixCache {
     /// live sessions survive until those sessions release them). Returns
     /// false when the cache is empty.
     pub fn reclaim_lru(&self) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         let Some(idx) =
             g.entries.iter().enumerate().min_by_key(|(_, e)| e.last_use).map(|(i, _)| i)
         else {
@@ -677,7 +679,7 @@ impl PrefixCache {
 
     /// Drop every entry.
     pub fn clear(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_tolerant(&self.inner);
         let n = g.entries.len() as u64;
         g.entries.clear();
         g.evictions += n;
@@ -685,12 +687,12 @@ impl PrefixCache {
 
     /// Bytes the cache currently pins (pages + stashes).
     pub fn bytes(&self) -> usize {
-        let g = self.inner.lock().unwrap();
+        let g = lock_tolerant(&self.inner);
         g.entries.iter().map(PrefixEntry::bytes).sum()
     }
 
     pub fn metrics(&self) -> PrefixCacheMetrics {
-        let g = self.inner.lock().unwrap();
+        let g = lock_tolerant(&self.inner);
         PrefixCacheMetrics {
             lookups: g.lookups,
             hits: g.hits,
@@ -735,6 +737,27 @@ mod tests {
         assert_eq!(s.allocated, 2);
         assert_eq!(s.returned, 2);
         assert_eq!(s.peak_bytes, 2 * pb);
+    }
+
+    #[test]
+    fn poisoned_pool_lock_keeps_serving() {
+        // Regression: pool accounting used `lock().unwrap()`, so one panic
+        // while holding the inner lock cascaded into every later pool call.
+        // A panicked tick must fail one request, not wedge the shared pool.
+        let pool = Arc::new(KvPool::new(1 << 20));
+        let p2 = pool.clone();
+        let _ = std::thread::spawn(move || {
+            let _page = p2.take_page(2, 8);
+            let _g = p2.inner.lock(); // hold the lock across the panic
+            panic!("poison the pool lock");
+        })
+        .join();
+        assert!(pool.inner.is_poisoned(), "setup: lock must actually be poisoned");
+        let pb = KvPool::page_bytes(2, 8);
+        let p = pool.take_page(2, 8);
+        assert_eq!(pool.resident_bytes(), 2 * pb, "accounting still works after poisoning");
+        pool.put_page(2, 8, p);
+        assert!(pool.stats().allocated >= 2);
     }
 
     #[test]

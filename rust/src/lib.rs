@@ -21,6 +21,7 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::manual_memcpy)]
 
+pub mod analysis;
 pub mod baselines;
 pub mod bench;
 pub mod coordinator;

@@ -263,23 +263,24 @@ impl HybridKvLayer {
         let mut qs = vec![0f32; d];
         for h in 0..heads {
             let kvh = h / group;
-            for i in 0..d {
-                qs[i] = q[h * d + i] * scale;
+            for (qv, &xv) in qs.iter_mut().zip(&q[h * d..(h + 1) * d]) {
+                *qv = xv * scale;
             }
-            for tok in 0..n_sp {
-                scores[tok] = self.staging.key_dot(kvh, tok, &qs);
+            let (sp_scores, res_scores) = scores.split_at_mut(n_sp);
+            for (tok, sc) in sp_scores.iter_mut().enumerate() {
+                *sc = self.staging.key_dot(kvh, tok, &qs);
             }
-            for tok in 0..n_res {
-                scores[n_sp + tok] = self.resident.key_dot(kvh, tok, &qs);
+            for (tok, sc) in res_scores.iter_mut().enumerate() {
+                *sc = self.resident.key_dot(kvh, tok, &qs);
             }
             softmax_inplace(&mut scores);
             let o = &mut out[h * d..(h + 1) * d];
             o.fill(0.0);
-            for tok in 0..n_sp {
-                self.staging.accum_value(kvh, tok, scores[tok], o);
+            for (tok, &sc) in scores[..n_sp].iter().enumerate() {
+                self.staging.accum_value(kvh, tok, sc, o);
             }
-            for tok in 0..n_res {
-                self.resident.accum_value(kvh, tok, scores[n_sp + tok], o);
+            for (tok, &sc) in scores[n_sp..].iter().enumerate() {
+                self.resident.accum_value(kvh, tok, sc, o);
             }
         }
     }
@@ -360,32 +361,30 @@ impl HybridKvLayer {
         let mut run_s = vec![0f32; heads];
         out.fill(0.0);
         let mut qs = vec![0f32; heads * d];
-        for h in 0..heads {
-            for i in 0..d {
-                qs[h * d + i] = q[h * d + i] * scale;
-            }
+        for (qv, &xv) in qs.iter_mut().zip(q) {
+            *qv = xv * scale;
         }
         let absorb = |cache: &KvLayer,
                           tok: usize,
                           run_m: &mut [f32],
                           run_s: &mut [f32],
                           out: &mut [f32]| {
-            for h in 0..heads {
+            for (h, (m, s)) in run_m.iter_mut().zip(run_s.iter_mut()).enumerate() {
                 let kvh = h / group;
                 let score = cache.key_dot(kvh, tok, &qs[h * d..(h + 1) * d]);
                 let o = &mut out[h * d..(h + 1) * d];
-                if score > run_m[h] {
-                    let r = (run_m[h] - score).exp(); // rescale history
-                    if run_s[h] > 0.0 {
+                if score > *m {
+                    let r = (*m - score).exp(); // rescale history
+                    if *s > 0.0 {
                         for v in o.iter_mut() {
                             *v *= r;
                         }
                     }
-                    run_s[h] *= r;
-                    run_m[h] = score;
+                    *s *= r;
+                    *m = score;
                 }
-                let w = (score - run_m[h]).exp();
-                run_s[h] += w;
+                let w = (score - *m).exp();
+                *s += w;
                 cache.accum_value(kvh, tok, w, o);
             }
         };
@@ -421,8 +420,8 @@ impl HybridKvLayer {
             absorb(&self.resident, tok, &mut run_m, &mut run_s, out);
         }
         // Normalize.
-        for h in 0..heads {
-            let inv = 1.0 / run_s[h];
+        for (h, &s) in run_s.iter().enumerate() {
+            let inv = 1.0 / s;
             for v in out[h * d..(h + 1) * d].iter_mut() {
                 *v *= inv;
             }

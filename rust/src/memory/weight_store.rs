@@ -150,10 +150,6 @@ const BITS_INT4: u8 = 1;
 const LAYOUT_CPU_TILE: u8 = 0;
 const LAYOUT_GPU_IMAGE: u8 = 1;
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
 fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
@@ -168,13 +164,16 @@ fn put_f32_slice(out: &mut Vec<u8>, xs: &[f32]) {
 fn put_qlinear(out: &mut Vec<u8>, q: &QLinear) {
     let p = &q.packed;
     out.push(LAYOUT_CPU_TILE);
-    put_u32(out, p.h as u32);
-    put_u32(out, p.l as u32);
-    put_u32(out, p.h_pad as u32);
-    put_u32(out, p.l_pad as u32);
-    put_u32(out, p.tile.e_p as u32);
-    put_u32(out, p.tile.h_p as u32);
-    put_u32(out, p.tile.l_p as u32);
+    // Dimensions ride as u64: usize→u64 is lossless on every target, so
+    // the writer cannot truncate (`as u32` silently would); the reader's
+    // u64→usize conversion is the single checked narrowing.
+    put_u64(out, p.h as u64);
+    put_u64(out, p.l as u64);
+    put_u64(out, p.h_pad as u64);
+    put_u64(out, p.l_pad as u64);
+    put_u64(out, p.tile.e_p as u64);
+    put_u64(out, p.tile.h_p as u64);
+    put_u64(out, p.tile.l_p as u64);
     out.push(match p.bits {
         WeightBits::Int8 => BITS_INT8,
         WeightBits::Int4 => BITS_INT4,
@@ -222,16 +221,18 @@ impl<'a> Cursor<'a> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> std::io::Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
     fn u64(&mut self) -> std::io::Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn len_prefix(&mut self) -> std::io::Result<usize> {
         usize::try_from(self.u64()?).map_err(|_| corrupt("length prefix too large"))
+    }
+
+    /// A u64 dimension field, checked into usize (fails cleanly on 32-bit
+    /// hosts instead of wrapping).
+    fn dim(&mut self) -> std::io::Result<usize> {
+        usize::try_from(self.u64()?).map_err(|_| corrupt("dimension too large"))
     }
 
     fn f32_slice(&mut self) -> std::io::Result<Vec<f32>> {
@@ -253,15 +254,11 @@ fn get_qlinear(c: &mut Cursor) -> std::io::Result<QLinear> {
         }
         other => return Err(corrupt(&format!("unknown layout key {other}"))),
     }
-    let h = c.u32()? as usize;
-    let l = c.u32()? as usize;
-    let h_pad = c.u32()? as usize;
-    let l_pad = c.u32()? as usize;
-    let tile = TileConfig {
-        e_p: c.u32()? as usize,
-        h_p: c.u32()? as usize,
-        l_p: c.u32()? as usize,
-    };
+    let h = c.dim()?;
+    let l = c.dim()?;
+    let h_pad = c.dim()?;
+    let l_pad = c.dim()?;
+    let tile = TileConfig { e_p: c.dim()?, h_p: c.dim()?, l_p: c.dim()? };
     let bits = match c.u8()? {
         BITS_INT8 => WeightBits::Int8,
         BITS_INT4 => WeightBits::Int4,
@@ -307,11 +304,13 @@ fn get_qlinear(c: &mut Cursor) -> std::io::Result<QLinear> {
 /// container discipline as the CPU records, so GPU tensors can ride the
 /// same flash device and residency arena.
 pub fn gpu_image_to_blob(img: &GpuWeightImage) -> Vec<u8> {
-    let mut out = Vec::with_capacity(1 + 12 + 8 + img.data.len());
+    let mut out = Vec::with_capacity(1 + 24 + 8 + img.data.len());
     out.push(LAYOUT_GPU_IMAGE);
-    put_u32(&mut out, img.h as u32);
-    put_u32(&mut out, img.l as u32);
-    put_u32(&mut out, img.l_pad as u32);
+    // u64 dims: lossless on the writer, checked on the reader (see
+    // `put_qlinear`).
+    put_u64(&mut out, img.h as u64);
+    put_u64(&mut out, img.l as u64);
+    put_u64(&mut out, img.l_pad as u64);
     put_u64(&mut out, img.data.len() as u64);
     out.extend_from_slice(&img.data);
     out
@@ -328,9 +327,9 @@ pub fn gpu_image_from_blob(buf: &[u8]) -> std::io::Result<GpuWeightImage> {
         }
         other => return Err(corrupt(&format!("unknown layout key {other}"))),
     }
-    let h = c.u32()? as usize;
-    let l = c.u32()? as usize;
-    let l_pad = c.u32()? as usize;
+    let h = c.dim()?;
+    let l = c.dim()?;
+    let l_pad = c.dim()?;
     let dlen = c.len_prefix()?;
     let data = c.take(dlen)?.to_vec();
     if c.off != buf.len() {
@@ -1043,6 +1042,20 @@ mod tests {
             assert_eq!(back.l_pad, img.l_pad);
             assert_eq!(back.data, img.data, "{h}x{l}");
         }
+    }
+
+    #[test]
+    fn blob_dims_are_u64_and_forged_dims_fail_cleanly() {
+        // Regression: dimensions used to be written with `as u32`, which
+        // silently truncates. They now ride as lossless u64 fields...
+        let img = gpu_image(3, 8, 32);
+        let blob = gpu_image_to_blob(&img);
+        assert_eq!(blob.len(), 1 + 3 * 8 + 8 + img.data.len());
+        // ...and a forged header with an absurd dimension is a clean
+        // decode error (consistency check), never a wrapped size.
+        let mut bad = blob.clone();
+        bad[1..9].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(gpu_image_from_blob(&bad).is_err());
     }
 
     #[test]

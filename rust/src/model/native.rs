@@ -366,21 +366,21 @@ fn qlin(
     let q = store.read(&format!("{name}.q"))?;
     let s = store.read(&format!("{name}.s"))?;
     let b = store.read(&format!("{name}.b"))?;
-    if q.shape.len() != 2 {
+    let &[d0, d1] = q.shape.as_slice() else {
         return Err(invalid(&format!("{name}: expected 2-D weights, shape {:?}", q.shape)));
-    }
+    };
     let (n, k) = match bits {
         WeightBits::Int8 => {
             if q.dtype != DT_I8 {
                 return Err(invalid(&format!("{name}: expected i8 weights")));
             }
-            (q.shape[0], q.shape[1])
+            (d0, d1)
         }
         WeightBits::Int4 => {
             if q.dtype != DT_U8 {
                 return Err(invalid(&format!("{name}: expected packed u8 weights")));
             }
-            (q.shape[0], q.shape[1] * 2)
+            (d0, d1 * 2)
         }
     };
     let scales = s.try_f32()?;
@@ -486,11 +486,15 @@ impl NativeModel {
             .collect();
         let mut rope_sin = vec![0f32; cfg.max_len * half];
         let mut rope_cos = vec![0f32; cfg.max_len * half];
-        for pos in 0..cfg.max_len {
-            for (i, &f) in inv_freq.iter().enumerate() {
-                let (s, c) = (pos as f32 * f).sin_cos();
-                rope_sin[pos * half + i] = s;
-                rope_cos[pos * half + i] = c;
+        if half > 0 {
+            for (pos, (srow, crow)) in
+                rope_sin.chunks_mut(half).zip(rope_cos.chunks_mut(half)).enumerate()
+            {
+                for ((s, c), &f) in srow.iter_mut().zip(crow.iter_mut()).zip(&inv_freq) {
+                    let (sv, cv) = (pos as f32 * f).sin_cos();
+                    *s = sv;
+                    *c = cv;
+                }
             }
         }
         Ok(NativeModel {
@@ -767,14 +771,21 @@ impl NativeModel {
         Ok(shed)
     }
 
-    fn embed(&self, ids: &[usize], out: &mut [f32]) {
+    fn embed(&self, ids: &[usize], out: &mut [f32]) -> std::io::Result<()> {
         if let Some(table) = &self.embedding_dram {
             let h = self.config.hidden;
-            for (i, &id) in ids.iter().enumerate() {
-                out[i * h..(i + 1) * h].copy_from_slice(&table[id * h..(id + 1) * h]);
+            if h == 0 {
+                return Ok(());
             }
+            for (&id, dst) in ids.iter().zip(out.chunks_mut(h)) {
+                let row = table
+                    .get(id * h..(id + 1) * h)
+                    .ok_or_else(|| invalid(&format!("token id {id} outside embedding table")))?;
+                dst.copy_from_slice(row);
+            }
+            Ok(())
         } else {
-            self.embedding.lookup_batch(ids, out).expect("flash embedding");
+            self.embedding.lookup_batch(ids, out)
         }
     }
 
@@ -792,10 +803,10 @@ impl NativeModel {
         } else {
             let mut sin = vec![0f32; half];
             let mut cos = vec![0f32; half];
-            for i in 0..half {
-                let (s, c) = (pos as f32 * self.inv_freq[i]).sin_cos();
-                sin[i] = s;
-                cos[i] = c;
+            for ((s, c), &f) in sin.iter_mut().zip(cos.iter_mut()).zip(&self.inv_freq) {
+                let (sv, cv) = (pos as f32 * f).sin_cos();
+                *s = sv;
+                *c = cv;
             }
             self.backend.rope_apply(x, &cos, &sin);
         }
@@ -816,14 +827,19 @@ impl NativeModel {
             lin.forward_packed_with(be, &pa, out, 0, tiles);
             return;
         }
-        // SAFETY: each h-tile range writes a disjoint set of output columns
-        // (c in [lo*h_p, hi*h_p)), every (r, c) exactly once; no two workers
-        // alias any element.
         struct Ptr(*mut f32, usize);
+        // SAFETY: Ptr is a pointer+len pair shared read-only across workers;
+        // each h-tile range writes a disjoint set of output columns
+        // (c in [lo*h_p, hi*h_p)), every (r, c) exactly once, so no two
+        // workers alias any element through it.
         unsafe impl Sync for Ptr {}
         let ptr = Ptr(out.as_mut_ptr(), out.len());
         let ptr = &ptr; // capture the Sync wrapper, not the raw field
         run_balanced(workers, tiles, move |_, lo, hi| {
+            // SAFETY: ptr.0/ptr.1 come from the live `out` slice, which
+            // outlives this call (run_balanced joins its workers before
+            // returning), and disjoint tile columns mean the re-materialized
+            // views never write the same element (see Sync impl above).
             let out = unsafe { std::slice::from_raw_parts_mut(ptr.0, ptr.1) };
             lin.forward_packed_with(be, &pa, out, lo, hi);
         });
@@ -848,6 +864,7 @@ impl NativeModel {
     /// single-chunk [`prefill_chunk`](Self::prefill_chunk): monolithic
     /// and chunked prefill share one code path, so splitting a prompt is
     /// bit-identical by construction.
+    // lint: allow(hot-panic): documented-panicking convenience wrapper; a final chunk always yields logits by forward_tick's contract
     pub fn prefill(&self, sess: &mut NativeSession, ids: &[usize]) -> Vec<f32> {
         assert!(!ids.is_empty());
         self.prefill_chunk(sess, ids, true).expect("final chunk returns logits")
@@ -857,6 +874,7 @@ impl NativeModel {
     /// convenience wrappers keep the old infallible signatures; callers
     /// needing per-row failure handling use
     /// [`forward_tick`](Self::forward_tick) directly (the engine does).
+    // lint: allow(hot-panic): documented-panicking convenience wrapper over forward_tick; the engine consumes the Results directly
     fn one_row(
         &self,
         sess: &mut NativeSession,
@@ -889,6 +907,7 @@ impl NativeModel {
     /// A batch-of-one [`decode_batch`](Self::decode_batch): single-session
     /// and fused decode share one code path, which is what makes the
     /// batched round bit-identical to sequential decode by construction.
+    // lint: allow(hot-panic): documented-panicking convenience wrapper; decode_batch returns exactly one row per session
     pub fn decode(&self, sess: &mut NativeSession, id: usize) -> Vec<f32> {
         self.decode_batch(&mut [sess], &[id]).pop().expect("one row")
     }
@@ -901,6 +920,7 @@ impl NativeModel {
     /// position and gets `sessions[r]`'s logits in the returned row r.
     /// An all-decode [`forward_tick`](Self::forward_tick); see there for
     /// the value-neutrality argument.
+    // lint: allow(hot-panic): documented-panicking convenience wrapper over forward_tick; the engine consumes the Results directly
     pub fn decode_batch(&self, sessions: &mut [&mut NativeSession], ids: &[usize]) -> Vec<Vec<f32>> {
         assert_eq!(sessions.len(), ids.len(), "one token per session");
         let works: Vec<RowWork> = ids.iter().map(|&tok| RowWork::Decode { tok }).collect();
@@ -954,6 +974,7 @@ impl NativeModel {
     /// skip it; its session keeps `pos` un-advanced so the engine can
     /// release it) — except a weight-residency fetch failure, which is
     /// walk-level (outer `Err`): no row can proceed without the layer.
+    // lint: allow(hot-index): per-row vectors (widths/offs/bases/row_err/out_rows) are built to length m at entry and per-layer vecs (kv/stash) to cfg.layers; every index is r < m or li < layers by loop bounds
     pub fn forward_tick(
         &self,
         sessions: &mut [&mut NativeSession],
@@ -1017,7 +1038,7 @@ impl NativeModel {
         let mut row_err: Vec<Option<std::io::Error>> = Vec::with_capacity(m);
         row_err.resize_with(m, || None);
         let mut x = vec![0f32; total * h];
-        self.embed(&all_ids, &mut x);
+        self.embed(&all_ids, &mut x)?;
         let mut norm = vec![0f32; total * h];
         let mut q = vec![0f32; total * h];
         let mut k = vec![0f32; total * kv_dim];
@@ -1139,7 +1160,13 @@ impl NativeModel {
                             continue;
                         }
                         if !last || sess.publish.is_some() {
-                            let stash = sess.prefill_stash.as_mut().expect("stash initialized");
+                            // Set up for every such row before the walk; a
+                            // missing stash is a bug, contained to this row.
+                            let Some(stash) = sess.prefill_stash.as_mut() else {
+                                debug_assert!(false, "prefill stash missing");
+                                row_err[r] = Some(invalid("prefill stash missing"));
+                                continue;
+                            };
                             stash.k[li].extend_from_slice(&k[o * kv_dim..(o + s_r) * kv_dim]);
                             stash.v[li].extend_from_slice(&v[o * kv_dim..(o + s_r) * kv_dim]);
                         }
@@ -1289,8 +1316,12 @@ impl NativeModel {
             .zip(&out_rows)
             .map(|(e, o)| match e {
                 Some(e) => Err(e),
-                None => Ok(o.map(|_| {
-                    chunks.next().expect("one logits row per output row").to_vec()
+                None => Ok(o.and_then(|_| {
+                    // chunks_exact(vocab) over an n_out*vocab buffer yields
+                    // exactly one chunk per picked row.
+                    let c = chunks.next();
+                    debug_assert!(c.is_some(), "one logits row per output row");
+                    c.map(|c| c.to_vec())
                 })),
             })
             .collect())
@@ -1304,6 +1335,7 @@ impl NativeModel {
     /// during prefill (the resident pages no longer cover the prompt) or
     /// the stash doesn't span the whole prompt (legacy multi-turn
     /// prefill).
+    // lint: allow(hot-index): stash k/v vecs are allocated with cfg.layers entries; li < cfg.layers by loop bound
     fn finish_prefill(&self, sess: &mut NativeSession) {
         if let Some(ids) = sess.publish.take() {
             let kv_dim = self.config.kv_dim();
@@ -1446,7 +1478,7 @@ mod tests {
         // batched prefill uses the raw fp32 K/V.)
         let top_full = crate::model::sampler::argmax(&full);
         let mut order: Vec<usize> = (0..step.len()).collect();
-        order.sort_by(|&a, &b| step[b].partial_cmp(&step[a]).unwrap());
+        order.sort_by(|&a, &b| step[b].total_cmp(&step[a]));
         assert!(
             order[..3].contains(&top_full),
             "prefill top-1 {top_full} not in decode top-3 {:?}",

@@ -253,14 +253,21 @@ impl WeightWriter {
     /// Append one tensor entry. `data` must already be the raw bytes of
     /// `dtype` (e.g. packed nibbles for int4 → `DT_U8`).
     pub fn push(&mut self, name: &str, dtype: u8, shape: &[usize], data: &[u8]) {
-        assert!(name.len() <= u16::MAX as usize);
-        assert!(shape.len() <= u8::MAX as usize);
-        self.body.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        // The container's field widths are fixed (the Python exporter
+        // writes the same layout); values that don't fit fail loudly
+        // instead of truncating the way a bare `as` cast would.
+        let (Ok(nlen), Ok(rank)) = (u16::try_from(name.len()), u8::try_from(shape.len())) else {
+            panic!("tensor {name}: name length or rank exceeds container field");
+        };
+        self.body.extend_from_slice(&nlen.to_le_bytes());
         self.body.extend_from_slice(name.as_bytes());
         self.body.push(dtype);
-        self.body.push(shape.len() as u8);
+        self.body.push(rank);
         for &d in shape {
-            self.body.extend_from_slice(&(d as u32).to_le_bytes());
+            let Ok(d32) = u32::try_from(d) else {
+                panic!("tensor {name}: dimension {d} exceeds u32 container field");
+            };
+            self.body.extend_from_slice(&d32.to_le_bytes());
         }
         self.body.extend_from_slice(&(data.len() as u64).to_le_bytes());
         self.body.extend_from_slice(data);
@@ -500,6 +507,16 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    #[should_panic(expected = "exceeds u32 container field")]
+    fn writer_rejects_dims_wider_than_the_field() {
+        // Regression: dimensions were written with `as u32`, silently
+        // truncating anything wider; now the writer fails loudly.
+        let mut w = WeightWriter::new();
+        w.push("t", DT_U8, &[1usize << 40, 1], &[]);
     }
 
     #[test]

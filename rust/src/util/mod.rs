@@ -6,6 +6,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod timer;
 pub mod tmpname;
 

@@ -23,7 +23,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN samples (e.g. a 0/0 rate from an empty bench window)
+    // sort to the end instead of panicking mid-report.
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -58,6 +60,15 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn nan_samples_sort_last_instead_of_panicking() {
+        // Regression: percentile() used `partial_cmp().unwrap()`, which
+        // panicked on any NaN sample (e.g. a 0/0 rate from an empty window).
+        let xs = [1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0, "NaN sorts after finite values");
     }
 
     #[test]

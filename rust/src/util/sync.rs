@@ -1,0 +1,37 @@
+//! Poison-tolerant mutex locking.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked thread into a process-wide
+//! cascade: every later lock on the same mutex panics too. The engine's
+//! no-panic hot paths (scheduler tick, KV pool accounting, event streams)
+//! guard plain counters and queues whose invariants hold at every await
+//! point, so the right recovery is to take the data as-is and keep serving.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if a previous holder panicked. Use on
+/// mutexes whose protected state stays consistent between method calls
+/// (counters, maps, queues) — i.e. all of this crate's.
+pub fn lock_tolerant<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn poisoned_mutex_still_locks() {
+        let m = Arc::new(Mutex::new(41usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned(), "setup: the mutex must actually be poisoned");
+        let mut g = lock_tolerant(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+}

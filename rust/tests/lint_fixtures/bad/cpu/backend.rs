@@ -1,0 +1,10 @@
+//! Seeded unsafe-hygiene violation (fixture data, never compiled).
+
+pub fn no_safety(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+pub fn documented(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid for reads.
+    unsafe { *p }
+}

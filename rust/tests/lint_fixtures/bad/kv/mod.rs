@@ -1,0 +1,22 @@
+//! Seeded hot-path violations. This file is lint-fixture DATA — it is
+//! never compiled (cargo only builds top-level files in tests/).
+
+pub fn hot(xs: &[u32], i: usize) -> u32 {
+    let v = xs[i];
+    let w = xs.first().unwrap();
+    if *w > 3 {
+        panic!("boom");
+    }
+    v
+}
+
+pub fn ranged(xs: &[u32]) -> &[u32] {
+    &xs[1..3] // allowed: range slices stay panics-as-asserts
+}
+
+#[cfg(test)]
+mod tests {
+    pub fn exempt(xs: &[u32]) -> u32 {
+        xs[0] + xs.last().unwrap() // exempt: inside #[cfg(test)]
+    }
+}

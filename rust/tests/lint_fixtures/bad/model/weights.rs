@@ -1,0 +1,5 @@
+//! Seeded accounting narrow-cast (fixture data, never compiled).
+
+pub fn record_len(n: usize) -> [u8; 4] {
+    (n as u32).to_le_bytes()
+}

@@ -1,0 +1,9 @@
+//! Seeded cold-path violations (fixture data, never compiled).
+
+pub fn sort_scores(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn cold_unwrap(x: Option<u32>) -> u32 {
+    x.unwrap()
+}

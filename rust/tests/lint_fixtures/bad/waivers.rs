@@ -1,0 +1,7 @@
+//! Seeded waiver abuse (fixture data, never compiled).
+
+// lint: allow(hot-panic)
+pub fn missing_reason() {}
+
+// lint: allow(no-such-rule): a reason for a rule that does not exist
+pub fn unknown_rule() {}

@@ -1,0 +1,19 @@
+//! Clean hot-module fixture: panic-free idioms and properly documented
+//! waivers only — the linter must report nothing here.
+
+pub fn safe_get(xs: &[u32], i: usize) -> u32 {
+    xs.get(i).copied().unwrap_or(0)
+}
+
+// lint: allow(hot-index): fixture — i is bounds-checked by every caller
+pub fn waived(xs: &[u32], i: usize) -> u32 {
+    xs[i]
+}
+
+pub fn trailing(xs: &[u32]) -> u32 {
+    xs[0] // lint: allow(hot-index): fixture — caller verified non-empty
+}
+
+pub fn ranged(xs: &[u32]) -> &[u32] {
+    &xs[..1]
+}

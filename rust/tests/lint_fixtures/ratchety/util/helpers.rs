@@ -1,0 +1,10 @@
+//! Ratchet-only fixture (cold unwraps, no deny findings) — used to
+//! exercise the --write-baseline → --check roundtrip.
+
+pub fn one(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn two(x: Result<u32, ()>) -> u32 {
+    x.unwrap()
+}

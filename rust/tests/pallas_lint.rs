@@ -1,0 +1,155 @@
+//! End-to-end coverage for `pallas-lint`: the library pass over the seeded
+//! fixture trees, and the binary's exit codes / diagnostics / baseline
+//! ratchet — the exact contract CI relies on.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use mnn_llm::analysis::{self, LintConfig, Severity};
+
+fn fixture(p: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures").join(p)
+}
+
+fn lint_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pallas-lint"))
+}
+
+#[test]
+fn seeded_violations_fire_at_expected_sites() {
+    let findings = analysis::run(&fixture("bad"), &LintConfig::default()).unwrap();
+    let mut got: Vec<(String, &str, u32)> =
+        findings.iter().map(|f| (f.path.clone(), f.rule, f.line)).collect();
+    got.sort();
+    let want = vec![
+        ("cpu/backend.rs".to_string(), "safety-comment", 4),
+        ("kv/mod.rs".to_string(), "hot-index", 5),
+        ("kv/mod.rs".to_string(), "hot-panic", 6),
+        ("kv/mod.rs".to_string(), "hot-panic", 8),
+        ("model/weights.rs".to_string(), "narrow-cast", 4),
+        ("util/stats.rs".to_string(), "nan-cmp", 4),
+        ("util/stats.rs".to_string(), "unwrap-ratchet", 8),
+        ("waivers.rs".to_string(), "bad-waiver", 3),
+        ("waivers.rs".to_string(), "bad-waiver", 6),
+    ];
+    assert_eq!(got, want);
+    // Severity tiers: narrow-cast and cold unwrap ratchet; the rest deny.
+    for f in &findings {
+        let expect = if f.rule == "narrow-cast" || f.rule == "unwrap-ratchet" {
+            Severity::Ratchet
+        } else {
+            Severity::Deny
+        };
+        assert_eq!(f.severity, expect, "{}:{} {}", f.path, f.line, f.rule);
+    }
+}
+
+#[test]
+fn clean_fixture_tree_reports_nothing() {
+    // Waived sites (own-line and trailing), .get() idioms and range slices
+    // in a hot module: zero findings.
+    let findings = analysis::run(&fixture("good"), &LintConfig::default()).unwrap();
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn binary_fails_on_seeded_tree_with_file_line_rule_diagnostics() {
+    let out = lint_bin()
+        .arg("--check")
+        .arg("--root")
+        .arg(fixture("bad"))
+        .arg("--baseline")
+        .arg(fixture("empty-baseline.txt"))
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    // Diagnostics are `file:line: rule: message`.
+    assert!(stdout.contains("kv/mod.rs:6: hot-panic:"), "{stdout}");
+    assert!(stdout.contains("cpu/backend.rs:4: safety-comment:"), "{stdout}");
+    assert!(stdout.contains("waivers.rs:3: bad-waiver:"), "{stdout}");
+    // Ratchet regressions against the empty baseline are reported too.
+    assert!(stdout.contains("model/weights.rs:4: narrow-cast:"), "{stdout}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("FAILED"), "{stderr}");
+}
+
+#[test]
+fn binary_is_clean_on_the_real_tree_against_committed_baseline() {
+    // The CI invocation, verbatim: root `src`, committed baseline, from
+    // the crate root.
+    let out = lint_bin()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .arg("--check")
+        .output()
+        .unwrap();
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "stdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn write_baseline_roundtrips_on_ratchet_only_tree() {
+    let baseline = Path::new(env!("CARGO_TARGET_TMPDIR")).join("ratchety-baseline.txt");
+    let out = lint_bin()
+        .arg("--write-baseline")
+        .arg("--root")
+        .arg(fixture("ratchety"))
+        .arg("--baseline")
+        .arg(&baseline)
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stderr));
+    let body = std::fs::read_to_string(&baseline).unwrap();
+    assert!(body.contains("unwrap-ratchet 2 util/helpers.rs"), "{body}");
+    // Checking against the fresh baseline passes.
+    let out = lint_bin()
+        .arg("--check")
+        .arg("--root")
+        .arg(fixture("ratchety"))
+        .arg("--baseline")
+        .arg(&baseline)
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stdout));
+    // ...and against the empty baseline, the same tree is a regression.
+    let out = lint_bin()
+        .arg("--check")
+        .arg("--root")
+        .arg(fixture("ratchety"))
+        .arg("--baseline")
+        .arg(fixture("empty-baseline.txt"))
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("util/helpers.rs"), "{stdout}");
+}
+
+#[test]
+fn write_baseline_refuses_deny_findings() {
+    let baseline = Path::new(env!("CARGO_TARGET_TMPDIR")).join("refused-baseline.txt");
+    let out = lint_bin()
+        .arg("--write-baseline")
+        .arg("--root")
+        .arg(fixture("bad"))
+        .arg("--baseline")
+        .arg(&baseline)
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(!baseline.exists(), "deny findings must never be baselined");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("deny finding"), "{stderr}");
+}
+
+#[test]
+fn unknown_arguments_are_usage_errors() {
+    let out = lint_bin().arg("--frobnicate").output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage:"));
+}
