@@ -64,6 +64,13 @@ pub enum RowWork<'a> {
     Prefill { ids: &'a [usize], last: bool },
     /// One decode step consuming `tok` at the session's position.
     Decode { tok: usize },
+    /// Speculative verify: `toks[0]` is the newest committed token,
+    /// `toks[1..]` a draft model's proposed continuation — `toks.len()`
+    /// consecutive decode positions advanced in one walk. The outcome
+    /// carries the per-position logits concatenated row-major
+    /// (`toks.len() * vocab`), each slice bit-identical to what a
+    /// sequential [`RowWork::Decode`] at that position would return.
+    Verify { toks: &'a [usize] },
 }
 
 /// Per-row outcome of a fused tick: `Ok(Some(logits))` for a decode row
@@ -112,6 +119,48 @@ pub trait InferenceBackend {
             out.push(self.decode(sess, tok)?);
         }
         Ok(out)
+    }
+
+    /// Multi-position speculative verify: consume `toks` — the newest
+    /// committed token followed by draft proposals — and return the
+    /// per-position logits concatenated (`toks.len() * vocab`). The
+    /// value-neutrality contract is strict: slice `i` must be
+    /// bit-identical to what [`decode`](Self::decode) would return after
+    /// sequentially decoding `toks[..=i]`, which is exactly what the
+    /// default loop produces — so any backend with a correct `decode` can
+    /// verify drafts, just without the fused-walk amortization.
+    fn verify(&self, sess: &mut Self::Session, toks: &[usize]) -> Result<Option<Vec<f32>>> {
+        let mut flat = Vec::new();
+        for &tok in toks {
+            flat.extend_from_slice(&self.decode(sess, tok)?);
+        }
+        Ok(Some(flat))
+    }
+
+    /// Roll the session's KV back to its first `keep` positions,
+    /// discarding rejected draft appends. Backends that cannot roll back
+    /// must keep the default (an error) AND leave
+    /// [`supports_speculation`](Self::supports_speculation) false so the
+    /// engine never schedules verify rows onto them.
+    fn truncate_kv(&self, _sess: &mut Self::Session, _keep: usize) -> Result<()> {
+        anyhow::bail!("backend cannot roll back KV")
+    }
+
+    /// Whether the engine may schedule [`RowWork::Verify`] rows and rely
+    /// on [`truncate_kv`](Self::truncate_kv) for rejected drafts. False by
+    /// default so existing backends (PJRT: no KV rollback) are untouched
+    /// by speculation.
+    fn supports_speculation(&self) -> bool {
+        false
+    }
+
+    /// KV bytes a verify row of `depth` draft tokens may pin beyond the
+    /// plain decode append — counted against
+    /// [`kv_headroom`](Self::kv_headroom) before the engine speculates,
+    /// exactly like prefill reservations. 0 (the default) means "no
+    /// accounting".
+    fn verify_reserve_bytes(&self, _depth: usize) -> usize {
+        0
     }
 
     /// Per-tick scheduling limits (row cap, prefill chunk size). The
@@ -178,6 +227,7 @@ pub trait InferenceBackend {
             out.push(match *w {
                 RowWork::Prefill { ids, last } => self.prefill_chunk(sess, ids, last),
                 RowWork::Decode { tok } => self.decode(sess, tok).map(Some),
+                RowWork::Verify { toks } => self.verify(sess, toks),
             });
         }
         Ok(out)
@@ -327,6 +377,30 @@ impl InferenceBackend for NativeModel {
     ) -> Result<Vec<RowOutcome>> {
         let rows = NativeModel::forward_tick(self, sessions, works)?;
         Ok(rows.into_iter().map(|r| r.map_err(anyhow::Error::from)).collect())
+    }
+
+    fn verify(&self, sess: &mut NativeSession, toks: &[usize]) -> Result<Option<Vec<f32>>> {
+        // One fused walk instead of the default decode loop; bit-identical
+        // by the forward_tick verify-row contract.
+        let mut rows =
+            NativeModel::forward_tick(self, &mut [sess], &[RowWork::Verify { toks }])?;
+        match rows.pop() {
+            Some(row) => Ok(row?),
+            None => anyhow::bail!("verify walk returned no rows"),
+        }
+    }
+
+    fn truncate_kv(&self, sess: &mut NativeSession, keep: usize) -> Result<()> {
+        NativeModel::truncate_kv(self, sess, keep);
+        Ok(())
+    }
+
+    fn supports_speculation(&self) -> bool {
+        true
+    }
+
+    fn verify_reserve_bytes(&self, depth: usize) -> usize {
+        NativeModel::verify_reserve_bytes(self, depth)
     }
 
     fn prefill_reserve_bytes(&self, prompt: &[usize]) -> usize {
@@ -563,6 +637,34 @@ impl InferenceBackend for Backend {
                     sessions.iter_mut().map(|s| s.pjrt()).collect();
                 InferenceBackend::step_batch(rt.as_ref(), &mut pjrt, works)
             }
+        }
+    }
+
+    fn verify(&self, sess: &mut AnySession, toks: &[usize]) -> Result<Option<Vec<f32>>> {
+        match self {
+            Backend::Native(m) => InferenceBackend::verify(m.as_ref(), sess.native(), toks),
+            Backend::Pjrt(rt) => InferenceBackend::verify(rt.as_ref(), sess.pjrt(), toks),
+        }
+    }
+
+    fn truncate_kv(&self, sess: &mut AnySession, keep: usize) -> Result<()> {
+        match self {
+            Backend::Native(m) => InferenceBackend::truncate_kv(m.as_ref(), sess.native(), keep),
+            Backend::Pjrt(rt) => InferenceBackend::truncate_kv(rt.as_ref(), sess.pjrt(), keep),
+        }
+    }
+
+    fn supports_speculation(&self) -> bool {
+        match self {
+            Backend::Native(m) => InferenceBackend::supports_speculation(m.as_ref()),
+            Backend::Pjrt(rt) => InferenceBackend::supports_speculation(rt.as_ref()),
+        }
+    }
+
+    fn verify_reserve_bytes(&self, depth: usize) -> usize {
+        match self {
+            Backend::Native(m) => InferenceBackend::verify_reserve_bytes(m.as_ref(), depth),
+            Backend::Pjrt(rt) => InferenceBackend::verify_reserve_bytes(rt.as_ref(), depth),
         }
     }
 

@@ -63,6 +63,42 @@ pub struct KvPressureMetrics {
     pub holder_sheds: u64,
 }
 
+/// Speculative-decoding counters (draft-propose / target-verify walks).
+/// All-zero when no draft model is attached or speculation never ran.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecMetrics {
+    /// Verify walks issued (each carries 1 committed token + k drafts).
+    pub walks: u64,
+    /// Draft tokens proposed across all walks.
+    pub proposed: u64,
+    /// Draft tokens accepted by the target (excludes bonus tokens).
+    pub accepted: u64,
+    /// Tokens committed by verify walks (accepted + correction/bonus;
+    /// includes commits discarded past a stop condition's cut).
+    pub committed: u64,
+}
+
+impl SpecMetrics {
+    /// Tokens committed per verify walk. Non-speculative decode commits
+    /// exactly 1 token per walk, so > 1.0 means speculation is paying.
+    pub fn committed_per_walk(&self) -> f64 {
+        if self.walks > 0 {
+            self.committed as f64 / self.walks as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of proposed draft tokens the target accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed > 0 {
+            self.accepted as f64 / self.proposed as f64
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Aggregate over a batch of completed requests.
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
@@ -89,6 +125,9 @@ pub struct EngineMetrics {
     /// live (`scalar` / `simd-avx2` / `simd-neon`) and per-op invocation
     /// counts. Default (empty name) on backends without the seam.
     pub compute: ComputeBackendMetrics,
+    /// Speculative-decoding accounting: verify walks, draft tokens
+    /// proposed/accepted, tokens committed. All-zero without a draft.
+    pub spec: SpecMetrics,
 }
 
 impl EngineMetrics {
@@ -198,6 +237,14 @@ impl EngineMetrics {
             s.push_str(&format!(
                 " | compute {} / {} gemm ({} tiles)",
                 self.compute.backend, self.compute.gemm_calls, self.compute.gemm_tiles
+            ));
+        }
+        if self.spec.walks > 0 {
+            s.push_str(&format!(
+                " | spec {} walks / {:.2} tok/walk / {:.0}% accept",
+                self.spec.walks,
+                self.spec.committed_per_walk(),
+                self.spec.acceptance_rate() * 100.0
             ));
         }
         s
@@ -323,6 +370,27 @@ mod tests {
         e.compute.gemm_tiles = 72;
         let s = e.summary(1.0);
         assert!(s.contains("compute simd-avx2 / 9 gemm (72 tiles)"), "{s}");
+    }
+
+    #[test]
+    fn speculation_appears_in_summary_only_after_walks() {
+        let mut e = EngineMetrics::default();
+        e.push(m(8, 4, 0.1, 0.2));
+        assert!(!e.summary(1.0).contains("spec"), "no walks yet");
+        e.spec.walks = 4;
+        e.spec.proposed = 12;
+        e.spec.accepted = 6;
+        e.spec.committed = 10;
+        let s = e.summary(1.0);
+        assert!(s.contains("spec 4 walks"), "{s}");
+        assert!(s.contains("2.50 tok/walk"), "{s}");
+        assert!(s.contains("50% accept"), "{s}");
+        assert!((e.spec.committed_per_walk() - 2.5).abs() < 1e-12);
+        assert!((e.spec.acceptance_rate() - 0.5).abs() < 1e-12);
+        // Zero-division safety.
+        let z = SpecMetrics::default();
+        assert_eq!(z.committed_per_walk(), 0.0);
+        assert_eq!(z.acceptance_rate(), 0.0);
     }
 
     #[test]

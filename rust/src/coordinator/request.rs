@@ -33,6 +33,11 @@ pub struct Request {
     /// deterministic per-request stream from the request id, so sampled
     /// (temperature > 0) outputs are schedule-invariant either way.
     pub seed: Option<u64>,
+    /// Per-request speculative-decoding depth override: how many draft
+    /// tokens to propose per verify walk. `None` uses the engine's
+    /// configured default; `Some(0)` disables speculation for this
+    /// request. Ignored when the engine has no draft model attached.
+    pub spec_depth: Option<usize>,
     /// Set by the engine when the request is submitted; TTFT and e2e
     /// latency are measured from here (queue wait included).
     pub arrival: Option<Instant>,
@@ -50,6 +55,7 @@ impl Request {
             stop_sequences: Vec::new(),
             priority: None,
             seed: None,
+            spec_depth: None,
             arrival: None,
         }
     }
@@ -86,6 +92,13 @@ impl Request {
     /// Builder-style: set the sampler configuration.
     pub fn with_sampler(mut self, sampler: SamplerConfig) -> Self {
         self.sampler = sampler;
+        self
+    }
+
+    /// Builder-style: override the speculative-decoding depth (0 disables
+    /// speculation for this request even when the engine default is on).
+    pub fn with_spec_depth(mut self, depth: usize) -> Self {
+        self.spec_depth = Some(depth);
         self
     }
 
@@ -143,6 +156,7 @@ mod tests {
         assert!(r.priority.is_none());
         assert_eq!(r.priority_class(), 0);
         assert!(r.seed.is_none());
+        assert!(r.spec_depth.is_none());
         assert!(r.arrival.is_none());
     }
 
@@ -152,12 +166,14 @@ mod tests {
             .with_seed(42)
             .with_stop_tokens(vec![9])
             .with_stop_sequences(vec![vec![1, 2]])
-            .with_priority(3);
+            .with_priority(3)
+            .with_spec_depth(4);
         assert_eq!(r.seed, Some(42));
         assert_eq!(r.stop_tokens, vec![9]);
         assert_eq!(r.stop_sequences, vec![vec![1, 2]]);
         assert_eq!(r.priority, Some(3));
         assert_eq!(r.priority_class(), 3);
+        assert_eq!(r.spec_depth, Some(4));
     }
 
     #[test]

@@ -71,6 +71,7 @@ pub use crate::coordinator::backend::{
 use crate::coordinator::events::{EngineEvent, FinishReason, StreamInner, TokenStream};
 use crate::coordinator::metrics::{EngineMetrics, RequestMetrics};
 use crate::coordinator::request::{Request, RequestId, Response};
+use crate::model::native::{NativeModel, NativeSession};
 use crate::model::sampler;
 use crate::model::tokenizer::EOS;
 use crate::util::rng::Rng;
@@ -160,6 +161,126 @@ fn deliver(
     events.push_back(ev);
 }
 
+/// An attached draft model for speculative decoding. The draft is always
+/// the native runtime (a small `NativeModel` with its own KV pool);
+/// whatever backend `B` is does the verification through
+/// [`InferenceBackend::verify`].
+pub struct SpecConfig {
+    draft: NativeModel,
+    /// Default proposals per verify walk (`Request::spec_depth` overrides
+    /// per request).
+    depth: usize,
+}
+
+/// Per-request draft state, created lazily on the request's first
+/// speculative tick and torn down with the request.
+struct SpecState {
+    sess: NativeSession,
+    /// Committed tokens currently in the draft's KV (the catch-up
+    /// cursor). Kept strictly below the committed length between walks so
+    /// the next catch-up always re-decodes the newest committed token and
+    /// gets fresh proposal logits.
+    fed: usize,
+    /// Forked RNG sub-stream for proposal sampling and accept/reject
+    /// draws. Disjoint from the request's main sampling stream by
+    /// construction ([`Rng::fork`]), so attaching a draft never perturbs
+    /// what the non-speculative path would have drawn.
+    rng: Rng,
+    /// The verify row: `toks[0]` is the newest committed token, `toks[1..]`
+    /// the draft's proposals ([`RowWork::Verify`] borrows this).
+    toks: Vec<usize>,
+    /// Per-proposal draft distributions (temperature > 0 only), aligned
+    /// with `toks[1..]`; the acceptance test needs `q(d)` and the
+    /// rejection path needs the full `q` for the residual.
+    qdists: Vec<Vec<f32>>,
+}
+
+/// Run one draft-model row and flatten the outcome to logits.
+fn draft_step(
+    draft: &NativeModel,
+    sess: &mut NativeSession,
+    work: RowWork<'_>,
+) -> Result<Vec<f32>> {
+    let mut rows = draft.forward_tick(&mut [sess], &[work])?;
+    match rows.pop() {
+        Some(Ok(Some(l))) => Ok(l),
+        Some(Ok(None)) => Err(anyhow!("draft walk returned no logits")),
+        Some(Err(e)) => Err(e.into()),
+        None => Err(anyhow!("draft walk returned no rows")),
+    }
+}
+
+/// Catch the request's draft session up to the committed history, then
+/// autoregressively propose `k` tokens, filling `SpecState::{toks,
+/// qdists}` for the verify row. Between walks the draft's KV holds only
+/// committed tokens and always fewer than the committed length (the
+/// verify pass truncates speculative entries and keeps the cursor one
+/// short), so catch-up always ends by decoding the newest committed
+/// token — one token per row, never a re-prefill over quantized history
+/// — leaving fresh proposal logits. Greedy proposals draw nothing from
+/// any RNG; temperature > 0 proposals draw only from the forked
+/// sub-stream.
+fn propose_drafts(
+    sc: &SpecConfig,
+    spec: &mut Option<SpecState>,
+    req: &Request,
+    tokens: &[usize],
+    last: usize,
+    k: usize,
+) -> Result<()> {
+    let plen = req.prompt.len();
+    let st = match spec {
+        Some(st) => st,
+        None => spec.insert(SpecState {
+            sess: sc.draft.new_session(),
+            fed: 0,
+            rng: request_rng(req).fork(1),
+            toks: Vec::new(),
+            qdists: Vec::new(),
+        }),
+    };
+    st.toks.clear();
+    st.qdists.clear();
+    st.toks.push(last);
+    let mut caught: Option<Vec<f32>> = None;
+    if st.fed == 0 {
+        // A fresh draft session prefills the whole prompt in one row.
+        caught = Some(draft_step(
+            &sc.draft,
+            &mut st.sess,
+            RowWork::Prefill { ids: &req.prompt, last: true },
+        )?);
+        st.fed = plen;
+    }
+    while st.fed < plen + tokens.len() {
+        let tok = if st.fed < plen {
+            req.prompt.get(st.fed).copied().unwrap_or(0)
+        } else {
+            tokens.get(st.fed - plen).copied().unwrap_or(0)
+        };
+        caught = Some(draft_step(&sc.draft, &mut st.sess, RowWork::Decode { tok })?);
+        st.fed += 1;
+    }
+    let Some(mut logits) = caught else {
+        return Err(anyhow!("draft catch-up produced no logits"));
+    };
+    for i in 0..k {
+        let d = if req.sampler.temperature <= 0.0 {
+            sampler::argmax(&logits)
+        } else {
+            let q = sampler::dist(&logits, req.sampler);
+            let d = sampler::sample_from_dist(&q, &mut st.rng);
+            st.qdists.push(q);
+            d
+        };
+        st.toks.push(d);
+        if i + 1 < k {
+            logits = draft_step(&sc.draft, &mut st.sess, RowWork::Decode { tok: d })?;
+        }
+    }
+    Ok(())
+}
+
 /// One admitted request's in-flight state. `prefill_done <
 /// req.prompt.len()` means the request is still in its prefill phase
 /// (chunks pending); once the final chunk lands the first token is
@@ -181,6 +302,12 @@ struct Active<S> {
     ttft_s: f64,
     decode_started: Instant,
     decoded_any: bool,
+    /// Draft-model state when speculation has run for this request.
+    spec: Option<SpecState>,
+    /// Set when the draft failed for this request: it permanently
+    /// degrades to plain decode (the draft's state is suspect) without
+    /// failing the request itself.
+    spec_dead: bool,
 }
 
 /// What a tick asked of one selected row (the owned mirror of the
@@ -189,6 +316,10 @@ struct Active<S> {
 enum RowKind {
     Prefill { consumed: usize, last: bool },
     Decode,
+    /// A speculative verify row carrying `k` draft proposals on top of
+    /// the committed token (the owned tokens live in the request's
+    /// [`SpecState`]).
+    Verify { k: usize },
 }
 
 /// The streaming engine: admission queue + step scheduler + event queue +
@@ -199,6 +330,10 @@ pub struct Engine<B: InferenceBackend> {
     pub policy: SchedulePolicy,
     queue: VecDeque<Request>,
     active: Vec<Active<B::Session>>,
+    /// Speculative decoding: the attached draft model + default depth.
+    /// `None` (the default) keeps every path bit-identical to the
+    /// pre-speculation engine — no extra RNG draws, rows, or KV traffic.
+    spec: Option<SpecConfig>,
     next_id: u64,
     /// Monotone row-window cursor for ticks capped by
     /// `tick_limits().max_rows`: uncapped ticks always serve the whole
@@ -222,6 +357,7 @@ impl<B: InferenceBackend> Engine<B> {
             policy,
             queue: VecDeque::new(),
             active: Vec::new(),
+            spec: None,
             next_id: 1,
             rotate: 0,
             metrics: EngineMetrics::default(),
@@ -234,6 +370,29 @@ impl<B: InferenceBackend> Engine<B> {
     /// The backend (e.g. to inspect the native model's KV pool).
     pub fn backend(&self) -> &B {
         &self.backend
+    }
+
+    /// Attach a draft model for speculative decoding. Every decode tick
+    /// then proposes up to `depth` tokens per request (overridable via
+    /// [`Request::spec_depth`]) with the draft and verifies all of them
+    /// as one multi-position row of the same fused walk, committing the
+    /// accepted prefix plus one corrected/bonus token. Greedy outputs are
+    /// bit-identical to non-speculative decode; temperature > 0 outputs
+    /// are drawn from the exact same per-position distributions (the
+    /// standard speculative-sampling accept/reject identity) via a forked
+    /// RNG sub-stream. `depth == 0` — or a backend that does not support
+    /// verification — detaches.
+    pub fn attach_draft(&mut self, draft: NativeModel, depth: usize) {
+        self.spec = if depth > 0 && self.backend.supports_speculation() {
+            Some(SpecConfig { draft, depth })
+        } else {
+            None
+        };
+    }
+
+    /// The attached speculative-decoding draft model, if any.
+    pub fn draft_model(&self) -> Option<&NativeModel> {
+        self.spec.as_ref().map(|s| &s.draft)
     }
 
     /// Queue a request; returns its id. Valid mid-flight: the next step
@@ -324,7 +483,13 @@ impl<B: InferenceBackend> Engine<B> {
         // knobs for bounding burst ticks.
         let admit_cap = self.backend.tick_limits().max_rows.max(1);
         let mut admitted = 0usize;
-        let mut reserved = self.outstanding_prefill_reservation();
+        // Decode-phase speculative requests are charged their verify-walk
+        // KV transient too: a rejected draft's pages are truncated right
+        // back, but mid-walk they are real pool pages an admission must
+        // not plan over.
+        let mut reserved = self
+            .outstanding_prefill_reservation()
+            .saturating_add(self.speculation_reservation());
         while admitted < admit_cap {
             let may_admit = match self.policy {
                 SchedulePolicy::Fifo => self.active.is_empty(),
@@ -363,6 +528,11 @@ impl<B: InferenceBackend> Engine<B> {
             // No live sessions: completed requests' flash spill is
             // reclaimable (native backend truncates the spill store).
             self.backend.reclaim();
+            if let Some(sc) = &self.spec {
+                // Draft sessions died with their requests; reclaim the
+                // draft model's spill store too.
+                sc.draft.reclaim_flash();
+            }
         }
         Ok(did)
     }
@@ -394,6 +564,11 @@ impl<B: InferenceBackend> Engine<B> {
     /// emits the terminal event and bumps its counter.
     fn teardown_active(&mut self, ai: usize) {
         let mut act = self.active.remove(ai);
+        if let Some(mut sp) = act.spec.take() {
+            // The request's draft session goes with it: its pool pages
+            // free now, not at drop time.
+            sp.sess.release_kv();
+        }
         let (spilled, restored) = self.backend.kv_counters(&act.sess);
         self.metrics.kv.spilled_records += spilled;
         self.metrics.kv.restored_records += restored;
@@ -479,6 +654,23 @@ impl<B: InferenceBackend> Engine<B> {
                     .saturating_sub(
                         self.backend.prefill_visible_bytes(&a.req.prompt, a.prefill_done),
                     )
+            })
+            .fold(0usize, usize::saturating_add)
+    }
+
+    /// KV bytes a tick's verify rows may transiently append beyond plain
+    /// decode: one reservation per live decode-phase speculative request
+    /// at its effective depth. Zero without an attached draft.
+    fn speculation_reservation(&self) -> usize {
+        let Some(sc) = &self.spec else {
+            return 0;
+        };
+        self.active
+            .iter()
+            .filter(|a| !a.spec_dead && a.prefill_done >= a.req.prompt.len())
+            .map(|a| {
+                self.backend
+                    .verify_reserve_bytes(a.req.spec_depth.unwrap_or(sc.depth))
             })
             .fold(0usize, usize::saturating_add)
     }
@@ -604,6 +796,8 @@ impl<B: InferenceBackend> Engine<B> {
             ttft_s: 0.0,
             decode_started: Instant::now(),
             decoded_any: false,
+            spec: None,
+            spec_dead: false,
             req,
         });
         Ok(Some(cost))
@@ -637,6 +831,11 @@ impl<B: InferenceBackend> Engine<B> {
                 self.active.iter_mut().map(Some).collect();
             let mut sessions: Vec<&mut B::Session> = Vec::with_capacity(take);
             let mut works: Vec<RowWork> = Vec::with_capacity(take);
+            // Verify rows count their draft positions against the row
+            // cap (a width-(k+1) verify row does k+1 rows' worth of walk
+            // work), so `max_rows_per_tick` keeps bounding per-tick
+            // compute with speculation on.
+            let mut row_slots = limits.max_rows.max(1);
             for i in 0..take {
                 // The rotating window visits each slot at most once per
                 // tick (take <= n), so the slot is always still occupied;
@@ -646,7 +845,19 @@ impl<B: InferenceBackend> Engine<B> {
                     debug_assert!(false, "tick row selected twice");
                     continue;
                 };
-                let Active { req, sess, prefill_done, decoded_any, decode_started, last, .. } = a;
+                let Active {
+                    req,
+                    sess,
+                    prefill_done,
+                    decoded_any,
+                    decode_started,
+                    last,
+                    tokens,
+                    budget,
+                    spec,
+                    spec_dead,
+                    ..
+                } = a;
                 let plen = req.prompt.len();
                 if *prefill_done < plen {
                     let end = (*prefill_done + chunk_cap).min(plen);
@@ -658,13 +869,66 @@ impl<B: InferenceBackend> Engine<B> {
                         ids: &req.prompt[*prefill_done..end],
                         last: end == plen,
                     });
+                    row_slots = row_slots.saturating_sub(1);
                 } else {
                     if !*decoded_any {
                         *decode_started = now;
                         *decoded_any = true;
                     }
-                    sel.push((req.id, RowKind::Decode));
-                    works.push(RowWork::Decode { tok: *last });
+                    let mut k = 0usize;
+                    if let Some(sc) = &self.spec {
+                        if !*spec_dead {
+                            // Clamp the proposal depth so the verify row
+                            // (a) leaves one row slot for every other
+                            // windowed session, (b) cannot commit past
+                            // the token budget (at most k + 1 commits),
+                            // (c) fits the context window, and (d) has
+                            // KV headroom for the draft positions (they
+                            // are truncated back on rejection, but are
+                            // real pool pages mid-walk).
+                            let avail = row_slots.saturating_sub(take - i - 1);
+                            let pos = self.backend.session_pos(sess);
+                            k = req
+                                .spec_depth
+                                .unwrap_or(sc.depth)
+                                .min(avail.saturating_sub(1))
+                                .min(budget.saturating_sub(tokens.len()).saturating_sub(1))
+                                .min(cap.saturating_sub(pos + 1));
+                            if k > 0
+                                && self.backend.kv_headroom()
+                                    < self.backend.verify_reserve_bytes(k)
+                            {
+                                k = 0;
+                            }
+                            if k > 0 {
+                                if let Err(_e) =
+                                    propose_drafts(sc, spec, req, tokens, *last, k)
+                                {
+                                    // A draft failure must never fail the
+                                    // request: drop the suspect draft
+                                    // state and degrade to plain decode
+                                    // permanently.
+                                    if let Some(mut st) = spec.take() {
+                                        st.sess.release_kv();
+                                    }
+                                    *spec_dead = true;
+                                    k = 0;
+                                }
+                            }
+                        }
+                    }
+                    match spec.as_ref() {
+                        Some(st) if k > 0 => {
+                            sel.push((req.id, RowKind::Verify { k }));
+                            works.push(RowWork::Verify { toks: &st.toks });
+                            row_slots = row_slots.saturating_sub(1 + k);
+                        }
+                        _ => {
+                            sel.push((req.id, RowKind::Decode));
+                            works.push(RowWork::Decode { tok: *last });
+                            row_slots = row_slots.saturating_sub(1);
+                        }
+                    }
                 }
                 sessions.push(sess);
             }
@@ -700,9 +964,10 @@ impl<B: InferenceBackend> Engine<B> {
             return self.budget_pass();
         }
         for ((id, kind), outcome) in sel.into_iter().zip(rows) {
-            match outcome {
-                Err(e) => self.fail_active(id, &format!("backend row failed: {e}")),
-                Ok(logits) => self.advance_row(id, kind, logits, walk_s, cap),
+            match (outcome, kind) {
+                (Err(e), _) => self.fail_active(id, &format!("backend row failed: {e}")),
+                (Ok(logits), RowKind::Verify { k }) => self.advance_verify(id, k, logits, cap),
+                (Ok(logits), kind) => self.advance_row(id, kind, logits, walk_s, cap),
             }
         }
         // Enforce the pool budget again **after** the walk: the tick's
@@ -754,6 +1019,12 @@ impl<B: InferenceBackend> Engine<B> {
                 true
             }
             RowKind::Decode => false,
+            // Verify rows are routed to `advance_verify` by the tick loop;
+            // reaching here is a dispatch bug — drop the row, not the tick.
+            RowKind::Verify { .. } => {
+                debug_assert!(false, "verify row dispatched to advance_row");
+                return;
+            }
         };
         let Some(logits) = logits else {
             self.fail_active(
@@ -792,6 +1063,152 @@ impl<B: InferenceBackend> Engine<B> {
         }
     }
 
+    /// Apply one successful verify row: decide the committed tokens from
+    /// the `k + 1` verified positions (greedy: commit while the target's
+    /// argmax matches the proposal, then one correction/bonus token;
+    /// temperature > 0: the speculative-sampling accept/reject identity —
+    /// accept proposal `d` with probability `min(1, p(d)/q(d))`, on
+    /// rejection draw from the normalized residual `max(p − q, 0)`, after
+    /// full acceptance draw the bonus from the last position's `p`), roll
+    /// the target's KV back to the committed prefix, roll the draft back
+    /// to committed-only tokens, then emit the tokens in order with the
+    /// same per-token stop checks sequential decode would have run.
+    fn advance_verify(&mut self, id: RequestId, k: usize, logits: Option<Vec<f32>>, cap: usize) {
+        let Some(ai) = self.active.iter().position(|a| a.req.id == id) else {
+            return;
+        };
+        let Some(flat) = logits else {
+            self.fail_active(id, "backend returned no logits for a verify row");
+            return;
+        };
+        let width = k + 1;
+        if flat.is_empty() || flat.len() % width != 0 {
+            self.fail_active(id, "verify row returned malformed logits");
+            return;
+        }
+        let vocab = flat.len() / width;
+        let mut committed: Vec<usize> = Vec::with_capacity(width);
+        let mut accepted = 0usize;
+        let mut bad_state = false;
+        let mut trunc_err: Option<String> = None;
+        let pos_before;
+        {
+            let Some(a) = self.active.get_mut(ai) else { return };
+            // The walk appended `width` positions; the position a
+            // sequential decode would have checked for the j-th committed
+            // token (1-based) is `pos_before + j`.
+            pos_before = self.backend.session_pos(&a.sess).saturating_sub(width);
+            match a.spec.as_mut() {
+                Some(sp) if sp.toks.len() == width => {
+                    let greedy = a.req.sampler.temperature <= 0.0;
+                    for i in 0..k {
+                        let row = &flat[i * vocab..(i + 1) * vocab];
+                        let Some(&d) = sp.toks.get(i + 1) else { break };
+                        if greedy {
+                            let c = sampler::argmax(row);
+                            committed.push(c);
+                            if c != d {
+                                break;
+                            }
+                            accepted += 1;
+                        } else {
+                            let p = sampler::dist(row, a.req.sampler);
+                            let Some(q) = sp.qdists.get(i) else { break };
+                            let qd = q.get(d).copied().unwrap_or(0.0);
+                            let pd = p.get(d).copied().unwrap_or(0.0);
+                            let ratio = if qd > 0.0 { (pd / qd).min(1.0) } else { 0.0 };
+                            if sp.rng.f32() < ratio {
+                                committed.push(d);
+                                accepted += 1;
+                            } else {
+                                committed.push(sampler::residual_sample(&p, q, &mut sp.rng));
+                                break;
+                            }
+                        }
+                    }
+                    if accepted == k {
+                        // Every proposal held: the last verified position's
+                        // logits are a free extra token.
+                        let row = &flat[k * vocab..(k + 1) * vocab];
+                        if greedy {
+                            committed.push(sampler::argmax(row));
+                        } else {
+                            let p = sampler::dist(row, a.req.sampler);
+                            committed.push(sampler::sample_from_dist(&p, &mut sp.rng));
+                        }
+                    }
+                    let m = committed.len();
+                    if m == 0 {
+                        bad_state = true;
+                    } else {
+                        if m < width {
+                            // Roll the target back to the committed
+                            // prefix, minus the newest committed token
+                            // (the standing never-yet-fed invariant).
+                            let keep =
+                                self.backend.session_pos(&a.sess).saturating_sub(width - m);
+                            if let Err(e) = self.backend.truncate_kv(&mut a.sess, keep) {
+                                trunc_err = Some(format!("verify KV rollback failed: {e}"));
+                            }
+                        }
+                        if trunc_err.is_none() {
+                            if let Some(sc) = &self.spec {
+                                // Draft KV holds `fed` committed tokens
+                                // plus proposals d1..d(k-1); keep the
+                                // accepted (= committed) proposals, and
+                                // stay below the new committed length so
+                                // the next catch-up re-decodes the newest
+                                // token for fresh logits.
+                                let new_fed = (sp.fed + accepted.min(k.saturating_sub(1)))
+                                    .min(sp.fed + m.saturating_sub(1));
+                                sc.draft.truncate_kv(&mut sp.sess, new_fed);
+                                sp.fed = new_fed;
+                            }
+                        }
+                    }
+                }
+                _ => bad_state = true,
+            }
+        }
+        if bad_state {
+            self.fail_active(id, "verify row without matching draft state");
+            return;
+        }
+        self.metrics.spec.walks += 1;
+        self.metrics.spec.proposed += k as u64;
+        self.metrics.spec.accepted += accepted as u64;
+        self.metrics.spec.committed += committed.len() as u64;
+        if let Some(e) = trunc_err {
+            self.fail_active(id, &e);
+            return;
+        }
+        // Emit the committed tokens in order, running the same stop checks
+        // sequential decode would have; a stop discards the rest.
+        let mut fired: Option<FinishReason> = None;
+        for (j, &tok) in committed.iter().enumerate() {
+            let (index, stop) = {
+                let Some(a) = self.active.get_mut(ai) else { return };
+                a.tokens.push(tok);
+                a.last = tok;
+                let stop = stop_reason(&a.req, &a.tokens, tok, a.budget, pos_before + j + 1, cap);
+                (a.tokens.len() - 1, stop)
+            };
+            deliver(
+                &mut self.events,
+                &mut self.streams,
+                EngineEvent::Token { id, tok, index, ttft_s: None },
+            );
+            if let Some(r) = stop {
+                fired = Some(r);
+                break;
+            }
+        }
+        if let Some(r) = fired {
+            let act = self.active.remove(ai);
+            self.finalize(act, r);
+        }
+    }
+
     /// Terminal failure of an active request (backend error): tear the
     /// session down — pool pages and flash spill records free immediately
     /// instead of leaking until process exit — and emit a terminal
@@ -812,6 +1229,11 @@ impl<B: InferenceBackend> Engine<B> {
     /// Capture metrics, release the session's KV, emit the terminal
     /// `Finished` event and record the response.
     fn finalize(&mut self, mut act: Active<B::Session>, reason: FinishReason) {
+        if let Some(mut sp) = act.spec.take() {
+            // Completed requests release their draft session's KV with
+            // the rest of their memory.
+            sp.sess.release_kv();
+        }
         let decode_s = if act.decoded_any {
             act.decode_started.elapsed().as_secs_f64()
         } else {

@@ -56,6 +56,64 @@ pub fn decode_attention_with(
     }
 }
 
+/// Multi-position speculative **verify** attention: `s` consecutive
+/// decode positions (the newest committed token followed by draft
+/// proposals) attend causally over the quantized cache.
+///
+/// * `q` — [s, heads, d] roped, unscaled; `k`, `v` — [s, kv_heads, d]
+///   fresh rows for the verify positions.
+/// * `out` — [s, heads, d].
+///
+/// Each position's K/V is appended **before** its own scores — the exact
+/// append-then-score sequence `s` one-token decode calls perform, which
+/// is the entire bit-identity argument: position `t` attends over cached
+/// tokens `0..len+t+1` and never its successors, so a verify row's
+/// outputs equal sequential decode's bit for bit. The native fused walk
+/// interleaves the same append/stream pair per position over the hybrid
+/// (spillable) cache; this dense form is the reference the verify tests
+/// oracle against.
+pub fn verify_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    s: usize,
+    heads: usize,
+    cache: &mut KvLayer,
+    out: &mut [f32],
+) {
+    verify_attention_with(&ScalarBackend, q, k, v, s, heads, cache, out);
+}
+
+/// [`verify_attention`] on an explicit compute backend.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_attention_with(
+    be: &dyn ComputeBackend,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    s: usize,
+    heads: usize,
+    cache: &mut KvLayer,
+    out: &mut [f32],
+) {
+    let d = cache.head_dim;
+    let row = cache.kv_heads * d;
+    assert_eq!(q.len(), s * heads * d);
+    assert_eq!(k.len(), s * row);
+    assert_eq!(v.len(), s * row);
+    assert_eq!(out.len(), s * heads * d);
+    for t in 0..s {
+        cache.append(&k[t * row..(t + 1) * row], &v[t * row..(t + 1) * row]);
+        decode_attention_with(
+            be,
+            &q[t * heads * d..(t + 1) * heads * d],
+            heads,
+            cache,
+            &mut out[t * heads * d..(t + 1) * heads * d],
+        );
+    }
+}
+
 /// Causal prefill attention over fresh (unquantized) K/V.
 ///
 /// * `q` — [s, heads, d] roped, unscaled; `k`, `v` — [s, kv_heads, d].
@@ -481,6 +539,80 @@ mod tests {
             want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             got.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn verify_attention_matches_sequential_decode_bitwise() {
+        // The speculative-verify kernel contract: one multi-position call
+        // equals `s` append-then-score decode calls, bit for bit.
+        let mut rng = Rng::new(11);
+        let (heads, kv_heads, d, hist, s) = (4usize, 2usize, 8usize, 5usize, 3usize);
+        let row = kv_heads * d;
+        let mut seq = KvLayer::new(kv_heads, d);
+        let mut fused = KvLayer::new(kv_heads, d);
+        for _ in 0..hist {
+            let k = rng.normal_vec(row);
+            let v = rng.normal_vec(row);
+            seq.append(&k, &v);
+            fused.append(&k, &v);
+        }
+        let q = rng.normal_vec(s * heads * d);
+        let k = rng.normal_vec(s * row);
+        let v = rng.normal_vec(s * row);
+        let mut want = vec![0f32; s * heads * d];
+        for t in 0..s {
+            seq.append(&k[t * row..(t + 1) * row], &v[t * row..(t + 1) * row]);
+            decode_attention(
+                &q[t * heads * d..(t + 1) * heads * d],
+                heads,
+                &seq,
+                &mut want[t * heads * d..(t + 1) * heads * d],
+            );
+        }
+        let mut got = vec![0f32; s * heads * d];
+        verify_attention(&q, &k, &v, s, heads, &mut fused, &mut got);
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(fused.len(), hist + s, "verify appends all its positions");
+    }
+
+    #[test]
+    fn verify_attention_is_causal() {
+        // Perturbing the last draft's K/V must not change any earlier
+        // position's output — drafts never leak backwards.
+        let mut rng = Rng::new(12);
+        let (heads, kv_heads, d, hist, s) = (2usize, 1usize, 8usize, 4usize, 3usize);
+        let row = kv_heads * d;
+        let hk: Vec<Vec<f32>> = (0..hist).map(|_| rng.normal_vec(row)).collect();
+        let hv: Vec<Vec<f32>> = (0..hist).map(|_| rng.normal_vec(row)).collect();
+        let fill = |cache: &mut KvLayer| {
+            for (k, v) in hk.iter().zip(&hv) {
+                cache.append(k, v);
+            }
+        };
+        let q = rng.normal_vec(s * heads * d);
+        let k = rng.normal_vec(s * row);
+        let mut v = rng.normal_vec(s * row);
+        let mut c1 = KvLayer::new(kv_heads, d);
+        fill(&mut c1);
+        let mut out1 = vec![0f32; s * heads * d];
+        verify_attention(&q, &k, &v, s, heads, &mut c1, &mut out1);
+        for x in &mut v[(s - 1) * row..] {
+            *x += 7.0;
+        }
+        let mut c2 = KvLayer::new(kv_heads, d);
+        fill(&mut c2);
+        let mut out2 = vec![0f32; s * heads * d];
+        verify_attention(&q, &k, &v, s, heads, &mut c2, &mut out2);
+        for t in 0..s - 1 {
+            assert_eq!(
+                out1[t * heads * d..(t + 1) * heads * d],
+                out2[t * heads * d..(t + 1) * heads * d],
+                "position {t} saw a later draft"
+            );
+        }
     }
 
     #[test]

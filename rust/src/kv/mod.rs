@@ -114,6 +114,17 @@ impl KvLayer {
         true
     }
 
+    /// Tail mirror of [`release_front_handle`](Self::release_front_handle):
+    /// the page goes back to the pool once no other holder references it.
+    fn release_back_handle(&mut self) -> bool {
+        let Some(h) = self.pages.pop_back() else { return false };
+        if let Some(id) = self.holder {
+            self.pool.holder_sub(id, self.page_bytes());
+        }
+        drop(h);
+        true
+    }
+
     /// `&mut Page` for writes into page `pi`, copy-on-writing it first if
     /// it is shared with the prefix cache or another session. Bytes and
     /// holder accounting are unaffected: the layer swaps one referenced
@@ -301,6 +312,27 @@ impl KvLayer {
                 break;
             }
             self.front -= PAGE_TOKENS;
+        }
+    }
+
+    /// Drop the **newest** tokens, keeping the first `keep` live ones (a
+    /// no-op when `keep >= len`). Fully-vacated tail pages release their
+    /// handle — pool bytes and holder accounting shrink immediately for
+    /// exclusively-held pages; shared pages (prefix cache, siblings) just
+    /// drop one reference. The speculative-decoding rollback path: reject
+    /// draft tokens appended this tick without disturbing the surviving
+    /// records or the dropped-prefix (`front`) state, so a later append
+    /// lands in exactly the slot the rejected token occupied.
+    pub fn truncate(&mut self, keep: usize) {
+        if keep >= self.len {
+            return;
+        }
+        self.len = keep;
+        let needed = (self.front + keep).div_ceil(PAGE_TOKENS);
+        while self.pages.len() > needed {
+            if !self.release_back_handle() {
+                break;
+            }
         }
     }
 
@@ -571,6 +603,100 @@ mod tests {
         }
         // Exactly one fully-vacated page went back to the pool.
         assert_eq!(kv.pool().stats().returned, 1);
+    }
+
+    #[test]
+    fn truncate_drops_tail_pages_and_preserves_survivors() {
+        let pool = Arc::new(KvPool::unbounded());
+        let id = pool.register_holder();
+        let mut rng = Rng::new(21);
+        let mut kv = KvLayer::with_pool(2, 8, pool.clone());
+        kv.set_holder(id);
+        let toks = 2 * PAGE_TOKENS + 5;
+        let records: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..toks).map(|_| (rng.normal_vec(16), rng.normal_vec(16))).collect();
+        for (k, v) in &records {
+            kv.append(k, v);
+        }
+        let keep = PAGE_TOKENS + 3;
+        let want: Vec<Vec<u8>> = (0..keep).map(|t| kv.serialize_token(t)).collect();
+        kv.truncate(keep);
+        assert_eq!(kv.len(), keep);
+        assert_eq!(kv.page_count(), 2, "third page released");
+        assert_eq!(pool.holder_bytes(id), 2 * KvPool::page_bytes(2, 8));
+        assert_eq!(pool.stats().returned, 1);
+        for (t, rec) in want.iter().enumerate() {
+            assert_eq!(&kv.serialize_token(t), rec, "survivor {t}");
+        }
+        // Re-appending after the rollback reuses the freed slots and
+        // leaves survivors untouched (the append-then-truncate-then-append
+        // cycle speculative decode performs every tick).
+        let (k, v) = &records[keep];
+        kv.append(k, v);
+        assert_eq!(kv.len(), keep + 1);
+        for (t, rec) in want.iter().enumerate() {
+            assert_eq!(&kv.serialize_token(t), rec, "survivor {t} after re-append");
+        }
+        // A keep >= len truncate is a no-op; truncate(0) releases all.
+        kv.truncate(usize::MAX);
+        assert_eq!(kv.len(), keep + 1);
+        kv.truncate(0);
+        assert_eq!(kv.len(), 0);
+        assert_eq!(kv.page_count(), 0);
+        assert_eq!(pool.holder_bytes(id), 0);
+        assert_eq!(pool.resident_bytes(), 0);
+        pool.unregister_holder(id);
+    }
+
+    #[test]
+    fn truncate_after_drop_prefix_keeps_front_page() {
+        // Mixed spill + rollback: a partially dropped front page must
+        // survive a tail truncate, and token indexing stays consistent.
+        let mut rng = Rng::new(22);
+        let mut kv = filled_layer(&mut rng, 2, 8, PAGE_TOKENS + 8);
+        let q = rng.normal_vec(8);
+        kv.drop_prefix(3); // front = 3 within page 0
+        let want = kv.key_dot(0, 4, &q);
+        kv.truncate(6); // keep live tokens 0..6 (absolute 3..9)
+        assert_eq!(kv.len(), 6);
+        assert_eq!(kv.page_count(), 1, "page 1 fully vacated by the truncate");
+        assert_eq!(kv.key_dot(0, 4, &q), want);
+    }
+
+    #[test]
+    fn truncate_into_shared_pages_only_drops_references() {
+        // Rolling back a session that shares pages with the prefix cache
+        // must not free (or mutate) the donor's pages.
+        let pool = Arc::new(KvPool::unbounded());
+        let pb = KvPool::page_bytes(2, 8);
+        let mut rng = Rng::new(23);
+        let mut donor = KvLayer::with_pool(2, 8, pool.clone());
+        for _ in 0..PAGE_TOKENS + 4 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            donor.append(&k, &v);
+        }
+        let donor_before: Vec<Vec<u8>> =
+            (0..donor.len()).map(|t| donor.serialize_token(t)).collect();
+        let fork = PAGE_TOKENS + 2;
+        let mut warm = KvLayer::with_pool(2, 8, pool.clone());
+        warm.attach_shared(donor.share_prefix_pages(fork), fork);
+        warm.truncate(2); // deep rollback into the shared first page
+        assert_eq!(warm.len(), 2);
+        assert_eq!(warm.page_count(), 1, "shared tail page dereferenced");
+        assert_eq!(pool.resident_bytes(), 2 * pb, "donor still holds both pages");
+        for (t, rec) in donor_before.iter().enumerate() {
+            assert_eq!(&donor.serialize_token(t), rec, "donor token {t}");
+        }
+        // The warm session's next append diverges from the shared page and
+        // copy-on-writes it rather than corrupting the donor.
+        let k = rng.normal_vec(16);
+        let v = rng.normal_vec(16);
+        warm.append(&k, &v);
+        assert_eq!(pool.stats().cow_copies, 1);
+        for (t, rec) in donor_before.iter().enumerate() {
+            assert_eq!(&donor.serialize_token(t), rec, "donor token {t} after CoW");
+        }
     }
 
     #[test]

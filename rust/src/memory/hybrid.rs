@@ -204,6 +204,27 @@ impl HybridKvLayer {
         Ok(n)
     }
 
+    /// Drop the **newest** tokens so `new_len` remain (no-op when
+    /// `new_len >= len()`): the speculative-decoding rollback. Resident
+    /// (newest) records go first via [`KvLayer::truncate`]; only when the
+    /// rollback reaches past the resident suffix — draft tokens that were
+    /// themselves spilled under mid-tick pressure — are the newest spilled
+    /// flash offsets forgotten too (their records stay on the append-only
+    /// flash device until the engine's idle reclamation truncates it).
+    /// Forgetting spilled offsets invalidates any staged copy.
+    pub fn truncate(&mut self, new_len: usize) {
+        if new_len >= self.len() {
+            return;
+        }
+        if new_len >= self.spilled.len() {
+            self.resident.truncate(new_len - self.spilled.len());
+        } else {
+            self.resident.clear();
+            self.spilled.truncate(new_len);
+            self.drop_staging();
+        }
+    }
+
     /// Load all spilled records into staging. Returns modeled flash seconds
     /// spent (0.0 when already staged). The prefetcher calls this during
     /// the previous layer's compute window.
@@ -699,6 +720,88 @@ mod tests {
         assert_eq!(shed, 2 * crate::kv::PAGE_TOKENS);
         assert!(!pool.over_budget());
         assert_eq!(a.len(), 3 * crate::kv::PAGE_TOKENS, "tokens survive on flash");
+    }
+
+    #[test]
+    fn truncate_rolls_back_resident_tail_and_stays_value_neutral() {
+        // Speculative rollback: append draft tokens, reject them, truncate —
+        // attention must equal a layer that never saw the drafts.
+        let pool = Arc::new(KvPool::unbounded());
+        let mut rng = Rng::new(16);
+        let (heads, kv_heads, d, t) = (4usize, 2usize, 16usize, 6usize);
+        let mut plain = KvLayer::new(kv_heads, d);
+        let mut hybrid =
+            HybridKvLayer::with_pool(kv_heads, d, flash(), usize::MAX / 2, pool.clone());
+        for _ in 0..t {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            plain.append(&k, &v);
+            hybrid.append(&k, &v).unwrap();
+        }
+        let q = rng.normal_vec(heads * d);
+        let mut want = vec![0f32; heads * d];
+        hybrid.decode_attention_streaming(&q, heads, &mut want, 4).unwrap();
+        for _ in 0..3 {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            hybrid.append(&k, &v).unwrap(); // rejected draft tokens
+        }
+        hybrid.truncate(t);
+        assert_eq!(hybrid.len(), t);
+        hybrid.truncate(t + 100); // no-op beyond current length
+        assert_eq!(hybrid.len(), t);
+        let mut got = vec![0f32; heads * d];
+        hybrid.decode_attention_streaming(&q, heads, &mut got, 4).unwrap();
+        assert_eq!(want, got, "rollback must be exact, not approximate");
+        let mut full = vec![0f32; heads * d];
+        plain_attention(&q, heads, &plain, &mut full);
+        for (a, b) in full.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        hybrid.truncate(0);
+        assert_eq!(hybrid.len(), 0);
+        assert_eq!(pool.resident_bytes(), 0, "truncate(0) releases all pages");
+    }
+
+    #[test]
+    fn truncate_into_spilled_tier_drops_offsets_and_staging() {
+        // Rollback reaching past the resident suffix (drafts spilled under
+        // mid-tick pressure): spilled offsets are forgotten and any staged
+        // copy is invalidated, while the surviving prefix stays readable.
+        let pool = Arc::new(KvPool::unbounded());
+        let mut rng = Rng::new(17);
+        let (heads, kv_heads, d) = (4usize, 2usize, 16usize);
+        let keep = 3usize;
+        let mut plain = KvLayer::new(kv_heads, d);
+        let mut hybrid = HybridKvLayer::with_pool(kv_heads, d, flash(), 4, pool.clone());
+        for i in 0..10 {
+            let k = rng.normal_vec(kv_heads * d);
+            let v = rng.normal_vec(kv_heads * d);
+            if i < keep {
+                plain.append(&k, &v);
+            }
+            hybrid.append(&k, &v).unwrap();
+        }
+        assert_eq!(hybrid.spilled_tokens(), 6);
+        hybrid.stage().unwrap();
+        hybrid.truncate(keep);
+        assert_eq!(hybrid.len(), keep);
+        assert_eq!(hybrid.spilled_tokens(), keep, "tail offsets forgotten");
+        assert_eq!(pool.resident_bytes(), 0, "resident suffix fully released");
+        assert!(hybrid.stage_cost() > 0.0, "stale staging was invalidated");
+        let q = rng.normal_vec(heads * d);
+        let mut want = vec![0f32; heads * d];
+        plain_attention(&q, heads, &plain, &mut want);
+        let mut got = vec![0f32; heads * d];
+        hybrid.decode_attention_streaming(&q, heads, &mut got, 4).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        // The layer is still append-able after a deep rollback.
+        let k = rng.normal_vec(kv_heads * d);
+        let v = rng.normal_vec(kv_heads * d);
+        hybrid.append(&k, &v).unwrap();
+        assert_eq!(hybrid.len(), keep + 1);
     }
 
     #[test]

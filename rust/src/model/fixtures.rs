@@ -82,6 +82,20 @@ fn push_linear(w: &mut WeightWriter, rng: &mut Rng, name: &str, n: usize, k: usi
     w.push_f32(&format!("{name}.b"), &[n], &biases);
 }
 
+/// Write an all-zero q/s/b triplet: with scale = bias = 0 every
+/// dequantized weight is exactly 0.0, so the projection's output is a
+/// hard zero whatever the activations are (no `QuantizedMatrix::from_f32`
+/// round-trip, whose degenerate-range handling could produce nonzero
+/// bias).
+fn push_zero_linear(w: &mut WeightWriter, name: &str, n: usize, k: usize, bits: WeightBits) {
+    match bits {
+        WeightBits::Int8 => w.push(&format!("{name}.q"), DT_I8, &[n, k], &vec![0u8; n * k]),
+        WeightBits::Int4 => w.push(&format!("{name}.q"), DT_U8, &[n, k / 2], &vec![0u8; n * k / 2]),
+    }
+    w.push_f32(&format!("{name}.s"), &[n], &vec![0.0; n]);
+    w.push_f32(&format!("{name}.b"), &[n], &vec![0.0; n]);
+}
+
 /// Norm weights near 1.0 (rmsnorm gains).
 fn norm_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
     rng.normal_vec(n).iter().map(|x| 1.0 + 0.05 * x).collect()
@@ -97,30 +111,59 @@ pub fn write_fixture(seed: u64) -> std::io::Result<Fixture> {
 /// [`write_fixture`] at a chosen decoder depth. Contents are
 /// deterministic in `(seed, layers)`.
 pub fn write_fixture_with_layers(seed: u64, layers: usize) -> std::io::Result<Fixture> {
+    write_fixture_inner(seed, layers, None)
+}
+
+/// The shared writer. `passthrough_above = Some(t)` makes every layer
+/// `i >= t` a residual passthrough: its attention-output (`wo`) and
+/// MLP-down (`down`) projections are written as exact zeros, so both
+/// residual branches contribute 0.0 and the layer is an identity map on
+/// the hidden state — while still computing attention and appending real
+/// KV records (junk-seeded), so KV paging/spill behave like a real layer.
+/// Passthrough layers draw from a *separate* RNG stream so the real
+/// layers, final norm, lm_head and embedding consume exactly the same
+/// bytes of `rng` as a model written without the passthrough tail.
+/// `None` is byte-identical to the historical single-stream writer.
+fn write_fixture_inner(
+    seed: u64,
+    layers: usize,
+    passthrough_above: Option<usize>,
+) -> std::io::Result<Fixture> {
     let cfg = fixture_config_with_layers(layers);
     let dir = crate::util::unique_temp_path("mnn_fixture", "");
     std::fs::create_dir_all(&dir)?;
     let mut rng = Rng::new(seed);
+    let mut junk = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
     let (h, kvd, inter, vocab) = (cfg.hidden, cfg.kv_dim(), cfg.inter, cfg.vocab);
 
     let mut w = WeightWriter::new();
     for i in 0..cfg.layers {
         let p = format!("L{i}.");
-        push_linear(&mut w, &mut rng, &format!("{p}wq"), h, h, WeightBits::Int8);
-        push_linear(&mut w, &mut rng, &format!("{p}wk"), kvd, h, WeightBits::Int8);
-        push_linear(&mut w, &mut rng, &format!("{p}wv"), kvd, h, WeightBits::Int8);
-        push_linear(&mut w, &mut rng, &format!("{p}wo"), h, h, WeightBits::Int8);
-        push_linear(&mut w, &mut rng, &format!("{p}gate"), inter, h, WeightBits::Int4);
-        push_linear(&mut w, &mut rng, &format!("{p}up"), inter, h, WeightBits::Int4);
-        push_linear(&mut w, &mut rng, &format!("{p}down"), h, inter, WeightBits::Int4);
-        let bq: Vec<f32> = rng.normal_vec(h).iter().map(|x| x * 0.01).collect();
+        let zero = passthrough_above.is_some_and(|t| i >= t);
+        let r = if zero { &mut junk } else { &mut rng };
+        push_linear(&mut w, r, &format!("{p}wq"), h, h, WeightBits::Int8);
+        push_linear(&mut w, r, &format!("{p}wk"), kvd, h, WeightBits::Int8);
+        push_linear(&mut w, r, &format!("{p}wv"), kvd, h, WeightBits::Int8);
+        if zero {
+            push_zero_linear(&mut w, &format!("{p}wo"), h, h, WeightBits::Int8);
+        } else {
+            push_linear(&mut w, r, &format!("{p}wo"), h, h, WeightBits::Int8);
+        }
+        push_linear(&mut w, r, &format!("{p}gate"), inter, h, WeightBits::Int4);
+        push_linear(&mut w, r, &format!("{p}up"), inter, h, WeightBits::Int4);
+        if zero {
+            push_zero_linear(&mut w, &format!("{p}down"), h, inter, WeightBits::Int4);
+        } else {
+            push_linear(&mut w, r, &format!("{p}down"), h, inter, WeightBits::Int4);
+        }
+        let bq: Vec<f32> = r.normal_vec(h).iter().map(|x| x * 0.01).collect();
         w.push_f32(&format!("{p}bq"), &[h], &bq);
-        let bk: Vec<f32> = rng.normal_vec(kvd).iter().map(|x| x * 0.01).collect();
+        let bk: Vec<f32> = r.normal_vec(kvd).iter().map(|x| x * 0.01).collect();
         w.push_f32(&format!("{p}bk"), &[kvd], &bk);
-        let bv: Vec<f32> = rng.normal_vec(kvd).iter().map(|x| x * 0.01).collect();
+        let bv: Vec<f32> = r.normal_vec(kvd).iter().map(|x| x * 0.01).collect();
         w.push_f32(&format!("{p}bv"), &[kvd], &bv);
-        w.push_f32(&format!("{p}ln1"), &[h], &norm_vec(&mut rng, h));
-        w.push_f32(&format!("{p}ln2"), &[h], &norm_vec(&mut rng, h));
+        w.push_f32(&format!("{p}ln1"), &[h], &norm_vec(r, h));
+        w.push_f32(&format!("{p}ln2"), &[h], &norm_vec(r, h));
     }
     w.push_f32("fnorm", &[h], &norm_vec(&mut rng, h));
     push_linear(&mut w, &mut rng, "lm_head", vocab, h, WeightBits::Int8);
@@ -163,6 +206,23 @@ pub fn write_fixture_with_layers(seed: u64, layers: usize) -> std::io::Result<Fi
     );
     std::fs::write(dir.join("manifest.json"), manifest)?;
     Ok(Fixture { dir })
+}
+
+/// A paired target/draft artifact set for speculative decoding, sharing
+/// one seed. The target has `target_layers` decoder layers, but layers
+/// ≥ 1 are residual passthroughs (zero `wo`/`down`); the draft is the
+/// 1-layer model built from exactly the same layer-0 / final-norm /
+/// lm_head / embedding bytes. Both therefore compute the *same function*
+/// bit-identically: a draft whose greedy proposals the target always
+/// accepts, which pins down acceptance bookkeeping in tests, while the
+/// target still pays full-depth KV (so paging, spill, and rollback are
+/// exercised at real depth).
+pub fn write_paired_fixture(seed: u64, target_layers: usize)
+                            -> std::io::Result<(Fixture, Fixture)> {
+    assert!(target_layers >= 1, "target needs at least the shared layer 0");
+    let target = write_fixture_inner(seed, target_layers, Some(1))?;
+    let draft = write_fixture_inner(seed, 1, None)?;
+    Ok((target, draft))
 }
 
 /// Fixture + loaded native model in one call (the common test setup).
@@ -253,6 +313,44 @@ mod tests {
         let out = m.generate_once(&[1, 2, 3], 5);
         assert_eq!(out.len(), 5);
         assert!(out.iter().all(|&t| t < m.config.vocab));
+    }
+
+    #[test]
+    fn paired_fixture_is_backward_compatible_and_bitwise_equivalent() {
+        // The refactored writer with no passthrough must be byte-identical
+        // to what `write_fixture_with_layers` always produced (same seed →
+        // same bytes is already covered; here: the paired draft equals a
+        // plain 1-layer fixture of the same seed).
+        let (tfx, dfx) = write_paired_fixture(11, 4).unwrap();
+        let plain = write_fixture_with_layers(11, 1).unwrap();
+        for f in ["weights.bin", "embedding.bin", "manifest.json"] {
+            assert_eq!(
+                std::fs::read(dfx.dir().join(f)).unwrap(),
+                std::fs::read(plain.dir().join(f)).unwrap(),
+                "{f}: draft is a plain 1-layer fixture"
+            );
+        }
+
+        let target = NativeModel::load(tfx.dir(), EngineOptions::default()).unwrap();
+        let draft = NativeModel::load(dfx.dir(), EngineOptions::default()).unwrap();
+        assert_eq!(target.config.layers, 4);
+        assert_eq!(draft.config.layers, 1);
+
+        // The passthrough tail must not perturb the computed function:
+        // prefill logits and several greedy decode steps agree bitwise.
+        let prompt = [7usize, 300, 12, 451];
+        let mut ts = target.new_session();
+        let mut ds = draft.new_session();
+        let tl = target.prefill(&mut ts, &prompt);
+        let dl = draft.prefill(&mut ds, &prompt);
+        assert_eq!(tl, dl, "passthrough layers changed the prefill logits");
+        let mut tok = crate::model::sampler::argmax(&tl);
+        for step in 0..4 {
+            let a = target.decode(&mut ts, tok);
+            let b = draft.decode(&mut ds, tok);
+            assert_eq!(a, b, "decode step {step} diverged");
+            tok = crate::model::sampler::argmax(&a);
+        }
     }
 
     #[test]

@@ -113,6 +113,14 @@ pub struct EngineOptions {
     /// bit-identical: integer accumulation is exact and the float
     /// epilogues keep the scalar reduction order.
     pub backend: crate::cpu::backend::BackendChoice,
+    /// Default speculative-decoding depth: how many draft tokens a
+    /// request verifies per fused tick once a draft model is attached to
+    /// the engine (`Engine::attach_draft`), unless the request sets its
+    /// own `Request::spec_depth`. 0 (the default) disables speculation
+    /// entirely — no draft sessions, no verify rows, no extra RNG
+    /// consumption — keeping the engine bit-identical to its
+    /// pre-speculation behavior.
+    pub spec_depth: usize,
 }
 
 impl Default for EngineOptions {
@@ -129,6 +137,7 @@ impl Default for EngineOptions {
             max_rows_per_tick: usize::MAX,
             prefix_cache_bytes: 0,
             backend: crate::cpu::backend::BackendChoice::Auto,
+            spec_depth: 0,
         }
     }
 }
@@ -859,6 +868,34 @@ impl NativeModel {
         }
     }
 
+    /// Roll the session back to its first `keep` positions, dropping the
+    /// KV of everything newer: per-layer paged truncation (whole freed
+    /// tail pages return to the pool immediately; spilled flash offsets
+    /// past the cut are forgotten) plus the position counter. A no-op
+    /// when `keep` is at or past the current position. Speculative
+    /// decoding appends all `k+1` verify positions optimistically and
+    /// calls this to keep only the accepted prefix — the page gauges
+    /// must return exactly to the committed footprint (pinned by the
+    /// rollback tests).
+    pub fn truncate_kv(&self, sess: &mut NativeSession, keep: usize) {
+        if keep >= sess.pos {
+            return;
+        }
+        for l in &mut sess.kv {
+            l.truncate(keep);
+        }
+        sess.pos = keep;
+    }
+
+    /// Page-granular KV bytes a verify row of `depth` draft tokens may
+    /// pin beyond the plain decode append — `depth` extra records per
+    /// layer, rounded up to whole pages. Zero at `depth == 0`, so
+    /// non-speculating engines reserve nothing.
+    pub fn verify_reserve_bytes(&self, depth: usize) -> usize {
+        let cfg = &self.config;
+        cfg.layers * depth.div_ceil(PAGE_TOKENS) * KvPool::page_bytes(cfg.kv_heads, cfg.head_dim())
+    }
+
     /// Prefill `ids`; returns logits for the **last** token ([vocab]).
     /// Leaves the session's KV cache filled and `pos` advanced. A
     /// single-chunk [`prefill_chunk`](Self::prefill_chunk): monolithic
@@ -1006,6 +1043,11 @@ impl NativeModel {
                 RowWork::Decode { tok } => {
                     widths.push(1);
                     all_ids.push(tok);
+                }
+                RowWork::Verify { toks } => {
+                    assert!(!toks.is_empty(), "empty verify row");
+                    widths.push(toks.len());
+                    all_ids.extend_from_slice(toks);
                 }
             }
         }
@@ -1190,6 +1232,36 @@ impl NativeModel {
                             continue;
                         }
                     }
+                    RowWork::Verify { .. } => {
+                        // Speculative verify: per position, append-then-
+                        // stream — exactly the sequence of KV mutations and
+                        // online-softmax reductions `s_r` sequential decode
+                        // steps would perform. The streaming absorb visits
+                        // keys in global token order regardless of chunk or
+                        // spill boundaries, so each position's attention
+                        // output is bit-identical to sequential decode by
+                        // construction (the invariant the speculative
+                        // engine's greedy == non-speculative test pins).
+                        for t in 0..s_r {
+                            if let Err(e) = sess.kv[li].append(
+                                &k[(o + t) * kv_dim..(o + t + 1) * kv_dim],
+                                &v[(o + t) * kv_dim..(o + t + 1) * kv_dim],
+                            ) {
+                                row_err[r] = Some(e);
+                                break;
+                            }
+                            self.ops.attention_rows.fetch_add(1, Ordering::Relaxed);
+                            if let Err(e) = sess.kv[li].decode_attention_streaming(
+                                &q[(o + t) * h..(o + t + 1) * h],
+                                heads,
+                                &mut attn[(o + t) * h..(o + t + 1) * h],
+                                KV_STREAM_CHUNK,
+                            ) {
+                                row_err[r] = Some(e);
+                                break;
+                            }
+                        }
+                    }
                 }
             }
             self.linear(&layer.wo, &attn, total, &mut attn_out);
@@ -1242,6 +1314,18 @@ impl NativeModel {
                     sess.pos += 1;
                     decode_tokens += 1;
                 }
+                RowWork::Verify { .. } => {
+                    // Decode-phase work: the row's full width (committed
+                    // token + drafts, accepted or not) lands in the decode
+                    // gauges — fetches-per-*committed*-token is computed by
+                    // the engine/bench layer from its own commit counts.
+                    decode_rows += 1;
+                    if row_err[r].is_some() {
+                        continue;
+                    }
+                    sess.pos += widths[r];
+                    decode_tokens += widths[r] as u64;
+                }
             }
         }
         // Fetch accounting: a walk's flash reads are shared by its rows
@@ -1262,8 +1346,10 @@ impl NativeModel {
         // Logits only where someone will read them: successful decode
         // rows and final prefill chunks (their last token's row), through
         // one gathered lm_head pass — row-independent, so equal to
-        // per-row passes. Failed rows yield their error instead.
-        let out_rows: Vec<Option<usize>> = works
+        // per-row passes. Verify rows read **every** position (`(start,
+        // count)` spans), returning them concatenated. Failed rows yield
+        // their error instead.
+        let out_rows: Vec<Option<(usize, usize)>> = works
             .iter()
             .enumerate()
             .map(|(r, w)| {
@@ -1271,13 +1357,15 @@ impl NativeModel {
                     return None;
                 }
                 match *w {
-                    RowWork::Prefill { last: true, .. } => Some(offs[r] + widths[r] - 1),
+                    RowWork::Prefill { last: true, .. } => Some((offs[r] + widths[r] - 1, 1)),
                     RowWork::Prefill { last: false, .. } => None,
-                    RowWork::Decode { .. } => Some(offs[r]),
+                    RowWork::Decode { .. } => Some((offs[r], 1)),
+                    RowWork::Verify { .. } => Some((offs[r], widths[r])),
                 }
             })
             .collect();
-        let picked: Vec<usize> = out_rows.iter().filter_map(|o| *o).collect();
+        let picked: Vec<usize> =
+            out_rows.iter().flat_map(|o| o.map_or(0..0, |(s, n)| s..s + n)).collect();
         let n_out = picked.len();
         if n_out == 0 {
             return Ok(row_err
@@ -1310,18 +1398,19 @@ impl NativeModel {
                 })
                 .collect());
         }
-        let mut chunks = logits.chunks_exact(cfg.vocab);
+        let mut cursor = 0usize;
         Ok(row_err
             .into_iter()
             .zip(&out_rows)
             .map(|(e, o)| match e {
                 Some(e) => Err(e),
-                None => Ok(o.and_then(|_| {
-                    // chunks_exact(vocab) over an n_out*vocab buffer yields
-                    // exactly one chunk per picked row.
-                    let c = chunks.next();
-                    debug_assert!(c.is_some(), "one logits row per output row");
-                    c.map(|c| c.to_vec())
+                None => Ok(o.map(|(_, n)| {
+                    // Each surviving output row owns the next `n`
+                    // consecutive vocab-sized slices of the gathered
+                    // lm_head buffer, in batch order.
+                    let flat = logits[cursor * cfg.vocab..(cursor + n) * cfg.vocab].to_vec();
+                    cursor += n;
+                    flat
                 })),
             })
             .collect())
@@ -1578,6 +1667,52 @@ mod tests {
         }
         assert_eq!(lb_fused.expect("final chunk"), lb_solo, "chunked prefill row diverged");
         assert_eq!(fb.prefill_stash_bytes(), 0, "stash dropped with the final chunk");
+    }
+
+    #[test]
+    fn verify_row_is_bit_identical_to_sequential_decode() {
+        // The speculative-verify invariant: one Verify row over
+        // [committed, d1, d2, d3] returns per-position logits equal bit
+        // for bit to four sequential decode steps, and truncate_kv rolls
+        // the appended tail back to exactly the committed footprint.
+        let (fx, seq) = load();
+        let ver = NativeModel::load(fx.dir(), EngineOptions::default()).unwrap();
+        let prompt = [5usize, 6, 7, 8];
+        let mut ss = seq.new_session();
+        let ls = seq.prefill(&mut ss, &prompt);
+        let mut sv = ver.new_session();
+        let lv = ver.prefill(&mut sv, &prompt);
+        assert_eq!(ls, lv, "prefill parity between loads");
+        let committed = crate::model::sampler::argmax(&ls);
+        let toks = [committed, 3usize, 250, 9];
+        let expect: Vec<Vec<f32>> = toks.iter().map(|&t| seq.decode(&mut ss, t)).collect();
+        let flat = {
+            let rows = ver
+                .forward_tick(&mut [&mut sv], &[RowWork::Verify { toks: &toks }])
+                .expect("weight walk");
+            rows.into_iter().next().unwrap().expect("row ok").expect("verify logits")
+        };
+        assert_eq!(flat.len(), toks.len() * ver.config.vocab);
+        for (i, want) in expect.iter().enumerate() {
+            let got = &flat[i * ver.config.vocab..(i + 1) * ver.config.vocab];
+            assert_eq!(got, want.as_slice(), "verify position {i} diverged");
+        }
+        assert_eq!(sv.pos, prompt.len() + toks.len());
+        // Rollback: keep the committed token plus two accepted drafts.
+        let keep = prompt.len() + 3;
+        ver.truncate_kv(&mut sv, keep);
+        assert_eq!(sv.pos, keep);
+        assert_eq!(sv.kv[0].len(), keep);
+        // A subsequent decode continues bit-identically from the kept
+        // prefix: compare against a session that never speculated.
+        let cont = ver.decode(&mut sv, 11);
+        let mut fresh = seq.new_session();
+        seq.prefill(&mut fresh, &prompt);
+        for &t in &toks[..3] {
+            seq.decode(&mut fresh, t);
+        }
+        let cont_ref = seq.decode(&mut fresh, 11);
+        assert_eq!(cont, cont_ref, "post-rollback decode diverged");
     }
 
     #[test]

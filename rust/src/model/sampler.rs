@@ -72,6 +72,87 @@ pub fn sample(logits: &[f32], cfg: SamplerConfig, rng: &mut Rng) -> usize {
     idx[idx.len() - 1]
 }
 
+/// The categorical distribution [`sample`] draws from, as explicit
+/// probabilities over the full vocab (zero outside the candidate set).
+/// Greedy configs (`temperature <= 0`) yield a point mass on the argmax.
+/// The candidate-set, top-k and softmax arithmetic mirror [`sample`]
+/// exactly, so a draw from this distribution is distributed identically
+/// to `sample`'s output — the property speculative accept/reject needs:
+/// it evaluates `p(token)` for the acceptance ratio and builds the
+/// residual from the very distribution the non-speculative path samples.
+pub fn dist(logits: &[f32], cfg: SamplerConfig) -> Vec<f32> {
+    let mut p = vec![0.0f32; logits.len()];
+    if cfg.temperature <= 0.0 || logits.is_empty() {
+        if !p.is_empty() {
+            p[argmax(logits)] = 1.0;
+        }
+        return p;
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).filter(|&i| !logits[i].is_nan()).collect();
+    if idx.is_empty() {
+        p[argmax(logits)] = 1.0;
+        return p;
+    }
+    if cfg.top_k > 0 && cfg.top_k < idx.len() {
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        idx.truncate(cfg.top_k);
+    }
+    let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((logits[i] - m) / cfg.temperature).exp())
+        .collect();
+    let total: f32 = weights.iter().sum();
+    if total > 0.0 && total.is_finite() {
+        for (k, &i) in idx.iter().enumerate() {
+            p[i] = weights[k] / total;
+        }
+    } else {
+        p[argmax(logits)] = 1.0;
+    }
+    p
+}
+
+/// Draw from an explicit non-negative weight vector (need not be
+/// normalized) with the same inverse-CDF walk [`sample`] uses. Consumes
+/// exactly one `rng.f32()`. Degenerate inputs (no positive finite mass)
+/// fall back to the deterministic argmax.
+pub fn sample_from_dist(p: &[f32], rng: &mut Rng) -> usize {
+    let total: f32 = p.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+    let mut u = rng.f32() * total;
+    if !(total > 0.0) || !total.is_finite() {
+        return argmax(p);
+    }
+    let mut last = 0;
+    for (i, &w) in p.iter().enumerate() {
+        if !w.is_finite() || w <= 0.0 {
+            continue;
+        }
+        if u < w {
+            return i;
+        }
+        u -= w;
+        last = i;
+    }
+    last
+}
+
+/// Sample from the normalized positive residual `max(p - q, 0)` — the
+/// distribution a rejected speculative draft falls back to so the
+/// committed token is still distributed exactly as `p` (the standard
+/// speculative-sampling identity). When the residual carries no mass
+/// (`p == q`), draws from `p` directly. Consumes exactly one `rng.f32()`
+/// either way.
+pub fn residual_sample(p: &[f32], q: &[f32], rng: &mut Rng) -> usize {
+    let r: Vec<f32> = p.iter().zip(q).map(|(&a, &b)| (a - b).max(0.0)).collect();
+    let total: f32 = r.iter().sum();
+    if total > 0.0 && total.is_finite() {
+        sample_from_dist(&r, rng)
+    } else {
+        sample_from_dist(p, rng)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +238,87 @@ mod tests {
             (0..16).map(|_| sample(&logits, cfg, &mut rng)).collect()
         };
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dist_is_a_point_mass_when_greedy_and_proper_otherwise() {
+        let logits = [0.5f32, 2.0, -1.0, f32::NAN];
+        let greedy = dist(&logits, SamplerConfig::default());
+        assert_eq!(greedy, vec![0.0, 1.0, 0.0, 0.0]);
+        let p = dist(&logits, SamplerConfig { temperature: 1.0, top_k: 0 });
+        let total: f32 = p.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5, "sums to 1, got {total}");
+        assert_eq!(p[3], 0.0, "NaN logit carries no mass");
+        assert!(p[1] > p[0] && p[0] > p[2], "ordering follows logits");
+        // top-k truncation zeroes everything outside the top-2.
+        let t2 = dist(&logits, SamplerConfig { temperature: 1.0, top_k: 2 });
+        assert_eq!(t2[2], 0.0);
+        assert!(t2[0] > 0.0 && t2[1] > 0.0);
+    }
+
+    #[test]
+    fn dist_matches_sample_frequencies() {
+        // `dist` must be the distribution `sample` draws from: compare
+        // empirical frequencies over many draws.
+        let logits = [1.0f32, 0.2, -0.5, 0.9];
+        let cfg = SamplerConfig { temperature: 0.9, top_k: 3 };
+        let p = dist(&logits, cfg);
+        let mut rng = Rng::new(17);
+        let n = 20_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[sample(&logits, cfg, &mut rng)] += 1;
+        }
+        for i in 0..4 {
+            let freq = counts[i] as f32 / n as f32;
+            assert!((freq - p[i]).abs() < 0.02, "token {i}: freq {freq} vs p {}", p[i]);
+        }
+    }
+
+    #[test]
+    fn sample_from_dist_respects_support_and_determinism() {
+        let p = [0.0f32, 0.5, 0.0, 0.5];
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let t = sample_from_dist(&p, &mut rng);
+            assert!(t == 1 || t == 3, "sampled {t} outside support");
+        }
+        // Degenerate inputs fall back deterministically.
+        assert_eq!(sample_from_dist(&[0.0, 0.0], &mut rng), 0);
+        assert_eq!(sample_from_dist(&[f32::NAN, 1.0], &mut rng), 1);
+    }
+
+    #[test]
+    fn accept_reject_with_residual_preserves_the_target_distribution() {
+        // The speculative-sampling identity: draw d ~ q, accept with
+        // probability min(1, p[d]/q[d]), otherwise draw from the
+        // normalized residual max(p - q, 0). The committed token must be
+        // distributed exactly as p, whatever q is.
+        let p = [0.45f32, 0.30, 0.20, 0.05];
+        let q = [0.10f32, 0.40, 0.25, 0.25]; // a deliberately bad draft
+        let mut rng = Rng::new(29);
+        let n = 40_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            let d = sample_from_dist(&q, &mut rng);
+            let ratio = if q[d] > 0.0 { (p[d] / q[d]).min(1.0) } else { 0.0 };
+            let tok = if rng.f32() < ratio { d } else { residual_sample(&p, &q, &mut rng) };
+            counts[tok] += 1;
+        }
+        for i in 0..4 {
+            let freq = counts[i] as f32 / n as f32;
+            assert!((freq - p[i]).abs() < 0.015, "token {i}: freq {freq} vs p {}", p[i]);
+        }
+    }
+
+    #[test]
+    fn residual_sample_falls_back_to_p_when_residual_is_empty() {
+        let p = [0.5f32, 0.5];
+        let mut rng = Rng::new(8);
+        let mut seen = [false; 2];
+        for _ in 0..100 {
+            seen[residual_sample(&p, &p, &mut rng)] = true;
+        }
+        assert!(seen[0] && seen[1], "p == q must degrade to drawing from p");
     }
 }

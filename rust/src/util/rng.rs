@@ -69,6 +69,29 @@ impl Rng {
     pub fn bool(&mut self) -> bool {
         self.next_u64() & 1 == 1
     }
+
+    /// Derive an independent sub-stream from this generator **without
+    /// consuming from it**: the current state words and `salt` are folded
+    /// through splitmix64, so forks with distinct salts are decorrelated
+    /// from each other and from the parent. Non-mutating by construction
+    /// (`&self`), which is what lets an optional feature (e.g. speculative
+    /// accept/reject draws) take randomness from a fork while the parent
+    /// stream's future output stays byte-for-byte unchanged.
+    pub fn fork(&self, salt: u64) -> Rng {
+        let mut sm = self.s[0]
+            ^ self.s[1].rotate_left(13)
+            ^ self.s[2].rotate_left(29)
+            ^ self.s[3].rotate_left(47)
+            ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
 }
 
 #[cfg(test)]
@@ -106,6 +129,33 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
         assert!(mean.abs() < 0.03, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn fork_never_consumes_from_the_parent() {
+        // Regression guard for the speculative-decoding sub-stream: the
+        // parent's output must be byte-for-byte identical whether or not
+        // forks were taken — all existing seeded outputs stay unchanged.
+        let mut plain = Rng::new(99);
+        let plain_seq: Vec<u64> = (0..64).map(|_| plain.next_u64()).collect();
+        let mut forked = Rng::new(99);
+        let mut forks = Vec::new();
+        let mut forked_seq = Vec::new();
+        for i in 0..64u64 {
+            forks.push(forked.fork(i)); // interleave forks with draws
+            forked_seq.push(forked.next_u64());
+        }
+        assert_eq!(plain_seq, forked_seq, "fork consumed from the parent");
+    }
+
+    #[test]
+    fn forks_are_deterministic_and_salt_distinct() {
+        let r = Rng::new(5);
+        assert_eq!(r.fork(1).next_u64(), r.fork(1).next_u64());
+        assert_ne!(r.fork(1).next_u64(), r.fork(2).next_u64());
+        // A fork differs from the parent's own stream.
+        let mut p = Rng::new(5);
+        assert_ne!(r.fork(0).next_u64(), p.next_u64());
     }
 
     #[test]

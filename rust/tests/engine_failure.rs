@@ -97,6 +97,7 @@ impl InferenceBackend for MockBackend {
             out.push(match *w {
                 RowWork::Prefill { ids, last } => self.prefill_chunk(sess, ids, last),
                 RowWork::Decode { tok } => self.decode(sess, tok).map(Some),
+                RowWork::Verify { toks } => self.verify(sess, toks),
             });
         }
         Ok(out)

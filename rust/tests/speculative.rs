@@ -1,0 +1,464 @@
+//! Speculative-decoding acceptance suite: a draft model proposes K
+//! tokens per tick and the target verifies them as extra rows of the
+//! same fused walk.
+//!
+//! * Greedy speculative output is **bit-identical** to non-speculative
+//!   decode — for a mismatching draft (rejections + rollback every few
+//!   walks), across depths, policies, compute backends, chunked-prefill
+//!   + row-capped ticks, mid-tick KV spill, and mid-flight churn;
+//! * `spec_depth == 0` (engine- or request-level) is the identity;
+//! * the trait's default loop-over-decode `verify` (a backend without a
+//!   fused walk) produces the same streams as the fused native path;
+//! * with the paired target/draft fixture (identical function) each
+//!   verify walk commits **more than one token**, and under a tight
+//!   weight budget the flash **fetches per committed token drop** vs
+//!   plain decode — the whole point of speculating on a weight-
+//!   streaming engine (§ fig5);
+//! * temperature > 0 speculative sampling preserves the target
+//!   distribution (engine level; the exact accept/reject identity is
+//!   unit-tested in `model::sampler`) and never perturbs the main
+//!   per-request RNG stream;
+//! * target *and* draft KV gauges return to zero after completion,
+//!   rejected-draft truncation, and cancellation.
+
+use std::collections::HashMap;
+
+use mnn_llm::coordinator::scheduler::Engine;
+use mnn_llm::coordinator::{InferenceBackend, Request, SchedulePolicy};
+use mnn_llm::cpu::backend::BackendChoice;
+use mnn_llm::model::fixtures;
+use mnn_llm::model::native::{EngineOptions, NativeModel, NativeSession};
+use mnn_llm::model::sampler::SamplerConfig;
+use mnn_llm::model::tokenizer::EOS;
+
+const TSEED: u64 = 7;
+const DSEED: u64 = 11;
+
+/// Target model (2 layers) — the draft (1 layer, different seed) computes
+/// a *different* function, so proposals are frequently rejected and the
+/// rollback path runs constantly.
+fn target(opts: EngineOptions) -> NativeModel {
+    fixtures::native_model(TSEED, opts).unwrap().1
+}
+
+fn draft() -> NativeModel {
+    let fx = fixtures::write_fixture_with_layers(DSEED, 1).unwrap();
+    NativeModel::load(fx.dir(), EngineOptions::default()).unwrap()
+}
+
+fn toks_by_id(rs: Vec<mnn_llm::coordinator::Response>) -> HashMap<u64, Vec<usize>> {
+    rs.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+/// A `len`-token prompt whose first `n` greedy tokens on `m` avoid EOS,
+/// so walk/token-count assertions can rely on `MaxTokens` stops.
+fn eos_free_prompt(m: &NativeModel, len: usize, n: usize) -> Vec<usize> {
+    for base in [4usize, 5, 21, 33, 57, 73, 90, 111, 140, 170, 200, 230] {
+        let p: Vec<usize> = (0..len).map(|i| (base + i) % 256).collect();
+        if !m.generate_once(&p, n).contains(&EOS) {
+            return p;
+        }
+    }
+    panic!("fixture yields no EOS-free prompt");
+}
+
+fn submit_standard(e: &mut Engine<NativeModel>) -> Vec<u64> {
+    vec![
+        e.submit(vec![5, 6, 7], 6),
+        e.submit(vec![100, 101], 5),
+        e.submit(vec![42; 9], 7),
+        e.submit(vec![200, 201, 202, 203], 4),
+    ]
+}
+
+#[test]
+fn greedy_speculative_is_bit_identical_to_plain_decode() {
+    // The tentpole acceptance criterion: across depths and policies, a
+    // draft that disagrees with the target often (different weights)
+    // still yields exactly the non-speculative greedy streams — every
+    // rejection rolls the target KV back bit-exactly.
+    for policy in [SchedulePolicy::Fifo, SchedulePolicy::Interleaved] {
+        let mut plain = Engine::new(target(EngineOptions::default()), policy);
+        submit_standard(&mut plain);
+        let want = toks_by_id(plain.run_all().unwrap());
+
+        for depth in [1usize, 2, 5] {
+            let mut spec = Engine::new(target(EngineOptions::default()), policy);
+            spec.attach_draft(draft(), depth);
+            assert!(spec.draft_model().is_some());
+            submit_standard(&mut spec);
+            let got = toks_by_id(spec.run_all().unwrap());
+            assert_eq!(got, want, "{policy:?} depth {depth} diverged from plain decode");
+            let sm = spec.metrics.spec;
+            assert!(sm.walks > 0, "speculation never ran at depth {depth}");
+            assert!(sm.accepted <= sm.proposed);
+            assert!(sm.committed >= sm.walks, "every walk commits at least one token");
+            // Gauges: both models idle-clean.
+            assert_eq!(spec.backend().kv_pool().resident_bytes(), 0);
+            assert_eq!(spec.draft_model().unwrap().kv_pool().resident_bytes(), 0);
+        }
+    }
+}
+
+#[test]
+fn greedy_identity_survives_compute_backend_choice() {
+    // The verify walk must be value-neutral under the ComputeBackend seam
+    // too: scalar and SIMD (which degrades to scalar without AVX2) spec
+    // runs reproduce the default-backend plain run bitwise.
+    let mut plain = Engine::new(target(EngineOptions::default()), SchedulePolicy::Interleaved);
+    submit_standard(&mut plain);
+    let want = toks_by_id(plain.run_all().unwrap());
+    for backend in [BackendChoice::Scalar, BackendChoice::Simd] {
+        let mut spec = Engine::new(
+            target(EngineOptions { backend, ..EngineOptions::default() }),
+            SchedulePolicy::Interleaved,
+        );
+        spec.attach_draft(draft(), 3);
+        submit_standard(&mut spec);
+        let got = toks_by_id(spec.run_all().unwrap());
+        assert_eq!(got, want, "{backend:?} speculative run diverged");
+        assert!(spec.metrics.spec.walks > 0);
+    }
+}
+
+#[test]
+fn spec_depth_zero_is_the_identity() {
+    // Depth 0 detaches at the engine level...
+    let mut e = Engine::new(target(EngineOptions::default()), SchedulePolicy::Interleaved);
+    e.attach_draft(draft(), 0);
+    assert!(e.draft_model().is_none(), "depth 0 must not keep a draft");
+
+    // ...and a per-request `spec_depth = 0` opts that request out while
+    // its batch-mates keep speculating, all bit-identical to plain.
+    let mut plain = Engine::new(target(EngineOptions::default()), SchedulePolicy::Interleaved);
+    submit_standard(&mut plain);
+    let want = toks_by_id(plain.run_all().unwrap());
+
+    let mut spec = Engine::new(target(EngineOptions::default()), SchedulePolicy::Interleaved);
+    spec.attach_draft(draft(), 3);
+    let opted_out = spec.submit_request(Request::new(0, vec![5, 6, 7], 6).with_spec_depth(0));
+    spec.submit(vec![100, 101], 5);
+    spec.submit(vec![42; 9], 7);
+    spec.submit(vec![200, 201, 202, 203], 4);
+    let got = toks_by_id(spec.run_all().unwrap());
+    for (id, toks) in &got {
+        // Ids differ across engines only by submission order, which is
+        // identical here.
+        assert_eq!(Some(toks), want.get(id), "request {id} diverged");
+    }
+    assert!(got.contains_key(&opted_out));
+    assert!(spec.metrics.spec.walks > 0, "the other requests still speculated");
+}
+
+#[test]
+fn greedy_identity_under_spill_chunking_row_caps_and_churn() {
+    // The hostile-schedule leg: chunked prefill mixes prefill and verify
+    // rows in one tick, `max_rows_per_tick` clamps the proposal depth
+    // mid-flight, a 4-token KV budget forces mid-tick spill of verify
+    // appends, and requests arrive mid-flight. Every completed request
+    // must still match its solo greedy generation on the plain model.
+    let solo = target(EngineOptions::default());
+    let opts = || EngineOptions {
+        kv_budget_tokens: 4,
+        prefill_chunk_tokens: 3,
+        max_rows_per_tick: 4,
+        ..EngineOptions::default()
+    };
+    let mut e = Engine::new(target(opts()), SchedulePolicy::Interleaved);
+    e.attach_draft(draft(), 3);
+    let mut prompts: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut add = |e: &mut Engine<NativeModel>, p: Vec<usize>, n: usize| {
+        let id = e.submit(p.clone(), n);
+        prompts.insert(id, p);
+    };
+    add(&mut e, vec![5, 6, 7, 8, 9, 10, 11], 8);
+    add(&mut e, vec![100, 101], 6);
+    let mut ticks = 0usize;
+    loop {
+        let more = e.step().unwrap();
+        ticks += 1;
+        if ticks == 2 {
+            add(&mut e, vec![42; 9], 7);
+        }
+        if ticks == 4 {
+            add(&mut e, vec![210, 220, 230], 5);
+        }
+        if !more && !e.has_work() {
+            break;
+        }
+        assert!(ticks < 500, "engine failed to drain");
+    }
+    let rs = e.take_finished();
+    assert_eq!(rs.len(), prompts.len());
+    for r in &rs {
+        let want = solo.generate_once(&prompts[&r.id], r.tokens.len());
+        assert_eq!(r.tokens, want, "request {} diverged under churn", r.id);
+        assert_eq!(r.tokens.len(), r.metrics.new_tokens);
+    }
+    assert!(e.metrics.spec.walks > 0, "speculation must engage under row cap 4");
+    assert_eq!(e.backend().kv_pool().resident_bytes(), 0);
+    assert_eq!(e.backend().spill_store_bytes(), 0);
+    assert_eq!(e.draft_model().unwrap().kv_pool().resident_bytes(), 0);
+}
+
+/// Delegates to the native model but keeps the trait's **default**
+/// `verify` (the loop-over-`decode` fallback) and `step_batch` (the row
+/// loop) — the shape a correct-but-unfused backend presents. Only the
+/// speculation opt-in (`supports_speculation`, `truncate_kv`) is wired
+/// through.
+struct LoopVerifyBackend(NativeModel);
+
+impl InferenceBackend for LoopVerifyBackend {
+    type Session = NativeSession;
+
+    fn max_len(&self) -> usize {
+        InferenceBackend::max_len(&self.0)
+    }
+
+    fn new_session(&self, req: &Request) -> anyhow::Result<NativeSession> {
+        InferenceBackend::new_session(&self.0, req)
+    }
+
+    fn prefill(&self, sess: &mut NativeSession, ids: &[usize]) -> anyhow::Result<Vec<f32>> {
+        InferenceBackend::prefill(&self.0, sess, ids)
+    }
+
+    fn decode(&self, sess: &mut NativeSession, tok: usize) -> anyhow::Result<Vec<f32>> {
+        InferenceBackend::decode(&self.0, sess, tok)
+    }
+
+    // verify / step_batch deliberately NOT overridden: trait defaults.
+
+    fn truncate_kv(&self, sess: &mut NativeSession, keep: usize) -> anyhow::Result<()> {
+        InferenceBackend::truncate_kv(&self.0, sess, keep)
+    }
+
+    fn supports_speculation(&self) -> bool {
+        true
+    }
+
+    fn session_pos(&self, sess: &NativeSession) -> usize {
+        InferenceBackend::session_pos(&self.0, sess)
+    }
+
+    fn release(&self, sess: &mut NativeSession) {
+        InferenceBackend::release(&self.0, sess)
+    }
+
+    fn reclaim(&self) {
+        InferenceBackend::reclaim(&self.0)
+    }
+}
+
+#[test]
+fn trait_default_loop_verify_matches_fused_native() {
+    // Cross-backend parity for the verify contract: an engine whose
+    // backend verifies by the default sequential-decode loop must produce
+    // the same greedy streams as the fused native verify walk (and hence
+    // as plain decode).
+    let mut fused = Engine::new(target(EngineOptions::default()), SchedulePolicy::Interleaved);
+    fused.attach_draft(draft(), 3);
+    submit_standard(&mut fused);
+    let want = toks_by_id(fused.run_all().unwrap());
+    assert!(fused.metrics.spec.walks > 0);
+
+    let mut looped = Engine::new(
+        LoopVerifyBackend(target(EngineOptions::default())),
+        SchedulePolicy::Interleaved,
+    );
+    looped.attach_draft(draft(), 3);
+    looped.submit(vec![5, 6, 7], 6);
+    looped.submit(vec![100, 101], 5);
+    looped.submit(vec![42; 9], 7);
+    looped.submit(vec![200, 201, 202, 203], 4);
+    let got = toks_by_id(looped.run_all().unwrap());
+    assert_eq!(got, want, "loop verify diverged from the fused walk");
+    assert!(looped.metrics.spec.walks > 0, "default-verify backend must speculate");
+}
+
+#[test]
+fn paired_draft_commits_multiple_tokens_per_walk() {
+    // With the paired fixture the draft computes the target's exact
+    // function, so every greedy proposal is accepted: depth-3 walks
+    // commit 4 tokens each (budget-clamped at the tail) — the
+    // accepted-tokens-per-walk > 1 acceptance criterion — while the
+    // token stream stays bit-identical to the non-speculative run.
+    let (tfx, dfx) = fixtures::write_paired_fixture(13, 4).unwrap();
+    let n = 17;
+
+    let plain_model = NativeModel::load(tfx.dir(), EngineOptions::default()).unwrap();
+    let prompt = eos_free_prompt(&plain_model, 5, n);
+    let want = plain_model.generate_once(&prompt, n);
+
+    let mut e = Engine::new(
+        NativeModel::load(tfx.dir(), EngineOptions::default()).unwrap(),
+        SchedulePolicy::Fifo,
+    );
+    e.attach_draft(NativeModel::load(dfx.dir(), EngineOptions::default()).unwrap(), 3);
+    e.submit(prompt, n);
+    let rs = e.run_all().unwrap();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].tokens, want, "speculative run diverged from plain");
+
+    let sm = e.metrics.spec;
+    assert!(
+        sm.committed_per_walk() > 1.0,
+        "paired draft must commit > 1 token/walk, got {} ({sm:?})",
+        sm.committed_per_walk()
+    );
+    assert!(
+        sm.acceptance_rate() > 0.99,
+        "identical functions must accept everything, got {}",
+        sm.acceptance_rate()
+    );
+    // n - 1 tokens come from verify walks (the first from prefill), all
+    // proposals accepted: ⌈(n-1)/4⌉ walks.
+    assert_eq!(sm.walks, ((n as u64) - 1).div_ceil(4));
+    assert!(e.metrics.summary(1.0).contains("spec"), "{}", e.metrics.summary(1.0));
+}
+
+#[test]
+fn speculation_cuts_decode_fetches_per_committed_token() {
+    // The fig5 claim, as a test: on a weight-streaming solo decoder
+    // (budget ≈ 2 of 6 layers resident) a verify walk amortizes one
+    // layer-fetch sweep over several committed tokens, so flash fetches
+    // per committed token must drop strictly below plain decode's.
+    let (tfx, dfx) = fixtures::write_paired_fixture(13, 6).unwrap();
+    let n = 24;
+    let probe = NativeModel::load(tfx.dir(), EngineOptions::default()).unwrap();
+    let per_layer = probe.weight_metrics().packed_bytes / 6;
+    let prompt = eos_free_prompt(&probe, 6, n);
+    drop(probe);
+    let tight = || EngineOptions {
+        weight_dram_bytes: 2 * per_layer,
+        ..EngineOptions::default()
+    };
+
+    let fetches_per_token = |spec_depth: usize| {
+        let mut e = Engine::new(
+            NativeModel::load(tfx.dir(), tight()).unwrap(),
+            SchedulePolicy::Fifo,
+        );
+        if spec_depth > 0 {
+            e.attach_draft(
+                NativeModel::load(dfx.dir(), EngineOptions::default()).unwrap(),
+                spec_depth,
+            );
+        }
+        e.submit(prompt.clone(), n);
+        let rs = e.run_all().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].tokens.len(), n);
+        let wm = e.metrics.weights;
+        assert!(wm.decode_fetches > 0, "tight budget must force decode fetches");
+        (wm.decode_fetches as f64 / n as f64, rs[0].tokens.clone(), e.metrics.spec)
+    };
+
+    let (plain_fpt, plain_toks, _) = fetches_per_token(0);
+    let (spec_fpt, spec_toks, sm) = fetches_per_token(3);
+    assert_eq!(spec_toks, plain_toks, "weight streaming must stay value-neutral");
+    assert!(sm.committed_per_walk() > 1.0, "{sm:?}");
+    assert!(
+        spec_fpt < 0.6 * plain_fpt,
+        "speculation must amortize weight fetches: {spec_fpt:.2} vs plain {plain_fpt:.2} \
+         fetches/token"
+    );
+}
+
+#[test]
+fn sampled_speculative_preserves_the_distribution() {
+    // Engine-level distribution preservation at temperature > 0 with a
+    // *disagreeing* draft (so accept, reject+residual and bonus paths all
+    // run). Per generated index, the empirical token marginals over many
+    // seeded requests must match the non-speculative engine's. The first
+    // sampled token must match bit-exactly: speculation draws only from a
+    // forked RNG sub-stream, never from the request's main stream.
+    const N: u64 = 800;
+    let sampler = SamplerConfig { temperature: 1.0, top_k: 3 };
+    let run = |spec: bool| {
+        let mut e = Engine::new(target(EngineOptions::default()), SchedulePolicy::Interleaved);
+        if spec {
+            e.attach_draft(draft(), 2);
+        }
+        let mut ids = Vec::new();
+        for s in 0..N {
+            ids.push(e.submit_request(
+                Request::new(0, vec![5, 6, 7], 3).with_sampler(sampler).with_seed(s),
+            ));
+        }
+        let by_id = toks_by_id(e.run_all().unwrap());
+        let walks = e.metrics.spec.walks;
+        let accepted = e.metrics.spec.accepted;
+        let proposed = e.metrics.spec.proposed;
+        (ids.into_iter().map(|id| by_id[&id].clone()).collect::<Vec<_>>(), walks, accepted, proposed)
+    };
+    let (plain, _, _, _) = run(false);
+    let (spec, walks, accepted, proposed) = run(true);
+    assert!(walks > 0);
+    assert!(accepted > 0, "acceptance path never ran");
+    assert!(accepted < proposed, "rejection/residual path never ran");
+
+    // Token 0 is sampled from the main stream in both engines: bit-equal.
+    for (p, s) in plain.iter().zip(&spec) {
+        assert_eq!(p.first(), s.first(), "speculation perturbed the main RNG stream");
+    }
+    // Later indices: distribution-equal, not pointwise. Compare marginals.
+    let marginal = |runs: &[Vec<usize>], idx: usize| {
+        let mut freq: HashMap<usize, f64> = HashMap::new();
+        for r in runs {
+            if let Some(&t) = r.get(idx) {
+                *freq.entry(t).or_default() += 1.0 / N as f64;
+            }
+        }
+        freq
+    };
+    for idx in 1..3 {
+        let (pm, sm) = (marginal(&plain, idx), marginal(&spec, idx));
+        let keys: Vec<usize> = pm.keys().chain(sm.keys()).copied().collect();
+        for t in keys {
+            let d = (pm.get(&t).copied().unwrap_or(0.0) - sm.get(&t).copied().unwrap_or(0.0))
+                .abs();
+            assert!(
+                d < 0.1,
+                "index {idx} token {t}: marginal gap {d:.3} (plain {:?} vs spec {:?})",
+                pm.get(&t),
+                sm.get(&t)
+            );
+        }
+    }
+}
+
+#[test]
+fn draft_and_target_kv_gauges_return_to_zero_after_cancel() {
+    // Cancel mid-decode with speculation live: the request's target
+    // session AND its draft session free their pool pages immediately.
+    let mut e = Engine::new(target(EngineOptions::default()), SchedulePolicy::Interleaved);
+    e.attach_draft(draft(), 3);
+    let pa = eos_free_prompt(e.backend(), 3, 24);
+    let pb = eos_free_prompt(e.backend(), 4, 24);
+    let a = e.submit(pa, 24);
+    let b = e.submit(pb, 24);
+    for _ in 0..4 {
+        assert!(e.step().unwrap());
+    }
+    assert_eq!(e.active_count(), 2);
+    assert!(e.metrics.spec.walks > 0, "speculation must be live after 4 ticks");
+    let draft_before = e.draft_model().unwrap().kv_pool().resident_bytes();
+    let target_before = e.backend().kv_pool().resident_bytes();
+    assert!(draft_before > 0, "live speculation holds draft KV");
+    assert!(target_before > 0);
+    assert!(e.cancel(a));
+    assert!(
+        e.draft_model().unwrap().kv_pool().resident_bytes() < draft_before,
+        "cancel must free the draft session's pages immediately"
+    );
+    assert!(e.backend().kv_pool().resident_bytes() < target_before);
+    while e.step().unwrap() {}
+    let rs = e.take_finished();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].id, b);
+    assert_eq!(e.backend().kv_pool().resident_bytes(), 0);
+    assert_eq!(e.backend().spill_store_bytes(), 0);
+    assert_eq!(e.draft_model().unwrap().kv_pool().resident_bytes(), 0);
+    assert_eq!(e.draft_model().unwrap().spill_store_bytes(), 0);
+}
