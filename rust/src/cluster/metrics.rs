@@ -1,0 +1,134 @@
+//! Per-replica + aggregated metrics for a [`super::Cluster`].
+
+use crate::coordinator::EngineMetrics;
+
+/// One [`EngineMetrics`] snapshot per replica, plus an aggregate view.
+/// Snapshots are taken at replica quiescent points (idle, shutdown, or an
+/// explicit metrics round-trip), so after `Cluster::run_all` they are
+/// exact.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    pub per_replica: Vec<EngineMetrics>,
+}
+
+impl ClusterMetrics {
+    pub fn replicas(&self) -> usize {
+        self.per_replica.len()
+    }
+
+    /// Fold every replica's counters into one engine-shaped view:
+    /// completed requests concatenate, counters sum, byte gauges sum
+    /// (each replica owns a disjoint arena), and the compute-backend name
+    /// is taken from the first replica that ran anything (replicas are
+    /// homogeneous by construction).
+    pub fn aggregate(&self) -> EngineMetrics {
+        let mut acc = EngineMetrics::default();
+        for m in &self.per_replica {
+            merge_into(&mut acc, m);
+        }
+        acc
+    }
+
+    /// Aggregate summary line plus one indented line per replica.
+    pub fn summary(&self, wall_s: f64) -> String {
+        let mut s = format!("cluster x{}: {}", self.replicas(), self.aggregate().summary(wall_s));
+        for (i, m) in self.per_replica.iter().enumerate() {
+            s.push_str(&format!("\n  r{i}: {}", m.summary(wall_s)));
+        }
+        s
+    }
+}
+
+/// Merge one replica's metrics into an accumulator.
+fn merge_into(acc: &mut EngineMetrics, m: &EngineMetrics) {
+    acc.completed.extend(m.completed.iter().copied());
+    acc.cancelled += m.cancelled;
+    acc.rejected += m.rejected;
+    acc.failed += m.failed;
+
+    acc.kv.spilled_records += m.kv.spilled_records;
+    acc.kv.restored_records += m.kv.restored_records;
+    acc.kv.preemptions += m.kv.preemptions;
+    acc.kv.holder_sheds += m.kv.holder_sheds;
+
+    acc.weights.resident_bytes += m.weights.resident_bytes;
+    acc.weights.packed_bytes += m.weights.packed_bytes;
+    acc.weights.demand_fetches += m.weights.demand_fetches;
+    acc.weights.evictions += m.weights.evictions;
+    acc.weights.prefetch_issued += m.weights.prefetch_issued;
+    acc.weights.prefetch_hits += m.weights.prefetch_hits;
+    acc.weights.prefetch_stalls += m.weights.prefetch_stalls;
+    acc.weights.prefetch_depth = acc.weights.prefetch_depth.max(m.weights.prefetch_depth);
+    acc.weights.flash_read_s += m.weights.flash_read_s;
+    acc.weights.tokens_generated += m.weights.tokens_generated;
+    acc.weights.decode_fetches += m.weights.decode_fetches;
+    acc.weights.prompt_tokens_prefilled += m.weights.prompt_tokens_prefilled;
+    acc.weights.prefill_fetches += m.weights.prefill_fetches;
+
+    acc.prefix.lookups += m.prefix.lookups;
+    acc.prefix.hits += m.prefix.hits;
+    acc.prefix.prefill_tokens_saved += m.prefix.prefill_tokens_saved;
+    acc.prefix.bytes_saved += m.prefix.bytes_saved;
+    acc.prefix.inserts += m.prefix.inserts;
+    acc.prefix.evictions += m.prefix.evictions;
+    acc.prefix.entries += m.prefix.entries;
+    acc.prefix.shared_page_bytes += m.prefix.shared_page_bytes;
+    acc.prefix.stash_bytes += m.prefix.stash_bytes;
+    acc.prefix.cow_copies += m.prefix.cow_copies;
+
+    if acc.compute.backend.is_empty() {
+        acc.compute.backend = m.compute.backend;
+    }
+    acc.compute.gemm_calls += m.compute.gemm_calls;
+    acc.compute.gemm_tiles += m.compute.gemm_tiles;
+    acc.compute.attention_rows += m.compute.attention_rows;
+    acc.compute.norm_rows += m.compute.norm_rows;
+    acc.compute.activation_rows += m.compute.activation_rows;
+    acc.compute.rope_heads += m.compute.rope_heads;
+
+    acc.spec.walks += m.spec.walks;
+    acc.spec.proposed += m.spec.proposed;
+    acc.spec.accepted += m.spec.accepted;
+    acc.spec.committed += m.spec.committed;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RequestMetrics;
+
+    #[test]
+    fn aggregate_sums_counters_and_concatenates_requests() {
+        let mut a = EngineMetrics::default();
+        a.push(RequestMetrics { new_tokens: 4, ..Default::default() });
+        a.cancelled = 1;
+        a.kv.spilled_records = 10;
+        a.spec.walks = 3;
+        a.compute.backend = "scalar";
+        a.compute.gemm_calls = 5;
+        let mut b = EngineMetrics::default();
+        b.push(RequestMetrics { new_tokens: 6, ..Default::default() });
+        b.push(RequestMetrics { new_tokens: 2, ..Default::default() });
+        b.failed = 2;
+        b.kv.spilled_records = 5;
+        b.compute.backend = "scalar";
+        b.compute.gemm_calls = 7;
+        let cm = ClusterMetrics { per_replica: vec![a, b] };
+        let agg = cm.aggregate();
+        assert_eq!(agg.count(), 3);
+        assert_eq!(agg.cancelled, 1);
+        assert_eq!(agg.failed, 2);
+        assert_eq!(agg.kv.spilled_records, 15);
+        assert_eq!(agg.spec.walks, 3);
+        assert_eq!(agg.compute.backend, "scalar");
+        assert_eq!(agg.compute.gemm_calls, 12);
+        let total: usize = agg.completed.iter().map(|m| m.new_tokens).sum();
+        assert_eq!(total, 12);
+        // Aggregate throughput uses the cluster-wide wall clock.
+        assert!((agg.throughput_tok_s(2.0) - 6.0).abs() < 1e-9);
+        let s = cm.summary(2.0);
+        assert!(s.contains("cluster x2"), "{s}");
+        assert!(s.contains("r0:"), "{s}");
+        assert!(s.contains("r1:"), "{s}");
+    }
+}

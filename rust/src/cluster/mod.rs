@@ -1,0 +1,616 @@
+//! Data-parallel engine replicas behind a KV-locality-aware router.
+//!
+//! A [`Cluster`] owns N engine replicas. Each replica is a full
+//! [`Engine`] — its own weight arena, KV pool, prefix cache, and (when
+//! attached by the factory) draft model — running its tick loop on a
+//! dedicated worker thread. The serving regime this targets is
+//! **I/O-dominated**: when weights stream from (modeled) flash because
+//! the arena holds only a slice of the model, a single engine spends most
+//! of a tick blocked on flash reads, and a second replica's reads overlap
+//! with the first's stalls — aggregate goodput scales even on one core.
+//!
+//! The cluster front end talks to replicas only over channels — one
+//! command channel per replica, one shared note channel back — so
+//! `Engine`'s single-owner `&mut` API never crosses a thread boundary.
+//! Requests, cancellation, token streams and metrics are all routable by
+//! id:
+//!
+//! * [`Cluster::submit_request`] assigns the **global** request id (the
+//!   same numbering a single engine would assign), asks the [`Router`]
+//!   for a placement, and sends the request to that replica, which queues
+//!   it via `Engine::submit_assigned` (ids are preserved, so per-request
+//!   RNG streams — derived from the id — are placement-invariant).
+//! * Replicas push [`EngineEvent`]s and completed `Response`s back as
+//!   notes; [`Cluster::pump`] applies them, updating router accounting on
+//!   terminals and reusing the engine's own `deliver` routing so
+//!   [`Cluster::submit_streaming`] hands out ordinary [`TokenStream`]s.
+//! * [`Cluster::cancel`] routes by the request's recorded placement and
+//!   is a clean no-op for unknown or already-terminal ids.
+//! * [`ClusterMetrics`] keeps one `EngineMetrics` snapshot per replica
+//!   (refreshed at idle points and by an explicit round-trip) plus an
+//!   aggregated view.
+//!
+//! **Bit-identity.** Cluster outputs are bit-identical per request id to
+//! a single engine serving the same submissions in the same order:
+//! ids are assigned identically, each request's RNG stream derives only
+//! from its id, sessions are isolated, and greedy/fused rows are
+//! value-neutral by the backend contract — so *which* replica (or tick)
+//! serves a request cannot change its tokens.
+//!
+//! Replica sizing reuses [`crate::parallel::balancer`]:
+//! [`replica_worker_configs`] splits the machine's per-core rate vector
+//! into one disjoint compute budget per replica, so co-resident replicas
+//! do not oversubscribe the cores a single engine was tuned for.
+
+pub mod metrics;
+pub mod router;
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::events::{EngineEvent, StreamInner, TokenStream};
+use crate::coordinator::scheduler::deliver;
+use crate::coordinator::{Engine, EngineMetrics, InferenceBackend, Request, RequestId, Response};
+use crate::kv::paged::{PrefixCache, PrefixFingerprintIndex};
+use crate::parallel::balancer::{balanced_split, split_ranges};
+use crate::parallel::pool::WorkerConfig;
+
+pub use metrics::ClusterMetrics;
+pub use router::{ReplicaId, Router, RouterPolicy};
+
+/// Cluster → replica. Boxed payloads keep the enum word-sized on the
+/// channel.
+enum Command {
+    /// Queue a request that already carries its cluster-assigned id.
+    Submit(Box<Request>),
+    /// Cancel by id (the cluster routes to the placed replica; a stale id
+    /// is a no-op on the engine too).
+    Cancel(RequestId),
+    /// Reply with a `Note::Metrics` snapshot (the blocking round-trip
+    /// behind [`Cluster::refresh_metrics`]).
+    Metrics,
+    /// Stop: reply `Note::Stopped` with final metrics and exit the thread.
+    Shutdown,
+}
+
+/// Replica → cluster.
+enum Note {
+    /// Sent once, before the loop: the replica loaded (or failed to). On
+    /// success it exports its prefix-cache handle so the router can take
+    /// fresh fingerprint snapshots at placement time.
+    Ready {
+        replica: ReplicaId,
+        prefix: Option<Arc<PrefixCache>>,
+        error: Option<String>,
+    },
+    /// One engine event, forwarded in emission order.
+    Event { replica: ReplicaId, event: EngineEvent },
+    /// One completed response.
+    Finished { replica: ReplicaId, response: Box<Response> },
+    /// Metrics snapshot at a quiescent point (replica went idle).
+    Idle { replica: ReplicaId, metrics: Box<EngineMetrics> },
+    /// Reply to `Command::Metrics`.
+    Metrics { replica: ReplicaId, metrics: Box<EngineMetrics> },
+    /// Final snapshot on shutdown; the thread exits right after.
+    Stopped { replica: ReplicaId, metrics: Box<EngineMetrics> },
+    /// The replica's step loop failed structurally; the thread exits and
+    /// its in-flight requests will never reach terminals.
+    Fault { replica: ReplicaId, error: String },
+}
+
+/// Apply one command on the worker thread. Returns true on `Shutdown`.
+fn apply_cmd<B: InferenceBackend>(
+    replica: ReplicaId,
+    engine: &mut Engine<B>,
+    tx: &Sender<Note>,
+    cmd: Command,
+) -> bool {
+    match cmd {
+        Command::Submit(req) => {
+            engine.submit_assigned(*req);
+            false
+        }
+        Command::Cancel(id) => {
+            // The Cancelled event (if the id was still live here) is
+            // forwarded at the top of the next loop iteration.
+            engine.cancel(id);
+            false
+        }
+        Command::Metrics => {
+            let _ = tx.send(Note::Metrics { replica, metrics: Box::new(engine.metrics.clone()) });
+            false
+        }
+        Command::Shutdown => true,
+    }
+}
+
+/// The replica worker: build the engine **on this thread** (loads run in
+/// parallel across replicas), announce readiness, then loop — forward
+/// events/responses, drain commands (non-blocking while there is work,
+/// blocking when idle), and advance one `step()` at a time.
+fn replica_main<B: InferenceBackend>(
+    replica: ReplicaId,
+    factory: Arc<dyn Fn(ReplicaId) -> Result<Engine<B>> + Send + Sync>,
+    rx: Receiver<Command>,
+    tx: Sender<Note>,
+) {
+    let mut engine = match factory(replica) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = tx.send(Note::Ready { replica, prefix: None, error: Some(format!("{e:#}")) });
+            return;
+        }
+    };
+    let prefix = engine.backend().prefix_cache_handle();
+    if tx.send(Note::Ready { replica, prefix, error: None }).is_err() {
+        return;
+    }
+    loop {
+        // Forward whatever the last step (or a cancel) produced *before*
+        // blocking: terminal events must reach the router promptly, and a
+        // cancel that emptied the engine would otherwise strand its
+        // Cancelled event until the next command.
+        for event in engine.drain_events() {
+            if tx.send(Note::Event { replica, event }).is_err() {
+                return;
+            }
+        }
+        for resp in engine.take_finished() {
+            if tx.send(Note::Finished { replica, response: Box::new(resp) }).is_err() {
+                return;
+            }
+        }
+        if engine.has_work() {
+            // Absorb any commands that arrived during the last tick, then
+            // advance one tick.
+            loop {
+                match rx.try_recv() {
+                    Ok(cmd) => {
+                        if apply_cmd(replica, &mut engine, &tx, cmd) {
+                            let _ = tx.send(Note::Stopped {
+                                replica,
+                                metrics: Box::new(engine.metrics.clone()),
+                            });
+                            return;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => return,
+                }
+            }
+            if !engine.has_work() {
+                continue; // a cancel drained the engine; re-check idle
+            }
+            if let Err(e) = engine.step() {
+                // A structural step failure (not a per-row backend error —
+                // the engine absorbs those): this replica is done.
+                let _ = tx.send(Note::Fault { replica, error: format!("{e:#}") });
+                return;
+            }
+        } else {
+            // Quiescent: publish an exact metrics snapshot, then block.
+            let snap = Box::new(engine.metrics.clone());
+            if tx.send(Note::Idle { replica, metrics: snap }).is_err() {
+                return;
+            }
+            match rx.recv() {
+                Ok(cmd) => {
+                    if apply_cmd(replica, &mut engine, &tx, cmd) {
+                        let _ = tx.send(Note::Stopped {
+                            replica,
+                            metrics: Box::new(engine.metrics.clone()),
+                        });
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+    }
+}
+
+struct Worker {
+    tx: Sender<Command>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// N engine replicas behind a router. See the module docs for the
+/// architecture; the public surface mirrors `Engine`'s
+/// (`submit`/`submit_request`/`submit_streaming`/`cancel`/`run_all`/
+/// events) so callers move between one engine and a cluster freely.
+pub struct Cluster {
+    workers: Vec<Worker>,
+    notes: Receiver<Note>,
+    router: Router,
+    /// Per-replica prefix-cache handles (from `Ready`), for fresh
+    /// fingerprint snapshots at placement time.
+    prefix: Vec<Option<Arc<PrefixCache>>>,
+    next_id: u64,
+    /// Ids submitted but not yet observed terminal.
+    outstanding: HashSet<RequestId>,
+    events: VecDeque<EngineEvent>,
+    streams: HashMap<RequestId, Arc<Mutex<StreamInner>>>,
+    finished: Vec<Response>,
+    metrics: ClusterMetrics,
+    /// Terminal `Failed` events observed (the cluster-level mirror of
+    /// `EngineMetrics::failed`, counted as events arrive).
+    failed: u64,
+    /// Structural replica faults (each ends its replica thread).
+    faults: Vec<String>,
+}
+
+impl Cluster {
+    /// Spawn `replicas` worker threads, each building its own engine via
+    /// `factory(replica_id)` (called **on** the worker thread, so replica
+    /// loads run in parallel), and block until every replica is ready.
+    /// The factory configures everything per replica: backend, engine
+    /// options (use [`replica_worker_configs`] for disjoint core
+    /// budgets), policy, draft model.
+    pub fn new<B, F>(replicas: usize, policy: RouterPolicy, factory: F) -> Result<Cluster>
+    where
+        B: InferenceBackend + 'static,
+        F: Fn(ReplicaId) -> Result<Engine<B>> + Send + Sync + 'static,
+    {
+        let n = replicas.max(1);
+        let factory: Arc<dyn Fn(ReplicaId) -> Result<Engine<B>> + Send + Sync> =
+            Arc::new(factory);
+        let (note_tx, note_rx) = mpsc::channel();
+        let mut workers = Vec::with_capacity(n);
+        for r in 0..n {
+            let (cmd_tx, cmd_rx) = mpsc::channel();
+            let f = factory.clone();
+            let tx = note_tx.clone();
+            let join = thread::Builder::new()
+                .name(format!("replica-{r}"))
+                .spawn(move || replica_main(r, f, cmd_rx, tx))
+                .map_err(|e| anyhow!("failed to spawn replica {r}: {e}"))?;
+            workers.push(Worker { tx: cmd_tx, join: Some(join) });
+        }
+        drop(note_tx);
+        let mut cluster = Cluster {
+            workers,
+            notes: note_rx,
+            router: Router::new(n, policy),
+            prefix: vec![None; n],
+            next_id: 1,
+            outstanding: HashSet::new(),
+            events: VecDeque::new(),
+            streams: HashMap::new(),
+            finished: Vec::new(),
+            metrics: ClusterMetrics { per_replica: vec![EngineMetrics::default(); n] },
+            failed: 0,
+            faults: Vec::new(),
+        };
+        cluster.await_ready(n)?;
+        Ok(cluster)
+    }
+
+    /// Block until all `n` replicas sent `Ready`. An error Ready aborts
+    /// construction (the `Err` return drops the cluster, which shuts the
+    /// surviving replicas down).
+    fn await_ready(&mut self, n: usize) -> Result<()> {
+        let mut ready = 0usize;
+        while ready < n {
+            match self.notes.recv() {
+                Ok(Note::Ready { replica, error: Some(e), .. }) => {
+                    return Err(anyhow!("replica {replica} failed to load: {e}"));
+                }
+                Ok(Note::Ready { replica, prefix, error: None }) => {
+                    if let Some(slot) = self.prefix.get_mut(replica) {
+                        *slot = prefix;
+                    }
+                    ready += 1;
+                }
+                Ok(note) => self.apply_note(note),
+                Err(_) => return Err(anyhow!("replica thread(s) exited during startup")),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Submit a plain prompt (mirrors `Engine::submit`).
+    pub fn submit(&mut self, prompt: Vec<usize>, max_new_tokens: usize) -> Result<RequestId> {
+        self.submit_request(Request::new(0, prompt, max_new_tokens))
+    }
+
+    /// Assign the global id, place the request, and send it to its
+    /// replica. Id assignment matches a single engine's
+    /// (`submit_request` numbering from 1 in submission order), which is
+    /// what keeps cluster outputs bit-identical per id to one engine
+    /// serving the same stream of submissions.
+    pub fn submit_request(&mut self, mut req: Request) -> Result<RequestId> {
+        self.pump();
+        if req.id == 0 {
+            req.id = self.next_id;
+        }
+        self.next_id = self.next_id.max(req.id + 1);
+        req.arrival = Some(Instant::now());
+        let id = req.id;
+        // Fresh fingerprint snapshots: cheap (page-boundary hashes only),
+        // and reading through the Arc observes inserts from completed
+        // requests immediately, not at the next idle round-trip.
+        let snaps: Vec<Option<PrefixFingerprintIndex>> = self
+            .prefix
+            .iter()
+            .map(|p| p.as_ref().map(|c| c.fingerprint_index()))
+            .collect();
+        let replica = self.router.place(&req, &snaps);
+        let sent = match self.workers.get(replica) {
+            Some(w) => w.tx.send(Command::Submit(Box::new(req))).is_ok(),
+            None => false,
+        };
+        if !sent {
+            // Roll the placement back: the request never reached a
+            // replica, so no terminal event will ever refund it.
+            self.router.on_terminal(id);
+            return Err(anyhow!("replica {replica} is down; request {id} not submitted"));
+        }
+        self.outstanding.insert(id);
+        Ok(id)
+    }
+
+    /// Submit and get a [`TokenStream`] fed across the thread boundary:
+    /// the replica's events arrive as notes and [`Cluster::pump`] routes
+    /// them into the stream exactly as `Engine::submit_streaming` would.
+    /// Drain the handle between `pump()`/`run_all()` calls.
+    pub fn submit_streaming(&mut self, req: Request) -> Result<TokenStream> {
+        // Register the stream before submitting so no event can race past
+        // the exclusive routing. (Events only surface via pump(), so this
+        // ordering is belt-and-braces, not load-bearing.)
+        let id = if req.id == 0 { self.next_id } else { req.id };
+        let inner = Arc::new(Mutex::new(StreamInner::default()));
+        self.streams.insert(id, inner.clone());
+        match self.submit_request(req) {
+            Ok(got) => {
+                debug_assert_eq!(got, id);
+                Ok(TokenStream::new(got, inner))
+            }
+            Err(e) => {
+                self.streams.remove(&id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Cancel by id. Routes to the replica the request was placed on;
+    /// returns false — a clean no-op — for ids the cluster is not
+    /// tracking (never submitted, already terminal, or foreign). True
+    /// means the cancel was dispatched; the id's single terminal event
+    /// (`Cancelled`, or `Finished` if completion won the race) still
+    /// arrives via the normal event flow.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        self.pump();
+        if !self.outstanding.contains(&id) {
+            return false;
+        }
+        let Some(replica) = self.router.replica_of(id) else {
+            return false;
+        };
+        match self.workers.get(replica) {
+            Some(w) => w.tx.send(Command::Cancel(id)).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Apply all notes that have already arrived (non-blocking): forward
+    /// events into streams or the cluster-wide queue, collect responses,
+    /// update router accounting on terminals, absorb metrics snapshots.
+    pub fn pump(&mut self) {
+        while let Ok(note) = self.notes.try_recv() {
+            self.apply_note(note);
+        }
+    }
+
+    fn apply_note(&mut self, note: Note) {
+        match note {
+            Note::Ready { .. } => {} // only meaningful during startup
+            Note::Event { event, .. } => {
+                if event.is_terminal() {
+                    let id = event.id();
+                    self.router.on_terminal(id);
+                    self.outstanding.remove(&id);
+                    if matches!(event, EngineEvent::Failed { .. }) {
+                        self.failed += 1;
+                    }
+                }
+                deliver(&mut self.events, &mut self.streams, event);
+            }
+            Note::Finished { response, .. } => self.finished.push(*response),
+            Note::Idle { replica, metrics }
+            | Note::Metrics { replica, metrics }
+            | Note::Stopped { replica, metrics } => {
+                if let Some(slot) = self.metrics.per_replica.get_mut(replica) {
+                    *slot = *metrics;
+                }
+            }
+            Note::Fault { replica, error } => {
+                self.faults.push(format!("replica {replica}: {error}"));
+            }
+        }
+    }
+
+    /// Pop the oldest undelivered cluster-wide event (streaming requests'
+    /// events go to their handles instead, as with `Engine`).
+    pub fn next_event(&mut self) -> Option<EngineEvent> {
+        self.pump();
+        self.events.pop_front()
+    }
+
+    /// Drain all undelivered cluster-wide events.
+    pub fn drain_events(&mut self) -> Vec<EngineEvent> {
+        self.pump();
+        self.events.drain(..).collect()
+    }
+
+    /// Take the responses completed since the last call.
+    pub fn take_finished(&mut self) -> Vec<Response> {
+        self.pump();
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Ids submitted but not yet terminal.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Drive until every outstanding request reached its terminal, then
+    /// return all completed responses in id (submission) order — the
+    /// cluster mirror of `Engine::run_all`, with the same error contract:
+    /// backend-failed requests surface as `Err` (completed responses stay
+    /// available via [`take_finished`](Self::take_finished)). Blocks on
+    /// the note channel; replica threads do the actual stepping.
+    pub fn run_all(&mut self) -> Result<Vec<Response>> {
+        let failed_before = self.failed;
+        while !self.outstanding.is_empty() && self.faults.is_empty() {
+            match self.notes.recv() {
+                Ok(note) => self.apply_note(note),
+                Err(_) => {
+                    return Err(anyhow!(
+                        "all replicas disconnected with {} request(s) outstanding",
+                        self.outstanding.len()
+                    ));
+                }
+            }
+        }
+        self.pump();
+        if !self.faults.is_empty() {
+            return Err(anyhow!("replica fault(s): {}", self.faults.join("; ")));
+        }
+        // Exact end-of-drain snapshots for every replica, so metric reads
+        // after run_all are deterministic rather than racing idle notes.
+        self.refresh_metrics()?;
+        self.events.clear();
+        let failed = self.failed - failed_before;
+        if failed > 0 {
+            return Err(anyhow!(
+                "{failed} request(s) terminated by backend failures during the drain \
+                 (completed responses remain available via take_finished())"
+            ));
+        }
+        let mut out = std::mem::take(&mut self.finished);
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+
+    /// Blocking metrics round-trip to every live replica; afterwards
+    /// [`metrics`](Self::metrics) holds an up-to-date snapshot per
+    /// replica. Other notes arriving meanwhile are applied normally.
+    pub fn refresh_metrics(&mut self) -> Result<()> {
+        let mut pending = vec![false; self.workers.len()];
+        let mut waiting = 0usize;
+        for (r, w) in self.workers.iter().enumerate() {
+            if w.tx.send(Command::Metrics).is_ok() {
+                if let Some(p) = pending.get_mut(r) {
+                    *p = true;
+                    waiting += 1;
+                }
+            }
+        }
+        while waiting > 0 {
+            match self.notes.recv() {
+                Ok(Note::Metrics { replica, metrics }) => {
+                    if let Some(p) = pending.get_mut(replica) {
+                        if *p {
+                            *p = false;
+                            waiting -= 1;
+                        }
+                    }
+                    if let Some(slot) = self.metrics.per_replica.get_mut(replica) {
+                        *slot = *metrics;
+                    }
+                }
+                Ok(note) => self.apply_note(note),
+                Err(_) => return Err(anyhow!("replica channel closed during metrics round-trip")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-replica + aggregated metrics (as of the last snapshot; call
+    /// [`refresh_metrics`](Self::refresh_metrics) for exact numbers).
+    pub fn metrics(&self) -> &ClusterMetrics {
+        &self.metrics
+    }
+
+    /// Stop every replica (final metrics snapshots land in
+    /// [`metrics`](Self::metrics)) and join the threads. Idempotent;
+    /// `Drop` calls it.
+    pub fn shutdown(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Command::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+        self.pump();
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Split one machine's per-core rate vector into `replicas` disjoint
+/// [`WorkerConfig`]s — contiguous core ranges, evenly many cores per
+/// replica via [`balanced_split`] — so co-resident replicas size their
+/// compute pools against distinct cores instead of all oversubscribing
+/// the full machine. A replica left with zero cores (more replicas than
+/// cores, the testbed case) falls back to a single uniform worker.
+pub fn replica_worker_configs(machine: &WorkerConfig, replicas: usize) -> Vec<WorkerConfig> {
+    let n = replicas.max(1);
+    let split = balanced_split(machine.rates.len(), &vec![1.0; n]);
+    split_ranges(&split)
+        .into_iter()
+        .map(|(lo, hi)| match machine.rates.get(lo..hi) {
+            Some(rates) if !rates.is_empty() => WorkerConfig { rates: rates.to_vec() },
+            _ => WorkerConfig::uniform(1),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_configs_partition_the_machine() {
+        let machine = WorkerConfig { rates: vec![2.0, 2.0, 1.0, 1.0] };
+        let cfgs = replica_worker_configs(&machine, 2);
+        assert_eq!(cfgs.len(), 2);
+        let total: usize = cfgs.iter().map(|c| c.threads()).sum();
+        assert_eq!(total, 4, "cores are partitioned, not duplicated");
+        let mut all: Vec<f64> = cfgs.iter().flat_map(|c| c.rates.clone()).collect();
+        all.sort_by(f64::total_cmp);
+        let mut want = machine.rates.clone();
+        want.sort_by(f64::total_cmp);
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn worker_configs_fall_back_on_oversubscription() {
+        // 1 core, 4 replicas: every replica still gets a usable pool.
+        let machine = WorkerConfig::uniform(1);
+        let cfgs = replica_worker_configs(&machine, 4);
+        assert_eq!(cfgs.len(), 4);
+        for c in &cfgs {
+            assert!(c.threads() >= 1);
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Placement policy: which replica serves which request.
+//!
+//! The router sees only cheap summaries — an outstanding-work gauge per
+//! replica, a session → replica map, and per-replica
+//! [`PrefixFingerprintIndex`] snapshots — never token data or engine
+//! internals, so placement is O(replicas) per request and the hot tick
+//! loops are untouched.
+//!
+//! Placement order (under [`RouterPolicy::KvAffinity`], the default):
+//!
+//! 1. **Session affinity** — a request carrying a `Request::session_id`
+//!    the router has seen before goes back to the replica that served it:
+//!    that replica holds the conversation's KV spill files and
+//!    prefix-cache entries, and bouncing a session re-pays the prefill.
+//! 2. **Shared-prefix affinity** — otherwise the prompt is fingerprinted
+//!    at page boundaries and placed on the replica whose `PrefixCache`
+//!    holds its longest prefix (ties → less outstanding work), so shared
+//!    system prompts stay hot on one replica instead of being re-stored N
+//!    times.
+//! 3. **Least outstanding work** — otherwise the replica with the fewest
+//!    estimated outstanding tokens (prompt + budget of every un-finished
+//!    placement), ties → lowest replica id. This is the whole policy
+//!    under [`RouterPolicy::LeastOutstanding`].
+
+use std::collections::HashMap;
+
+use crate::coordinator::{Request, RequestId};
+use crate::kv::paged::PrefixFingerprintIndex;
+
+/// Replica index within a [`super::Cluster`].
+pub type ReplicaId = usize;
+
+/// Which placement policy the router runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Load only: least outstanding estimated work, ties → lowest id.
+    /// The locality-blind baseline (tests compare against it).
+    LeastOutstanding,
+    /// Session affinity, then shared-prefix affinity, then least
+    /// outstanding work.
+    #[default]
+    KvAffinity,
+}
+
+/// KV-locality-aware request router. Pure bookkeeping — no channels, no
+/// threads — so policies are unit-testable without spinning up engines.
+pub struct Router {
+    policy: RouterPolicy,
+    /// Estimated outstanding tokens per replica (prompt + new-token
+    /// budget of every placement not yet observed terminal).
+    outstanding: Vec<u64>,
+    /// Live placements: request → (replica, charged work). Entries are
+    /// removed — and the charge refunded — when the cluster observes the
+    /// request's terminal event.
+    placements: HashMap<RequestId, (ReplicaId, u64)>,
+    /// Session → last replica that served it. Persists across requests
+    /// (that is the point); bounded by the number of distinct sessions.
+    sessions: HashMap<u64, ReplicaId>,
+}
+
+impl Router {
+    pub fn new(replicas: usize, policy: RouterPolicy) -> Router {
+        Router {
+            policy,
+            outstanding: vec![0; replicas.max(1)],
+            placements: HashMap::new(),
+            sessions: HashMap::new(),
+        }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Estimated work units a request pins on its replica until terminal.
+    fn work_estimate(req: &Request) -> u64 {
+        (req.prompt.len() + req.max_new_tokens) as u64
+    }
+
+    /// Place `req`, charging its work estimate to the chosen replica.
+    /// `prefix` is one fingerprint-index snapshot per replica (`None` for
+    /// replicas without a prefix cache).
+    pub fn place(
+        &mut self,
+        req: &Request,
+        prefix: &[Option<PrefixFingerprintIndex>],
+    ) -> ReplicaId {
+        let choice = match self.policy {
+            RouterPolicy::LeastOutstanding => None,
+            RouterPolicy::KvAffinity => self.affinity_choice(req, prefix),
+        };
+        let replica =
+            choice.unwrap_or_else(|| self.least_outstanding()).min(self.outstanding.len() - 1);
+        let work = Self::work_estimate(req);
+        if let Some(o) = self.outstanding.get_mut(replica) {
+            *o = o.saturating_add(work);
+        }
+        if let Some(s) = req.session_id {
+            self.sessions.insert(s, replica);
+        }
+        self.placements.insert(req.id, (replica, work));
+        replica
+    }
+
+    /// Affinity tiers 1–2; `None` falls through to least-outstanding.
+    fn affinity_choice(
+        &self,
+        req: &Request,
+        prefix: &[Option<PrefixFingerprintIndex>],
+    ) -> Option<ReplicaId> {
+        if let Some(sid) = req.session_id {
+            if let Some(&r) = self.sessions.get(&sid) {
+                return Some(r);
+            }
+        }
+        // Longest cached prefix wins; ties → less outstanding work, then
+        // lowest id (the iteration order below encodes both tiebreaks).
+        let mut best: Option<(usize, u64, ReplicaId)> = None;
+        for (r, ix) in prefix.iter().enumerate() {
+            let Some(ix) = ix else { continue };
+            let m = ix.match_len(&req.prompt);
+            if m == 0 {
+                continue;
+            }
+            let load = self.outstanding.get(r).copied().unwrap_or(0);
+            let better = match best {
+                None => true,
+                Some((bm, bl, _)) => m > bm || (m == bm && load < bl),
+            };
+            if better {
+                best = Some((m, load, r));
+            }
+        }
+        best.map(|(_, _, r)| r)
+    }
+
+    /// The replica with the fewest outstanding estimated tokens (ties →
+    /// lowest id).
+    fn least_outstanding(&self) -> ReplicaId {
+        self.outstanding
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &o)| o)
+            .map(|(r, _)| r)
+            .unwrap_or(0)
+    }
+
+    /// Where a still-outstanding request was placed (`None` once its
+    /// terminal event has been observed, or if it was never placed).
+    pub fn replica_of(&self, id: RequestId) -> Option<ReplicaId> {
+        self.placements.get(&id).map(|&(r, _)| r)
+    }
+
+    /// Where a session was last served.
+    pub fn session_replica(&self, session: u64) -> Option<ReplicaId> {
+        self.sessions.get(&session).copied()
+    }
+
+    /// The request reached a terminal event: refund its work charge and
+    /// forget the placement (session affinity persists).
+    pub fn on_terminal(&mut self, id: RequestId) {
+        if let Some((r, work)) = self.placements.remove(&id) {
+            if let Some(o) = self.outstanding.get_mut(r) {
+                *o = o.saturating_sub(work);
+            }
+        }
+    }
+
+    /// Current outstanding-work estimate for a replica.
+    pub fn outstanding(&self, replica: ReplicaId) -> u64 {
+        self.outstanding.get(replica).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::paged::PrefixCache;
+
+    fn req(id: RequestId, prompt: usize, gen: usize) -> Request {
+        Request::new(id, vec![7; prompt], gen)
+    }
+
+    fn no_prefix(n: usize) -> Vec<Option<PrefixFingerprintIndex>> {
+        vec![None; n]
+    }
+
+    #[test]
+    fn least_outstanding_balances_and_refunds() {
+        let mut r = Router::new(2, RouterPolicy::LeastOutstanding);
+        assert_eq!(r.place(&req(1, 10, 10), &no_prefix(2)), 0, "tie → lowest id");
+        assert_eq!(r.place(&req(2, 10, 10), &no_prefix(2)), 1);
+        assert_eq!(r.place(&req(3, 1, 1), &no_prefix(2)), 0, "tie again → 0");
+        assert_eq!(r.place(&req(4, 10, 10), &no_prefix(2)), 1, "0 is more loaded");
+        assert_eq!(r.replica_of(3), Some(0));
+        r.on_terminal(1);
+        r.on_terminal(3);
+        assert_eq!(r.outstanding(0), 0);
+        assert_eq!(r.replica_of(1), None, "terminal forgets the placement");
+        assert_eq!(r.place(&req(5, 1, 1), &no_prefix(2)), 0);
+        // Terminal for an unknown id is a no-op.
+        r.on_terminal(999);
+        assert_eq!(r.outstanding(0), 2);
+    }
+
+    #[test]
+    fn session_affinity_sticks_even_under_load_imbalance() {
+        let mut r = Router::new(2, RouterPolicy::KvAffinity);
+        let first = req(1, 4, 4).with_session(70);
+        assert_eq!(r.place(&first, &no_prefix(2)), 0);
+        // Pile unrelated work onto replica 0 so pure load would pick 1…
+        for id in 2..6 {
+            r.place(&req(id, 100, 100), &no_prefix(2));
+        }
+        assert!(r.outstanding(0) > r.outstanding(1));
+        // …but the resubmitted session stays on 0.
+        let again = req(9, 4, 4).with_session(70);
+        assert_eq!(r.place(&again, &no_prefix(2)), 0);
+        assert_eq!(r.session_replica(70), Some(0));
+        // LeastOutstanding ignores the session tag entirely.
+        let mut blind = Router::new(2, RouterPolicy::LeastOutstanding);
+        blind.place(&req(1, 4, 4).with_session(70), &no_prefix(2));
+        for id in 2..6 {
+            blind.place(&req(id, 100, 100), &no_prefix(2));
+        }
+        assert_ne!(blind.place(&req(9, 4, 4).with_session(70), &no_prefix(2)), 0);
+    }
+
+    /// A real cache warmed with `ids` (via the public insert path), so
+    /// its fingerprint index is exactly what a replica would export.
+    fn warm_index(ids: Vec<usize>) -> PrefixFingerprintIndex {
+        use crate::kv::paged::{CachedStash, KvPool};
+        use std::sync::Arc;
+        let pool = Arc::new(KvPool::unbounded());
+        let cache = PrefixCache::new(usize::MAX);
+        let toks = ids.len();
+        let pages = (0..2)
+            .map(|_| {
+                (0..toks.div_ceil(crate::kv::PAGE_TOKENS))
+                    .map(|_| pool.take_handle(2, 8))
+                    .collect()
+            })
+            .collect();
+        let stash = CachedStash::charge(
+            vec![vec![0f32; toks * 16]; 2],
+            vec![vec![0f32; toks * 16]; 2],
+            toks,
+            pool.clone(),
+        );
+        assert!(cache.insert(ids, pages, stash));
+        cache.fingerprint_index()
+    }
+
+    #[test]
+    fn prefix_affinity_prefers_longest_cached_prefix() {
+        // Replica 1 has the prompt's whole first two pages cached;
+        // replica 0 only shares one page. KvAffinity must pick 1 even
+        // though 0 carries less load.
+        let prompt: Vec<usize> = (0..40).collect();
+        let mut partial: Vec<usize> = (0..40).collect();
+        if let Some(t) = partial.get_mut(20) {
+            *t = 777; // diverges inside page 2
+        }
+        let ix0 = warm_index(partial);
+        let ix1 = warm_index(prompt.clone());
+        let mut r = Router::new(2, RouterPolicy::KvAffinity);
+        r.place(&req(1, 2, 2), &[None, None]); // skew load onto 0? no: 0 gets it
+        assert!(r.outstanding(0) > r.outstanding(1));
+        let p = Request::new(2, prompt.clone(), 4);
+        assert_eq!(
+            r.place(&p, &[Some(ix0.clone()), Some(ix1.clone())]),
+            1,
+            "longest prefix outranks load"
+        );
+        // The load-only baseline scatters the same prompt to the
+        // least-loaded replica instead.
+        let mut blind = Router::new(2, RouterPolicy::LeastOutstanding);
+        blind.place(&req(1, 100, 100), &[None, None]);
+        assert_eq!(blind.place(&p, &[Some(ix0), Some(ix1)]), 1);
+        // …and with load reversed, it abandons the cached replica.
+        let mut blind2 = Router::new(2, RouterPolicy::LeastOutstanding);
+        blind2.place(&req(1, 2, 2), &[None, None]);
+        let mut r2 = Router::new(2, RouterPolicy::KvAffinity);
+        r2.place(&req(1, 2, 2), &[None, None]);
+        let ix_warm0 = warm_index(prompt.clone());
+        // Cache lives on replica 0, which also has more load.
+        assert_eq!(
+            r2.place(&Request::new(3, prompt.clone(), 4), &[Some(ix_warm0.clone()), None]),
+            0,
+            "affinity goes to the cache"
+        );
+        assert_eq!(
+            blind2.place(&Request::new(3, prompt, 4), &[Some(ix_warm0), None]),
+            1,
+            "load-only ignores the cache"
+        );
+    }
+}

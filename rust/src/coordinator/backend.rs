@@ -19,11 +19,13 @@
 //! hooks with no-op defaults, so the PJRT impl stays trivial and the
 //! engine never matches on the backend kind.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::coordinator::request::Request;
 use crate::cpu::backend::ComputeBackendMetrics;
-use crate::kv::PrefixCacheMetrics;
+use crate::kv::{PrefixCache, PrefixCacheMetrics};
 use crate::memory::weight_store::WeightResidencyMetrics;
 use crate::model::native::{NativeModel, NativeSession};
 use crate::runtime::{KvState, PjrtRuntime};
@@ -307,6 +309,15 @@ pub trait InferenceBackend {
         PrefixCacheMetrics::default()
     }
 
+    /// A shareable handle on the backend's prefix cache, if it has one.
+    /// The cluster router clones this per replica and snapshots
+    /// fingerprint indices from it for shared-prefix-affinity placement
+    /// (`PrefixCache` is internally synchronized). `None` (the default)
+    /// means the backend has no prompt locality to exploit.
+    fn prefix_cache_handle(&self) -> Option<Arc<PrefixCache>> {
+        None
+    }
+
     /// Cross-session KV budget enforcement between scheduler ticks (the
     /// `EvictionPolicy::LargestHolder` pass). Returns records shed.
     fn enforce_kv_budget(&self, _running: &mut [&mut Self::Session]) -> Result<u64> {
@@ -335,6 +346,9 @@ impl InferenceBackend for NativeModel {
     fn new_session(&self, req: &Request) -> Result<NativeSession> {
         let mut sess = NativeModel::new_session(self);
         sess.lora_task = req.lora_task.clone();
+        // Carried onto the session so `make_room` can preempt the lowest
+        // class first under pool pressure.
+        sess.priority_class = req.priority_class();
         Ok(sess)
     }
 
@@ -447,6 +461,10 @@ impl InferenceBackend for NativeModel {
 
     fn prefix_metrics(&self) -> PrefixCacheMetrics {
         NativeModel::prefix_metrics(self)
+    }
+
+    fn prefix_cache_handle(&self) -> Option<Arc<PrefixCache>> {
+        Some(self.prefix_cache().clone())
     }
 
     fn enforce_kv_budget(&self, running: &mut [&mut NativeSession]) -> Result<u64> {
@@ -751,6 +769,13 @@ impl InferenceBackend for Backend {
         match self {
             Backend::Native(m) => NativeModel::prefix_metrics(m),
             Backend::Pjrt(_) => PrefixCacheMetrics::default(),
+        }
+    }
+
+    fn prefix_cache_handle(&self) -> Option<Arc<PrefixCache>> {
+        match self {
+            Backend::Native(m) => Some(m.prefix_cache().clone()),
+            Backend::Pjrt(_) => None,
         }
     }
 

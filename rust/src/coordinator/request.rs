@@ -38,6 +38,12 @@ pub struct Request {
     /// configured default; `Some(0)` disables speculation for this
     /// request. Ignored when the engine has no draft model attached.
     pub spec_depth: Option<usize>,
+    /// Logical session/conversation identity, chosen by the caller. A
+    /// single `Engine` ignores it; the cluster `Router` uses it for
+    /// session affinity — every request carrying the same session id is
+    /// placed on the replica that served the session before, so its KV
+    /// spill files and prefix-cache entries stay local.
+    pub session_id: Option<u64>,
     /// Set by the engine when the request is submitted; TTFT and e2e
     /// latency are measured from here (queue wait included).
     pub arrival: Option<Instant>,
@@ -56,6 +62,7 @@ impl Request {
             priority: None,
             seed: None,
             spec_depth: None,
+            session_id: None,
             arrival: None,
         }
     }
@@ -99,6 +106,13 @@ impl Request {
     /// speculation for this request even when the engine default is on).
     pub fn with_spec_depth(mut self, depth: usize) -> Self {
         self.spec_depth = Some(depth);
+        self
+    }
+
+    /// Builder-style: tag this request with a logical session id so the
+    /// cluster router keeps the whole conversation on one replica.
+    pub fn with_session(mut self, session: u64) -> Self {
+        self.session_id = Some(session);
         self
     }
 
@@ -157,6 +171,7 @@ mod tests {
         assert_eq!(r.priority_class(), 0);
         assert!(r.seed.is_none());
         assert!(r.spec_depth.is_none());
+        assert!(r.session_id.is_none());
         assert!(r.arrival.is_none());
     }
 
@@ -167,13 +182,15 @@ mod tests {
             .with_stop_tokens(vec![9])
             .with_stop_sequences(vec![vec![1, 2]])
             .with_priority(3)
-            .with_spec_depth(4);
+            .with_spec_depth(4)
+            .with_session(11);
         assert_eq!(r.seed, Some(42));
         assert_eq!(r.stop_tokens, vec![9]);
         assert_eq!(r.stop_sequences, vec![vec![1, 2]]);
         assert_eq!(r.priority, Some(3));
         assert_eq!(r.priority_class(), 3);
         assert_eq!(r.spec_depth, Some(4));
+        assert_eq!(r.session_id, Some(11));
     }
 
     #[test]

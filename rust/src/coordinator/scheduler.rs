@@ -69,7 +69,7 @@ pub use crate::coordinator::backend::{
     AnySession, Backend, InferenceBackend, RowWork, TickLimits,
 };
 use crate::coordinator::events::{EngineEvent, FinishReason, StreamInner, TokenStream};
-use crate::coordinator::metrics::{EngineMetrics, RequestMetrics};
+use crate::coordinator::metrics::{EngineMetrics, RequestMetrics, SpecMetrics};
 use crate::coordinator::request::{Request, RequestId, Response};
 use crate::model::native::{NativeModel, NativeSession};
 use crate::model::sampler;
@@ -135,8 +135,10 @@ fn stop_reason(
 /// handles never grows the global queue unboundedly; requests submitted
 /// without a stream surface through `next_event`/`drain_events`. Free
 /// function so callers can hold disjoint borrows of other engine fields
-/// (e.g. the active list) while emitting.
-fn deliver(
+/// (e.g. the active list) while emitting; `pub(crate)` because the
+/// cluster front end reuses the exact same routing for events arriving
+/// over replica channels.
+pub(crate) fn deliver(
     events: &mut VecDeque<EngineEvent>,
     streams: &mut HashMap<RequestId, Arc<Mutex<StreamInner>>>,
     ev: EngineEvent,
@@ -193,6 +195,34 @@ struct SpecState {
     /// with `toks[1..]`; the acceptance test needs `q(d)` and the
     /// rejection path needs the full `q` for the residual.
     qdists: Vec<Vec<f32>>,
+    /// This request's own walk/accept counters (the per-request mirror of
+    /// `EngineMetrics::spec`), feeding [`adaptive_spec_depth`] so one
+    /// hard-to-draft request cannot throttle its neighbours' depth.
+    stats: SpecMetrics,
+}
+
+/// Adaptive speculation depth: start at the configured depth, and once a
+/// request has proposed enough tokens to estimate its live acceptance
+/// rate, shrink the next walk's depth while the draft is missing (wasted
+/// verify positions cost KV headroom and row slots) and grow it back as
+/// the draft recovers. Pure function of the per-request stats, re-run
+/// between ticks. Value-neutral: greedy verify commits the exact target
+/// argmax prefix at ANY depth, so outputs stay bit-identical to plain
+/// decode whatever this returns; it only moves the perf point.
+fn adaptive_spec_depth(configured: usize, stats: &SpecMetrics) -> usize {
+    if configured == 0 || stats.proposed < 4 {
+        // Warm-up: trust the configured depth until the estimate means
+        // anything (one or two walks' worth of proposals).
+        return configured;
+    }
+    let rate = stats.acceptance_rate();
+    if rate >= 0.75 {
+        configured
+    } else if rate >= 0.4 {
+        configured.div_ceil(2)
+    } else {
+        1
+    }
 }
 
 /// Run one draft-model row and flatten the outcome to logits.
@@ -237,6 +267,7 @@ fn propose_drafts(
             rng: request_rng(req).fork(1),
             toks: Vec::new(),
             qdists: Vec::new(),
+            stats: SpecMetrics::default(),
         }),
     };
     st.toks.clear();
@@ -406,6 +437,28 @@ impl<B: InferenceBackend> Engine<B> {
         req.id = self.next_id;
         self.next_id += 1;
         req.arrival = Some(Instant::now());
+        let id = req.id;
+        self.queue.push_back(req);
+        id
+    }
+
+    /// Queue a request that already carries a globally-assigned id (the
+    /// cluster router numbers requests across replicas). The id is kept —
+    /// per-request RNG streams derive from it, so preserving the global
+    /// numbering is what makes cluster outputs bit-identical to a single
+    /// engine serving the same submissions — and `next_id` is bumped past
+    /// it so locally-submitted requests can never collide. An unset id
+    /// (0) is assigned locally, as `submit_request` would.
+    pub fn submit_assigned(&mut self, mut req: Request) -> RequestId {
+        if req.id == 0 {
+            req.id = self.next_id;
+        }
+        self.next_id = self.next_id.max(req.id + 1);
+        if req.arrival.is_none() {
+            // Keep a router-side arrival stamp when one exists: TTFT then
+            // includes channel transit + queue wait, like any other wait.
+            req.arrival = Some(Instant::now());
+        }
         let id = req.id;
         self.queue.push_back(req);
         id
@@ -888,9 +941,15 @@ impl<B: InferenceBackend> Engine<B> {
                             // real pool pages mid-walk).
                             let avail = row_slots.saturating_sub(take - i - 1);
                             let pos = self.backend.session_pos(sess);
-                            k = req
-                                .spec_depth
-                                .unwrap_or(sc.depth)
+                            // Adaptive depth: the configured depth is the
+                            // ceiling ([`Request::with_spec_depth`]), the
+                            // request's live acceptance rate shrinks it.
+                            let configured = req.spec_depth.unwrap_or(sc.depth);
+                            k = spec
+                                .as_ref()
+                                .map_or(configured, |st| {
+                                    adaptive_spec_depth(configured, &st.stats)
+                                })
                                 .min(avail.saturating_sub(1))
                                 .min(budget.saturating_sub(tokens.len()).saturating_sub(1))
                                 .min(cap.saturating_sub(pos + 1));
@@ -1178,6 +1237,14 @@ impl<B: InferenceBackend> Engine<B> {
         self.metrics.spec.proposed += k as u64;
         self.metrics.spec.accepted += accepted as u64;
         self.metrics.spec.committed += committed.len() as u64;
+        // Mirror into the request's own counters: `adaptive_spec_depth`
+        // reads this live acceptance rate to size the next walk.
+        if let Some(sp) = self.active.get_mut(ai).and_then(|a| a.spec.as_mut()) {
+            sp.stats.walks += 1;
+            sp.stats.proposed += k as u64;
+            sp.stats.accepted += accepted as u64;
+            sp.stats.committed += committed.len() as u64;
+        }
         if let Some(e) = trunc_err {
             self.fail_active(id, &e);
             return;

@@ -28,8 +28,8 @@ use crate::quant::fp8;
 pub mod paged;
 
 pub use paged::{
-    CachedStash, EvictionPolicy, HolderId, KvPool, PageHandle, PoolStats, PrefixCache,
-    PrefixCacheMetrics, PrefixMatch, PAGE_TOKENS,
+    prefix_fingerprint, CachedStash, EvictionPolicy, HolderId, KvPool, PageHandle, PoolStats,
+    PrefixCache, PrefixCacheMetrics, PrefixFingerprintIndex, PrefixMatch, PAGE_TOKENS,
 };
 
 use paged::Page;

@@ -25,7 +25,7 @@
 //! `(kv_heads, head_dim)` so reuse never reallocates; a small cap bounds
 //! how much a burst leaves cached.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use crate::quant::asym::AsymParams;
@@ -533,6 +533,58 @@ fn lcp(a: &[usize], b: &[usize]) -> usize {
     a.iter().zip(b).take_while(|(x, y)| x == y).count()
 }
 
+/// Stable fingerprint of a token-id prefix (FNV-1a over the ids). The
+/// cluster router compares these instead of token vectors when probing
+/// which replica's cache holds a prompt's prefix.
+pub fn prefix_fingerprint(ids: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &id in ids {
+        h ^= id as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A cheap, shippable summary of what a [`PrefixCache`] holds: the
+/// fingerprints of every cached entry's page-aligned prefixes
+/// ([`PAGE_TOKENS`] granularity). A few `u64`s per entry — no token data,
+/// no page handles — so a router can snapshot one per replica and probe
+/// locality without touching the caches again. Fingerprints can collide
+/// in principle; a collision only mis-ranks a placement (the admission
+/// lookup still token-compares), never affects correctness.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixFingerprintIndex {
+    fps: HashSet<u64>,
+}
+
+impl PrefixFingerprintIndex {
+    pub fn is_empty(&self) -> bool {
+        self.fps.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.fps.len()
+    }
+
+    /// Longest page-aligned prefix of `prompt` present in the index, in
+    /// tokens — the page-granular analogue of [`PrefixCache::peek_fork`].
+    /// Because the index holds *every* page-aligned prefix of each entry,
+    /// a miss at one boundary implies misses at all longer ones, so the
+    /// scan stops at the first gap.
+    pub fn match_len(&self, prompt: &[usize]) -> usize {
+        let mut best = 0;
+        let mut at = PAGE_TOKENS;
+        while at <= prompt.len() {
+            match prompt.get(..at) {
+                Some(p) if self.fps.contains(&prefix_fingerprint(p)) => best = at,
+                _ => break,
+            }
+            at += PAGE_TOKENS;
+        }
+        best
+    }
+}
+
 impl PrefixCache {
     /// `budget_bytes == 0` disables the cache entirely (every lookup
     /// misses, inserts are dropped) — the engine-default until a caller
@@ -571,6 +623,27 @@ impl PrefixCache {
         let g = lock_tolerant(&self.inner);
         let best = g.entries.iter().map(|e| lcp(&e.ids, prompt)).max().unwrap_or(0);
         best.min(prompt.len() - 1)
+    }
+
+    /// Export the prefix-fingerprint index: fingerprints of each cached
+    /// entry's page-aligned prefixes. A point-in-time snapshot — staleness
+    /// only costs routing quality — that never touches LRU state or
+    /// metrics.
+    pub fn fingerprint_index(&self) -> PrefixFingerprintIndex {
+        let mut fps = HashSet::new();
+        if self.enabled() {
+            let g = lock_tolerant(&self.inner);
+            for e in &g.entries {
+                let mut at = PAGE_TOKENS;
+                while at <= e.ids.len() {
+                    if let Some(p) = e.ids.get(..at) {
+                        fps.insert(prefix_fingerprint(p));
+                    }
+                    at += PAGE_TOKENS;
+                }
+            }
+        }
+        PrefixFingerprintIndex { fps }
     }
 
     /// Longest-cached-prefix lookup. Bumps the matched entry's LRU clock
@@ -916,6 +989,34 @@ mod tests {
         assert_eq!(cache.peek_fork(&[1, 2, 3, 4]), 0);
         assert_eq!(pool.resident_bytes(), 0, "rejected insert released its pages");
         assert_eq!(pool.stash_bytes(), 0, "and its stash charge");
+    }
+
+    #[test]
+    fn fingerprint_index_reports_page_aligned_matches() {
+        let pool = Arc::new(KvPool::unbounded());
+        let cache = PrefixCache::new(usize::MAX);
+        // Empty cache (and disabled caches) export an empty index.
+        assert!(cache.fingerprint_index().is_empty());
+        assert!(PrefixCache::new(0).fingerprint_index().is_empty());
+        let ids: Vec<usize> = (0..40).collect();
+        assert!(cache.insert(ids.clone(), entry_pages(&pool, 2, 40), stash_for(&pool, 2, 40, 16)));
+        let ix = cache.fingerprint_index();
+        // 40 tokens ⇒ page-aligned prefixes at 16 and 32.
+        assert_eq!(ix.len(), 2);
+        // Exact extension matches the longest aligned boundary ≤ lcp.
+        assert_eq!(ix.match_len(&ids), 32);
+        let mut ext = ids.clone();
+        ext.push(99);
+        assert_eq!(ix.match_len(&ext), 32);
+        // Divergence inside the second page keeps only the first.
+        let mut div: Vec<usize> = (0..40).collect();
+        if let Some(t) = div.get_mut(20) {
+            *t = 777;
+        }
+        assert_eq!(ix.match_len(&div), 16);
+        // Shorter than one page, or a foreign prompt: no match.
+        assert_eq!(ix.match_len(&ids[..10]), 0);
+        assert_eq!(ix.match_len(&[7; 64]), 0);
     }
 
     #[test]

@@ -24,6 +24,7 @@
 pub mod analysis;
 pub mod baselines;
 pub mod bench;
+pub mod cluster;
 pub mod coordinator;
 pub mod cpu;
 pub mod device;

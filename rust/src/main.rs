@@ -15,12 +15,14 @@ use std::path::PathBuf;
 
 use mnn_llm::baselines;
 use mnn_llm::bench as bh;
+use mnn_llm::cluster::{replica_worker_configs, Cluster, RouterPolicy};
 use mnn_llm::coordinator::scheduler::{Backend, Coordinator};
-use mnn_llm::coordinator::{EngineEvent, Request, SchedulePolicy};
+use mnn_llm::coordinator::{Engine, EngineEvent, Request, SchedulePolicy};
 use mnn_llm::device::SocProfile;
 use mnn_llm::model::config::ModelConfig;
 use mnn_llm::model::native::{EngineOptions, NativeModel};
 use mnn_llm::model::tokenizer::ByteTokenizer;
+use mnn_llm::parallel::pool::WorkerConfig;
 use mnn_llm::reorder::{isa, solver};
 use mnn_llm::runtime::PjrtRuntime;
 
@@ -181,6 +183,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "interleaved" => SchedulePolicy::Interleaved,
         _ => SchedulePolicy::Fifo,
     };
+    let replicas = args.usize("replicas", 1);
+    if replicas > 1 {
+        anyhow::ensure!(
+            backend == "native",
+            "--replicas requires the native backend (each replica owns a weight arena + KV pool)"
+        );
+        return cmd_serve_cluster(&dir, replicas, n, gen, policy);
+    }
     let be = backend_from_flag(&dir, &backend)?;
     let mut c = Coordinator::new(be, policy);
     let tok = ByteTokenizer::new(2048);
@@ -207,6 +217,58 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         );
     }
     println!("{}", c.metrics.summary(wall));
+    Ok(())
+}
+
+/// `serve --replicas N`: data-parallel engine replicas behind the
+/// KV-locality-aware router. Each replica loads its own copy of the model
+/// (on its own worker thread, in parallel) with a disjoint slice of the
+/// machine's cores; requests are placed by session/prefix affinity then
+/// least outstanding work, and outputs are bit-identical per request id
+/// to a single engine serving the same submissions.
+fn cmd_serve_cluster(
+    dir: &std::path::Path,
+    replicas: usize,
+    n: usize,
+    gen: usize,
+    policy: SchedulePolicy,
+) -> anyhow::Result<()> {
+    let tok = ByteTokenizer::new(2048);
+    let prompts = ["the quick brown fox", "hello world", "mobile inference", "llm on device"];
+    let machine = WorkerConfig::uniform(
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+    );
+    let cores = replica_worker_configs(&machine, replicas);
+    let dir = dir.to_path_buf();
+    let t0 = std::time::Instant::now();
+    let mut cluster = Cluster::new(replicas, RouterPolicy::KvAffinity, move |r| {
+        let opts = EngineOptions {
+            workers: cores.get(r).cloned().unwrap_or_else(|| WorkerConfig::uniform(1)),
+            ..EngineOptions::default()
+        };
+        Ok(Engine::new(NativeModel::load(&dir, opts)?, policy))
+    })?;
+    println!("{replicas} replicas ready in {:.2}s", t0.elapsed().as_secs_f64());
+    for i in 0..n {
+        let id = cluster.submit(tok.encode(prompts[i % prompts.len()], false), gen)?;
+        if let Some(rep) = cluster.router().replica_of(id) {
+            println!("  req {id} → replica {rep}");
+        }
+    }
+    let t1 = std::time::Instant::now();
+    let responses = cluster.run_all()?;
+    let wall = t1.elapsed().as_secs_f64();
+    for r in &responses {
+        println!(
+            "req {}: {} tokens | prefill {:.1} tok/s | decode {:.1} tok/s | {:?}",
+            r.id,
+            r.tokens.len(),
+            r.metrics.prefill_tok_s(),
+            r.metrics.decode_tok_s(),
+            r.finish_reason,
+        );
+    }
+    println!("{}", cluster.metrics().summary(wall));
     Ok(())
 }
 
@@ -265,7 +327,9 @@ fn help() {
 USAGE: mnn-llm <cmd> [--flag value]...
   info                                   artifact + device info
   generate --prompt T --tokens N --backend pjrt|native [--stream]
-  serve --requests N --tokens N --backend native|pjrt --policy fifo|interleaved [--stream]
+  serve --requests N --tokens N --backend native|pjrt --policy fifo|interleaved
+        [--stream] [--replicas N]   (replicas: data-parallel engines behind
+                                     the KV-locality-aware router; native only)
   solve-tiles                            print Table 2
   params --model qwen2-7b|qwen2-1.5b|llama3-8b
   help

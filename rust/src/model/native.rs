@@ -121,6 +121,15 @@ pub struct EngineOptions {
     /// consumption — keeping the engine bit-identical to its
     /// pre-speculation behavior.
     pub spec_depth: usize,
+    /// When set, the weight store's flash device **emulates stall time**:
+    /// every blob fetch sleeps the modeled read latency of this tier
+    /// (`MemTier::latency_s + bytes / read_bw`) instead of returning
+    /// instantly. `None` (the default) keeps weight reads instant,
+    /// bit-for-bit and timing-wise identical to before the knob existed.
+    /// Cluster scaling tests and the fig5 replica sweep use this to make
+    /// ticks I/O-dominated — the regime where data-parallel replicas win
+    /// by overlapping their stalls.
+    pub weight_flash_stall: Option<crate::device::MemTier>,
 }
 
 impl Default for EngineOptions {
@@ -138,6 +147,7 @@ impl Default for EngineOptions {
             prefix_cache_bytes: 0,
             backend: crate::cpu::backend::BackendChoice::Auto,
             spec_depth: 0,
+            weight_flash_stall: None,
         }
     }
 }
@@ -152,6 +162,12 @@ pub struct NativeSession {
     pub pos: usize,
     /// Select a loaded LoRA task for this session (§5.5 multitask).
     pub lora_task: Option<String>,
+    /// The owning request's admission priority class
+    /// (`Request::priority_class`, stamped by the backend adapter at
+    /// session open). Under pool pressure [`NativeModel::make_room`]
+    /// preempts the lowest class first, so background sessions absorb
+    /// the spill traffic before interactive ones.
+    pub priority_class: u8,
     /// fp32 K/V of the prompt tokens prefilled so far, one pair of
     /// buffers per decoder layer — present only **while the prompt is
     /// still being consumed in chunks**. Later chunks attend over this
@@ -450,7 +466,17 @@ impl NativeModel {
         let staging_flash = Arc::new(FlashSim::temp(soc.flash)?);
         let store =
             FlashTensorStore::stream_from_file(&dir.join("weights.bin"), staging_flash)?;
-        let weight_flash = Arc::new(FlashSim::temp(soc.flash)?);
+        let weight_flash = match options.weight_flash_stall {
+            // Stall emulation: blob fetches sleep the tier's modeled read
+            // time (writes during load stay instant — `append` never
+            // sleeps), making tick time I/O-dominated on purpose.
+            Some(tier) => Arc::new(FlashSim::create(
+                &crate::util::unique_temp_path("mnn_flash", ".bin"),
+                tier,
+                true,
+            )?),
+            None => Arc::new(FlashSim::temp(soc.flash)?),
+        };
         let mut builder = WeightStoreBuilder::new(weight_flash, options.weight_dram_bytes);
         for i in 0..cfg.layers {
             let p = format!("L{i}.");
@@ -604,6 +630,7 @@ impl NativeModel {
             kv,
             pos: 0,
             lora_task: None,
+            priority_class: 0,
             prefill_stash: None,
             shared_stash: None,
             publish: None,
@@ -700,9 +727,13 @@ impl NativeModel {
     }
 
     /// Admission control: make room in the KV pool for prefilling
-    /// `prompt` by preempting `running` sessions (oldest first) to flash
-    /// until the prompt's page-granular suffix estimate fits the budget.
-    /// When the prompt could never fit even an empty pool, fleet-wide
+    /// `prompt` by preempting `running` sessions to flash until the
+    /// prompt's page-granular suffix estimate fits the budget. Victims go
+    /// **lowest priority class first** (`NativeSession::priority_class`),
+    /// oldest (admission order) within a class — so background sessions
+    /// absorb pool pressure before interactive ones, and a fleet with no
+    /// priorities set preempts in exactly the old admission order. When
+    /// the prompt could never fit even an empty pool, fleet-wide
     /// preemption is pointless and skipped — the new session degrades by
     /// spilling its own KV as it appends. Returns sessions preempted.
     pub fn make_room(
@@ -713,10 +744,14 @@ impl NativeModel {
         let need = self.prefill_suffix_page_bytes(prompt);
         let mut preempted = 0;
         if self.kv_pool.would_exceed(need) && need <= self.kv_pool.budget_bytes() {
-            for s in running.iter_mut() {
+            let mut order: Vec<usize> = (0..running.len()).collect();
+            // Stable sort: ties within a class keep admission order.
+            order.sort_by_key(|&i| running.get(i).map_or(u8::MAX, |s| s.priority_class));
+            for i in order {
                 if !self.kv_pool.would_exceed(need) {
                     break;
                 }
+                let Some(s) = running.get_mut(i) else { continue };
                 if s.resident_kv_bytes() > 0 {
                     s.preempt_to_flash()?;
                     preempted += 1;

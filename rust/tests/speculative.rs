@@ -429,6 +429,70 @@ fn sampled_speculative_preserves_the_distribution() {
 }
 
 #[test]
+fn adaptive_depth_shrinks_when_the_draft_keeps_missing() {
+    // Satellite: the engine re-derives each request's walk depth from its
+    // live acceptance rate. A mismatched draft (different function) gets
+    // rejected nearly always, so after the first full-depth warm-up walk
+    // the depth must collapse — far fewer proposals than `4 * walks` —
+    // while the output stays bit-identical to plain decode (depth is
+    // perf-only by the verify contract).
+    let plain_model = target(EngineOptions::default());
+    let n = 20;
+    let prompt = eos_free_prompt(&plain_model, 5, n);
+    let want = plain_model.generate_once(&prompt, n);
+
+    let mut e = Engine::new(target(EngineOptions::default()), SchedulePolicy::Fifo);
+    e.attach_draft(draft(), 4);
+    e.submit(prompt, n);
+    let rs = e.run_all().unwrap();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].tokens, want, "adaptive depth must stay value-neutral");
+
+    let sm = e.metrics.spec;
+    assert!(sm.walks > 4, "a missing draft needs many short walks: {sm:?}");
+    // Without adaptation every non-final walk proposes the full 4 (only
+    // the last is budget-clamped), i.e. proposed >= 4 * (walks - 1).
+    // Adaptation must land strictly below that.
+    assert!(
+        sm.proposed < 4 * (sm.walks - 1),
+        "depth never shrank on a hopeless draft: {sm:?}"
+    );
+}
+
+#[test]
+fn adaptive_depth_sustains_when_the_draft_agrees() {
+    // The other side of the adaptive controller: with the paired fixture
+    // (draft computes the target's exact function) the acceptance rate
+    // stays at 1.0, so the depth must remain at the configured 4 — every
+    // walk commits 4 accepted + 1 bonus token, pinning the walk count.
+    let (tfx, dfx) = fixtures::write_paired_fixture(13, 4).unwrap();
+    let n = 21;
+    let plain_model = NativeModel::load(tfx.dir(), EngineOptions::default()).unwrap();
+    let prompt = eos_free_prompt(&plain_model, 5, n);
+    let want = plain_model.generate_once(&prompt, n);
+
+    let mut e = Engine::new(
+        NativeModel::load(tfx.dir(), EngineOptions::default()).unwrap(),
+        SchedulePolicy::Fifo,
+    );
+    e.attach_draft(NativeModel::load(dfx.dir(), EngineOptions::default()).unwrap(), 4);
+    e.submit(prompt, n);
+    let rs = e.run_all().unwrap();
+    assert_eq!(rs[0].tokens, want);
+
+    let sm = e.metrics.spec;
+    assert!(sm.acceptance_rate() > 0.99, "{sm:?}");
+    assert!(sm.committed_per_walk() > 2.0, "{sm:?}");
+    // n - 1 verify-walk tokens at 5 per full-depth walk: if adaptation
+    // had (wrongly) shrunk the depth, more walks would be needed.
+    assert_eq!(
+        sm.walks,
+        ((n as u64) - 1).div_ceil(5),
+        "an agreeing draft must keep the configured depth: {sm:?}"
+    );
+}
+
+#[test]
 fn draft_and_target_kv_gauges_return_to_zero_after_cancel() {
     // Cancel mid-decode with speculation live: the request's target
     // session AND its draft session free their pool pages immediately.
